@@ -1,0 +1,97 @@
+//! The coffee-bean scenario (paper §3.2, Fig. 10): a panel-shifted scan
+//! reconstructed with FDK and CGLS at ⅓ angular sampling, on devices too
+//! small to hold the volume — demonstrating that the splitting machinery
+//! is invisible to the algorithms and that iterative recon is more
+//! robust to undersampling.
+//!
+//! Run with: `cargo run --release --example coffee_bean`
+
+use tigre::algorithms::{self, ReconOpts};
+use tigre::coordinator::{ExecMode, MultiGpu};
+use tigre::geometry::Geometry;
+use tigre::kernels::filtering::Window;
+use tigre::metrics;
+use tigre::phantom;
+
+fn main() -> anyhow::Result<()> {
+    let n = 32;
+    let full_angles = 96;
+    let third = full_angles / 3;
+
+    // bean phantom + panel-shifted detector (the Zeiss scan stitches two
+    // shifted panels; here the offset exercises the same geometry path)
+    let truth = phantom::bean(n, n, n);
+    let mut g_full = Geometry::cone_beam(n, full_angles);
+    g_full.offset_det[0] = 0.8;
+    let mut g_third = Geometry::cone_beam(n, third);
+    g_third.offset_det[0] = 0.8;
+
+    // Devices shrunk so the image needs multiple slabs per device, as the
+    // paper's 40 GB bean volume does on 11 GiB cards. At miniature scale
+    // the projection buffers would dominate an 11 GiB-proportioned card,
+    // so the kernel chunk sizes are scaled down with the problem.
+    let plane = (n * n * 4) as u64;
+    let mut node = MultiGpu::gtx1080ti(2);
+    node.split.fp_chunk = 3;
+    node.split.bp_chunk = 4;
+    let mem = 10 * plane
+        + (3 * node.split.fp_chunk as u64).max(2 * node.split.bp_chunk as u64)
+            * g_third.single_proj_bytes();
+    node = node.with_device_mem(mem);
+
+    let (p_full, s) = node.forward(&g_full, Some(&truth), ExecMode::Full)?;
+    println!(
+        "full sampling: {} angles, {} splits/device (devices hold only {} of the image)",
+        full_angles,
+        s.splits_per_device,
+        tigre::util::units::fmt_bytes(mem)
+    );
+    let (p_third, _) = node.forward(&g_third, Some(&truth), ExecMode::Full)?;
+    let p_full = p_full.unwrap();
+    let p_third = p_third.unwrap();
+
+    // FDK at full vs third sampling; CGLS-30 at third sampling (Fig. 10)
+    let fdk_full = algorithms::fdk(&node, &g_full, &p_full, Window::Hann)?;
+    let fdk_third = algorithms::fdk(&node, &g_third, &p_third, Window::Hann)?;
+    let cgls_third = algorithms::cgls(
+        &node,
+        &g_third,
+        &p_third,
+        &ReconOpts { iterations: 30, ..Default::default() },
+    )?;
+
+    println!("quality vs ground truth (RMSE / PSNR):");
+    let report = |name: &str, v: &tigre::volume::Volume| {
+        println!(
+            "  {name:<22} {:.5} / {:.2} dB",
+            metrics::rmse(&truth, v),
+            metrics::psnr(&truth, v)
+        );
+    };
+    report("FDK, full angles", &fdk_full.volume);
+    report("FDK, 1/3 angles", &fdk_third.volume);
+    report("CGLS-30, 1/3 angles", &cgls_third.volume);
+    println!(
+        "CGLS at 1/3 sampling beats FDK at 1/3 sampling: {} (paper Fig. 10: yes)",
+        metrics::rmse(&truth, &cgls_third.volume) < metrics::rmse(&truth, &fdk_third.volume)
+    );
+    println!(
+        "CGLS-30 simulated time on the 2-GPU node: {:.2}s (paper, at full scale: 4 h 21 min)",
+        cgls_third.sim_time_s
+    );
+
+    tigre::io::save_slice_pgm(
+        std::path::Path::new("results/bean_fdk_third.pgm"),
+        &fdk_third.volume,
+        n / 2,
+        None,
+    )?;
+    tigre::io::save_slice_pgm(
+        std::path::Path::new("results/bean_cgls_third.pgm"),
+        &cgls_third.volume,
+        n / 2,
+        None,
+    )?;
+    println!("slices: results/bean_fdk_third.pgm, results/bean_cgls_third.pgm");
+    Ok(())
+}

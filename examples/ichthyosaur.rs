@@ -1,0 +1,86 @@
+//! The Ichthyosaur-fossil scenario (paper §3.2, Fig. 11): OS-SART on a
+//! strongly anisotropic volume with subset updates, plus the ASD-POCS
+//! TV-regularized variant the toolbox offers for noisy data.
+//!
+//! Run with: `cargo run --release --example ichthyosaur`
+
+use tigre::algorithms::{self, ReconOpts};
+use tigre::coordinator::{ExecMode, MultiGpu};
+use tigre::geometry::Geometry;
+use tigre::metrics;
+use tigre::phantom;
+use tigre::util::pcg::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    // 3360×900×2000 at ~1:100 scale
+    let (nx, ny, nz) = (33, 9, 20);
+    let n_angles = 40;
+    let truth = phantom::fossil(nx, ny, nz, 7);
+    let g = Geometry::cone_beam_anisotropic([nx, ny, nz], [40, 40], n_angles);
+    let node = MultiGpu::gtx1080ti(2);
+
+    let (proj, _) = node.forward(&g, Some(&truth), ExecMode::Full)?;
+    let mut proj = proj.unwrap();
+
+    // detector noise (the real scan is at 3.37 µA — photon-starved)
+    let mut rng = Pcg32::new(11);
+    let peak = proj.data.iter().cloned().fold(f32::MIN, f32::max);
+    for v in &mut proj.data {
+        *v += 0.02 * peak * rng.normal() as f32;
+    }
+
+    // OS-SART, subset 4 of 40 angles (paper: 200 of 2000), 12 iterations
+    let ossart = algorithms::os_sart(
+        &node,
+        &g,
+        &proj,
+        4,
+        &ReconOpts { iterations: 12, lambda: 0.9, ..Default::default() },
+    )?;
+    // ASD-POCS adds the TV constraint for the noisy projections
+    let asd = algorithms::asd_pocs(
+        &node,
+        &g,
+        &proj,
+        &algorithms::asd_pocs::AsdPocsOpts {
+            common: ReconOpts { iterations: 8, lambda: 0.9, ..Default::default() },
+            subset_size: 4,
+            tv_iters: 8,
+            alpha: 0.004,
+            n_in: 8,
+        },
+    )?;
+
+    println!("fossil {nx}×{ny}×{nz}, {n_angles} noisy projections:");
+    let report = |name: &str, r: &algorithms::ReconResult| {
+        println!(
+            "  {name:<10} RMSE {:.5}  PSNR {:.2} dB  corr {:.4}  (sim {:.2}s)",
+            metrics::rmse(&truth, &r.volume),
+            metrics::psnr(&truth, &r.volume),
+            metrics::correlation(&truth, &r.volume),
+            r.sim_time_s
+        );
+    };
+    report("OS-SART", &ossart);
+    report("ASD-POCS", &asd);
+    println!(
+        "TV regularization smooths the noise: TV {:.1} (OS-SART) → {:.1} (ASD-POCS)",
+        tigre::kernels::tv::tv_value(&ossart.volume),
+        tigre::kernels::tv::tv_value(&asd.volume)
+    );
+
+    tigre::io::save_slice_pgm(
+        std::path::Path::new("results/fossil_ossart.pgm"),
+        &ossart.volume,
+        nz / 2,
+        None,
+    )?;
+    tigre::io::save_slice_pgm(
+        std::path::Path::new("results/fossil_asdpocs.pgm"),
+        &asd.volume,
+        nz / 2,
+        None,
+    )?;
+    println!("slices: results/fossil_ossart.pgm, results/fossil_asdpocs.pgm");
+    Ok(())
+}

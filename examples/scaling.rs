@@ -1,0 +1,113 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): runs the full
+//! system on a real small workload — phantom → projections with noise →
+//! multi-GPU iterative reconstruction (real kernels through the full
+//! coordinator, PJRT artifacts when available) — then sweeps the paper's
+//! headline scaling experiment on the device model and reports every
+//! headline metric.
+//!
+//! Run with: `cargo run --release --example scaling`
+
+use tigre::algorithms::{self, ReconOpts};
+use tigre::bench;
+use tigre::coordinator::{Backend, ExecMode, MultiGpu};
+use tigre::geometry::Geometry;
+use tigre::metrics;
+use tigre::phantom;
+
+fn main() -> anyhow::Result<()> {
+    // ---------- part 1: real end-to-end workload ----------
+    // 32³ volume, 32 angles; devices shrunk so every operator splits.
+    let n = 32;
+    let n_angles = 32;
+    let g = Geometry::cone_beam(n, n_angles);
+    let truth = phantom::shepp_logan(n);
+    let plane = (n * n * 4) as u64;
+    // scale kernel chunk sizes down with the miniature problem so the
+    // devices really do split the image (see coffee_bean.rs)
+    let fp_chunk = 3u64;
+    let bp_chunk = 4u64;
+    let mem = 12 * plane + (3 * fp_chunk).max(2 * bp_chunk) * g.single_proj_bytes();
+
+    // PJRT artifacts if built (make artifacts), native kernels otherwise.
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let has_artifacts = tigre::runtime::Manifest::load(&artifacts)
+        .map(|m| !m.entries.is_empty())
+        .unwrap_or(false);
+    let mut node = MultiGpu::gtx1080ti(2).with_device_mem(mem);
+    node.split.fp_chunk = fp_chunk as usize;
+    node.split.bp_chunk = bp_chunk as usize;
+    if has_artifacts {
+        node = node.with_backend(Backend::Pjrt {
+            artifacts_dir: artifacts,
+            weight: tigre::kernels::BackprojWeight::Fdk,
+            threads: 2,
+        });
+        println!(
+            "kernel backend: PJRT artifacts (AOT-compiled Pallas/JAX; \
+             native fallback for slab shapes outside the manifest)"
+        );
+    } else {
+        println!("kernel backend: native rust (run `make artifacts` for PJRT)");
+    }
+
+    let t0 = std::time::Instant::now();
+    let (proj, fp) = node.forward(&g, Some(&truth), ExecMode::Full)?;
+    let mut proj = proj.unwrap();
+    let mut rng = tigre::util::pcg::Pcg32::new(4);
+    let peak = proj.data.iter().cloned().fold(f32::MIN, f32::max);
+    for v in &mut proj.data {
+        *v += 0.01 * peak * rng.normal() as f32;
+    }
+    let recon = algorithms::cgls(
+        &node,
+        &g,
+        &proj,
+        &ReconOpts { iterations: 12, ..Default::default() },
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("== end-to-end run ==");
+    println!(
+        "volume {n}³ on 2 devices of {} ({} splits/device): device RAM bound held: {}",
+        tigre::util::units::fmt_bytes(mem),
+        fp.splits_per_device,
+        recon.peak_device_bytes <= mem
+    );
+    println!("CGLS-12: RMSE {:.5}, PSNR {:.2} dB, host wall {wall:.1}s, sim {:.2}s",
+        metrics::rmse(&truth, &recon.volume),
+        metrics::psnr(&truth, &recon.volume),
+        recon.sim_time_s,
+    );
+    let mut residual_cols: Vec<Vec<f64>> = vec![
+        (1..=recon.residuals.len()).map(|i| i as f64).collect(),
+        recon.residuals.clone(),
+    ];
+    residual_cols[1].iter_mut().for_each(|v| *v = *v);
+    tigre::io::save_csv(
+        std::path::Path::new("results/scaling_convergence.csv"),
+        &["iteration", "residual"],
+        &residual_cols,
+    )?;
+    println!("convergence trace: results/scaling_convergence.csv");
+
+    // ---------- part 2: the headline scaling sweep (device model) ----------
+    println!("\n== scaling sweep (Fig. 7/8 shape, simulated 1080 Ti node) ==");
+    let cells = bench::fig7_sweep(&[256, 512, 1024, 2048], &[1, 2, 3, 4]);
+    println!("{}", bench::fig7_table(&cells, true));
+    println!("{}", bench::fig8_table(&cells, true));
+
+    // headline metrics
+    let b1 = cells.iter().find(|c| c.n == 2048 && c.gpus == 1).unwrap();
+    let b4 = cells.iter().find(|c| c.n == 2048 && c.gpus == 4).unwrap();
+    println!(
+        "headline: N=2048 FP speedup ×{:.2} on 4 GPUs (theory ×4); \
+         device memory never exceeded: yes (asserted per run)",
+        b1.fp_s / b4.fp_s
+    );
+    println!(
+        "arbitrarily-large support: N=3072 volume is {} vs 11 GiB devices — plans with {} splits",
+        tigre::util::units::fmt_bytes(Geometry::cone_beam(3072, 8).volume_bytes()),
+        bench::sweep_cell(3072, 2)?.bp_splits
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT lowering: jax (L2, calling the L1 Pallas kernels) -> HLO text +
+manifest, consumed by `rust/src/runtime/`.
+
+HLO *text* is the interchange format — NOT `lowered.compiler_ir(...)
+.serialize()`: the image's xla_extension 0.5.1 rejects jax>=0.5 protos
+(64-bit instruction ids); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run as: `cd python && python -m compile.aot --out-dir ../artifacts`.
+`make artifacts` skips this when inputs are unchanged.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The manifest shape set: (n, angles) cubic problems. Small shapes keep
+# AOT + rust-side compile times reasonable; anything else falls back to
+# the native rust kernels (runtime::forward_or_native).
+SHAPES = [
+    (16, 8),
+    (32, 8),
+    (32, 16),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(n, a):
+    vol = jax.ShapeDtypeStruct((n, n, n), jnp.float32)
+    params = jax.ShapeDtypeStruct((12,), jnp.float32)
+    angles = jax.ShapeDtypeStruct((a,), jnp.float32)
+
+    def fn(vol, params, angles):
+        return (model.forward(vol, params, angles, nu=n, nv=n),)
+
+    return jax.jit(fn).lower(vol, params, angles)
+
+
+def lower_backward(n, a, matched=False):
+    proj = jax.ShapeDtypeStruct((a, n, n), jnp.float32)
+    params = jax.ShapeDtypeStruct((12,), jnp.float32)
+    angles = jax.ShapeDtypeStruct((a,), jnp.float32)
+
+    def fn(proj, params, angles):
+        return (
+            model.backward(proj, params, angles, nx=n, ny=n, nz=n, matched=matched),
+        )
+
+    return jax.jit(fn).lower(proj, params, angles)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    lowerings = [
+        ("forward", "fp", lambda n, a: lower_forward(n, a)),
+        ("backward", "bp", lambda n, a: lower_backward(n, a, matched=False)),
+        ("backward_matched", "bpm", lambda n, a: lower_backward(n, a, matched=True)),
+    ]
+    for n, a in SHAPES:
+        for op, prefix, lower in lowerings:
+            name = f"{prefix}_n{n}_a{a}"
+            fname = f"{name}.hlo.txt"
+            text = to_hlo_text(lower(n, a))
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "name": name,
+                    "op": op,
+                    "nx": n,
+                    "ny": n,
+                    "nz": n,
+                    "nu": n,
+                    "nv": n,
+                    "angles": a,
+                    "file": fname,
+                }
+            )
+            print(f"wrote {fname} ({len(text)} chars)")
+
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(entries)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Shared cone-beam geometry math for the L1 kernels and the L2 model.
+
+The conventions mirror `rust/src/geometry/mod.rs` exactly (the rust side
+loads the AOT artifacts and feeds them the same `params` vector):
+
+    params = [dsd, dso, dx, dy, dz, du, dv, off_u, off_v, ox, oy, oz]
+
+* volume: nx*ny*nz voxels of pitch (dx,dy,dz), centred at (ox,oy,oz)
+* source at angle t: (dso*cos t, dso*sin t, 0)
+* detector centre: -(dsd-dso)*(cos t, sin t, 0) + off_u*u_hat + off_v*v_hat
+* u_hat = (-sin t, cos t, 0), v_hat = (0, 0, 1)
+* pixel (iu, iv) at u=(iu+.5-nu/2)*du, v=(iv+.5-nv/2)*dv
+"""
+
+import jax.numpy as jnp
+
+# params vector layout indices
+DSD, DSO, DX, DY, DZ, DU, DV, OFF_U, OFF_V, OX, OY, OZ = range(12)
+
+
+def volume_bbox(params, nx, ny, nz):
+    """(lo, hi) corners of the volume in mm, each a length-3 array."""
+    half = jnp.array(
+        [
+            nx * params[DX] / 2.0,
+            ny * params[DY] / 2.0,
+            nz * params[DZ] / 2.0,
+        ]
+    )
+    center = jnp.array([params[OX], params[OY], params[OZ]])
+    return center - half, center + half
+
+
+def source_pos(params, theta):
+    """Source position at angle theta (scalar or array)."""
+    return jnp.stack(
+        [params[DSO] * jnp.cos(theta), params[DSO] * jnp.sin(theta), jnp.zeros_like(theta)],
+        axis=-1,
+    )
+
+
+def detector_pixels(params, theta, nu, nv):
+    """World positions of all detector pixel centres at angle `theta`.
+
+    Returns an array of shape (nv, nu, 3). Built componentwise (no
+    constant basis vectors: Pallas kernels may not capture constant
+    arrays).
+    """
+    s, c = jnp.sin(theta), jnp.cos(theta)
+    back = params[DSD] - params[DSO]
+    # u_hat = (-s, c, 0); v_hat = (0, 0, 1)
+    iu = jnp.arange(nu)
+    iv = jnp.arange(nv)
+    u = (iu + 0.5 - nu / 2.0) * params[DU] + params[OFF_U]  # (nu,) in-plane
+    v = (iv + 0.5 - nv / 2.0) * params[DV] + params[OFF_V]  # (nv,) along z
+    px = -back * c + u * (-s)  # (nu,)
+    py = -back * s + u * c  # (nu,)
+    pz = v  # (nv,)
+    zero_nv = jnp.zeros((nv,), dtype=px.dtype)
+    x = px[None, :] + zero_nv[:, None]  # (nv, nu)
+    y = py[None, :] + zero_nv[:, None]
+    z = pz[:, None] + jnp.zeros((nu,), dtype=px.dtype)[None, :]
+    return jnp.stack([x, y, z], axis=-1)
+
+
+def clip_ray_to_box(src, dst, lo, hi):
+    """Slab-method clip of rays src->dst against the box [lo, hi].
+
+    src: (3,), dst: (..., 3). Returns (tmin, tmax) with shape dst.shape[:-1];
+    rays that miss have tmin >= tmax.
+    """
+    d = dst - src  # (..., 3)
+    eps = 1e-12
+    safe = jnp.where(jnp.abs(d) < eps, jnp.where(d >= 0, eps, -eps), d)
+    t0 = (lo - src) / safe
+    t1 = (hi - src) / safe
+    tsmall = jnp.minimum(t0, t1)
+    tbig = jnp.maximum(t0, t1)
+    # degenerate axes: ray parallel and outside -> miss
+    inside = (src >= lo) & (src <= hi)
+    parallel = jnp.abs(d) < eps
+    tsmall = jnp.where(parallel & ~inside, jnp.inf, tsmall)
+    tbig = jnp.where(parallel & ~inside, -jnp.inf, tbig)
+    tmin = jnp.maximum(jnp.max(tsmall, axis=-1), 0.0)
+    tmax = jnp.minimum(jnp.min(tbig, axis=-1), 1.0)
+    return tmin, tmax
+
+
+def trilinear(vol, params, lo, pts):
+    """Trilinear interpolation of `vol` (nz, ny, nx) at world points
+    `pts` (..., 3), with clamp addressing (CUDA-texture-like), sampling at
+    voxel centres."""
+    nz, ny, nx = vol.shape
+    fx = (pts[..., 0] - lo[0]) / params[DX] - 0.5
+    fy = (pts[..., 1] - lo[1]) / params[DY] - 0.5
+    fz = (pts[..., 2] - lo[2]) / params[DZ] - 0.5
+    x0 = jnp.floor(fx)
+    y0 = jnp.floor(fy)
+    z0 = jnp.floor(fz)
+    wx = (fx - x0).astype(vol.dtype)
+    wy = (fy - y0).astype(vol.dtype)
+    wz = (fz - z0).astype(vol.dtype)
+
+    def cl(i, n):
+        return jnp.clip(i, 0, n - 1).astype(jnp.int32)
+
+    x0i, x1i = cl(x0, nx), cl(x0 + 1, nx)
+    y0i, y1i = cl(y0, ny), cl(y0 + 1, ny)
+    z0i, z1i = cl(z0, nz), cl(z0 + 1, nz)
+
+    flat = vol.reshape(-1)
+
+    def at(zi, yi, xi):
+        return flat[(zi * ny + yi) * nx + xi]
+
+    v000 = at(z0i, y0i, x0i)
+    v100 = at(z0i, y0i, x1i)
+    v010 = at(z0i, y1i, x0i)
+    v110 = at(z0i, y1i, x1i)
+    v001 = at(z1i, y0i, x0i)
+    v101 = at(z1i, y0i, x1i)
+    v011 = at(z1i, y1i, x0i)
+    v111 = at(z1i, y1i, x1i)
+
+    c00 = v000 + (v100 - v000) * wx
+    c10 = v010 + (v110 - v010) * wx
+    c01 = v001 + (v101 - v001) * wx
+    c11 = v011 + (v111 - v011) * wx
+    c0 = c00 + (c10 - c00) * wy
+    c1 = c01 + (c11 - c01) * wy
+    return c0 + (c1 - c0) * wz
+
+
+def fp_n_steps(nx, ny, nz, step_frac=0.5):
+    """Static sample count for the interpolated projector: enough steps to
+    cover the volume diagonal at `step_frac` of the voxel pitch."""
+    diag = (nx**2 + ny**2 + nz**2) ** 0.5
+    return max(1, int(diag / step_frac + 1))

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: interpolated cone-beam forward projector.
+
+Grid: one step per projection angle. Each step holds the image slab in
+VMEM (the BlockSpec is the HBM->VMEM schedule: the analogue of the CUDA
+texture residency in the paper's kernels), computes every detector pixel
+of that angle with vectorized gather + lerp on the VPU, and writes one
+(nv, nu) projection block out.
+
+TPU adaptation notes (DESIGN.md §3): the paper's 9x9x9 thread blocks
+tuned for texture-cache hit rate become a per-angle VMEM-resident slab +
+a fully vectorized detector sweep; the hardware trilinear fetch of CUDA
+textures becomes explicit gather + lerp. `interpret=True` everywhere: the
+CPU PJRT plugin cannot execute Mosaic custom-calls, so the kernel lowers
+to plain HLO (numerics identical, perf modelled in DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import geometry as geo
+
+
+def _fp_kernel(vol_ref, params_ref, angle_ref, out_ref, *, nu, nv, n_steps):
+    vol = vol_ref[...]
+    params = params_ref[...]
+    theta = angle_ref[0]
+    nz, ny, nx = vol.shape
+    lo, hi = geo.volume_bbox(params, nx, ny, nz)
+
+    src = geo.source_pos(params, theta)
+    pix = geo.detector_pixels(params, theta, nu, nv)  # (nv, nu, 3)
+    tmin, tmax = geo.clip_ray_to_box(src, pix, lo, hi)
+    span = jnp.where(tmax > tmin, tmax - tmin, 0.0)
+    d = pix - src
+    length = jnp.sqrt(jnp.sum(d * d, axis=-1))
+    dt = span / n_steps
+    seg = (dt * length).astype(vol.dtype)
+
+    def body(i, acc):
+        t = tmin + (i + 0.5) * dt  # (nv, nu)
+        pts = src + t[..., None] * d  # (nv, nu, 3)
+        return acc + geo.trilinear(vol, params, lo, pts)
+
+    acc = jax.lax.fori_loop(0, n_steps, body, jnp.zeros((nv, nu), vol.dtype))
+    out_ref[0, :, :] = acc * seg
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "nv", "step_frac"))
+def forward(vol, params, angles, nu, nv, step_frac=0.5):
+    """Pallas forward projection: vol (nz,ny,nx) -> proj (A,nv,nu)."""
+    nz, ny, nx = vol.shape
+    a = angles.shape[0]
+    n_steps = geo.fp_n_steps(nx, ny, nz, step_frac)
+    kernel = functools.partial(_fp_kernel, nu=nu, nv=nv, n_steps=n_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(a,),
+        in_specs=[
+            # whole volume resident per step (slab residency: the
+            # coordinator feeds slab-sized volumes for big problems)
+            pl.BlockSpec((nz, ny, nx), lambda i: (0, 0, 0)),
+            pl.BlockSpec((12,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, nv, nu), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((a, nv, nu), vol.dtype),
+        interpret=True,
+    )(vol, params, angles)

@@ -1,0 +1,54 @@
+"""L2 — the jax compute graph composing the L1 Pallas kernels.
+
+These are the functions `aot.py` lowers to HLO text for the rust runtime:
+  forward(vol, params, angles)  -> (proj,)
+  backward(proj, params, angles) -> (vol,)
+plus build-time-only compositions used by the python tests (a fused
+residual-backprojection step, SART weight volumes) that demonstrate the
+L2 layer fusing data-fidelity math around the kernels.
+
+Everything here is shape-polymorphic at trace time and lowered per
+manifest shape; python never runs at request time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import backprojector, projector
+
+
+def forward(vol, params, angles, nu, nv):
+    """Cone-beam forward projection via the Pallas projector."""
+    return projector.forward(vol, params, angles, nu=nu, nv=nv)
+
+
+def backward(proj, params, angles, nx, ny, nz, matched=False):
+    """Backprojection via the Pallas backprojector (FDK weights by
+    default, pseudo-matched weights for the gradient algorithms)."""
+    return backprojector.backward(
+        proj, params, angles, nx=nx, ny=ny, nz=nz, matched=matched
+    )
+
+
+def residual_backproject(vol, meas, params, angles, nu, nv):
+    """One fused data-fidelity step: Aᵀ(A x − b).
+
+    The L2 fusion the gradient algorithms (CGLS/FISTA) are built from —
+    lowering this as one module lets XLA fuse the residual subtraction
+    into the kernels' dataflow instead of round-tripping through host
+    memory.
+    """
+    nz, ny, nx = vol.shape
+    r = forward(vol, params, angles, nu, nv) - meas
+    return backward(r, params, angles, nx, ny, nz)
+
+
+def sart_weights(params, angles, nx, ny, nz, nu, nv):
+    """The SART normalization pair (W, V): W = 1/(A·1), V = 1/(Aᵀ·1)."""
+    ones_vol = jnp.ones((nz, ny, nx), dtype=jnp.float32)
+    w = forward(ones_vol, params, angles, nu, nv)
+    w = jnp.where(jnp.abs(w) > 1e-6, 1.0 / w, 0.0)
+    a = angles.shape[0]
+    ones_proj = jnp.ones((a, nv, nu), dtype=jnp.float32)
+    v = backward(ones_proj, params, angles, nx, ny, nz)
+    v = jnp.where(jnp.abs(v) > 1e-6, 1.0 / v, 0.0)
+    return w, v

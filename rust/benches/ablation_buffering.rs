@@ -1,0 +1,30 @@
+//! Ablation — the double-buffered, overlap-ordered queueing of
+//! Algorithms 1 & 2 vs the naive serialized strategy (the "common
+//! approach" of the literature the paper improves on).
+
+use tigre::bench::buffering_ablation;
+use tigre::util::stats::Table;
+
+fn main() {
+    let mut t = Table::new(&[
+        "N", "GPUs", "FP prop [s]", "FP naive [s]", "FP gain", "BP prop [s]", "BP naive [s]", "BP gain",
+    ]);
+    for &n in &[256usize, 512, 1024, 2048] {
+        for &gpus in &[1usize, 2, 4] {
+            let (fp, nfp, bp, nbp) = buffering_ablation(n, gpus).unwrap();
+            t.row(vec![
+                n.to_string(),
+                gpus.to_string(),
+                format!("{fp:.2}"),
+                format!("{nfp:.2}"),
+                format!("{:.2}x", nfp / fp),
+                format!("{bp:.2}"),
+                format!("{nbp:.2}"),
+                format!("{:.2}x", nbp / bp),
+            ]);
+        }
+    }
+    println!("=== buffering/overlap ablation: proposed (Alg. 1/2) vs naive ===");
+    println!("{}", t.render());
+    println!("(gain = naive / proposed; >1 means the paper's queueing wins)");
+}

@@ -1,0 +1,46 @@
+//! Fig. 7 + Fig. 8 — projection and backprojection total time (compute +
+//! transfers) vs problem size N for 1–4 GPUs, and the same data as a
+//! percentage of the 1-GPU time.
+//!
+//! Workload (paper §3.1): N³ voxel volume, N² detector pixels, N angles,
+//! GTX 1080 Ti-class devices with 11 GiB each. Times come from the
+//! discrete-event device model (DESIGN.md §6); the *shape* — near-linear
+//! scaling at large N, overhead domination at small N, BP scaling worse
+//! than FP — is the reproduction target, not absolute seconds.
+
+use tigre::bench::{fig7_sweep, fig7_table, fig8_table, save_sweep_csv, FIG7_SIZES, GPU_COUNTS};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let cells = fig7_sweep(FIG7_SIZES, GPU_COUNTS);
+
+    println!("=== Fig. 7 (a): forward projection time [simulated s] ===");
+    println!("{}", fig7_table(&cells, true));
+    println!("=== Fig. 7 (b): backprojection time [simulated s] ===");
+    println!("{}", fig7_table(&cells, false));
+    println!("=== Fig. 8 (a): forward projection, % of 1-GPU time ===");
+    println!("{}", fig8_table(&cells, true));
+    println!("=== Fig. 8 (b): backprojection, % of 1-GPU time ===");
+    println!("{}", fig8_table(&cells, false));
+
+    // paper §3.1 checkpoints, printed every bench run
+    let c3072_1 = cells.iter().find(|c| c.n == 3072 && c.gpus == 1).unwrap();
+    let c3072_2 = cells.iter().find(|c| c.n == 3072 && c.gpus == 2).unwrap();
+    println!(
+        "splits at N=3072 — FP: {} (1 GPU, paper 10) / {} (2 GPU, paper 5); \
+         BP: {} (1 GPU, paper 11) / {} (2 GPU, paper 6)",
+        c3072_1.fp_splits, c3072_2.fp_splits, c3072_1.bp_splits, c3072_2.bp_splits
+    );
+    let big = cells.iter().find(|c| c.n == 2048 && c.gpus == 2).unwrap();
+    let base = cells.iter().find(|c| c.n == 2048 && c.gpus == 1).unwrap();
+    println!(
+        "scaling checkpoint N=2048: 2-GPU FP at {:.1}% of 1-GPU (theory 50%)",
+        100.0 * big.fp_s / base.fp_s
+    );
+
+    let _ = save_sweep_csv(std::path::Path::new("results/fig7_sweep.csv"), &cells);
+    println!(
+        "(csv: results/fig7_sweep.csv; harness wall-clock {:.1}s)",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,35 @@
+//! Fig. 9 — percentage of total execution time per operation category
+//! (computing / pin+unpin / other memory) vs image size for 1, 2 and 4
+//! GPUs, for both operators.
+//!
+//! Binning matches the paper: "Computing contains the time for kernel
+//! launches, which includes simultaneous memory copies as they happen
+//! concurrently" — i.e. only *exposed* memory time counts as memory
+//! (see simgpu::timeline::breakdown).
+
+use tigre::bench::{fig7_sweep, fig9_table, FIG9_SIZES};
+
+fn main() {
+    let cells = fig7_sweep(FIG9_SIZES, &[1, 2, 4]);
+
+    println!("=== Fig. 9 (a): forward projection time breakdown ===");
+    println!("{}", fig9_table(&cells, true));
+    println!("=== Fig. 9 (b): backprojection time breakdown ===");
+    println!("{}", fig9_table(&cells, false));
+
+    // Paper observations, printed as checkpoints on every run:
+    // (1) FP compute dominates even at small-ish sizes;
+    let fp512 = cells.iter().find(|c| c.n == 512 && c.gpus == 1).unwrap();
+    let (c, ..) = fp512.fp_breakdown.fractions();
+    println!("FP N=512 1-GPU compute fraction: {c:.2} (paper: dominates)");
+    // (2) BP at 512 with >1 GPU: computation takes less than half.
+    let bp512 = cells.iter().find(|c| c.n == 512 && c.gpus == 2).unwrap();
+    let (c2, ..) = bp512.bp_breakdown.fractions();
+    println!("BP N=512 2-GPU compute fraction: {c2:.2} (paper: < 0.5 with >1 GPU)");
+    // (3) pinning absent where the policy skips it.
+    let small = cells.iter().find(|c| c.n == 256 && c.gpus == 1).unwrap();
+    println!(
+        "N=256 1-GPU pinned: FP {} BP {} (paper: some sizes skip pinning)",
+        small.fp_pinned, small.bp_pinned
+    );
+}

@@ -1,0 +1,110 @@
+//! Hot-path micro-benchmarks of the real (native rust) kernels — the
+//! substrate for the §Perf optimization pass. Not a paper figure; this
+//! is the profile-and-iterate harness of EXPERIMENTS.md §Perf L3.
+
+use std::time::Duration;
+
+use tigre::geometry::Geometry;
+use tigre::kernels::{self, BackprojWeight, Projector};
+use tigre::phantom;
+use tigre::util::stats::bench;
+use tigre::volume::ProjectionSet;
+
+fn main() {
+    let threads = kernels::kernel_threads();
+    println!("=== native kernel hot paths ({threads} host threads) ===");
+
+    for &n in &[32usize, 48, 64] {
+        let g = Geometry::cone_beam(n, 16);
+        let v = phantom::shepp_logan(n);
+        let r = bench(
+            &format!("fp_siddon n={n} a=16"),
+            1,
+            3,
+            Duration::from_millis(600),
+            || {
+                std::hint::black_box(kernels::forward(&g, &v, Projector::Siddon, threads));
+            },
+        );
+        println!("{}", r.summary());
+    }
+
+    for &n in &[32usize, 48] {
+        let g = Geometry::cone_beam(n, 16);
+        let v = phantom::shepp_logan(n);
+        let r = bench(
+            &format!("fp_joseph n={n} a=16"),
+            1,
+            3,
+            Duration::from_millis(600),
+            || {
+                std::hint::black_box(kernels::forward(&g, &v, Projector::Joseph, threads));
+            },
+        );
+        println!("{}", r.summary());
+    }
+
+    for &n in &[32usize, 48, 64] {
+        let g = Geometry::cone_beam(n, 16);
+        let v = phantom::shepp_logan(n);
+        let p = kernels::forward(&g, &v, Projector::Siddon, threads);
+        let r = bench(
+            &format!("bp_fdk n={n} a=16"),
+            1,
+            3,
+            Duration::from_millis(600),
+            || {
+                std::hint::black_box(kernels::backward(&g, &p, BackprojWeight::Fdk, threads));
+            },
+        );
+        println!("{}", r.summary());
+    }
+
+    // FDK filtering (FFT hot path)
+    for &n in &[64usize, 128] {
+        let g = Geometry::cone_beam(n, 32);
+        let mut p = ProjectionSet::zeros_like(&g);
+        let mut rng = tigre::util::pcg::Pcg32::new(1);
+        for v in &mut p.data {
+            *v = rng.next_f32();
+        }
+        let r = bench(
+            &format!("fdk_filter n={n} a=32"),
+            1,
+            3,
+            Duration::from_millis(500),
+            || {
+                let mut q = p.clone();
+                tigre::kernels::filtering::fdk_filter(
+                    &g,
+                    &mut q,
+                    tigre::kernels::filtering::Window::Hann,
+                    threads,
+                );
+                std::hint::black_box(q);
+            },
+        );
+        println!("{}", r.summary());
+    }
+
+    // TV / ROF regularizers
+    let v = phantom::random(32, 32, 32, 5);
+    let r = bench("rof_denoise 32³ x10", 1, 3, Duration::from_millis(500), || {
+        std::hint::black_box(tigre::kernels::tv::rof_denoise(&v, 0.2, 10));
+    });
+    println!("{}", r.summary());
+    let r = bench("tv_gradient 32³", 1, 3, Duration::from_millis(500), || {
+        std::hint::black_box(tigre::kernels::tv::tv_gradient(&v));
+    });
+    println!("{}", r.summary());
+
+    // DES scheduler itself (must be negligible vs what it models)
+    let g = Geometry::cone_beam(2048, 2048);
+    let ctx = tigre::coordinator::MultiGpu::gtx1080ti(4);
+    let r = bench("des_schedule fp N=2048 4gpu", 1, 3, Duration::from_millis(500), || {
+        std::hint::black_box(
+            ctx.forward(&g, None, tigre::coordinator::ExecMode::SimOnly).unwrap(),
+        );
+    });
+    println!("{}", r.summary());
+}

@@ -1,0 +1,152 @@
+//! CGLS — conjugate gradient on the normal equations `AᵀA x = Aᵀb`
+//! (the paper's Fig. 10 algorithm; also the §4 timing anchor:
+//! 512³ × 15 iterations in 61 s on one GTX 1080 Ti).
+//!
+//! CGLS "fundamentally requires a matched backprojection" (paper §3.1),
+//! so the context is forced to pseudo-matched weights.
+
+use crate::coordinator::MultiGpu;
+use crate::geometry::Geometry;
+use crate::volume::{ProjectionSet, Volume};
+
+use super::common::{ReconOpts, ReconResult, TrackedOps};
+use super::ossart::matched_ctx;
+
+/// CGLS reconstruction from zero initial guess.
+pub fn cgls(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    proj: &ProjectionSet,
+    opts: &ReconOpts,
+) -> anyhow::Result<ReconResult> {
+    let ctx = matched_ctx(ctx);
+    let mut ops = TrackedOps::new(&ctx, g);
+
+    let mut x = Volume::zeros_like(g);
+    // r = b − Ax = b;  p = s = Aᵀr
+    let mut r = proj.clone();
+    let mut s = ops.backward(g, &r)?;
+    let mut p = s.clone();
+    let mut gamma = s.dot(&s);
+
+    let mut residuals = Vec::with_capacity(opts.iterations);
+    for it in 0..opts.iterations {
+        if gamma <= 0.0 {
+            break;
+        }
+        // q = Ap
+        let q = ops.forward(g, &p)?;
+        let qq = q.dot(&q);
+        if qq <= 0.0 {
+            break;
+        }
+        let alpha = (gamma / qq) as f32;
+        x.add_scaled(&p, alpha);
+        r.add_scaled(&q, -alpha);
+        residuals.push(r.norm2());
+        if opts.verbose {
+            crate::log_info!("cgls iter {it}: residual {:.4e}", r.norm2());
+        }
+        // s = Aᵀr
+        s = ops.backward(g, &r)?;
+        let gamma_new = s.dot(&s);
+        let beta = (gamma_new / gamma) as f32;
+        gamma = gamma_new;
+        // p = s + β p
+        for (pv, sv) in p.data.iter_mut().zip(&s.data) {
+            *pv = sv + beta * *pv;
+        }
+    }
+    if opts.nonneg {
+        x.clamp_min(0.0);
+    }
+
+    Ok(ReconResult {
+        volume: x,
+        residuals,
+        sim_time_s: ops.sim_time_s,
+        peak_device_bytes: ops.peak_device_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ExecMode;
+    use crate::metrics;
+    use crate::phantom;
+
+    #[test]
+    fn cgls_residual_is_monotone_nonincreasing() {
+        let n = 16;
+        let g = Geometry::cone_beam(n, 24);
+        let truth = phantom::shepp_logan(n);
+        let ctx = MultiGpu::gtx1080ti(1);
+        let (p, _) = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap();
+        let opts = ReconOpts { iterations: 8, nonneg: false, ..Default::default() };
+        let r = cgls(&ctx, &g, &p.unwrap(), &opts).unwrap();
+        for w in r.residuals.windows(2) {
+            assert!(w[1] <= w[0] * 1.001, "CGLS residual must not increase: {:?}", r.residuals);
+        }
+    }
+
+    #[test]
+    fn cgls_outperforms_few_iteration_sirt() {
+        // CGLS converges much faster per iteration than SIRT.
+        let n = 16;
+        let g = Geometry::cone_beam(n, 24);
+        let truth = phantom::shepp_logan(n);
+        let ctx = MultiGpu::gtx1080ti(1);
+        let (p, _) = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap();
+        let p = p.unwrap();
+        let opts = ReconOpts { iterations: 6, nonneg: true, ..Default::default() };
+        let r_cgls = cgls(&ctx, &g, &p, &opts).unwrap();
+        let r_sirt = super::super::ossart::sirt(&ctx, &g, &p, &opts).unwrap();
+        let e_cgls = metrics::rmse(&truth, &r_cgls.volume);
+        let e_sirt = metrics::rmse(&truth, &r_sirt.volume);
+        assert!(e_cgls < e_sirt, "cgls {e_cgls} vs sirt {e_sirt}");
+    }
+
+    #[test]
+    fn cgls_robust_to_angular_undersampling_vs_fdk() {
+        // The Fig. 10 comparison: with ⅓ of the angles, CGLS beats FDK.
+        let n = 20;
+        let g = Geometry::cone_beam(n, 20);
+        let truth = phantom::shepp_logan(n);
+        let ctx = MultiGpu::gtx1080ti(1);
+        let (p, _) = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap();
+        let p = p.unwrap();
+        let r_cgls = cgls(
+            &ctx,
+            &g,
+            &p,
+            &ReconOpts { iterations: 10, ..Default::default() },
+        )
+        .unwrap();
+        let r_fdk =
+            super::super::fdk::fdk(&ctx, &g, &p, crate::kernels::filtering::Window::RamLak)
+                .unwrap();
+        let e_cgls = metrics::rmse(&truth, &r_cgls.volume);
+        let e_fdk = metrics::rmse(&truth, &r_fdk.volume);
+        assert!(e_cgls < e_fdk, "cgls {e_cgls} vs fdk {e_fdk}");
+    }
+
+    #[test]
+    fn cgls_works_with_split_devices() {
+        // Same reconstruction quality when devices are tiny and the
+        // volume must split — the paper's end-to-end claim.
+        let n = 16;
+        let g = Geometry::cone_beam(n, 16);
+        let truth = phantom::shepp_logan(n);
+        let big = MultiGpu::gtx1080ti(1);
+        let (p, _) = big.forward(&g, Some(&truth), ExecMode::Full).unwrap();
+        let p = p.unwrap();
+        let opts = ReconOpts { iterations: 5, nonneg: false, ..Default::default() };
+        let r_big = cgls(&big, &g, &p, &opts).unwrap();
+        let plane = (n * n * 4) as u64;
+        let tiny = MultiGpu::gtx1080ti(2).with_device_mem(6 * plane + 3 * 16 * g.single_proj_bytes());
+        let r_tiny = cgls(&tiny, &g, &p, &opts).unwrap();
+        let rel = metrics::rel_l2(&r_big.volume, &r_tiny.volume);
+        assert!(rel < 1e-3, "split CGLS deviates: {rel}");
+    }
+}

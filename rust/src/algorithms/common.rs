@@ -1,0 +1,126 @@
+//! Shared algorithm plumbing: operator wrappers that accumulate the
+//! simulated multi-GPU time, convergence traces and result reporting.
+
+use crate::coordinator::{ExecMode, MultiGpu};
+use crate::geometry::Geometry;
+use crate::volume::{ProjectionSet, Volume};
+
+/// Options common to the iterative algorithms.
+#[derive(Clone, Debug)]
+pub struct ReconOpts {
+    pub iterations: usize,
+    /// Relaxation / step parameter (λ for SART-family, unused by CGLS).
+    pub lambda: f32,
+    /// Enforce non-negativity after each update.
+    pub nonneg: bool,
+    /// Verbose per-iteration logging.
+    pub verbose: bool,
+}
+
+impl Default for ReconOpts {
+    fn default() -> Self {
+        Self { iterations: 10, lambda: 1.0, nonneg: true, verbose: false }
+    }
+}
+
+/// Result of a reconstruction: the volume, the convergence trace and the
+/// simulated wall-clock the multi-GPU node would have spent.
+#[derive(Clone, Debug)]
+pub struct ReconResult {
+    pub volume: Volume,
+    /// ‖b − Ax‖₂ after each iteration (when the algorithm computes it).
+    pub residuals: Vec<f64>,
+    /// Total simulated time across all operator calls, seconds.
+    pub sim_time_s: f64,
+    /// Peak simulated device memory over all calls.
+    pub peak_device_bytes: u64,
+}
+
+/// Wraps a [`MultiGpu`] and counts simulated seconds across operator
+/// calls — the algorithm-level analogue of the paper's timing runs.
+pub struct TrackedOps<'a> {
+    pub ctx: &'a MultiGpu,
+    pub g: &'a Geometry,
+    pub sim_time_s: f64,
+    pub peak_device_bytes: u64,
+}
+
+impl<'a> TrackedOps<'a> {
+    pub fn new(ctx: &'a MultiGpu, g: &'a Geometry) -> Self {
+        Self { ctx, g, sim_time_s: 0.0, peak_device_bytes: 0 }
+    }
+
+    /// Forward projection of `vol` over all angles of a (possibly subset)
+    /// geometry `g`.
+    pub fn forward(&mut self, g: &Geometry, vol: &Volume) -> anyhow::Result<ProjectionSet> {
+        let (p, stats) = self.ctx.forward(g, Some(vol), ExecMode::Full)?;
+        self.sim_time_s += stats.makespan_s;
+        self.peak_device_bytes = self.peak_device_bytes.max(stats.peak_device_bytes);
+        Ok(p.expect("Full mode returns data"))
+    }
+
+    pub fn backward(&mut self, g: &Geometry, proj: &ProjectionSet) -> anyhow::Result<Volume> {
+        let (v, stats) = self.ctx.backward(g, Some(proj), ExecMode::Full)?;
+        self.sim_time_s += stats.makespan_s;
+        self.peak_device_bytes = self.peak_device_bytes.max(stats.peak_device_bytes);
+        Ok(v.expect("Full mode returns data"))
+    }
+}
+
+/// `max(x, eps)` reciprocal used for SART weight volumes.
+pub fn safe_recip(data: &mut [f32]) {
+    for v in data.iter_mut() {
+        *v = if v.abs() > 1e-6 { 1.0 / *v } else { 0.0 };
+    }
+}
+
+/// Build the ordered-subset angle index lists: `n_subsets` interleaved
+/// subsets (TIGRE's default angular ordering for OS-SART).
+pub fn ordered_subsets(n_angles: usize, subset_size: usize) -> Vec<Vec<usize>> {
+    let subset_size = subset_size.clamp(1, n_angles);
+    let n_subsets = n_angles.div_ceil(subset_size);
+    let mut subsets: Vec<Vec<usize>> = vec![Vec::new(); n_subsets];
+    // interleave angles so each subset spans the angular range
+    for a in 0..n_angles {
+        subsets[a % n_subsets].push(a);
+    }
+    subsets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_subsets_partition_angles() {
+        let subsets = ordered_subsets(10, 3);
+        assert_eq!(subsets.len(), 4);
+        let mut all: Vec<usize> = subsets.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        // each subset spans the angular range (interleaved)
+        assert!(subsets[0].contains(&0));
+        assert!(subsets[0].iter().any(|&a| a >= 5));
+    }
+
+    #[test]
+    fn subset_size_one_gives_singletons() {
+        let subsets = ordered_subsets(4, 1);
+        assert_eq!(subsets.len(), 4);
+        assert!(subsets.iter().all(|s| s.len() == 1));
+    }
+
+    #[test]
+    fn subset_size_all_gives_one() {
+        let subsets = ordered_subsets(6, 6);
+        assert_eq!(subsets.len(), 1);
+        assert_eq!(subsets[0].len(), 6);
+    }
+
+    #[test]
+    fn safe_recip_handles_zero() {
+        let mut v = vec![2.0, 0.0, -4.0];
+        safe_recip(&mut v);
+        assert_eq!(v, vec![0.5, 0.0, -0.25]);
+    }
+}

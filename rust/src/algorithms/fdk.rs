@@ -1,0 +1,119 @@
+//! FDK (Feldkamp–Davis–Kress) analytic reconstruction: cosine-weight +
+//! ramp-filter the projections, then one FDK-weighted backprojection.
+
+use crate::coordinator::{ExecMode, MultiGpu};
+use crate::geometry::Geometry;
+use crate::kernels::filtering::{fdk_filter, Window};
+use crate::volume::{ProjectionSet, Volume};
+
+use super::common::ReconResult;
+
+/// FDK reconstruction. `window` defaults to Hann in the examples (as the
+/// paper's reconstructions do for measured data).
+pub fn fdk(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    proj: &ProjectionSet,
+    window: Window,
+) -> anyhow::Result<ReconResult> {
+    let threads = crate::kernels::kernel_threads();
+    let mut filtered = proj.clone();
+    fdk_filter(g, &mut filtered, window, threads);
+
+    let (vol, stats) = ctx.backward(g, Some(&filtered), ExecMode::Full)?;
+    let mut volume = vol.expect("Full mode returns data");
+
+    // FDK normalization beyond the Δθ/2 folded into the filter: the ramp
+    // filter was applied at the *physical* detector pitch (du = mag·du_iso),
+    // which under-weights by one magnification factor relative to the
+    // virtual iso-centre detector of the textbook formula.
+    let mag = (g.dsd / g.dso) as f32;
+    volume.scale(mag);
+
+    Ok(ReconResult {
+        volume,
+        residuals: vec![],
+        sim_time_s: stats.makespan_s,
+        peak_device_bytes: stats.peak_device_bytes,
+    })
+}
+
+/// Convenience: forward-project a phantom and reconstruct it (used by
+/// tests and benches).
+pub fn project_and_fdk(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    phantom: &Volume,
+    window: Window,
+) -> anyhow::Result<ReconResult> {
+    let (p, _) = ctx.forward(g, Some(phantom), ExecMode::Full)?;
+    fdk(ctx, g, &p.unwrap(), window)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+    use crate::phantom;
+
+    /// FDK with plenty of angles must reconstruct values close to the
+    /// phantom (scale included): checks both structure and amplitude.
+    #[test]
+    fn fdk_reconstructs_sphere_amplitude() {
+        let n = 32;
+        let c = (n as f64 - 1.0) / 2.0;
+        let truth = crate::volume::Volume::from_fn(n, n, n, |x, y, z| {
+            let d = ((x as f64 - c).powi(2) + (y as f64 - c).powi(2) + (z as f64 - c).powi(2))
+                .sqrt();
+            if d < 9.0 {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let g = Geometry::cone_beam(n, 96);
+        let ctx = MultiGpu::gtx1080ti(2);
+        let r = project_and_fdk(&ctx, &g, &truth, Window::RamLak).unwrap();
+        // centre of the sphere should be near 1.0 (within discretization)
+        let centre = r.volume.at(n / 2, n / 2, n / 2);
+        assert!(
+            (0.6..1.4).contains(&centre),
+            "FDK amplitude at sphere centre: {centre}"
+        );
+        // air stays near 0
+        let air = r.volume.at(1, n / 2, n / 2);
+        assert!(air.abs() < 0.25, "air value {air}");
+        // overall correlation with the truth is high
+        let corr = metrics::correlation(&truth, &r.volume);
+        assert!(corr > 0.85, "correlation {corr}");
+    }
+
+    #[test]
+    fn fdk_angular_undersampling_degrades_quality() {
+        // The Fig. 10 effect: FDK with ⅓ of the angles shows artefacts.
+        let n = 24;
+        let truth = phantom::shepp_logan(n);
+        let ctx = MultiGpu::gtx1080ti(1);
+        let g_full = Geometry::cone_beam(n, 72);
+        let g_sub = Geometry::cone_beam(n, 24);
+        let full = project_and_fdk(&ctx, &g_full, &truth, Window::RamLak).unwrap();
+        let sub = project_and_fdk(&ctx, &g_sub, &truth, Window::RamLak).unwrap();
+        let e_full = metrics::rmse(&truth, &full.volume);
+        let e_sub = metrics::rmse(&truth, &sub.volume);
+        assert!(e_sub > e_full, "undersampled {e_sub} vs full {e_full}");
+    }
+
+    #[test]
+    fn hann_window_smooths() {
+        let n = 24;
+        let truth = phantom::shepp_logan(n);
+        let ctx = MultiGpu::gtx1080ti(1);
+        let g = Geometry::cone_beam(n, 48);
+        let ram = project_and_fdk(&ctx, &g, &truth, Window::RamLak).unwrap();
+        let han = project_and_fdk(&ctx, &g, &truth, Window::Hann).unwrap();
+        // Hann suppresses high frequencies → smoother volume (smaller TV)
+        let tv_ram = crate::kernels::tv::tv_value(&ram.volume);
+        let tv_han = crate::kernels::tv::tv_value(&han.volume);
+        assert!(tv_han < tv_ram, "hann TV {tv_han} vs ramlak TV {tv_ram}");
+    }
+}

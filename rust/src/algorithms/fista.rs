@@ -1,0 +1,173 @@
+//! FISTA with TV proximal operator: accelerated proximal gradient on
+//! `min ‖Ax − b‖² + λ·TV(x)` (Beck & Teboulle 2009, as shipped in TIGRE).
+//! The TV prox is solved by the multi-GPU ROF denoiser (§2.3).
+
+use crate::coordinator::regularizer::rof_denoise_split;
+use crate::coordinator::MultiGpu;
+use crate::geometry::Geometry;
+use crate::volume::{ProjectionSet, Volume};
+
+use super::common::{ReconOpts, ReconResult, TrackedOps};
+use super::ossart::matched_ctx;
+
+/// FISTA options beyond the common ones.
+#[derive(Clone, Debug)]
+pub struct FistaOpts {
+    pub common: ReconOpts,
+    /// TV weight λ.
+    pub tv_lambda: f32,
+    /// Inner ROF iterations per prox evaluation.
+    pub tv_iters: usize,
+    /// Step size 1/L; if `None`, estimated by power iteration on AᵀA.
+    pub step: Option<f32>,
+}
+
+impl Default for FistaOpts {
+    fn default() -> Self {
+        Self {
+            common: ReconOpts::default(),
+            tv_lambda: 0.05,
+            tv_iters: 10,
+            step: None,
+        }
+    }
+}
+
+/// FISTA-TV reconstruction.
+pub fn fista(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    proj: &ProjectionSet,
+    opts: &FistaOpts,
+) -> anyhow::Result<ReconResult> {
+    let ctx = matched_ctx(ctx);
+    let mut ops = TrackedOps::new(&ctx, g);
+
+    // Estimate the Lipschitz constant L = ‖AᵀA‖ by power iteration.
+    let step = match opts.step {
+        Some(s) => s,
+        None => {
+            let mut v = crate::phantom::random(g.n_vox[0], g.n_vox[1], g.n_vox[2], 42);
+            let mut lmax = 1.0f64;
+            for _ in 0..4 {
+                let av = ops.forward(g, &v)?;
+                let atav = ops.backward(g, &av)?;
+                lmax = atav.norm2() / v.norm2().max(1e-30);
+                let n = atav.norm2().max(1e-30) as f32;
+                v = atav;
+                v.scale(1.0 / n);
+            }
+            (1.0 / lmax.max(1e-30)) as f32
+        }
+    };
+
+    let mut x = Volume::zeros_like(g);
+    let mut y = x.clone();
+    let mut t = 1.0f32;
+    let mut residuals = Vec::with_capacity(opts.common.iterations);
+
+    for it in 0..opts.common.iterations {
+        // gradient step on y: y − step·Aᵀ(Ay − b)
+        let mut ay = ops.forward(g, &y)?;
+        ay.add_scaled(proj, -1.0);
+        residuals.push(ay.norm2());
+        let grad = ops.backward(g, &ay)?;
+        let mut z = y.clone();
+        z.add_scaled(&grad, -step);
+        // prox: multi-GPU ROF TV denoise
+        let (x_new, stats) =
+            rof_denoise_split(&ctx, &z, opts.tv_lambda * step, opts.tv_iters, opts.tv_iters);
+        ops.sim_time_s += stats.makespan_s;
+        let mut x_new = x_new;
+        if opts.common.nonneg {
+            x_new.clamp_min(0.0);
+        }
+        // momentum
+        let t_new = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let beta = (t - 1.0) / t_new;
+        let mut y_new = x_new.clone();
+        for (yv, (xn, xo)) in y_new.data.iter_mut().zip(x_new.data.iter().zip(&x.data)) {
+            *yv = xn + beta * (xn - xo);
+        }
+        x = x_new;
+        y = y_new;
+        t = t_new;
+        if opts.common.verbose {
+            crate::log_info!("fista iter {it}: residual {:.4e}", residuals.last().unwrap());
+        }
+    }
+
+    Ok(ReconResult {
+        volume: x,
+        residuals,
+        sim_time_s: ops.sim_time_s,
+        peak_device_bytes: ops.peak_device_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ExecMode;
+    use crate::metrics;
+    use crate::phantom;
+
+    #[test]
+    fn fista_converges_on_clean_data() {
+        let n = 16;
+        let g = Geometry::cone_beam(n, 20);
+        let truth = phantom::cube(n, 0.5, 1.0);
+        let ctx = MultiGpu::gtx1080ti(1);
+        let (p, _) = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap();
+        let opts = FistaOpts {
+            common: ReconOpts { iterations: 12, ..Default::default() },
+            tv_lambda: 0.01,
+            tv_iters: 5,
+            step: None,
+        };
+        let r = fista(&ctx, &g, &p.unwrap(), &opts).unwrap();
+        let corr = metrics::correlation(&truth, &r.volume);
+        assert!(corr > 0.8, "correlation {corr}");
+        let first = r.residuals[0];
+        let last = *r.residuals.last().unwrap();
+        assert!(last < first * 0.5, "residuals {first} → {last}");
+    }
+
+    #[test]
+    fn fista_tv_denoises_noisy_projections() {
+        // TV-regularized recon beats plain SIRT under projection noise.
+        let n = 16;
+        let g = Geometry::cone_beam(n, 20);
+        let truth = phantom::cube(n, 0.5, 1.0);
+        let ctx = MultiGpu::gtx1080ti(1);
+        let (p, _) = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap();
+        let mut noisy = p.unwrap();
+        let mut rng = crate::util::pcg::Pcg32::new(6);
+        let scale = 0.08 * noisy.data.iter().cloned().fold(f32::MIN, f32::max);
+        for v in &mut noisy.data {
+            *v += scale * rng.normal() as f32;
+        }
+        let r_fista = fista(
+            &ctx,
+            &g,
+            &noisy,
+            &FistaOpts {
+                common: ReconOpts { iterations: 10, ..Default::default() },
+                tv_lambda: 0.1,
+                tv_iters: 8,
+                step: None,
+            },
+        )
+        .unwrap();
+        let r_sirt = super::super::ossart::sirt(
+            &ctx,
+            &g,
+            &noisy,
+            &ReconOpts { iterations: 10, ..Default::default() },
+        )
+        .unwrap();
+        let e_fista = metrics::rmse(&truth, &r_fista.volume);
+        let e_sirt = metrics::rmse(&truth, &r_sirt.volume);
+        assert!(e_fista < e_sirt, "fista {e_fista} vs sirt {e_sirt}");
+    }
+}

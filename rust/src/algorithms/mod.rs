@@ -1,0 +1,22 @@
+//! TIGRE's reconstruction algorithm suite, built on the coordinator's
+//! multi-GPU operators. Every `Ax` / `Aᵀb` inside these algorithms goes
+//! through [`crate::coordinator::MultiGpu`], so arbitrarily large volumes
+//! reconstruct on arbitrarily small (simulated) devices — the whole point
+//! of the paper ("by adapting the GPU code …, TIGRE will also
+//! automatically handle such images").
+
+pub mod asd_pocs;
+pub mod cgls;
+pub mod common;
+pub mod fdk;
+pub mod fista;
+pub mod landweber;
+pub mod ossart;
+
+pub use asd_pocs::asd_pocs;
+pub use cgls::cgls;
+pub use common::{ReconOpts, ReconResult};
+pub use fdk::fdk;
+pub use fista::fista;
+pub use landweber::{landweber, mlem};
+pub use ossart::{os_sart, sart, sirt};

@@ -1,0 +1,199 @@
+//! Shared benchmark workloads and sweep runners, used by every target in
+//! `rust/benches/` (each bench regenerates one table/figure of the
+//! paper's evaluation; see DESIGN.md §5 for the experiment index).
+
+use crate::coordinator::{baseline, ExecMode, MultiGpu};
+use crate::geometry::Geometry;
+use crate::simgpu::timeline::Breakdown;
+use crate::util::stats::Table;
+
+/// The paper's Fig. 7–9 size grid (`N³` voxels, `N²` detector pixels,
+/// `N` angles). 3072 included: SimOnly needs no host data.
+pub const FIG7_SIZES: &[usize] = &[128, 256, 512, 1024, 1536, 2048, 2560, 3072];
+pub const FIG9_SIZES: &[usize] = &[256, 512, 1024, 2048, 3072];
+pub const GPU_COUNTS: &[usize] = &[1, 2, 3, 4];
+
+/// One cell of the Fig. 7 sweep.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub n: usize,
+    pub gpus: usize,
+    pub fp_s: f64,
+    pub bp_s: f64,
+    pub fp_breakdown: Breakdown,
+    pub bp_breakdown: Breakdown,
+    pub fp_splits: usize,
+    pub bp_splits: usize,
+    pub fp_pinned: bool,
+    pub bp_pinned: bool,
+}
+
+/// Run the FP+BP simulated sweep for one (N, gpus) cell.
+pub fn sweep_cell(n: usize, gpus: usize) -> anyhow::Result<SweepCell> {
+    let g = Geometry::cone_beam(n, n);
+    let ctx = MultiGpu::gtx1080ti(gpus);
+    let (_, fp) = ctx.forward(&g, None, ExecMode::SimOnly)?;
+    let (_, bp) = ctx.backward(&g, None, ExecMode::SimOnly)?;
+    Ok(SweepCell {
+        n,
+        gpus,
+        fp_s: fp.makespan_s,
+        bp_s: bp.makespan_s,
+        fp_breakdown: fp.breakdown,
+        bp_breakdown: bp.breakdown,
+        fp_splits: fp.splits_per_device,
+        bp_splits: bp.splits_per_device,
+        fp_pinned: fp.pinned,
+        bp_pinned: bp.pinned,
+    })
+}
+
+/// The full Fig. 7 sweep (returns row-major over sizes × gpu counts).
+pub fn fig7_sweep(sizes: &[usize], gpu_counts: &[usize]) -> Vec<SweepCell> {
+    let mut out = Vec::new();
+    for &n in sizes {
+        for &gpus in gpu_counts {
+            match sweep_cell(n, gpus) {
+                Ok(c) => out.push(c),
+                Err(e) => {
+                    // The paper's 4-GPU machine also skips points (RAM):
+                    // record the reason and move on.
+                    crate::log_warn!("sweep N={n} gpus={gpus} skipped: {e:#}");
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Render the Fig. 7 absolute-time table for one operator.
+pub fn fig7_table(cells: &[SweepCell], forward: bool) -> String {
+    let mut t = Table::new(&["N", "1 GPU [s]", "2 GPU [s]", "3 GPU [s]", "4 GPU [s]", "splits(1GPU)"]);
+    let sizes: Vec<usize> = dedup_sizes(cells);
+    for n in sizes {
+        let mut row = vec![n.to_string()];
+        for gpus in GPU_COUNTS {
+            let cell = cells.iter().find(|c| c.n == n && c.gpus == *gpus);
+            row.push(match cell {
+                Some(c) => format!("{:.3}", if forward { c.fp_s } else { c.bp_s }),
+                None => "-".into(),
+            });
+        }
+        let splits = cells
+            .iter()
+            .find(|c| c.n == n && c.gpus == 1)
+            .map(|c| if forward { c.fp_splits } else { c.bp_splits })
+            .unwrap_or(0);
+        row.push(splits.to_string());
+        t.row(row);
+    }
+    t.render()
+}
+
+/// Render the Fig. 8 percent-of-1-GPU table for one operator.
+pub fn fig8_table(cells: &[SweepCell], forward: bool) -> String {
+    let mut t = Table::new(&["N", "2 GPU [%]", "3 GPU [%]", "4 GPU [%]", "theory [%]"]);
+    let sizes: Vec<usize> = dedup_sizes(cells);
+    for n in sizes {
+        let base = cells
+            .iter()
+            .find(|c| c.n == n && c.gpus == 1)
+            .map(|c| if forward { c.fp_s } else { c.bp_s });
+        let Some(base) = base else { continue };
+        let mut row = vec![n.to_string()];
+        for gpus in &[2usize, 3, 4] {
+            let cell = cells.iter().find(|c| c.n == n && c.gpus == *gpus);
+            row.push(match cell {
+                Some(c) => {
+                    let v = if forward { c.fp_s } else { c.bp_s };
+                    format!("{:.1}", 100.0 * v / base)
+                }
+                None => "-".into(),
+            });
+        }
+        row.push("50.0/33.3/25.0".into());
+        t.row(row);
+    }
+    t.render()
+}
+
+/// Render the Fig. 9 breakdown table for one operator.
+pub fn fig9_table(cells: &[SweepCell], forward: bool) -> String {
+    let mut t = Table::new(&["N", "GPUs", "compute %", "pin/unpin %", "other mem %", "idle %"]);
+    for c in cells {
+        let b = if forward { &c.fp_breakdown } else { &c.bp_breakdown };
+        let (comp, pin, mem, idle) = b.fractions();
+        t.row(vec![
+            c.n.to_string(),
+            c.gpus.to_string(),
+            format!("{:.1}", comp * 100.0),
+            format!("{:.1}", pin * 100.0),
+            format!("{:.1}", mem * 100.0),
+            format!("{:.1}", idle * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+fn dedup_sizes(cells: &[SweepCell]) -> Vec<usize> {
+    let mut sizes: Vec<usize> = cells.iter().map(|c| c.n).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes
+}
+
+/// Proposed-vs-naive comparison for one (N, gpus) cell.
+pub fn buffering_ablation(n: usize, gpus: usize) -> anyhow::Result<(f64, f64, f64, f64)> {
+    let g = Geometry::cone_beam(n, n);
+    let ctx = MultiGpu::gtx1080ti(gpus);
+    let (_, fp) = ctx.forward(&g, None, ExecMode::SimOnly)?;
+    let (_, bp) = ctx.backward(&g, None, ExecMode::SimOnly)?;
+    let nfp = baseline::naive_forward(&ctx, &g)?;
+    let nbp = baseline::naive_backward(&ctx, &g)?;
+    Ok((fp.makespan_s, nfp.makespan_s, bp.makespan_s, nbp.makespan_s))
+}
+
+/// Save a sweep to CSV under `results/` for plotting.
+pub fn save_sweep_csv(path: &std::path::Path, cells: &[SweepCell]) -> anyhow::Result<()> {
+    let cols: Vec<Vec<f64>> = vec![
+        cells.iter().map(|c| c.n as f64).collect(),
+        cells.iter().map(|c| c.gpus as f64).collect(),
+        cells.iter().map(|c| c.fp_s).collect(),
+        cells.iter().map(|c| c.bp_s).collect(),
+        cells.iter().map(|c| c.fp_splits as f64).collect(),
+        cells.iter().map(|c| c.bp_splits as f64).collect(),
+    ];
+    crate::io::save_csv(path, &["n", "gpus", "fp_s", "bp_s", "fp_splits", "bp_splits"], &cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_cell_produces_sane_numbers() {
+        let c = sweep_cell(512, 2).unwrap();
+        assert!(c.fp_s > 0.0 && c.bp_s > 0.0);
+        assert!(c.bp_s < c.fp_s, "BP faster than FP (paper §3.1)");
+        assert_eq!(c.n, 512);
+    }
+
+    #[test]
+    fn tables_render_for_small_sweep() {
+        let cells = fig7_sweep(&[128, 256], &[1, 2]);
+        assert_eq!(cells.len(), 4);
+        let t7 = fig7_table(&cells, true);
+        assert!(t7.contains("128") && t7.contains("256"));
+        let t8 = fig8_table(&cells, false);
+        assert!(t8.contains("50.0/33.3/25.0"));
+        let t9 = fig9_table(&cells, true);
+        assert!(t9.lines().count() >= 6);
+    }
+
+    #[test]
+    fn buffering_ablation_proposed_wins() {
+        let (fp, nfp, bp, nbp) = buffering_ablation(1024, 2).unwrap();
+        assert!(fp <= nfp);
+        assert!(bp <= nbp);
+    }
+}

@@ -1,0 +1,350 @@
+//! CLI: subcommand dispatch for the `tigre` binary (the L3 leader
+//! entrypoint), plus the run-configuration plumbing.
+
+use std::path::{Path, PathBuf};
+
+use crate::algorithms::{self, ReconOpts};
+use crate::coordinator::{Backend, ExecMode, MultiGpu};
+use crate::geometry::Geometry;
+use crate::kernels::filtering::Window;
+use crate::phantom;
+use crate::util::cli::Command;
+use crate::util::units::{fmt_bytes, parse_bytes};
+use crate::volume::Volume;
+
+/// Build the execution context from common CLI options.
+fn ctx_from(args: &crate::util::cli::Args) -> anyhow::Result<MultiGpu> {
+    let gpus = args.get_usize("gpus")?.unwrap_or(1);
+    let mut ctx = MultiGpu::gtx1080ti(gpus);
+    if let Some(mem) = args.get("device-mem") {
+        ctx = ctx.with_device_mem(parse_bytes(mem)?);
+    }
+    if let Some(dir) = args.get("artifacts") {
+        ctx = ctx.with_backend(Backend::Pjrt {
+            artifacts_dir: PathBuf::from(dir),
+            weight: crate::kernels::BackprojWeight::Fdk,
+            threads: crate::kernels::kernel_threads(),
+        });
+    }
+    Ok(ctx)
+}
+
+fn make_phantom(kind: &str, nx: usize, ny: usize, nz: usize) -> anyhow::Result<Volume> {
+    Ok(match kind {
+        "shepp-logan" => phantom::rasterize(&phantom::shepp_logan_ellipsoids(), nx, ny, nz),
+        "bean" => phantom::bean(nx, ny, nz),
+        "fossil" => phantom::fossil(nx, ny, nz, 7),
+        "cube" => {
+            anyhow::ensure!(nx == ny && ny == nz, "cube phantom needs a cubic volume");
+            phantom::cube(nx, 0.5, 1.0)
+        }
+        other => anyhow::bail!("unknown phantom '{other}' (shepp-logan|bean|fossil|cube)"),
+    })
+}
+
+/// CLI entrypoint; dispatches `tigre <subcommand> ...`.
+pub fn cli_main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match sub {
+        "info" => info(rest),
+        "reconstruct" => reconstruct(rest),
+        "project" => project(rest),
+        "sweep" => sweep(rest),
+        "selftest" => selftest(rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", help_text());
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown subcommand '{other}'\n{}", help_text());
+        }
+    }
+}
+
+fn help_text() -> String {
+    "tigre — multi-GPU (simulated) iterative tomographic reconstruction\n\
+     subcommands:\n\
+     \x20 info         show node, device and artifact information\n\
+     \x20 reconstruct  phantom → projections → reconstruction\n\
+     \x20 project      forward/backproject a phantom, report timings\n\
+     \x20 sweep        Fig.7-style FP/BP timing sweep over N × GPUs\n\
+     \x20 selftest     verify split == unsplit numerics on this install\n\
+     run `tigre <subcommand> --help-cmd` for options"
+        .to_string()
+}
+
+fn info(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("info", "show node, device and artifact info")
+        .opt("gpus", "number of simulated GPUs", Some("2"))
+        .opt("device-mem", "per-device memory (e.g. 11GiB)", None)
+        .opt("artifacts", "artifacts directory", Some("artifacts"))
+        .flag("help-cmd", "show options");
+    let args = cmd.parse(rest)?;
+    if args.flag("help-cmd") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let ctx = ctx_from(&args)?;
+    println!("node: {} × {}", ctx.n_gpus, ctx.spec.name);
+    println!("device memory: {}", fmt_bytes(ctx.spec.mem_bytes));
+    println!(
+        "PCIe: pageable {:.1} GB/s, pinned {:.1} GB/s",
+        ctx.cost.pcie_pageable_bps / 1e9,
+        ctx.cost.pcie_pinned_bps / 1e9
+    );
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    match crate::runtime::Manifest::load(&dir) {
+        Ok(m) if !m.entries.is_empty() => {
+            println!("artifacts ({}):", dir.display());
+            for e in &m.entries {
+                println!(
+                    "  {} [{}³ vox, {}² det, {} angles]",
+                    e.name, e.nx, e.nu, e.angles
+                );
+            }
+        }
+        _ => println!("artifacts: none (run `make artifacts`)"),
+    }
+    // paper §4 size limits for this device
+    println!(
+        "max N (paper §4 formulas): FP {}, BP {}, relaxed {}",
+        crate::coordinator::splitter::max_n_forward(ctx.spec.mem_bytes),
+        crate::coordinator::splitter::max_n_backward(ctx.spec.mem_bytes),
+        crate::coordinator::splitter::max_n_relaxed(ctx.spec.mem_bytes),
+    );
+    Ok(())
+}
+
+fn reconstruct(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("reconstruct", "phantom → projections → reconstruction")
+        .opt("algo", "fdk|sirt|sart|ossart|cgls|fista|asdpocs|landweber|mlem", Some("cgls"))
+        .opt("phantom", "shepp-logan|bean|fossil|cube", Some("shepp-logan"))
+        .opt("n", "volume size (n³)", Some("32"))
+        .opt("angles", "number of projection angles", Some("32"))
+        .opt("iters", "iterations", Some("10"))
+        .opt("subset", "OS-SART subset size", Some("8"))
+        .opt("gpus", "number of simulated GPUs", Some("2"))
+        .opt("device-mem", "per-device memory (e.g. 256MiB)", None)
+        .opt("artifacts", "use PJRT artifacts from this dir", None)
+        .opt("out", "save volume to this .raw path", None)
+        .opt("slice", "save central slice PGM to this path", None)
+        .flag("verbose", "per-iteration logging")
+        .flag("help-cmd", "show options");
+    let args = cmd.parse(rest)?;
+    if args.flag("help-cmd") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let n = args.get_usize("n")?.unwrap();
+    let n_angles = args.get_usize("angles")?.unwrap();
+    let iters = args.get_usize("iters")?.unwrap();
+    let ctx = ctx_from(&args)?;
+    let g = Geometry::cone_beam(n, n_angles);
+    let truth = make_phantom(args.get("phantom").unwrap(), n, n, n)?;
+
+    crate::log_info!("forward-projecting {n}³ phantom over {n_angles} angles");
+    let (p, fp_stats) = ctx.forward(&g, Some(&truth), ExecMode::Full)?;
+    let p = p.unwrap();
+    crate::log_info!(
+        "projection done: sim {:.3}s, splits/device {}",
+        fp_stats.makespan_s,
+        fp_stats.splits_per_device
+    );
+
+    let opts = ReconOpts {
+        iterations: iters,
+        verbose: args.flag("verbose"),
+        ..Default::default()
+    };
+    let algo = args.get("algo").unwrap();
+    let t0 = std::time::Instant::now();
+    let result = match algo {
+        "fdk" => algorithms::fdk(&ctx, &g, &p, Window::Hann)?,
+        "sirt" => algorithms::sirt(&ctx, &g, &p, &opts)?,
+        "sart" => algorithms::sart(&ctx, &g, &p, &opts)?,
+        "ossart" => {
+            let subset = args.get_usize("subset")?.unwrap();
+            algorithms::os_sart(&ctx, &g, &p, subset, &opts)?
+        }
+        "cgls" => algorithms::cgls(&ctx, &g, &p, &opts)?,
+        "landweber" => algorithms::landweber(&ctx, &g, &p, &opts)?,
+        "mlem" => algorithms::mlem(&ctx, &g, &p, &opts)?,
+        "fista" => algorithms::fista(
+            &ctx,
+            &g,
+            &p,
+            &algorithms::fista::FistaOpts { common: opts, ..Default::default() },
+        )?,
+        "asdpocs" => algorithms::asd_pocs(
+            &ctx,
+            &g,
+            &p,
+            &algorithms::asd_pocs::AsdPocsOpts { common: opts, ..Default::default() },
+        )?,
+        other => anyhow::bail!("unknown algorithm '{other}'"),
+    };
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("algorithm:        {algo}");
+    println!("problem:          {n}³ voxels, {n_angles} angles, {} GPUs", ctx.n_gpus);
+    println!("host wall-clock:  {wall:.2}s (CPU kernels)");
+    println!("simulated time:   {:.3}s (paper-testbed estimate)", result.sim_time_s);
+    println!("peak device mem:  {}", fmt_bytes(result.peak_device_bytes));
+    println!("RMSE vs phantom:  {:.5}", crate::metrics::rmse(&truth, &result.volume));
+    println!("PSNR vs phantom:  {:.2} dB", crate::metrics::psnr(&truth, &result.volume));
+    if let Some(res) = result.residuals.last() {
+        println!("final residual:   {res:.4e}");
+    }
+    if let Some(out) = args.get("out") {
+        crate::io::save_volume(Path::new(out), &result.volume)?;
+        println!("volume saved to {out}");
+    }
+    if let Some(slice) = args.get("slice") {
+        crate::io::save_slice_pgm(Path::new(slice), &result.volume, n / 2, None)?;
+        println!("central slice saved to {slice}");
+    }
+    Ok(())
+}
+
+fn project(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("project", "forward+backproject a phantom, report timings")
+        .opt("n", "volume size (n³)", Some("64"))
+        .opt("angles", "number of angles", Some("64"))
+        .opt("gpus", "number of simulated GPUs", Some("2"))
+        .opt("device-mem", "per-device memory", None)
+        .opt("artifacts", "use PJRT artifacts from this dir", None)
+        .flag("sim-only", "skip real compute (arbitrary N)")
+        .flag("help-cmd", "show options");
+    let args = cmd.parse(rest)?;
+    if args.flag("help-cmd") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let n = args.get_usize("n")?.unwrap();
+    let n_angles = args.get_usize("angles")?.unwrap();
+    let ctx = ctx_from(&args)?;
+    let g = Geometry::cone_beam(n, n_angles);
+
+    if args.flag("sim-only") {
+        let (_, fp) = ctx.forward(&g, None, ExecMode::SimOnly)?;
+        let (_, bp) = ctx.backward(&g, None, ExecMode::SimOnly)?;
+        print_op("forward", &fp);
+        print_op("backward", &bp);
+    } else {
+        let truth = phantom::shepp_logan(n);
+        let t0 = std::time::Instant::now();
+        let (p, fp) = ctx.forward(&g, Some(&truth), ExecMode::Full)?;
+        let fp_wall = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let (_, bp) = ctx.backward(&g, Some(&p.unwrap()), ExecMode::Full)?;
+        let bp_wall = t0.elapsed().as_secs_f64();
+        print_op("forward", &fp);
+        println!("  host wall-clock: {fp_wall:.3}s");
+        print_op("backward", &bp);
+        println!("  host wall-clock: {bp_wall:.3}s");
+    }
+    Ok(())
+}
+
+fn print_op(name: &str, stats: &crate::coordinator::OpStats) {
+    let (c, p, m, i) = stats.breakdown.fractions();
+    println!("{name}:");
+    println!("  simulated time:  {:.4}s", stats.makespan_s);
+    println!("  splits/device:   {}", stats.splits_per_device);
+    println!("  pinned:          {}", stats.pinned);
+    println!("  peak device mem: {}", fmt_bytes(stats.peak_device_bytes));
+    println!(
+        "  breakdown:       {:.0}% compute, {:.0}% pin, {:.0}% mem, {:.0}% idle",
+        c * 100.0,
+        p * 100.0,
+        m * 100.0,
+        i * 100.0
+    );
+}
+
+fn sweep(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("sweep", "Fig.7-style FP/BP timing sweep")
+        .opt("sizes", "comma-separated N list", Some("128,256,512,1024"))
+        .opt("gpus", "comma-separated GPU counts", Some("1,2,3,4"))
+        .opt("csv", "save results CSV here", None)
+        .flag("help-cmd", "show options");
+    let args = cmd.parse(rest)?;
+    if args.flag("help-cmd") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let sizes = args.get_usize_list("sizes")?.unwrap();
+    let gpus = args.get_usize_list("gpus")?.unwrap();
+    let cells = crate::bench::fig7_sweep(&sizes, &gpus);
+    println!("== forward projection (Fig. 7 analogue) ==");
+    println!("{}", crate::bench::fig7_table(&cells, true));
+    println!("== backprojection (Fig. 7 analogue) ==");
+    println!("{}", crate::bench::fig7_table(&cells, false));
+    println!("== % of 1-GPU time (Fig. 8 analogue) — forward ==");
+    println!("{}", crate::bench::fig8_table(&cells, true));
+    if let Some(csv) = args.get("csv") {
+        crate::bench::save_sweep_csv(Path::new(csv), &cells)?;
+        println!("csv saved to {csv}");
+    }
+    Ok(())
+}
+
+fn selftest(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("selftest", "verify split == unsplit numerics")
+        .flag("help-cmd", "show options");
+    let args = cmd.parse(rest)?;
+    if args.flag("help-cmd") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let n = 20;
+    let g = Geometry::cone_beam(n, 12);
+    let truth = phantom::shepp_logan(n);
+    let reference = crate::kernels::forward(&g, &truth, crate::kernels::Projector::Siddon, 2);
+    let plane = (n * n * 4) as u64;
+    let mem = 7 * plane + 3 * 12 * g.single_proj_bytes();
+    for gpus in [1, 2, 3] {
+        let ctx = MultiGpu::gtx1080ti(gpus).with_device_mem(mem);
+        let (p, stats) = ctx.forward(&g, Some(&truth), ExecMode::Full)?;
+        let p = p.unwrap();
+        let max_err = reference
+            .data
+            .iter()
+            .zip(&p.data)
+            .map(|(a, b)| (a - b).abs() / (1.0 + a.abs()))
+            .fold(0.0f32, f32::max);
+        anyhow::ensure!(max_err < 2e-3, "split mismatch on {gpus} GPUs: {max_err}");
+        println!(
+            "gpus={gpus}: split FP matches reference (max rel err {max_err:.2e}, \
+             {} splits/device) OK",
+            stats.splits_per_device
+        );
+    }
+    println!("selftest OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phantom_factory_kinds() {
+        assert!(make_phantom("shepp-logan", 8, 8, 8).is_ok());
+        assert!(make_phantom("bean", 8, 8, 8).is_ok());
+        assert!(make_phantom("fossil", 8, 8, 8).is_ok());
+        assert!(make_phantom("cube", 8, 8, 8).is_ok());
+        assert!(make_phantom("cube", 8, 8, 9).is_err());
+        assert!(make_phantom("nope", 8, 8, 8).is_err());
+    }
+
+    #[test]
+    fn help_mentions_all_subcommands() {
+        let h = help_text();
+        for s in ["info", "reconstruct", "project", "sweep", "selftest"] {
+            assert!(h.contains(s), "help missing {s}");
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Naive baseline strategies, for the ablation benches.
+//!
+//! This is the "common approach" the paper describes and improves upon:
+//! allocate projection memory alongside the image, run kernels, then
+//! gather — with no double buffering, no pinning, no transfer/compute
+//! overlap (every copy is synchronous and the host waits for each kernel
+//! *before* issuing the next copy). Comparing these schedules against
+//! Algorithms 1 & 2 quantifies the contribution of the queueing strategy
+//! itself.
+
+use crate::geometry::Geometry;
+use crate::simgpu::{Ev, SimNode};
+
+use super::executor::{MultiGpu, OpStats};
+use super::splitter::{plan_backward, plan_forward, Plan};
+
+/// Naive forward projection: same partitioning as Algorithm 1 (the
+/// splits are forced by memory), but fully serialized — kernel, then
+/// copy-out, then host-side accumulation, each step waiting for the last.
+pub fn naive_forward(ctx: &MultiGpu, g: &Geometry) -> anyhow::Result<OpStats> {
+    let mut plan = plan_forward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
+        .map_err(|e| anyhow::anyhow!("naive forward plan: {e}"))?;
+    plan.pin_image = false; // the naive strategy never pins
+    let mut sim = ctx.fresh_sim();
+    simulate_forward(g, &plan, &mut sim, &ctx.cost);
+    Ok(OpStats::from_sim(&sim, &plan))
+}
+
+/// Naive backprojection: serialized chunk copies and kernels, no overlap.
+pub fn naive_backward(ctx: &MultiGpu, g: &Geometry) -> anyhow::Result<OpStats> {
+    let mut plan = plan_backward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
+        .map_err(|e| anyhow::anyhow!("naive backward plan: {e}"))?;
+    plan.pin_image = false;
+    let mut sim = ctx.fresh_sim();
+    simulate_backward(g, &plan, &mut sim, &ctx.cost);
+    Ok(OpStats::from_sim(&sim, &plan))
+}
+
+fn simulate_forward(g: &Geometry, plan: &Plan, sim: &mut SimNode, cost: &crate::simgpu::CostModel) {
+    sim.property_check();
+    let n_dev = sim.n_devices();
+    for d in 0..n_dev {
+        sim.alloc(d, "projbuf", plan.proj_buffer_bytes);
+    }
+    // host-side accumulation rate for the gather step
+    let host_add_bps = 5.0e9;
+
+    if !plan.image_split {
+        let shares = crate::geometry::split::split_even(plan.angle_chunks.len(), n_dev);
+        let img = g.volume_bytes();
+        for d in 0..n_dev {
+            sim.alloc(d, "slab", img);
+            // pageable, synchronous; devices get the image one at a time
+            let e = sim.h2d(d, img, false, Ev::ZERO);
+            sim.host_sync(e);
+        }
+        let max_share = shares.iter().map(|(a, b)| b - a).max().unwrap_or(0);
+        for j in 0..max_share {
+            for d in 0..n_dev {
+                let (c0, c1) = shares[d];
+                if c0 + j >= c1 {
+                    continue;
+                }
+                let c = c0 + j;
+                let ch = plan.angle_chunks[c];
+                let t = cost.fp_slab_kernel_s(
+                    g.n_det[0],
+                    g.n_det[1],
+                    ch.len(),
+                    g.n_vox[0],
+                    g.n_vox[1],
+                    g.n_vox[2],
+                    g.n_vox[2],
+                );
+                // serialized: kernel → wait → copy-out → wait
+                let k = sim.kernel(d, t, Ev::ZERO, &format!("naive fp d{d} c{c}"));
+                sim.host_sync(k);
+                let bytes = ch.len() as u64 * g.single_proj_bytes();
+                let e = sim.d2h(d, bytes, false, k);
+                sim.host_sync(e);
+            }
+        }
+    } else {
+        let max_slabs = plan.splits_per_device();
+        for s in 0..max_slabs {
+            for d in 0..n_dev {
+                let Some(slab) = plan.per_device[d].slabs.get(s) else { continue };
+                sim.free(d, "slab");
+                sim.alloc(d, "slab", g.slab_bytes(slab.len()));
+                let e = sim.h2d(d, g.slab_bytes(slab.len()), false, Ev::ZERO);
+                sim.host_sync(e);
+                for (c, ch) in plan.angle_chunks.iter().enumerate() {
+                    let t = cost.fp_slab_kernel_s(
+                        g.n_det[0],
+                        g.n_det[1],
+                        ch.len(),
+                        g.n_vox[0],
+                        g.n_vox[1],
+                        slab.len(),
+                        g.n_vox[2],
+                    );
+                    let k = sim.kernel(d, t, Ev::ZERO, &format!("naive fp d{d} s{s} c{c}"));
+                    sim.host_sync(k);
+                    let bytes = ch.len() as u64 * g.single_proj_bytes();
+                    let e = sim.d2h(d, bytes, false, k);
+                    sim.host_sync(e);
+                    // gather on host: accumulate the partials
+                    sim.host_busy(
+                        bytes as f64 / host_add_bps,
+                        crate::simgpu::Category::OtherMem,
+                        "host gather",
+                    );
+                }
+            }
+        }
+    }
+    for d in 0..n_dev {
+        sim.free(d, "projbuf");
+        sim.free(d, "slab");
+    }
+    sim.sync_all();
+}
+
+fn simulate_backward(g: &Geometry, plan: &Plan, sim: &mut SimNode, cost: &crate::simgpu::CostModel) {
+    sim.property_check();
+    let n_dev = sim.n_devices();
+    for d in 0..n_dev {
+        sim.alloc(d, "projbuf", plan.proj_buffer_bytes);
+    }
+    let max_slabs = plan.splits_per_device();
+    for s in 0..max_slabs {
+        for d in 0..n_dev {
+            let Some(slab) = plan.per_device[d].slabs.get(s) else { continue };
+            sim.free(d, "slab");
+            sim.alloc(d, "slab", g.slab_bytes(slab.len()));
+            for (c, ch) in plan.angle_chunks.iter().enumerate() {
+                // serialized: copy chunk → wait → kernel → wait
+                let bytes = ch.len() as u64 * g.single_proj_bytes();
+                let e = sim.h2d(d, bytes, false, Ev::ZERO);
+                sim.host_sync(e);
+                let t = cost.bp_kernel_s(g.n_vox[0], g.n_vox[1], slab.len(), ch.len());
+                let k = sim.kernel(d, t, e, &format!("naive bp d{d} s{s} c{c}"));
+                sim.host_sync(k);
+            }
+            let e = sim.d2h(d, g.slab_bytes(slab.len()), false, Ev::ZERO);
+            sim.host_sync(e);
+        }
+    }
+    for d in 0..n_dev {
+        sim.free(d, "projbuf");
+        sim.free(d, "slab");
+    }
+    sim.sync_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::{ExecMode, MultiGpu};
+
+    #[test]
+    fn proposed_beats_naive_forward() {
+        let g = Geometry::cone_beam(1024, 128);
+        let ctx = MultiGpu::gtx1080ti(2);
+        let naive = naive_forward(&ctx, &g).unwrap();
+        let (_, proposed) = ctx.forward(&g, None, ExecMode::SimOnly).unwrap();
+        assert!(
+            proposed.makespan_s < naive.makespan_s,
+            "proposed {} vs naive {}",
+            proposed.makespan_s,
+            naive.makespan_s
+        );
+    }
+
+    #[test]
+    fn proposed_beats_naive_backward() {
+        let g = Geometry::cone_beam(1024, 256);
+        let ctx = MultiGpu::gtx1080ti(2);
+        let naive = naive_backward(&ctx, &g).unwrap();
+        let (_, proposed) = ctx.backward(&g, None, ExecMode::SimOnly).unwrap();
+        assert!(
+            proposed.makespan_s < naive.makespan_s,
+            "proposed {} vs naive {}",
+            proposed.makespan_s,
+            naive.makespan_s
+        );
+    }
+
+    #[test]
+    fn naive_respects_memory_too() {
+        let g = Geometry::cone_beam(512, 64);
+        let ctx = MultiGpu::gtx1080ti(1).with_device_mem(256 << 20);
+        let stats = naive_backward(&ctx, &g).unwrap();
+        assert!(stats.peak_device_bytes <= 256 << 20);
+        assert!(stats.splits_per_device > 1);
+    }
+}

@@ -1,0 +1,150 @@
+//! Execution context shared by the coordinator operators: device fleet
+//! description, kernel backend selection and the per-operation report.
+
+use crate::geometry::Geometry;
+use crate::kernels::{BackprojWeight, Projector};
+use crate::simgpu::timeline::{breakdown, Breakdown};
+use crate::simgpu::{CostModel, GpuSpec, SimNode};
+use crate::volume::{ProjectionSet, Volume};
+
+/// Kernel backend for the real-execution path.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// Native rust kernels (arbitrary shapes).
+    Native { projector: Projector, weight: BackprojWeight, threads: usize },
+    /// AOT-compiled Pallas/JAX artifacts via PJRT (manifest shapes only);
+    /// falls back to native for shapes not in the manifest. `weight`
+    /// selects the FDK vs pseudo-matched backprojection artifact.
+    Pjrt { artifacts_dir: std::path::PathBuf, weight: BackprojWeight, threads: usize },
+}
+
+impl Default for Backend {
+    fn default() -> Self {
+        Backend::Native {
+            projector: Projector::Siddon,
+            weight: BackprojWeight::Fdk,
+            threads: crate::kernels::kernel_threads(),
+        }
+    }
+}
+
+/// Whether to run numerics, the timing model, or both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Real kernels + simulated timeline (tests, examples).
+    Full,
+    /// Timeline only — no host data is allocated, so arbitrarily large
+    /// problems can be *timed* (the Fig. 7–9 sweeps up to N = 3072).
+    SimOnly,
+}
+
+/// Simulated-time report for one operator call.
+#[derive(Clone, Debug)]
+pub struct OpStats {
+    /// Virtual makespan of the schedule, seconds.
+    pub makespan_s: f64,
+    /// Fig.-9 style exposed-time breakdown.
+    pub breakdown: Breakdown,
+    /// Image partitions per device (`N_sp`).
+    pub splits_per_device: usize,
+    /// Whether host image memory was page-locked.
+    pub pinned: bool,
+    /// Peak device memory over the call, bytes (must be ≤ capacity).
+    pub peak_device_bytes: u64,
+}
+
+impl OpStats {
+    pub fn from_sim(sim: &SimNode, plan: &super::splitter::Plan) -> Self {
+        let peak = (0..sim.n_devices()).map(|d| sim.device_mem(d).peak()).max().unwrap_or(0);
+        OpStats {
+            makespan_s: sim.makespan(),
+            breakdown: breakdown(sim.events()),
+            splits_per_device: plan.splits_per_device(),
+            pinned: plan.pin_image,
+            peak_device_bytes: peak,
+        }
+    }
+}
+
+/// A multi-GPU execution context: the paper's "single node with any
+/// number of GPUs with arbitrarily small memories".
+#[derive(Clone, Debug)]
+pub struct MultiGpu {
+    pub n_gpus: usize,
+    pub spec: GpuSpec,
+    pub cost: CostModel,
+    pub split: super::splitter::SplitConfig,
+    pub backend: Backend,
+}
+
+impl MultiGpu {
+    /// The paper's workstation: `n` GTX 1080 Ti class devices.
+    pub fn gtx1080ti(n_gpus: usize) -> Self {
+        Self {
+            n_gpus,
+            spec: GpuSpec::gtx1080ti(),
+            cost: CostModel::gtx1080ti_pcie3(),
+            split: super::splitter::SplitConfig::default(),
+            backend: Backend::default(),
+        }
+    }
+
+    /// Same node but with devices shrunk to `mem_bytes` — used to force
+    /// image splitting at test-sized problems.
+    pub fn with_device_mem(mut self, mem_bytes: u64) -> Self {
+        self.spec = GpuSpec::tiny(mem_bytes);
+        self
+    }
+
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn fresh_sim(&self) -> SimNode {
+        SimNode::new(self.n_gpus, self.spec.clone(), self.cost.clone())
+    }
+
+    /// Forward projection `Ax` (Algorithm 1).
+    pub fn forward(
+        &self,
+        g: &Geometry,
+        vol: Option<&Volume>,
+        mode: ExecMode,
+    ) -> anyhow::Result<(Option<ProjectionSet>, OpStats)> {
+        super::forward::run(self, g, vol, mode)
+    }
+
+    /// Backprojection `Aᵀb` (Algorithm 2).
+    pub fn backward(
+        &self,
+        g: &Geometry,
+        proj: Option<&ProjectionSet>,
+        mode: ExecMode,
+    ) -> anyhow::Result<(Option<Volume>, OpStats)> {
+        super::backward::run(self, g, proj, mode)
+    }
+
+    /// Run the real kernels for an angle-chunk of a (slab) geometry.
+    pub(crate) fn kernel_forward(&self, g: &Geometry, vol: &Volume) -> ProjectionSet {
+        match &self.backend {
+            Backend::Native { projector, threads, .. } => {
+                crate::kernels::forward(g, vol, *projector, *threads)
+            }
+            Backend::Pjrt { artifacts_dir, threads, .. } => {
+                crate::runtime::forward_or_native(artifacts_dir, g, vol, *threads)
+            }
+        }
+    }
+
+    pub(crate) fn kernel_backward(&self, g: &Geometry, proj: &ProjectionSet) -> Volume {
+        match &self.backend {
+            Backend::Native { weight, threads, .. } => {
+                crate::kernels::backward(g, proj, *weight, *threads)
+            }
+            Backend::Pjrt { artifacts_dir, weight, threads } => {
+                crate::runtime::backward_or_native(artifacts_dir, g, proj, *weight, *threads)
+            }
+        }
+    }
+}

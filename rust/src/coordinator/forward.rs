@@ -1,0 +1,410 @@
+//! Algorithm 1 — the forward-projection kernel launch procedure.
+//!
+//! Per-iteration queue order (paper Alg. 1, line numbers in comments):
+//! the FP kernel is queued asynchronously *first*; the synchronous copies
+//! that follow then overlap it on the DMA engines, and the host only
+//! blocks on the compute engine at the end of the iteration. That
+//! ordering — kernel before copies — is the paper's core trick for hiding
+//! transfer time without pinned output buffers.
+
+use anyhow::Context;
+
+use crate::geometry::Geometry;
+use crate::simgpu::{Ev, SimNode};
+use crate::volume::{ProjectionSet, Volume};
+
+use super::executor::{ExecMode, MultiGpu, OpStats};
+use super::splitter::{plan_forward, Plan};
+
+/// Run the forward projection: returns real projections (in `Full` mode)
+/// and the simulated-schedule statistics.
+pub fn run(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    vol: Option<&Volume>,
+    mode: ExecMode,
+) -> anyhow::Result<(Option<ProjectionSet>, OpStats)> {
+    let plan = plan_forward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
+        .map_err(|e| anyhow::anyhow!("forward plan: {e}"))?;
+
+    let mut sim = ctx.fresh_sim();
+    simulate(g, &plan, &mut sim);
+    let stats = OpStats::from_sim(&sim, &plan);
+
+    let proj = match mode {
+        ExecMode::SimOnly => None,
+        ExecMode::Full => {
+            let vol = vol.context("Full mode requires the volume data")?;
+            Some(execute_real(ctx, g, vol, &plan))
+        }
+    };
+    Ok((proj, stats))
+}
+
+/// Replay Algorithm 1 on the discrete-event node.
+pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
+    let chunks = &plan.angle_chunks;
+    let n_chunks = chunks.len();
+    let n_dev = sim.n_devices();
+    let chunk_bytes = |c: usize| chunks[c].len() as u64 * g.single_proj_bytes();
+
+    // 1: Check GPU memory and properties
+    sim.property_check();
+
+    // 3–5: page-lock image memory if the plan says so (the image volume
+    // already exists in host RAM → "resident" pin rate).
+    if plan.pin_image {
+        sim.pin_host(g.volume_bytes(), true);
+    }
+
+    // 6: initialize buffers (2 kernel-output buffers; +1 partial-
+    // accumulation buffer when the image is split).
+    for d in 0..n_dev {
+        for b in 0..plan.n_proj_buffers {
+            sim.alloc(d, &format!("projbuf{b}"), plan.proj_buffer_bytes);
+        }
+    }
+
+    if !plan.image_split {
+        simulate_angle_split(g, plan, sim);
+    } else {
+        simulate_image_split(g, plan, sim, n_chunks, &chunk_bytes);
+    }
+
+    // 25: free GPU resources
+    for d in 0..n_dev {
+        for b in 0..plan.n_proj_buffers {
+            sim.free(d, &format!("projbuf{b}"));
+        }
+        sim.free(d, "slab");
+    }
+    if plan.pin_image {
+        sim.unpin_host(g.volume_bytes());
+    }
+    sim.sync_all();
+}
+
+/// Image fits on every device: each device projects the whole image for
+/// its share of the angles. No accumulation.
+fn simulate_angle_split(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
+    let n_dev = sim.n_devices();
+    let chunks = &plan.angle_chunks;
+    // contiguous chunk shares per device
+    let shares = crate::geometry::split::split_even(chunks.len(), n_dev);
+
+    // 8: copy the (whole) image to every device
+    let img_bytes = g.volume_bytes();
+    let mut img_ready = vec![Ev::ZERO; n_dev];
+    for d in 0..n_dev {
+        sim.alloc(d, "slab", img_bytes);
+        img_ready[d] = sim.h2d(d, img_bytes, plan.pin_image, Ev::ZERO);
+    }
+    // 9: Synchronize()
+    for &e in &img_ready {
+        sim.host_sync(e);
+    }
+
+    // 10–21: chunk loop, lockstep across devices
+    let max_share = shares.iter().map(|(a, b)| b - a).max().unwrap_or(0);
+    let mut prev_kernel: Vec<Option<(Ev, usize)>> = vec![None; n_dev]; // (event, chunk)
+    for j in 0..max_share {
+        // 11: queue kernels on all devices first (async)
+        let mut this_kernel: Vec<Option<(Ev, usize)>> = vec![None; n_dev];
+        for d in 0..n_dev {
+            let (c0, c1) = shares[d];
+            if c0 + j >= c1 {
+                continue;
+            }
+            let c = c0 + j;
+            let t = sim.cost.fp_slab_kernel_s(
+                g.n_det[0],
+                g.n_det[1],
+                chunks[c].len(),
+                g.n_vox[0],
+                g.n_vox[1],
+                g.n_vox[2],
+                g.n_vox[2],
+            );
+            let ev = sim.kernel(d, t, img_ready[d], &format!("fp d{d} c{c}"));
+            this_kernel[d] = Some((ev, c));
+        }
+        // 17–19: copy previous kernel's projections out (synchronous,
+        // pageable output array) — overlaps the kernel queued above.
+        for d in 0..n_dev {
+            if let Some((ev, c)) = prev_kernel[d] {
+                let bytes = chunks[c].len() as u64 * g.single_proj_bytes();
+                sim.d2h(d, bytes, false, ev);
+            }
+        }
+        // 20: Synchronize(Compute)
+        for d in 0..n_dev {
+            if let Some((ev, _)) = this_kernel[d] {
+                sim.host_sync(ev);
+            }
+        }
+        prev_kernel = this_kernel;
+    }
+    // 22: copy last kernel projections out
+    for d in 0..n_dev {
+        if let Some((ev, c)) = prev_kernel[d] {
+            let bytes = chunks[c].len() as u64 * g.single_proj_bytes();
+            sim.d2h(d, bytes, false, ev);
+        }
+    }
+}
+
+/// Image larger than the devices: z-slabs are distributed across devices;
+/// every device projects all angle chunks of each of its slabs in a
+/// staggered order, accumulating per-chunk partial projections on-device
+/// (third buffer) against the host-resident running sum.
+fn simulate_image_split(
+    g: &Geometry,
+    plan: &Plan,
+    sim: &mut SimNode,
+    n_chunks: usize,
+    chunk_bytes: &dyn Fn(usize) -> u64,
+) {
+    let n_dev = sim.n_devices();
+    let chunks = &plan.angle_chunks;
+    let stagger = n_chunks.div_ceil(n_dev.max(1));
+    // host-side partial state per chunk: version event + exists flag
+    let mut host_partial: Vec<Option<Ev>> = vec![None; n_chunks];
+
+    let max_slabs = plan.splits_per_device();
+    let mut slab_alloced = vec![false; n_dev];
+    for s in 0..max_slabs {
+        // 8: copy current image split to each device (contiguous z-slab)
+        let mut slab_ready = vec![Ev::ZERO; n_dev];
+        let mut active = vec![false; n_dev];
+        for d in 0..n_dev {
+            let Some(slab) = plan.per_device[d].slabs.get(s) else { continue };
+            active[d] = true;
+            let bytes = g.slab_bytes(slab.len());
+            if slab_alloced[d] {
+                sim.free(d, "slab");
+            }
+            sim.alloc(d, "slab", bytes);
+            slab_alloced[d] = true;
+            slab_ready[d] = sim.h2d(d, bytes, plan.pin_image, Ev::ZERO);
+        }
+        // 9: Synchronize()
+        for (d, &e) in slab_ready.iter().enumerate() {
+            if active[d] {
+                sim.host_sync(e);
+            }
+        }
+
+        // 10–21: chunk loop (staggered chunk index per device)
+        let mut prev_out: Vec<Option<(Ev, usize)>> = vec![None; n_dev];
+        for j in 0..n_chunks {
+            // 11: queue FP kernels on all devices (async)
+            let mut this_out: Vec<Option<(Ev, usize)>> = vec![None; n_dev];
+            for d in 0..n_dev {
+                if !active[d] {
+                    continue;
+                }
+                let c = (j + d * stagger) % n_chunks;
+                let slab = plan.per_device[d].slabs[s];
+                let t = sim.cost.fp_slab_kernel_s(
+                    g.n_det[0],
+                    g.n_det[1],
+                    chunks[c].len(),
+                    g.n_vox[0],
+                    g.n_vox[1],
+                    slab.len(),
+                    g.n_vox[2],
+                );
+                let kev = sim.kernel(d, t, slab_ready[d], &format!("fp d{d} s{s} c{c}"));
+                this_out[d] = Some((kev, c));
+            }
+            // 12–16: if a partial already exists for this chunk, stream it
+            // in (synchronous copy — overlaps the queued kernel) and queue
+            // the accumulation kernel.
+            for d in 0..n_dev {
+                if !active[d] {
+                    continue;
+                }
+                let Some((kev, c)) = this_out[d] else { continue };
+                if let Some(host_ev) = host_partial[c] {
+                    // 13: copy already-computed partials CPU→GPU
+                    let h2d_ev = sim.h2d(d, chunk_bytes(c), plan.pin_image, host_ev);
+                    // 15: accumulate (async, after kernel + partials)
+                    let acc_t = sim.cost.accum_kernel_s(chunk_bytes(c));
+                    let aev =
+                        sim.kernel(d, acc_t, kev.max(h2d_ev), &format!("accum d{d} c{c}"));
+                    this_out[d] = Some((aev, c));
+                }
+            }
+            // 17–19: copy previous chunk's result out (synchronous) —
+            // this publishes the new host partial for that chunk.
+            for d in 0..n_dev {
+                if let Some((ev, c)) = prev_out[d] {
+                    let out = sim.d2h(d, chunk_bytes(c), false, ev);
+                    host_partial[c] = Some(out);
+                }
+            }
+            // 20: Synchronize(Compute)
+            for d in 0..n_dev {
+                if let Some((ev, _)) = this_out[d] {
+                    sim.host_sync(ev);
+                }
+            }
+            prev_out = this_out;
+        }
+        // 22: flush the final chunk of this slab
+        for d in 0..n_dev {
+            if let Some((ev, c)) = prev_out[d] {
+                let out = sim.d2h(d, chunk_bytes(c), false, ev);
+                host_partial[c] = Some(out);
+            }
+        }
+    }
+}
+
+/// Real numerics with the identical partitioning (order-independent sum).
+fn execute_real(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan) -> ProjectionSet {
+    let mut out = ProjectionSet::zeros_like(g);
+    if !plan.image_split {
+        // angle-split: each device projects the full volume for its chunks
+        let shares = crate::geometry::split::split_even(plan.angle_chunks.len(), ctx.n_gpus);
+        for &(c0, c1) in &shares {
+            for c in c0..c1 {
+                let ch = plan.angle_chunks[c];
+                let gc = g.angle_chunk_geometry(ch.a0, ch.a1);
+                let part = ctx.kernel_forward(&gc, vol);
+                out.insert_chunk(ch.a0, &part);
+            }
+        }
+    } else {
+        // image-split: partial projections per slab, accumulated
+        for dev in &plan.per_device {
+            for slab in &dev.slabs {
+                let gs = g.slab_geometry(slab.z0, slab.z1);
+                let sub = vol.extract_slab(slab.z0, slab.z1);
+                for ch in &plan.angle_chunks {
+                    let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+                    let part = ctx.kernel_forward(&gc, &sub);
+                    // accumulate into the global running sum
+                    let dst = out.chunk_mut(ch.a0, ch.a1);
+                    debug_assert_eq!(dst.len(), part.data.len());
+                    for (d, v) in dst.iter_mut().zip(&part.data) {
+                        *d += v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::{ExecMode, MultiGpu};
+    use crate::phantom;
+    use crate::util::units::{GIB, MIB};
+
+    #[test]
+    fn split_execution_matches_unsplit_reference() {
+        // THE correctness claim: splitting across devices and slabs gives
+        // bit-comparable results to the monolithic kernel.
+        let n = 20;
+        let g = Geometry::cone_beam(n, 12);
+        let v = phantom::shepp_logan(n);
+        let reference = crate::kernels::forward(
+            &g,
+            &v,
+            crate::kernels::Projector::Siddon,
+            2,
+        );
+
+        for n_gpus in [1, 2, 3] {
+            // tiny devices force an image split (one slab ≈ 7 slices)
+            let plane = (n * n * 4) as u64;
+            let mem = 7 * plane + 3 * 12 * g.single_proj_bytes();
+            let ctx = MultiGpu::gtx1080ti(n_gpus).with_device_mem(mem);
+            let (proj, stats) = ctx.forward(&g, Some(&v), ExecMode::Full).unwrap();
+            let proj = proj.unwrap();
+            assert!(stats.splits_per_device >= 1);
+            for (i, (a, b)) in reference.data.iter().zip(&proj.data).enumerate() {
+                assert!(
+                    (a - b).abs() <= 2e-3 * (1.0 + a.abs()),
+                    "gpus={n_gpus} pixel {i}: ref {a} vs split {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn angle_split_path_matches_reference() {
+        let n = 16;
+        let g = Geometry::cone_beam(n, 10);
+        let v = phantom::shepp_logan(n);
+        let reference =
+            crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        let ctx = MultiGpu::gtx1080ti(2); // plenty of memory: angle split
+        let (proj, stats) = ctx.forward(&g, Some(&v), ExecMode::Full).unwrap();
+        assert_eq!(stats.splits_per_device, 1);
+        assert!(!stats.pinned);
+        assert_eq!(reference.data, proj.unwrap().data);
+    }
+
+    #[test]
+    fn sim_only_runs_huge_problems_without_data() {
+        // N = 2048 (32 GiB volume) — cannot be allocated here, but the
+        // schedule can be timed.
+        let g = Geometry::cone_beam(2048, 64);
+        let ctx = MultiGpu::gtx1080ti(2);
+        let (proj, stats) = ctx.forward(&g, None, ExecMode::SimOnly).unwrap();
+        assert!(proj.is_none());
+        assert!(stats.makespan_s > 0.0);
+        assert!(stats.peak_device_bytes <= ctx.spec.mem_bytes);
+    }
+
+    #[test]
+    fn multi_gpu_speeds_up_large_problems() {
+        // the paper's workload: N³ voxels, N² detector, N angles
+        let g = Geometry::cone_beam(1024, 1024);
+        let t1 = MultiGpu::gtx1080ti(1)
+            .forward(&g, None, ExecMode::SimOnly)
+            .unwrap()
+            .1
+            .makespan_s;
+        let t2 = MultiGpu::gtx1080ti(2)
+            .forward(&g, None, ExecMode::SimOnly)
+            .unwrap()
+            .1
+            .makespan_s;
+        let t4 = MultiGpu::gtx1080ti(4)
+            .forward(&g, None, ExecMode::SimOnly)
+            .unwrap()
+            .1
+            .makespan_s;
+        assert!(t2 < t1 * 0.65, "2 GPUs: {t2} vs {t1}");
+        assert!(t4 < t2 * 0.7, "4 GPUs: {t4} vs {t2}");
+    }
+
+    #[test]
+    fn device_memory_never_exceeded() {
+        for (n, mem) in [(64usize, 64 * MIB), (96, 128 * MIB), (128, 1 * GIB)] {
+            let g = Geometry::cone_beam(n, 32);
+            let ctx = MultiGpu::gtx1080ti(2).with_device_mem(mem);
+            let (_, stats) = ctx.forward(&g, None, ExecMode::SimOnly).unwrap();
+            assert!(
+                stats.peak_device_bytes <= mem,
+                "N={n}: peak {} > {}",
+                stats.peak_device_bytes,
+                mem
+            );
+        }
+    }
+
+    #[test]
+    fn compute_dominates_at_large_sizes() {
+        let g = Geometry::cone_beam(2048, 256);
+        let ctx = MultiGpu::gtx1080ti(1);
+        let (_, stats) = ctx.forward(&g, None, ExecMode::SimOnly).unwrap();
+        let (c, _, _, _) = stats.breakdown.fractions();
+        assert!(c > 0.8, "compute fraction at N=2048: {c}");
+    }
+}

@@ -1,0 +1,37 @@
+//! The paper's system contribution: multi-GPU splitting, double-buffered
+//! queueing and transfer/compute overlap for the forward projection
+//! (Algorithm 1), backprojection (Algorithm 2) and halo-buffered
+//! regularization (§2.3).
+//!
+//! Every operator runs in two coupled forms (DESIGN.md §6):
+//!  * **real execution** — the plan's slab/chunk loops drive actual
+//!    kernels (native rust or PJRT artifacts) so the split-and-accumulate
+//!    numerics are verified against unsplit reference execution;
+//!  * **simulated timeline** — the identical schedule replayed against the
+//!    discrete-event device model, producing the makespan and the Fig.-9
+//!    breakdown at sizes no CPU could compute.
+//!
+//! ## Multi-GPU distribution (documented deviation-free reading of §2)
+//!
+//! *Forward projection*: when the image fits on each device, angles are
+//! split across devices (each projects the whole image for its share; no
+//! accumulation). When the image must be split, z-slabs are distributed
+//! across devices and every device projects **all** angles of its slabs;
+//! per-chunk partial projections accumulate through the devices in a
+//! staggered chunk order so at most one device touches a chunk at a time
+//! and every copy hides behind compute (paper Fig. 3). This reproduces the
+//! paper's §3.1 split counts (N=3072: FP 10→5 partitions from 1→2 GPUs).
+//!
+//! *Backprojection*: z-slabs are distributed across devices; each device
+//! streams **all** projections through a 2-chunk double buffer while its
+//! voxel-update kernels run (paper Fig. 5).
+
+pub mod backward;
+pub mod baseline;
+pub mod executor;
+pub mod forward;
+pub mod regularizer;
+pub mod splitter;
+
+pub use executor::{Backend, ExecMode, MultiGpu, OpStats};
+pub use splitter::{Plan, SplitConfig};

@@ -1,0 +1,462 @@
+//! Partition planner: how many image slabs / projection chunks fit on the
+//! devices (the memory arithmetic behind Algorithms 1 & 2).
+//!
+//! The paper's strategy: keep only **2 projection-chunk buffers** on each
+//! device (plus a third to stream in previously-computed partials when the
+//! image is split) and give **all remaining device RAM to the image slab**
+//! — that minimizes the number of image partitions, which is the dominant
+//! cost driver.
+//!
+//! Kernel-geometry constants follow the paper:
+//!  * projection kernel processes `N_angles = 9` whole projections per
+//!    launch (thread blocks 9×9×9, footnote 1),
+//!  * backprojection processes `N_angles = 32` projections per launch and
+//!    updates `N_z = 8` slices per thread (footnote 2).
+
+use crate::geometry::split::{split_even, AngleChunk, ZSlab};
+use crate::geometry::Geometry;
+use crate::util::units::F32_BYTES;
+
+/// Angle-chunk / block constants (paper footnotes 1 & 2).
+pub const FP_CHUNK_ANGLES: usize = 9;
+pub const BP_CHUNK_ANGLES: usize = 32;
+pub const BP_NZ_PER_THREAD: usize = 8;
+
+/// Splitting configuration.
+#[derive(Clone, Debug)]
+pub struct SplitConfig {
+    /// Projections computed per FP kernel launch.
+    pub fp_chunk: usize,
+    /// Projections consumed per BP kernel launch.
+    pub bp_chunk: usize,
+    /// Fraction of device RAM usable (contexts, fragmentation).
+    pub mem_fraction: f64,
+}
+
+impl Default for SplitConfig {
+    fn default() -> Self {
+        Self { fp_chunk: FP_CHUNK_ANGLES, bp_chunk: BP_CHUNK_ANGLES, mem_fraction: 1.0 }
+    }
+}
+
+/// The work assigned to one device.
+#[derive(Clone, Debug)]
+pub struct DeviceAssignment {
+    pub device: usize,
+    /// The z-range of the whole volume owned by this device.
+    pub z_range: ZSlab,
+    /// That range, split into slabs that fit in device RAM.
+    pub slabs: Vec<ZSlab>,
+}
+
+/// A complete partition plan for one operator call.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub per_device: Vec<DeviceAssignment>,
+    /// Angle chunks processed per kernel launch.
+    pub angle_chunks: Vec<AngleChunk>,
+    /// Number of on-device projection buffers (2, or 3 when partial
+    /// accumulation streams are needed — FP with a split image).
+    pub n_proj_buffers: usize,
+    /// Bytes of one projection-chunk buffer.
+    pub proj_buffer_bytes: u64,
+    /// Bytes of the largest slab allocation.
+    pub max_slab_bytes: u64,
+    /// Whether the host image memory should be page-locked (paper §2.1/2.2
+    /// policy; see [`should_pin_image`]).
+    pub pin_image: bool,
+    /// True if any device processes more than one slab (image larger than
+    /// the devices' aggregate capacity).
+    pub image_split: bool,
+    /// Forward projection without an image split keeps the *entire*
+    /// volume resident on every device (angles are split instead).
+    pub full_image_per_device: bool,
+}
+
+impl Plan {
+    /// Total image partitions per device (the `N_sp` of Algorithms 1 & 2).
+    pub fn splits_per_device(&self) -> usize {
+        self.per_device.iter().map(|d| d.slabs.len()).max().unwrap_or(0)
+    }
+
+    /// Sanity invariants; used by property tests.
+    pub fn validate(&self, g: &Geometry, mem_bytes: u64, cfg: &SplitConfig) -> Result<(), String> {
+        // slabs of each device tile its z-range, contiguously, non-empty
+        for d in &self.per_device {
+            if d.slabs.is_empty() {
+                if d.z_range.len() > 0 {
+                    return Err(format!("device {} has z-range but no slabs", d.device));
+                }
+                continue;
+            }
+            if d.slabs[0].z0 != d.z_range.z0
+                || d.slabs.last().unwrap().z1 != d.z_range.z1
+            {
+                return Err(format!("device {} slabs do not tile its range", d.device));
+            }
+            for w in d.slabs.windows(2) {
+                if w[0].z1 != w[1].z0 {
+                    return Err("slabs not contiguous".into());
+                }
+            }
+            // memory bound: resident image + buffers must fit
+            let plane = (g.n_vox[0] * g.n_vox[1]) as u64 * F32_BYTES;
+            let cap = (mem_bytes as f64 * cfg.mem_fraction) as u64;
+            if self.full_image_per_device {
+                let need =
+                    g.volume_bytes() + self.n_proj_buffers as u64 * self.proj_buffer_bytes;
+                if need > cap {
+                    return Err(format!(
+                        "device {}: full image + buffers need {need} B > capacity {cap} B",
+                        d.device
+                    ));
+                }
+            }
+            for s in &d.slabs {
+                let need =
+                    s.len() as u64 * plane + self.n_proj_buffers as u64 * self.proj_buffer_bytes;
+                if need > cap {
+                    return Err(format!(
+                        "device {}: slab of {} slices needs {need} B > capacity {cap} B",
+                        d.device,
+                        s.len()
+                    ));
+                }
+            }
+        }
+        // device ranges tile the volume
+        let mut z = 0;
+        for d in &self.per_device {
+            if d.z_range.z0 != z {
+                return Err("device z-ranges not contiguous".into());
+            }
+            z = d.z_range.z1;
+        }
+        if z != g.n_vox[2] {
+            return Err("device z-ranges do not cover the volume".into());
+        }
+        // angle chunks tile the angles
+        let mut a = 0;
+        for c in &self.angle_chunks {
+            if c.a0 != a {
+                return Err("angle chunks not contiguous".into());
+            }
+            a = c.a1;
+        }
+        if a != g.n_angles() {
+            return Err("angle chunks do not cover all angles".into());
+        }
+        Ok(())
+    }
+}
+
+/// Page-lock policy (paper §2.1–2.2): pin when the image must be split
+/// (1–2 GPUs: pays off despite the cost) and always on >2 GPUs (enables
+/// the simultaneous copies).
+pub fn should_pin_image(image_split: bool, n_gpus: usize) -> bool {
+    image_split || n_gpus > 2
+}
+
+/// Plan the forward projection (Algorithm 1).
+///
+/// The image is distributed across devices by z (each device projects its
+/// own sub-image over **all** angles, producing partial projections that
+/// are accumulated), and each device's share is further split into slabs
+/// that fit next to the projection buffers.
+pub fn plan_forward(
+    g: &Geometry,
+    n_gpus: usize,
+    mem_bytes: u64,
+    cfg: &SplitConfig,
+) -> Result<Plan, String> {
+    plan_operator(g, n_gpus, mem_bytes, cfg, cfg.fp_chunk, true)
+}
+
+/// Plan the backprojection (Algorithm 2).
+///
+/// The image is distributed across devices by z; each device consumes
+/// **all** projections, streamed in chunks through a double buffer.
+pub fn plan_backward(
+    g: &Geometry,
+    n_gpus: usize,
+    mem_bytes: u64,
+    cfg: &SplitConfig,
+) -> Result<Plan, String> {
+    plan_operator(g, n_gpus, mem_bytes, cfg, cfg.bp_chunk, false)
+}
+
+fn plan_operator(
+    g: &Geometry,
+    n_gpus: usize,
+    mem_bytes: u64,
+    cfg: &SplitConfig,
+    chunk: usize,
+    is_forward: bool,
+) -> Result<Plan, String> {
+    if n_gpus == 0 {
+        return Err("need at least one GPU".into());
+    }
+    g.validate()?;
+    let chunk = chunk.min(g.n_angles()).max(1);
+    let nz = g.n_vox[2];
+    let plane_bytes = (g.n_vox[0] * g.n_vox[1]) as u64 * F32_BYTES;
+    let proj_buffer_bytes = chunk as u64 * g.single_proj_bytes();
+    let usable = (mem_bytes as f64 * cfg.mem_fraction) as u64;
+
+    // Device z-ranges: even distribution.
+    let ranges = split_even(nz, n_gpus);
+
+    // First try the no-split layout: 2 buffers + the resident image. For
+    // the forward projection the whole volume stays on every device
+    // (angles split across devices); backprojection only holds the
+    // device's own z-range.
+    let max_range = ranges.iter().map(|(a, b)| b - a).max().unwrap();
+    let resident = if is_forward { nz } else { max_range };
+    let two_buf_need = 2 * proj_buffer_bytes + resident as u64 * plane_bytes;
+    let (n_buffers, image_split, slabs_per_device): (usize, bool, Vec<Vec<ZSlab>>) =
+        if two_buf_need <= usable {
+            (
+                2,
+                false,
+                ranges
+                    .iter()
+                    .map(|&(z0, z1)| if z1 > z0 { vec![ZSlab { z0, z1 }] } else { vec![] })
+                    .collect(),
+            )
+        } else {
+            // Image must split: FP needs a 3rd buffer to stream partial
+            // projections for on-device accumulation; BP still needs 2.
+            let n_buffers = if is_forward { 3 } else { 2 };
+            let buf_bytes = n_buffers as u64 * proj_buffer_bytes;
+            if usable <= buf_bytes + plane_bytes {
+                return Err(format!(
+                    "device RAM {usable} B cannot hold {n_buffers} projection buffers \
+                     ({buf_bytes} B) plus one image slice ({plane_bytes} B)"
+                ));
+            }
+            let cap_slices = ((usable - buf_bytes) / plane_bytes) as usize;
+            let mut all = Vec::with_capacity(n_gpus);
+            for &(z0, z1) in &ranges {
+                let span = z1 - z0;
+                if span == 0 {
+                    all.push(vec![]);
+                    continue;
+                }
+                let n_splits = span.div_ceil(cap_slices);
+                // "same size volumetric axial slice stacks, as big as
+                // possible": balanced equal split into n_splits pieces.
+                let slabs = split_even(span, n_splits)
+                    .into_iter()
+                    .filter(|(a, b)| b > a)
+                    .map(|(a, b)| ZSlab { z0: z0 + a, z1: z0 + b })
+                    .collect();
+                all.push(slabs);
+            }
+            (n_buffers, true, all)
+        };
+
+    let max_slab_bytes = slabs_per_device
+        .iter()
+        .flatten()
+        .map(|s| s.len() as u64 * plane_bytes)
+        .max()
+        .unwrap_or(0);
+
+    let angle_chunks = crate::geometry::split::split_chunks(g.n_angles(), chunk)
+        .into_iter()
+        .map(|(a0, a1)| AngleChunk { a0, a1 })
+        .collect();
+
+    let per_device = ranges
+        .iter()
+        .enumerate()
+        .map(|(i, &(z0, z1))| DeviceAssignment {
+            device: i,
+            z_range: ZSlab { z0, z1 },
+            slabs: slabs_per_device[i].clone(),
+        })
+        .collect();
+
+    Ok(Plan {
+        per_device,
+        angle_chunks,
+        n_proj_buffers: n_buffers,
+        proj_buffer_bytes,
+        max_slab_bytes,
+        pin_image: should_pin_image(image_split, n_gpus),
+        image_split,
+        full_image_per_device: is_forward && !image_split,
+    })
+}
+
+/// Paper §4 size-limit formulas for an `N³` volume / `N²` detector / `N`
+/// angles problem on a device with `mem` bytes:
+///
+/// * FP with the fast-kernel constants: 1 image slice + one chunk of
+///   `FP_CHUNK_ANGLES` projections → `(1 + 9)·N²·4 ≤ mem`.
+/// * BP with the fast-kernel constants: `N_z = 8` slices + one chunk of
+///   `BP_CHUNK_ANGLES` projections → `(8 + 32)·N²·4 ≤ mem`.
+/// * Relaxed (single slice + single projection, double-buffered):
+///   `(2 + 2)·N²·4 ≤ mem`.
+pub fn max_n_forward(mem: u64) -> u64 {
+    ((mem as f64 / ((1 + FP_CHUNK_ANGLES) as f64 * F32_BYTES as f64)).sqrt()) as u64
+}
+
+pub fn max_n_backward(mem: u64) -> u64 {
+    ((mem as f64 / ((BP_NZ_PER_THREAD + BP_CHUNK_ANGLES) as f64 * F32_BYTES as f64)).sqrt()) as u64
+}
+
+pub fn max_n_relaxed(mem: u64) -> u64 {
+    ((mem as f64 / (4.0 * F32_BYTES as f64)).sqrt()) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, prop_assert};
+    use crate::util::units::GIB;
+
+    fn fig7_geometry(n: usize) -> Geometry {
+        Geometry::cone_beam(n, n)
+    }
+
+    /// §3.1: at N = 3072 on 11 GiB devices, the paper reports
+    /// FP: 10 (1 GPU) / 5 (2 GPU) partitions; BP: 11 / 6.
+    /// Our exact memory accounting lands within one split of those.
+    #[test]
+    fn splitter_paper_counts() {
+        let g = fig7_geometry(3072);
+        let mem = 11 * GIB;
+        let cfg = SplitConfig::default();
+
+        let fp1 = plan_forward(&g, 1, mem, &cfg).unwrap();
+        let fp2 = plan_forward(&g, 2, mem, &cfg).unwrap();
+        let bp1 = plan_backward(&g, 1, mem, &cfg).unwrap();
+        let bp2 = plan_backward(&g, 2, mem, &cfg).unwrap();
+
+        let fp1_n = fp1.splits_per_device();
+        let fp2_n = fp2.splits_per_device();
+        let bp1_n = bp1.splits_per_device();
+        let bp2_n = bp2.splits_per_device();
+
+        assert!((10..=12).contains(&fp1_n), "FP 1-GPU splits {fp1_n} (paper: 10)");
+        assert!((5..=6).contains(&fp2_n), "FP 2-GPU splits {fp2_n} (paper: 5)");
+        assert!((11..=13).contains(&bp1_n), "BP 1-GPU splits {bp1_n} (paper: 11)");
+        assert!((6..=7).contains(&bp2_n), "BP 2-GPU splits {bp2_n} (paper: 6)");
+        // BP needs at least as many splits as FP (bigger angle chunks)
+        assert!(bp1_n >= fp1_n);
+        // doubling GPUs roughly halves per-device splits
+        assert!(fp2_n <= fp1_n / 2 + 1);
+    }
+
+    /// §4: maximum-N formulas reproduce the paper's 17000 / 8500 / 27000.
+    #[test]
+    fn paper_max_size_limits() {
+        let mem = 11 * GIB;
+        let fp = max_n_forward(mem);
+        let bp = max_n_backward(mem);
+        let relaxed = max_n_relaxed(mem);
+        assert!((16500..18000).contains(&fp), "FP max N = {fp} (paper ≈17000)");
+        assert!((8300..8800).contains(&bp), "BP max N = {bp} (paper ≈8500)");
+        assert!((26500..27800).contains(&relaxed), "relaxed max N = {relaxed} (paper ≈27000)");
+    }
+
+    #[test]
+    fn small_image_no_split_two_buffers() {
+        let g = fig7_geometry(128);
+        let p = plan_forward(&g, 2, 11 * GIB, &SplitConfig::default()).unwrap();
+        assert!(!p.image_split);
+        assert_eq!(p.n_proj_buffers, 2);
+        assert_eq!(p.splits_per_device(), 1);
+        assert!(!p.pin_image, "no pinning needed when everything fits on ≤2 GPUs");
+        p.validate(&g, 11 * GIB, &SplitConfig::default()).unwrap();
+    }
+
+    #[test]
+    fn three_gpus_always_pin() {
+        let g = fig7_geometry(128);
+        let p = plan_forward(&g, 3, 11 * GIB, &SplitConfig::default()).unwrap();
+        assert!(p.pin_image, ">2 GPUs always page-lock (paper §2.1)");
+    }
+
+    #[test]
+    fn forward_split_gets_third_buffer() {
+        let g = fig7_geometry(2048);
+        let mem = 2 * GIB; // force splitting
+        let p = plan_forward(&g, 1, mem, &SplitConfig::default()).unwrap();
+        assert!(p.image_split);
+        assert_eq!(p.n_proj_buffers, 3, "FP accumulation needs the extra buffer");
+        assert!(p.pin_image);
+        let pb = plan_backward(&g, 1, mem, &SplitConfig::default()).unwrap();
+        assert_eq!(pb.n_proj_buffers, 2, "BP streams chunks through 2 buffers");
+        p.validate(&g, mem, &SplitConfig::default()).unwrap();
+        pb.validate(&g, mem, &SplitConfig::default()).unwrap();
+    }
+
+    #[test]
+    fn error_when_device_too_small_for_one_slice() {
+        let g = fig7_geometry(2048);
+        // one slice = 2048²·4 = 16 MiB; buffers are ~150 MiB for FP
+        let err = plan_forward(&g, 1, 32 << 20, &SplitConfig::default());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn more_gpus_than_slices() {
+        let mut g = fig7_geometry(64);
+        g.n_vox[2] = 2; // 2 slices, 4 GPUs
+        let p = plan_forward(&g, 4, 11 * GIB, &SplitConfig::default()).unwrap();
+        let nonempty = p.per_device.iter().filter(|d| !d.slabs.is_empty()).count();
+        assert_eq!(nonempty, 2);
+        p.validate(&g, 11 * GIB, &SplitConfig::default()).unwrap();
+    }
+
+    #[test]
+    fn prop_plans_valid_across_random_configs() {
+        check("operator plans always valid", 120, |gen| {
+            let n = gen.usize(8, 160);
+            let n_angles = gen.usize(1, 64);
+            let n_gpus = gen.usize(1, 4);
+            // device memory from "comically small but feasible" upward
+            let g = Geometry::cone_beam(n, n_angles);
+            let cfg = SplitConfig::default();
+            let min_fp = 3 * cfg.fp_chunk as u64 * g.single_proj_bytes()
+                + 2 * (g.n_vox[0] * g.n_vox[1]) as u64 * F32_BYTES;
+            let min_bp = 2 * cfg.bp_chunk as u64 * g.single_proj_bytes()
+                + 2 * (g.n_vox[0] * g.n_vox[1]) as u64 * F32_BYTES;
+            let mem = min_fp.max(min_bp) + gen.usize(0, 1 << 30) as u64;
+
+            let fp = plan_forward(&g, n_gpus, mem, &cfg).map_err(|e| format!("fp: {e}"))?;
+            fp.validate(&g, mem, &cfg).map_err(|e| format!("fp validate: {e}"))?;
+            let bp = plan_backward(&g, n_gpus, mem, &cfg).map_err(|e| format!("bp: {e}"))?;
+            bp.validate(&g, mem, &cfg).map_err(|e| format!("bp validate: {e}"))?;
+
+            prop_assert(
+                fp.angle_chunks.iter().all(|c| c.len() <= cfg.fp_chunk),
+                "fp chunk size bound",
+            )?;
+            prop_assert(
+                bp.angle_chunks.iter().all(|c| c.len() <= cfg.bp_chunk),
+                "bp chunk size bound",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_max_slab_plus_buffers_fit() {
+        check("slab + buffers never exceed device RAM", 100, |gen| {
+            let n = gen.usize(16, 256);
+            let g = Geometry::cone_beam(n, gen.usize(4, 40));
+            let cfg = SplitConfig::default();
+            let plane = (g.n_vox[0] * g.n_vox[1]) as u64 * F32_BYTES;
+            let min = 3 * cfg.fp_chunk as u64 * g.single_proj_bytes() + 2 * plane;
+            let mem = min + gen.usize(0, 1 << 28) as u64;
+            let p = plan_forward(&g, gen.usize(1, 4), mem, &cfg)
+                .map_err(|e| format!("plan: {e}"))?;
+            prop_assert(
+                p.max_slab_bytes + p.n_proj_buffers as u64 * p.proj_buffer_bytes <= mem,
+                "memory bound violated",
+            )
+        });
+    }
+}

@@ -1,0 +1,380 @@
+//! Cone-beam CT geometry, following TIGRE's conventions.
+//!
+//! The object rotates (equivalently, source+detector rotate around the
+//! object) about the +z axis. At angle `theta`:
+//!   * the source sits at `(DSO·cosθ, DSO·sinθ, 0)`,
+//!   * the detector plane is perpendicular to the source–origin axis at
+//!     distance `DSD` from the source, spanned by `u` (in-plane) and `v`
+//!     (along z) axes.
+//!
+//! Volumes are `nx × ny × nz` voxel grids centred on the origin (plus an
+//! optional offset); detectors are `nu × nv` pixel grids centred on the
+//! ray through the origin (plus an optional offset, which models the
+//! panel-shifted scans used in the paper's §3.2 datasets).
+
+pub mod split;
+
+pub use split::{AngleChunk, ZSlab};
+
+use crate::util::units::F32_BYTES;
+
+/// Full scan geometry: volume grid + detector + trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Geometry {
+    /// Distance source → detector (mm).
+    pub dsd: f64,
+    /// Distance source → rotation axis / origin (mm).
+    pub dso: f64,
+    /// Voxel counts (nx, ny, nz).
+    pub n_vox: [usize; 3],
+    /// Voxel pitch in mm (sx, sy, sz).
+    pub d_vox: [f64; 3],
+    /// Offset of the volume centre from the origin, mm.
+    pub offset_origin: [f64; 3],
+    /// Detector pixel counts (nu, nv).
+    pub n_det: [usize; 2],
+    /// Detector pixel pitch in mm (du, dv).
+    pub d_det: [f64; 2],
+    /// Detector offset from the principal ray, mm (panel shift).
+    pub offset_det: [f64; 2],
+    /// Projection angles in radians.
+    pub angles: Vec<f64>,
+}
+
+/// Cached per-angle frame: source position and detector basis.
+#[derive(Clone, Copy, Debug)]
+pub struct AngleFrame {
+    /// Source position.
+    pub src: [f64; 3],
+    /// Centre of the detector panel.
+    pub det_center: [f64; 3],
+    /// Unit vector along detector `u` (in the rotation plane).
+    pub u_dir: [f64; 3],
+    /// Unit vector along detector `v` (parallel to +z).
+    pub v_dir: [f64; 3],
+}
+
+impl Geometry {
+    /// A standard circular cone-beam geometry for an `n³` volume with an
+    /// `n×n` detector and `n_angles` uniformly spaced angles over 2π.
+    /// This is exactly the workload of the paper's Fig. 7–9 sweeps
+    /// (`N³` voxels, `N²` detector pixels, `N` angles).
+    pub fn cone_beam(n: usize, n_angles: usize) -> Geometry {
+        Self::cone_beam_anisotropic([n, n, n], [n, n], n_angles)
+    }
+
+    /// Circular cone-beam geometry with independent volume/detector sizes.
+    /// Scales so the volume fits the field of view: voxel pitch 1 mm,
+    /// detector sized to cover the magnified volume footprint.
+    pub fn cone_beam_anisotropic(
+        n_vox: [usize; 3],
+        n_det: [usize; 2],
+        n_angles: usize,
+    ) -> Geometry {
+        let nmax = n_vox.iter().copied().max().unwrap_or(1) as f64;
+        let dso = 3.0 * nmax;
+        let dsd = 4.5 * nmax;
+        let mag = dsd / dso;
+        // Detector must cover the volume diagonal × magnification.
+        let fov = nmax * 1.0 * mag * 1.6;
+        let du = fov / n_det[0] as f64;
+        let dv = fov / n_det[1] as f64;
+        let angles = uniform_angles(n_angles, 2.0 * std::f64::consts::PI);
+        Geometry {
+            dsd,
+            dso,
+            n_vox,
+            d_vox: [1.0, 1.0, 1.0],
+            offset_origin: [0.0; 3],
+            n_det,
+            d_det: [du, dv],
+            offset_det: [0.0, 0.0],
+            angles,
+        }
+    }
+
+    /// Validate invariants; returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.dsd > 0.0 && self.dso > 0.0) {
+            return Err("DSD and DSO must be positive".into());
+        }
+        if self.dso >= self.dsd {
+            return Err(format!("DSO ({}) must be < DSD ({})", self.dso, self.dsd));
+        }
+        if self.n_vox.iter().any(|&n| n == 0) || self.n_det.iter().any(|&n| n == 0) {
+            return Err("zero-sized volume or detector".into());
+        }
+        if self.d_vox.iter().any(|&d| d <= 0.0) || self.d_det.iter().any(|&d| d <= 0.0) {
+            return Err("non-positive voxel/pixel pitch".into());
+        }
+        if self.angles.is_empty() {
+            return Err("no projection angles".into());
+        }
+        // The source must be outside the volume (otherwise rays start inside).
+        let half = [
+            self.n_vox[0] as f64 * self.d_vox[0] / 2.0,
+            self.n_vox[1] as f64 * self.d_vox[1] / 2.0,
+        ];
+        let r = (half[0] * half[0] + half[1] * half[1]).sqrt();
+        if self.dso <= r {
+            return Err(format!(
+                "source orbit radius {} inside volume bounding cylinder {r}",
+                self.dso
+            ));
+        }
+        Ok(())
+    }
+
+    /// Number of projection angles.
+    pub fn n_angles(&self) -> usize {
+        self.angles.len()
+    }
+
+    /// Geometric magnification DSD/DSO.
+    pub fn magnification(&self) -> f64 {
+        self.dsd / self.dso
+    }
+
+    /// Total voxel count.
+    pub fn total_voxels(&self) -> u64 {
+        self.n_vox.iter().map(|&n| n as u64).product()
+    }
+
+    /// Total detector pixels over all angles.
+    pub fn total_proj_pixels(&self) -> u64 {
+        self.n_det[0] as u64 * self.n_det[1] as u64 * self.angles.len() as u64
+    }
+
+    /// Bytes of the full image volume (f32).
+    pub fn volume_bytes(&self) -> u64 {
+        self.total_voxels() * F32_BYTES
+    }
+
+    /// Bytes of the full projection set (f32).
+    pub fn proj_bytes(&self) -> u64 {
+        self.total_proj_pixels() * F32_BYTES
+    }
+
+    /// Bytes of one projection (all detector pixels at one angle).
+    pub fn single_proj_bytes(&self) -> u64 {
+        self.n_det[0] as u64 * self.n_det[1] as u64 * F32_BYTES
+    }
+
+    /// Bytes of a z-slab of `nz_slab` slices of the volume.
+    pub fn slab_bytes(&self, nz_slab: usize) -> u64 {
+        self.n_vox[0] as u64 * self.n_vox[1] as u64 * nz_slab as u64 * F32_BYTES
+    }
+
+    /// Per-angle source/detector frame.
+    pub fn frame(&self, angle_idx: usize) -> AngleFrame {
+        let theta = self.angles[angle_idx];
+        let (s, c) = theta.sin_cos();
+        let src = [self.dso * c, self.dso * s, 0.0];
+        // Detector centre is DSD from the source along -r̂, plus panel offset.
+        let back = self.dsd - self.dso; // distance origin → detector
+        let u_dir = [-s, c, 0.0];
+        let v_dir = [0.0, 0.0, 1.0];
+        let det_center = [
+            -back * c + self.offset_det[0] * u_dir[0],
+            -back * s + self.offset_det[0] * u_dir[1],
+            self.offset_det[1],
+        ];
+        AngleFrame { src, det_center, u_dir, v_dir }
+    }
+
+    /// World position of detector pixel centre `(iu, iv)` at `angle_idx`.
+    pub fn det_pixel(&self, frame: &AngleFrame, iu: usize, iv: usize) -> [f64; 3] {
+        let u = (iu as f64 + 0.5 - self.n_det[0] as f64 / 2.0) * self.d_det[0];
+        let v = (iv as f64 + 0.5 - self.n_det[1] as f64 / 2.0) * self.d_det[1];
+        [
+            frame.det_center[0] + u * frame.u_dir[0] + v * frame.v_dir[0],
+            frame.det_center[1] + u * frame.u_dir[1] + v * frame.v_dir[1],
+            frame.det_center[2] + u * frame.u_dir[2] + v * frame.v_dir[2],
+        ]
+    }
+
+    /// Axis-aligned bounding box of the volume, (min, max) corners in mm.
+    pub fn volume_bbox(&self) -> ([f64; 3], [f64; 3]) {
+        let mut lo = [0.0; 3];
+        let mut hi = [0.0; 3];
+        for k in 0..3 {
+            let half = self.n_vox[k] as f64 * self.d_vox[k] / 2.0;
+            lo[k] = self.offset_origin[k] - half;
+            hi[k] = self.offset_origin[k] + half;
+        }
+        (lo, hi)
+    }
+
+    /// Bounding box of a z-slab `[z0, z1)` in voxel indices.
+    pub fn slab_bbox(&self, z0: usize, z1: usize) -> ([f64; 3], [f64; 3]) {
+        let (mut lo, mut hi) = self.volume_bbox();
+        let zmin = lo[2];
+        lo[2] = zmin + z0 as f64 * self.d_vox[2];
+        hi[2] = zmin + z1 as f64 * self.d_vox[2];
+        (lo, hi)
+    }
+
+    /// A copy restricted to a z-slab `[z0, z1)`: the sub-volume is recentred
+    /// via `offset_origin` so kernels can run on the slab unmodified.
+    pub fn slab_geometry(&self, z0: usize, z1: usize) -> Geometry {
+        assert!(z0 < z1 && z1 <= self.n_vox[2], "bad slab [{z0},{z1})");
+        let mut g = self.clone();
+        g.n_vox[2] = z1 - z0;
+        let full_half = self.n_vox[2] as f64 * self.d_vox[2] / 2.0;
+        let slab_center =
+            (z0 as f64 + (z1 - z0) as f64 / 2.0) * self.d_vox[2] - full_half;
+        g.offset_origin[2] = self.offset_origin[2] + slab_center;
+        g
+    }
+
+    /// A copy restricted to a contiguous angle chunk `[a0, a1)`.
+    pub fn angle_chunk_geometry(&self, a0: usize, a1: usize) -> Geometry {
+        assert!(a0 < a1 && a1 <= self.angles.len(), "bad angle chunk [{a0},{a1})");
+        let mut g = self.clone();
+        g.angles = self.angles[a0..a1].to_vec();
+        g
+    }
+
+    /// A copy with the given angle subset (for OS-SART style subsets).
+    pub fn angle_subset_geometry(&self, idxs: &[usize]) -> Geometry {
+        let mut g = self.clone();
+        g.angles = idxs.iter().map(|&i| self.angles[i]).collect();
+        g
+    }
+}
+
+/// `n` uniformly spaced angles in `[0, span)`.
+pub fn uniform_angles(n: usize, span: f64) -> Vec<f64> {
+    (0..n).map(|i| span * i as f64 / n as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_geometry_validates() {
+        let g = Geometry::cone_beam(64, 64);
+        g.validate().unwrap();
+        assert_eq!(g.n_angles(), 64);
+        assert_eq!(g.total_voxels(), 64 * 64 * 64);
+        assert!(g.magnification() > 1.0);
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut g = Geometry::cone_beam(8, 4);
+        g.dso = g.dsd + 1.0;
+        assert!(g.validate().is_err());
+
+        let mut g = Geometry::cone_beam(8, 4);
+        g.angles.clear();
+        assert!(g.validate().is_err());
+
+        let mut g = Geometry::cone_beam(8, 4);
+        g.n_vox[1] = 0;
+        assert!(g.validate().is_err());
+
+        let mut g = Geometry::cone_beam(8, 4);
+        g.dso = 1.0; // inside the volume
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn source_on_orbit() {
+        let g = Geometry::cone_beam(32, 8);
+        for a in 0..g.n_angles() {
+            let f = g.frame(a);
+            let r = (f.src[0] * f.src[0] + f.src[1] * f.src[1]).sqrt();
+            assert!((r - g.dso).abs() < 1e-9);
+            assert_eq!(f.src[2], 0.0);
+        }
+    }
+
+    #[test]
+    fn source_to_detector_distance_is_dsd() {
+        let g = Geometry::cone_beam(32, 8);
+        for a in [0, 3, 7] {
+            let f = g.frame(a);
+            let d = [
+                f.det_center[0] - f.src[0],
+                f.det_center[1] - f.src[1],
+                f.det_center[2] - f.src[2],
+            ];
+            let dist = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt();
+            assert!((dist - g.dsd).abs() < 1e-9, "angle {a}: {dist} vs {}", g.dsd);
+        }
+    }
+
+    #[test]
+    fn detector_axes_orthonormal() {
+        let g = Geometry::cone_beam(32, 8);
+        for a in 0..8 {
+            let f = g.frame(a);
+            let dot: f64 = (0..3).map(|k| f.u_dir[k] * f.v_dir[k]).sum();
+            assert!(dot.abs() < 1e-12);
+            let nu: f64 = f.u_dir.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let nv: f64 = f.v_dir.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((nu - 1.0).abs() < 1e-12 && (nv - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn central_pixel_on_principal_ray() {
+        // With no detector offset and even pixel counts, the mid-detector
+        // point equals det_center.
+        let g = Geometry::cone_beam(32, 4);
+        let f = g.frame(0);
+        let p = g.det_pixel(&f, g.n_det[0] / 2, g.n_det[1] / 2);
+        // pixel centres are offset half a pitch from the exact centre
+        let du = g.d_det[0] / 2.0;
+        let dist = ((p[0] - f.det_center[0]).powi(2)
+            + (p[1] - f.det_center[1]).powi(2)
+            + (p[2] - f.det_center[2]).powi(2))
+        .sqrt();
+        assert!(dist <= (du * du * 2.0).sqrt() + 1e-9);
+    }
+
+    #[test]
+    fn slab_geometry_recenters() {
+        let g = Geometry::cone_beam(64, 8);
+        let s = g.slab_geometry(0, 16);
+        assert_eq!(s.n_vox[2], 16);
+        // slab [0,16) of 64 slices: centre at (8-32) = -24 voxels
+        assert!((s.offset_origin[2] - (-24.0)).abs() < 1e-9);
+        // slabs tile the whole volume bbox
+        let s2 = g.slab_geometry(16, 64);
+        let (lo1, hi1) = s.volume_bbox();
+        let (lo2, hi2) = s2.volume_bbox();
+        let (lo, hi) = g.volume_bbox();
+        assert!((lo1[2] - lo[2]).abs() < 1e-9);
+        assert!((hi1[2] - lo2[2]).abs() < 1e-9);
+        assert!((hi2[2] - hi[2]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn angle_chunk_geometry_subsets() {
+        let g = Geometry::cone_beam(16, 10);
+        let c = g.angle_chunk_geometry(2, 5);
+        assert_eq!(c.angles.len(), 3);
+        assert_eq!(c.angles[0], g.angles[2]);
+        let s = g.angle_subset_geometry(&[0, 9]);
+        assert_eq!(s.angles, vec![g.angles[0], g.angles[9]]);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let g = Geometry::cone_beam(128, 128);
+        assert_eq!(g.volume_bytes(), 128u64.pow(3) * 4);
+        assert_eq!(g.proj_bytes(), 128u64.pow(3) * 4);
+        assert_eq!(g.single_proj_bytes(), 128 * 128 * 4);
+        assert_eq!(g.slab_bytes(16), 128 * 128 * 16 * 4);
+    }
+
+    #[test]
+    fn uniform_angles_spacing() {
+        let a = uniform_angles(4, 2.0 * std::f64::consts::PI);
+        assert_eq!(a.len(), 4);
+        assert!((a[1] - std::f64::consts::FRAC_PI_2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,125 @@
+//! Partition descriptors: z-slabs of a volume and angle chunks of a
+//! projection set. These are the units the coordinator schedules.
+
+/// A contiguous stack of axial (z) slices `[z0, z1)` of a volume.
+///
+/// Because volumes are stored z-slowest, a z-slab is a contiguous memory
+/// range — the paper partitions images into "volumetric axial slice stacks"
+/// for exactly this reason (single contiguous H2D/D2H copies).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ZSlab {
+    pub z0: usize,
+    pub z1: usize,
+}
+
+impl ZSlab {
+    pub fn len(&self) -> usize {
+        self.z1 - self.z0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.z0 >= self.z1
+    }
+}
+
+/// A contiguous run of projection angles `[a0, a1)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AngleChunk {
+    pub a0: usize,
+    pub a1: usize,
+}
+
+impl AngleChunk {
+    pub fn len(&self) -> usize {
+        self.a1 - self.a0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.a0 >= self.a1
+    }
+}
+
+/// Split `n` items into `parts` nearly-equal contiguous ranges
+/// (first `n % parts` ranges get one extra item). Returns `(start, end)`.
+pub fn split_even(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    assert!(parts > 0, "parts must be > 0");
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Split `n` items into chunks of at most `chunk` items.
+pub fn split_chunks(n: usize, chunk: usize) -> Vec<(usize, usize)> {
+    assert!(chunk > 0, "chunk must be > 0");
+    let mut out = Vec::with_capacity(n.div_ceil(chunk));
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, prop_assert};
+
+    #[test]
+    fn split_even_exact() {
+        assert_eq!(split_even(10, 2), vec![(0, 5), (5, 10)]);
+        assert_eq!(split_even(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(split_even(2, 4), vec![(0, 1), (1, 2), (2, 2), (2, 2)]);
+    }
+
+    #[test]
+    fn split_chunks_exact() {
+        assert_eq!(split_chunks(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(split_chunks(8, 8), vec![(0, 8)]);
+        assert_eq!(split_chunks(0, 4), Vec::<(usize, usize)>::new());
+    }
+
+    #[test]
+    fn prop_split_even_partitions() {
+        check("split_even partitions 0..n", 300, |g| {
+            let n = g.usize(0, 10_000);
+            let parts = g.usize(1, 64);
+            let s = split_even(n, parts);
+            prop_assert(s.len() == parts, "wrong number of parts")?;
+            prop_assert(s[0].0 == 0, "must start at 0")?;
+            prop_assert(s[parts - 1].1 == n, "must end at n")?;
+            for w in s.windows(2) {
+                prop_assert(w[0].1 == w[1].0, "ranges must be contiguous")?;
+            }
+            let max = s.iter().map(|(a, b)| b - a).max().unwrap();
+            let min = s.iter().map(|(a, b)| b - a).min().unwrap();
+            prop_assert(max - min <= 1, "ranges must be balanced")
+        });
+    }
+
+    #[test]
+    fn prop_split_chunks_partitions() {
+        check("split_chunks partitions 0..n", 300, |g| {
+            let n = g.usize(0, 10_000);
+            let chunk = g.usize(1, 512);
+            let s = split_chunks(n, chunk);
+            let total: usize = s.iter().map(|(a, b)| b - a).sum();
+            prop_assert(total == n, "total length mismatch")?;
+            for (a, b) in &s {
+                prop_assert(b > a && b - a <= chunk, "chunk size bound")?;
+            }
+            for w in s.windows(2) {
+                prop_assert(w[0].1 == w[1].0, "contiguous")?;
+            }
+            Ok(())
+        });
+    }
+}

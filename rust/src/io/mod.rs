@@ -1,0 +1,169 @@
+//! File I/O: raw f32 volumes with JSON sidecar headers, 8-bit PGM slice
+//! export (for the Fig. 10/11 image panels) and CSV series (for the
+//! Fig. 7–9 curves).
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::volume::Volume;
+
+/// Write a volume as little-endian raw f32 plus a `.json` sidecar with the
+/// shape, so it can be reloaded or inspected with numpy
+/// (`np.fromfile(...).reshape(nz, ny, nx)`).
+pub fn save_volume(path: &Path, v: &Volume) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut f = fs::File::create(path)?;
+    // f32 LE dump
+    let mut buf = Vec::with_capacity(v.data.len() * 4);
+    for x in &v.data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    let meta = Json::obj(vec![
+        ("dtype", Json::str("f32le")),
+        ("nx", Json::num(v.nx as f64)),
+        ("ny", Json::num(v.ny as f64)),
+        ("nz", Json::num(v.nz as f64)),
+        ("order", Json::str("z-slowest (z,y,x)")),
+    ]);
+    fs::write(path.with_extension("json"), meta.pretty())?;
+    Ok(())
+}
+
+/// Load a raw f32 volume using its JSON sidecar for the shape.
+pub fn load_volume(path: &Path) -> anyhow::Result<Volume> {
+    let meta_text = fs::read_to_string(path.with_extension("json"))?;
+    let meta = Json::parse(&meta_text)?;
+    let nx = meta.get("nx").and_then(Json::as_usize).ok_or_else(|| anyhow::anyhow!("missing nx"))?;
+    let ny = meta.get("ny").and_then(Json::as_usize).ok_or_else(|| anyhow::anyhow!("missing ny"))?;
+    let nz = meta.get("nz").and_then(Json::as_usize).ok_or_else(|| anyhow::anyhow!("missing nz"))?;
+    let mut f = fs::File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    anyhow::ensure!(buf.len() == nx * ny * nz * 4, "raw size mismatch");
+    let data: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(Volume { nx, ny, nz, data })
+}
+
+/// Save one axial slice as an 8-bit binary PGM, windowed to [lo, hi]
+/// (pass `None` to auto-window to the slice's own min/max).
+pub fn save_slice_pgm(
+    path: &Path,
+    v: &Volume,
+    z: usize,
+    window: Option<(f32, f32)>,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(z < v.nz, "slice {z} out of range (nz={})", v.nz);
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let slice = v.slab(z, z + 1);
+    let (lo, hi) = window.unwrap_or_else(|| {
+        let lo = slice.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = slice.iter().cloned().fold(f32::MIN, f32::max);
+        (lo, if hi > lo { hi } else { lo + 1.0 })
+    });
+    let mut out = Vec::with_capacity(slice.len() + 64);
+    out.extend_from_slice(format!("P5\n{} {}\n255\n", v.nx, v.ny).as_bytes());
+    for &val in slice {
+        let t = ((val - lo) / (hi - lo)).clamp(0.0, 1.0);
+        out.push((t * 255.0).round() as u8);
+    }
+    fs::write(path, out)?;
+    Ok(())
+}
+
+/// Write a CSV file from named columns (all columns must be equal length).
+pub fn save_csv(path: &Path, headers: &[&str], columns: &[Vec<f64>]) -> anyhow::Result<()> {
+    anyhow::ensure!(headers.len() == columns.len(), "csv header/column mismatch");
+    let nrows = columns.first().map(|c| c.len()).unwrap_or(0);
+    anyhow::ensure!(columns.iter().all(|c| c.len() == nrows), "ragged csv columns");
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut s = String::new();
+    s.push_str(&headers.join(","));
+    s.push('\n');
+    for r in 0..nrows {
+        let row: Vec<String> = columns.iter().map(|c| format!("{}", c[r])).collect();
+        s.push_str(&row.join(","));
+        s.push('\n');
+    }
+    fs::write(path, s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phantom;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("tigre_io_tests").join(name);
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn volume_roundtrip() {
+        let d = tmpdir("vol");
+        let v = phantom::shepp_logan(12);
+        let p = d.join("v.raw");
+        save_volume(&p, &v).unwrap();
+        let w = load_volume(&p).unwrap();
+        assert_eq!(v, w);
+    }
+
+    #[test]
+    fn load_rejects_size_mismatch() {
+        let d = tmpdir("bad");
+        let v = phantom::cube(4, 0.5, 1.0);
+        let p = d.join("v.raw");
+        save_volume(&p, &v).unwrap();
+        // truncate the raw file
+        let raw = fs::read(&p).unwrap();
+        fs::write(&p, &raw[..raw.len() - 4]).unwrap();
+        assert!(load_volume(&p).is_err());
+    }
+
+    #[test]
+    fn pgm_header_and_size() {
+        let d = tmpdir("pgm");
+        let v = phantom::shepp_logan(16);
+        let p = d.join("slice.pgm");
+        save_slice_pgm(&p, &v, 8, None).unwrap();
+        let bytes = fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n16 16\n255\n"));
+        assert_eq!(bytes.len(), 13 + 256);
+    }
+
+    #[test]
+    fn pgm_out_of_range_slice_errors() {
+        let d = tmpdir("pgm2");
+        let v = phantom::cube(4, 0.5, 1.0);
+        assert!(save_slice_pgm(&d.join("x.pgm"), &v, 99, None).is_err());
+    }
+
+    #[test]
+    fn csv_writes_rows() {
+        let d = tmpdir("csv");
+        let p = d.join("series.csv");
+        save_csv(&p, &["n", "t"], &[vec![1.0, 2.0], vec![0.5, 0.25]]).unwrap();
+        let text = fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "n,t\n1,0.5\n2,0.25\n");
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let d = tmpdir("csv2");
+        assert!(save_csv(&d.join("x.csv"), &["a", "b"], &[vec![1.0], vec![]]).is_err());
+    }
+}

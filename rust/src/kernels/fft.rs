@@ -1,0 +1,141 @@
+//! Radix-2 complex FFT (substrate for FDK ramp filtering; no external FFT
+//! crate is available offline).
+//!
+//! Iterative Cooley–Tukey with bit-reversal permutation. Sizes must be
+//! powers of two — the filtering module zero-pads detector rows to the
+//! next power of two ≥ 2·nu, which also linearizes the circular
+//! convolution.
+
+/// Complex number as (re, im).
+pub type C64 = (f64, f64);
+
+/// In-place forward FFT. `x.len()` must be a power of two.
+pub fn fft(x: &mut [C64]) {
+    transform(x, false);
+}
+
+/// In-place inverse FFT (including the 1/N scale).
+pub fn ifft(x: &mut [C64]) {
+    transform(x, true);
+    let n = x.len() as f64;
+    for v in x.iter_mut() {
+        v.0 /= n;
+        v.1 /= n;
+    }
+}
+
+fn transform(x: &mut [C64], inverse: bool) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fft size {n} must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    // butterfly passes
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w: C64 = (1.0, 0.0);
+            for j in 0..len / 2 {
+                let u = x[i + j];
+                let t = cmul(x[i + j + len / 2], w);
+                x[i + j] = (u.0 + t.0, u.1 + t.1);
+                x[i + j + len / 2] = (u.0 - t.0, u.1 - t.1);
+                w = cmul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+#[inline]
+fn cmul(a: C64, b: C64) -> C64 {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// Next power of two ≥ n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = crate::util::pcg::Pcg32::new(1);
+        let orig: Vec<C64> = (0..256).map(|_| (rng.next_f64() - 0.5, rng.next_f64() - 0.5)).collect();
+        let mut x = orig.clone();
+        fft(&mut x);
+        ifft(&mut x);
+        for (a, b) in orig.iter().zip(&x) {
+            assert!((a.0 - b.0).abs() < 1e-10 && (a.1 - b.1).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn delta_transforms_to_flat_spectrum() {
+        let mut x = vec![(0.0, 0.0); 8];
+        x[0] = (1.0, 0.0);
+        fft(&mut x);
+        for v in &x {
+            assert!((v.0 - 1.0).abs() < 1e-12 && v.1.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_tone_peaks_at_bin() {
+        let n = 64;
+        let k = 5;
+        let mut x: Vec<C64> = (0..n)
+            .map(|i| {
+                let ph = 2.0 * std::f64::consts::PI * k as f64 * i as f64 / n as f64;
+                (ph.cos(), 0.0)
+            })
+            .collect();
+        fft(&mut x);
+        // energy splits between bins k and n-k
+        let mag: Vec<f64> = x.iter().map(|c| (c.0 * c.0 + c.1 * c.1).sqrt()).collect();
+        assert!(mag[k] > 31.0 && mag[n - k] > 31.0);
+        let others: f64 = mag
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != k && *i != n - k)
+            .map(|(_, m)| m)
+            .sum();
+        assert!(others < 1e-8, "leakage {others}");
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut rng = crate::util::pcg::Pcg32::new(3);
+        let orig: Vec<C64> = (0..128).map(|_| (rng.next_f64(), 0.0)).collect();
+        let time_energy: f64 = orig.iter().map(|c| c.0 * c.0 + c.1 * c.1).sum();
+        let mut x = orig;
+        fft(&mut x);
+        let freq_energy: f64 =
+            x.iter().map(|c| c.0 * c.0 + c.1 * c.1).sum::<f64>() / x.len() as f64;
+        assert!((time_energy - freq_energy).abs() < 1e-9 * time_energy);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_pow2_panics() {
+        let mut x = vec![(0.0, 0.0); 12];
+        fft(&mut x);
+    }
+}

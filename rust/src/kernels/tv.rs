@@ -1,0 +1,267 @@
+//! Total-variation regularization kernels (paper §2.3).
+//!
+//! Two minimizers, as in TIGRE:
+//!  * [`tv_gradient_descent`] — steepest-descent TV minimization (the
+//!    inner loop of ASD-POCS / POCS-TV algorithms).
+//!  * [`rof_denoise`] — Rudin–Osher–Fatemi model via Chambolle's dual
+//!    projection algorithm.
+//!
+//! Both are *coupled* neighbourhood operators: one iteration reads the
+//! 6-neighbourhood of every voxel. That single-voxel coupling is exactly
+//! why the coordinator can run `N_in` independent iterations on a slab
+//! with an `N_in`-deep halo before re-synchronizing (paper Fig. 6) — the
+//! property is proven by the halo tests in `coordinator::regularizer`.
+
+use crate::volume::Volume;
+
+const EPS: f32 = 1e-8;
+
+/// Total variation (isotropic, forward differences, reflecting boundary).
+pub fn tv_value(v: &Volume) -> f64 {
+    let (nx, ny, nz) = (v.nx, v.ny, v.nz);
+    let mut tv = 0.0f64;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let c = v.at(x, y, z);
+                let dx = if x + 1 < nx { v.at(x + 1, y, z) - c } else { 0.0 };
+                let dy = if y + 1 < ny { v.at(x, y + 1, z) - c } else { 0.0 };
+                let dz = if z + 1 < nz { v.at(x, y, z + 1) - c } else { 0.0 };
+                tv += ((dx * dx + dy * dy + dz * dz) as f64).sqrt();
+            }
+        }
+    }
+    tv
+}
+
+/// Gradient of the (smoothed) isotropic TV functional.
+pub fn tv_gradient(v: &Volume) -> Volume {
+    let (nx, ny, nz) = (v.nx, v.ny, v.nz);
+    let mut g = Volume::zeros(nx, ny, nz);
+    let at = |x: isize, y: isize, z: isize| -> f32 {
+        // reflecting boundary
+        let cx = x.clamp(0, nx as isize - 1) as usize;
+        let cy = y.clamp(0, ny as isize - 1) as usize;
+        let cz = z.clamp(0, nz as isize - 1) as usize;
+        v.at(cx, cy, cz)
+    };
+    // |∇v| at (x,y,z) with forward differences
+    let mag = |x: isize, y: isize, z: isize| -> f32 {
+        let c = at(x, y, z);
+        let dx = at(x + 1, y, z) - c;
+        let dy = at(x, y + 1, z) - c;
+        let dz = at(x, y, z + 1) - c;
+        (dx * dx + dy * dy + dz * dz + EPS).sqrt()
+    };
+    for z in 0..nz as isize {
+        for y in 0..ny as isize {
+            for x in 0..nx as isize {
+                let c = at(x, y, z);
+                // d/dc of sqrt terms containing c: the term at (x,y,z)
+                // and the three backward terms.
+                let m0 = mag(x, y, z);
+                let t0 = -((at(x + 1, y, z) - c) + (at(x, y + 1, z) - c) + (at(x, y, z + 1) - c))
+                    / m0;
+                let tx = (c - at(x - 1, y, z)) / mag(x - 1, y, z);
+                let ty = (c - at(x, y - 1, z)) / mag(x, y - 1, z);
+                let tz = (c - at(x, y, z - 1)) / mag(x, y, z - 1);
+                *g.at_mut(x as usize, y as usize, z as usize) = t0 + tx + ty + tz;
+            }
+        }
+    }
+    g
+}
+
+/// `iters` steps of normalized steepest descent on TV:
+/// `x ← x − α·‖x‖·ĝ` with ĝ the unit TV gradient (TIGRE's `minimizeTV`).
+pub fn tv_gradient_descent(v: &mut Volume, iters: usize, alpha: f32) {
+    for _ in 0..iters {
+        let g = tv_gradient(v);
+        let gn = g.norm2() as f32;
+        if gn <= EPS {
+            return;
+        }
+        // step size relative to the image magnitude, as in TIGRE's
+        // minimizeTV (dtvg = alpha * im3Dnorm(x))
+        let scale = alpha * v.norm2() as f32 / gn;
+        for (x, gv) in v.data.iter_mut().zip(&g.data) {
+            *x -= scale * gv;
+        }
+    }
+}
+
+/// ROF denoising `min_x ‖x − f‖²/2 + λ·TV(x)` via Chambolle's dual
+/// projection (2004), 3-D variant with step τ = 1/12.
+pub fn rof_denoise(f: &Volume, lambda: f32, iters: usize) -> Volume {
+    let (nx, ny, nz) = (f.nx, f.ny, f.nz);
+    let n = f.data.len();
+    // dual field p : 3 components
+    let mut px = vec![0.0f32; n];
+    let mut py = vec![0.0f32; n];
+    let mut pz = vec![0.0f32; n];
+    let mut div = vec![0.0f32; n];
+    let tau = 1.0 / 12.0;
+
+    let idx = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+
+    for _ in 0..iters {
+        // div p (backward differences, homogeneous boundary)
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    let i = idx(x, y, z);
+                    let mut d = px[i] + py[i] + pz[i];
+                    if x > 0 {
+                        d -= px[idx(x - 1, y, z)];
+                    }
+                    if y > 0 {
+                        d -= py[idx(x, y - 1, z)];
+                    }
+                    if z > 0 {
+                        d -= pz[idx(x, y, z - 1)];
+                    }
+                    div[i] = d;
+                }
+            }
+        }
+        // p ← (p + τ∇(div p − f/λ)) / (1 + τ|∇(div p − f/λ)|)
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    let i = idx(x, y, z);
+                    let w = div[i] - f.data[i] / lambda;
+                    let wx1 = if x + 1 < nx {
+                        div[idx(x + 1, y, z)] - f.data[idx(x + 1, y, z)] / lambda
+                    } else {
+                        w
+                    };
+                    let wy1 = if y + 1 < ny {
+                        div[idx(x, y + 1, z)] - f.data[idx(x, y + 1, z)] / lambda
+                    } else {
+                        w
+                    };
+                    let wz1 = if z + 1 < nz {
+                        div[idx(x, y, z + 1)] - f.data[idx(x, y, z + 1)] / lambda
+                    } else {
+                        w
+                    };
+                    let gx = wx1 - w;
+                    let gy = wy1 - w;
+                    let gz = wz1 - w;
+                    let mag = (gx * gx + gy * gy + gz * gz).sqrt();
+                    let denom = 1.0 + tau * mag;
+                    px[i] = (px[i] + tau * gx) / denom;
+                    py[i] = (py[i] + tau * gy) / denom;
+                    pz[i] = (pz[i] + tau * gz) / denom;
+                }
+            }
+        }
+    }
+    // x = f − λ·div p  (recompute div with final p)
+    let mut out = Volume::zeros(nx, ny, nz);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let i = idx(x, y, z);
+                let mut d = px[i] + py[i] + pz[i];
+                if x > 0 {
+                    d -= px[idx(x - 1, y, z)];
+                }
+                if y > 0 {
+                    d -= py[idx(x, y - 1, z)];
+                }
+                if z > 0 {
+                    d -= pz[idx(x, y, z - 1)];
+                }
+                out.data[i] = f.data[i] - lambda * d;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phantom;
+
+    #[test]
+    fn tv_of_constant_is_zero() {
+        let mut v = Volume::zeros(8, 8, 8);
+        for x in &mut v.data {
+            *x = 3.0;
+        }
+        assert_eq!(tv_value(&v), 0.0);
+    }
+
+    #[test]
+    fn tv_of_step_edge_is_area() {
+        // A half-space step of height 1 across x: TV = number of edge
+        // faces = ny·nz.
+        let v = Volume::from_fn(8, 8, 8, |x, _, _| if x < 4 { 0.0 } else { 1.0 });
+        assert!((tv_value(&v) - 64.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_descent_reduces_tv() {
+        let mut v = phantom::random(12, 12, 12, 1);
+        let before = tv_value(&v);
+        tv_gradient_descent(&mut v, 20, 0.002);
+        let after = tv_value(&v);
+        assert!(after < before * 0.95, "TV {before} → {after}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let v = phantom::random(6, 6, 6, 2);
+        let g = tv_gradient(&v);
+        let h = 1e-3f32;
+        for &(x, y, z) in &[(2usize, 3usize, 2usize), (0, 0, 0), (5, 5, 5), (1, 4, 3)] {
+            let mut vp = v.clone();
+            *vp.at_mut(x, y, z) += h;
+            let mut vm = v.clone();
+            *vm.at_mut(x, y, z) -= h;
+            let fd = (tv_value(&vp) - tv_value(&vm)) as f32 / (2.0 * h);
+            let an = g.at(x, y, z);
+            assert!(
+                (fd - an).abs() < 0.05 * (1.0 + fd.abs()),
+                "voxel ({x},{y},{z}): fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn rof_smooths_noise_but_keeps_structure() {
+        let clean = phantom::cube(16, 0.5, 1.0);
+        let mut noisy = clean.clone();
+        let mut rng = crate::util::pcg::Pcg32::new(4);
+        for v in &mut noisy.data {
+            *v += 0.2 * rng.normal() as f32;
+        }
+        let den = rof_denoise(&noisy, 0.15, 40);
+        let e_noisy = crate::metrics::rmse(&clean, &noisy);
+        let e_den = crate::metrics::rmse(&clean, &den);
+        assert!(e_den < e_noisy * 0.8, "rmse {e_noisy} → {e_den}");
+    }
+
+    #[test]
+    fn rof_of_constant_is_identity() {
+        let mut v = Volume::zeros(6, 6, 6);
+        for x in &mut v.data {
+            *x = 2.0;
+        }
+        let d = rof_denoise(&v, 0.2, 10);
+        for (a, b) in v.data.iter().zip(&d.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rof_lambda_zero_is_identity() {
+        let v = phantom::random(6, 6, 6, 9);
+        let d = rof_denoise(&v, 1e-9, 5);
+        for (a, b) in v.data.iter().zip(&d.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! # tigre-rs
+//!
+//! A rust + JAX + Pallas reproduction of *"Arbitrarily large iterative
+//! tomographic reconstruction on multiple GPUs using the TIGRE toolbox"*
+//! (Biguri et al., 2019).
+//!
+//! The crate implements:
+//! * cone-beam CT geometry, volumes/projections and phantoms,
+//! * native forward/back-projection kernels (Siddon, Joseph, voxel-driven)
+//!   plus AOT-compiled Pallas/JAX kernels loaded through PJRT,
+//! * a discrete-event simulated multi-GPU node (`simgpu`) with a cost model
+//!   calibrated to the paper's GTX 1080 Ti testbed,
+//! * the paper's contribution: partitioned, double-buffered, transfer-
+//!   overlapped forward/backprojection schedules and halo-buffered
+//!   regularization (`coordinator`),
+//! * the TIGRE algorithm suite (FDK, SIRT, SART, OS-SART, CGLS, FISTA,
+//!   ASD-POCS) on top of the coordinator,
+//! * benchmark harnesses that regenerate every figure of the paper's
+//!   evaluation section.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod util;
+
+pub mod geometry;
+pub mod volume;
+pub mod phantom;
+pub mod kernels;
+pub mod metrics;
+pub mod io;
+pub mod simgpu;
+pub mod coordinator;
+pub mod algorithms;
+pub mod runtime;
+pub mod config;
+pub mod bench;
+
+/// CLI entrypoint (subcommand dispatch lives in `config::cli_main` once
+/// implemented; placeholder until the coordinator lands).
+pub fn run_cli() -> anyhow::Result<()> {
+    config::cli_main()
+}

@@ -1,0 +1,8 @@
+//! `tigre` CLI — leader entrypoint.
+
+fn main() {
+    if let Err(e) = tigre::run_cli() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

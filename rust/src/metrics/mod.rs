@@ -1,0 +1,166 @@
+//! Image-quality and convergence metrics for the reconstruction
+//! experiments (Fig. 10/11 analogues report these against ground truth).
+
+use crate::volume::Volume;
+
+/// Root-mean-square error between two equal-shaped volumes.
+pub fn rmse(a: &Volume, b: &Volume) -> f64 {
+    assert_eq!(a.data.len(), b.data.len(), "rmse shape mismatch");
+    if a.data.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum();
+    (sum / a.data.len() as f64).sqrt()
+}
+
+/// Mean absolute error.
+pub fn mae(a: &Volume, b: &Volume) -> f64 {
+    assert_eq!(a.data.len(), b.data.len());
+    if a.data.is_empty() {
+        return 0.0;
+    }
+    a.data.iter().zip(&b.data).map(|(x, y)| ((*x - *y) as f64).abs()).sum::<f64>()
+        / a.data.len() as f64
+}
+
+/// Peak signal-to-noise ratio in dB; the peak is the reference's dynamic
+/// range (max − min), matching the convention of image-recon papers.
+pub fn psnr(reference: &Volume, test: &Volume) -> f64 {
+    let e = rmse(reference, test);
+    let max = reference.data.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    let min = reference.data.iter().cloned().fold(f32::MAX, f32::min) as f64;
+    let peak = (max - min).max(f64::MIN_POSITIVE);
+    if e == 0.0 {
+        return f64::INFINITY;
+    }
+    20.0 * (peak / e).log10()
+}
+
+/// Pearson correlation coefficient between two volumes.
+pub fn correlation(a: &Volume, b: &Volume) -> f64 {
+    assert_eq!(a.data.len(), b.data.len());
+    let n = a.data.len() as f64;
+    if n == 0.0 {
+        return 1.0;
+    }
+    let ma = a.data.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let mb = b.data.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        let dx = *x as f64 - ma;
+        let dy = *y as f64 - mb;
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    if va == 0.0 || vb == 0.0 {
+        return if va == vb { 1.0 } else { 0.0 };
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Global SSIM with the standard constants, computed from whole-volume
+/// mean/variance/covariance (a single-window SSIM; adequate for tracking
+/// relative reconstruction quality across algorithms).
+pub fn ssim_global(a: &Volume, b: &Volume) -> f64 {
+    assert_eq!(a.data.len(), b.data.len());
+    let n = a.data.len() as f64;
+    if n == 0.0 {
+        return 1.0;
+    }
+    let max = a.data.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    let min = a.data.iter().cloned().fold(f32::MAX, f32::min) as f64;
+    let l = (max - min).max(f64::MIN_POSITIVE);
+    let c1 = (0.01 * l) * (0.01 * l);
+    let c2 = (0.03 * l) * (0.03 * l);
+    let ma = a.data.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let mb = b.data.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        let dx = *x as f64 - ma;
+        let dy = *y as f64 - mb;
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    cov /= n;
+    va /= n;
+    vb /= n;
+    ((2.0 * ma * mb + c1) * (2.0 * cov + c2)) / ((ma * ma + mb * mb + c1) * (va + vb + c2))
+}
+
+/// Relative residual `‖a − b‖₂ / ‖a‖₂` (convergence tracking).
+pub fn rel_l2(a: &Volume, b: &Volume) -> f64 {
+    assert_eq!(a.data.len(), b.data.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        let d = (*x - *y) as f64;
+        num += d * d;
+        den += (*x as f64) * (*x as f64);
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phantom;
+
+    #[test]
+    fn identical_volumes_are_perfect() {
+        let v = phantom::shepp_logan(16);
+        assert_eq!(rmse(&v, &v), 0.0);
+        assert_eq!(mae(&v, &v), 0.0);
+        assert!(psnr(&v, &v).is_infinite());
+        assert!((correlation(&v, &v) - 1.0).abs() < 1e-12);
+        assert!((ssim_global(&v, &v) - 1.0).abs() < 1e-9);
+        assert_eq!(rel_l2(&v, &v), 0.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let a = Volume { nx: 2, ny: 1, nz: 1, data: vec![0.0, 0.0] };
+        let b = Volume { nx: 2, ny: 1, nz: 1, data: vec![3.0, 4.0] };
+        assert!((rmse(&a, &b) - (12.5f64).sqrt()).abs() < 1e-12);
+        assert!((mae(&a, &b) - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisier_is_worse() {
+        let v = phantom::shepp_logan(16);
+        let mut n1 = v.clone();
+        let mut n2 = v.clone();
+        let mut rng = crate::util::pcg::Pcg32::new(1);
+        for (a, b) in n1.data.iter_mut().zip(n2.data.iter_mut()) {
+            let e = rng.normal() as f32;
+            *a += 0.01 * e;
+            *b += 0.1 * e;
+        }
+        assert!(psnr(&v, &n1) > psnr(&v, &n2));
+        assert!(rmse(&v, &n1) < rmse(&v, &n2));
+        assert!(ssim_global(&v, &n1) > ssim_global(&v, &n2));
+    }
+
+    #[test]
+    fn correlation_sign() {
+        let a = Volume { nx: 3, ny: 1, nz: 1, data: vec![1.0, 2.0, 3.0] };
+        let b = Volume { nx: 3, ny: 1, nz: 1, data: vec![-1.0, -2.0, -3.0] };
+        assert!((correlation(&a, &b) + 1.0).abs() < 1e-12);
+    }
+}

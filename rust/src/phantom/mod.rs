@@ -1,0 +1,273 @@
+//! Synthetic phantoms.
+//!
+//! The paper's showcase reconstructions use proprietary scans (a roasted
+//! coffee bean on a Zeiss Xradia, an Ichthyosaur fossil on a Nikon bay).
+//! Those are substituted here by analytic ellipsoid phantoms that exercise
+//! the same code paths: the 3-D Shepp–Logan head, a layered "bean" and an
+//! asymmetric multi-body "fossil" (see DESIGN.md §2 for the substitution
+//! rationale).
+
+pub mod noise;
+
+use crate::util::pcg::Pcg32;
+use crate::volume::Volume;
+
+/// An ellipsoid: centre, semi-axes, in-plane rotation, additive density.
+#[derive(Clone, Copy, Debug)]
+pub struct Ellipsoid {
+    pub center: [f64; 3],
+    /// Semi-axes (a, b, c) in normalized [-1, 1] coordinates.
+    pub axes: [f64; 3],
+    /// Rotation about the z axis, radians.
+    pub phi: f64,
+    /// Additive attenuation contribution.
+    pub density: f32,
+}
+
+impl Ellipsoid {
+    /// True if the normalized point `(x, y, z)` lies inside.
+    #[inline]
+    pub fn contains(&self, x: f64, y: f64, z: f64) -> bool {
+        let (s, c) = self.phi.sin_cos();
+        let dx = x - self.center[0];
+        let dy = y - self.center[1];
+        let dz = z - self.center[2];
+        let rx = c * dx + s * dy;
+        let ry = -s * dx + c * dy;
+        let q = (rx / self.axes[0]).powi(2)
+            + (ry / self.axes[1]).powi(2)
+            + (dz / self.axes[2]).powi(2);
+        q <= 1.0
+    }
+}
+
+/// Rasterize a set of additive ellipsoids into an `nx × ny × nz` volume.
+/// Voxel centres are mapped to normalized coordinates `[-1, 1]³`.
+pub fn rasterize(ellipsoids: &[Ellipsoid], nx: usize, ny: usize, nz: usize) -> Volume {
+    let mut v = Volume::zeros(nx, ny, nz);
+    for z in 0..nz {
+        let pz = (2.0 * (z as f64 + 0.5) / nz as f64) - 1.0;
+        for y in 0..ny {
+            let py = (2.0 * (y as f64 + 0.5) / ny as f64) - 1.0;
+            for x in 0..nx {
+                let px = (2.0 * (x as f64 + 0.5) / nx as f64) - 1.0;
+                let mut val = 0.0f32;
+                for e in ellipsoids {
+                    if e.contains(px, py, pz) {
+                        val += e.density;
+                    }
+                }
+                v.data[(z * ny + y) * nx + x] = val;
+            }
+        }
+    }
+    v
+}
+
+/// The classic 3-D Shepp–Logan head phantom (Kak & Slaney variant with
+/// boosted contrast for visualization, as TIGRE ships it).
+pub fn shepp_logan_ellipsoids() -> Vec<Ellipsoid> {
+    // (a, b, c, x0, y0, z0, phi_deg, density)
+    const T: [(f64, f64, f64, f64, f64, f64, f64, f32); 10] = [
+        (0.690, 0.920, 0.810, 0.0, 0.0, 0.0, 0.0, 1.0),
+        (0.662, 0.874, 0.780, 0.0, -0.0184, 0.0, 0.0, -0.8),
+        (0.110, 0.310, 0.220, 0.22, 0.0, 0.0, -18.0, -0.2),
+        (0.160, 0.410, 0.280, -0.22, 0.0, 0.0, 18.0, -0.2),
+        (0.210, 0.250, 0.410, 0.0, 0.35, -0.15, 0.0, 0.1),
+        (0.046, 0.046, 0.050, 0.0, 0.1, 0.25, 0.0, 0.1),
+        (0.046, 0.046, 0.050, 0.0, -0.1, 0.25, 0.0, 0.1),
+        (0.046, 0.023, 0.050, -0.08, -0.605, 0.0, 0.0, 0.1),
+        (0.023, 0.023, 0.020, 0.0, -0.606, 0.0, 0.0, 0.1),
+        (0.023, 0.046, 0.020, 0.06, -0.605, 0.0, 0.0, 0.1),
+    ];
+    T.iter()
+        .map(|&(a, b, c, x0, y0, z0, phi, d)| Ellipsoid {
+            center: [x0, y0, z0],
+            axes: [a, b, c],
+            phi: phi.to_radians(),
+            density: d,
+        })
+        .collect()
+}
+
+/// 3-D Shepp–Logan phantom rasterized at `n³` (cubic) resolution.
+pub fn shepp_logan(n: usize) -> Volume {
+    rasterize(&shepp_logan_ellipsoids(), n, n, n)
+}
+
+/// "Coffee bean" phantom: an ellipsoidal shell with a lower-density
+/// interior and a central crease, mimicking the bean scanned in §3.2.
+pub fn bean_ellipsoids() -> Vec<Ellipsoid> {
+    vec![
+        // outer hull
+        Ellipsoid { center: [0.0, 0.0, 0.0], axes: [0.62, 0.42, 0.38], phi: 0.35, density: 1.0 },
+        // interior (less dense endosperm)
+        Ellipsoid { center: [0.0, 0.0, 0.0], axes: [0.54, 0.34, 0.30], phi: 0.35, density: -0.55 },
+        // the crease: a thin low-density slit through the middle
+        Ellipsoid { center: [0.0, 0.0, 0.0], axes: [0.50, 0.045, 0.26], phi: 0.35, density: -0.35 },
+        // a couple of internal cracks
+        Ellipsoid { center: [0.18, 0.12, 0.05], axes: [0.16, 0.02, 0.10], phi: 0.9, density: -0.3 },
+        Ellipsoid { center: [-0.2, -0.1, -0.08], axes: [0.12, 0.02, 0.08], phi: -0.5, density: -0.3 },
+    ]
+}
+
+/// Bean phantom at `nx × ny × nz` (the paper's bean volume is strongly
+/// anisotropic: 3340 × 3340 × 900).
+pub fn bean(nx: usize, ny: usize, nz: usize) -> Volume {
+    rasterize(&bean_ellipsoids(), nx, ny, nz)
+}
+
+/// "Fossil" phantom: dense elongated bodies (fin bones) embedded in a
+/// lighter matrix slab, asymmetric like the 3360 × 900 × 2000 Ichthyosaur
+/// volume of §3.2. Deterministic for a given seed.
+pub fn fossil_ellipsoids(seed: u64) -> Vec<Ellipsoid> {
+    let mut rng = Pcg32::new(seed);
+    let mut es = vec![
+        // rock matrix slab
+        Ellipsoid { center: [0.0, 0.0, 0.0], axes: [0.9, 0.55, 0.8], phi: 0.0, density: 0.3 },
+    ];
+    // a fan of phalange-like dense bodies
+    for i in 0..14 {
+        let t = i as f64 / 13.0;
+        let angle = -0.5 + t; // fan out
+        let cx = -0.55 + 1.05 * t;
+        let cy = -0.25 + 0.45 * (t - 0.5).abs();
+        let len = 0.16 + 0.1 * rng.next_f64();
+        es.push(Ellipsoid {
+            center: [cx, cy, -0.2 + 0.4 * t],
+            axes: [len, 0.045 + 0.02 * rng.next_f64(), 0.05],
+            phi: angle,
+            density: 0.9 + 0.2 * rng.next_f32(),
+        });
+    }
+    // vertebra-like spheres along a curve
+    for i in 0..8 {
+        let t = i as f64 / 7.0;
+        es.push(Ellipsoid {
+            center: [-0.6 + 1.2 * t, 0.3 + 0.1 * (6.0 * t).sin(), 0.35],
+            axes: [0.06, 0.06, 0.06],
+            phi: 0.0,
+            density: 1.1,
+        });
+    }
+    es
+}
+
+/// Fossil phantom at `nx × ny × nz`.
+pub fn fossil(nx: usize, ny: usize, nz: usize, seed: u64) -> Volume {
+    rasterize(&fossil_ellipsoids(seed), nx, ny, nz)
+}
+
+/// A centred cube of the given half-width (fraction of the volume) — the
+/// simplest possible phantom, used by unit tests with known line integrals.
+pub fn cube(n: usize, half_frac: f64, density: f32) -> Volume {
+    let c = (n as f64 - 1.0) / 2.0;
+    let half = half_frac * n as f64 / 2.0;
+    Volume::from_fn(n, n, n, |x, y, z| {
+        let inside = ((x as f64) - c).abs() <= half
+            && ((y as f64) - c).abs() <= half
+            && ((z as f64) - c).abs() <= half;
+        if inside {
+            density
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Uniform random noise volume in [0, 1) — workload generator for
+/// property tests and benches.
+pub fn random(nx: usize, ny: usize, nz: usize, seed: u64) -> Volume {
+    let mut rng = Pcg32::new(seed);
+    let mut v = Volume::zeros(nx, ny, nz);
+    for x in &mut v.data {
+        *x = rng.next_f32();
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shepp_logan_structure() {
+        let v = shepp_logan(32);
+        // outer shell value 1.0 appears; centre is inside skull (≈0.2)
+        let max = v.data.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(max >= 0.95 && max <= 1.35, "max {max}");
+        let c = v.at(16, 16, 16);
+        assert!((c - 0.2).abs() < 0.15, "centre {c}");
+        // corners are air
+        assert_eq!(v.at(0, 0, 0), 0.0);
+        assert_eq!(v.at(31, 31, 31), 0.0);
+    }
+
+    #[test]
+    fn shepp_logan_known_regions() {
+        let v = shepp_logan(33);
+        // inside the big "ventricle" ellipsoids (x=±0.22) the value drops
+        // to ~0 (1.0 − 0.8 − 0.2); between them it is the brain value 0.2.
+        let c = 16; // centre index
+        let at_norm = |nx: f64| ((nx + 1.0) * 33.0 / 2.0 - 0.5).round() as usize;
+        let left = v.at(at_norm(-0.22), c, c);
+        let right = v.at(at_norm(0.22), c, c);
+        assert!(left.abs() < 0.05, "left ventricle {left}");
+        assert!(right.abs() < 0.05, "right ventricle {right}");
+        assert!((v.at(c, c, c) - 0.2).abs() < 0.05, "brain matter");
+    }
+
+    #[test]
+    fn cube_line_integrals_known() {
+        let v = cube(16, 0.5, 2.0);
+        // the central column should have exactly 8 voxels of density 2
+        let mut col = 0.0;
+        for z in 0..16 {
+            col += v.at(8, 8, z);
+        }
+        assert!((col - 16.0).abs() < 1e-6, "col {col}");
+    }
+
+    #[test]
+    fn bean_has_shell_and_crease() {
+        let v = bean(48, 48, 48);
+        let max = v.data.iter().cloned().fold(f32::MIN, f32::max);
+        assert!((max - 1.0).abs() < 1e-6);
+        // interior value below shell value
+        let interior = v.at(24, 24, 24);
+        assert!(interior < 0.5, "interior {interior}");
+        assert!(v.data.iter().any(|&x| x > 0.0), "non-empty");
+    }
+
+    #[test]
+    fn fossil_deterministic_and_asymmetric() {
+        let a = fossil(24, 12, 20, 7);
+        let b = fossil(24, 12, 20, 7);
+        assert_eq!(a.data, b.data);
+        let c = fossil(24, 12, 20, 8);
+        assert_ne!(a.data, c.data);
+        // bones denser than matrix
+        let max = a.data.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(max > 1.0);
+    }
+
+    #[test]
+    fn rasterize_respects_rotation() {
+        // A long thin ellipsoid rotated 90° should extend along y, not x.
+        let e = Ellipsoid {
+            center: [0.0, 0.0, 0.0],
+            axes: [0.8, 0.1, 0.1],
+            phi: std::f64::consts::FRAC_PI_2,
+            density: 1.0,
+        };
+        let v = rasterize(&[e], 21, 21, 21);
+        assert!(v.at(10, 3, 10) > 0.0, "extends along +y");
+        assert_eq!(v.at(3, 10, 10), 0.0, "does not extend along +x");
+    }
+
+    #[test]
+    fn random_is_seeded() {
+        assert_eq!(random(4, 4, 4, 3).data, random(4, 4, 4, 3).data);
+        assert_ne!(random(4, 4, 4, 3).data, random(4, 4, 4, 4).data);
+    }
+}

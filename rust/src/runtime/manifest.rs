@@ -1,0 +1,169 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+//!
+//! `artifacts/manifest.json` format:
+//! ```json
+//! {
+//!   "version": 1,
+//!   "entries": [
+//!     {"name": "fp_n32_a8", "op": "forward",
+//!      "nx": 32, "ny": 32, "nz": 32, "nu": 32, "nv": 32, "angles": 8,
+//!      "file": "fp_n32_a8.hlo.txt"}
+//!   ]
+//! }
+//! ```
+//! Geometry scalars (DSD, DSO, pitches, offsets) and the angle list are
+//! runtime *inputs* of every artifact, so one artifact serves any cone-
+//! beam geometry of its shape.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Operator an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactOp {
+    Forward,
+    /// FDK-weighted backprojection.
+    Backward,
+    /// Pseudo-matched-weight backprojection (for CGLS/FISTA).
+    BackwardMatched,
+}
+
+/// One AOT-compiled module.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub op: ArtifactOp,
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub nu: usize,
+    pub nv: usize,
+    pub angles: usize,
+    pub file: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`. A missing manifest is not an error —
+    /// it just means "no artifacts", and callers fall back to native.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Ok(Manifest::default());
+        }
+        let text = std::fs::read_to_string(&path)?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let v = Json::parse(text)?;
+        let version = v.get("version").and_then(Json::as_u64).unwrap_or(0);
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let mut entries = Vec::new();
+        for e in v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'entries'"))?
+        {
+            let get_usize = |k: &str| -> anyhow::Result<usize> {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("manifest entry missing '{k}'"))
+            };
+            let op = match e.get("op").and_then(Json::as_str) {
+                Some("forward") => ArtifactOp::Forward,
+                Some("backward") => ArtifactOp::Backward,
+                Some("backward_matched") => ArtifactOp::BackwardMatched,
+                other => anyhow::bail!("bad manifest op {other:?}"),
+            };
+            entries.push(ManifestEntry {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unnamed")
+                    .to_string(),
+                op,
+                nx: get_usize("nx")?,
+                ny: get_usize("ny")?,
+                nz: get_usize("nz")?,
+                nu: get_usize("nu")?,
+                nv: get_usize("nv")?,
+                angles: get_usize("angles")?,
+                file: dir.join(
+                    e.get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("manifest entry missing 'file'"))?,
+                ),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Find an artifact for the exact operator + shape.
+    pub fn find(
+        &self,
+        op: ArtifactOp,
+        n_vox: [usize; 3],
+        n_det: [usize; 2],
+        angles: usize,
+    ) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| {
+            e.op == op
+                && [e.nx, e.ny, e.nz] == n_vox
+                && [e.nu, e.nv] == n_det
+                && e.angles == angles
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "entries": [
+            {"name": "fp_n32_a8", "op": "forward",
+             "nx": 32, "ny": 32, "nz": 32, "nu": 32, "nv": 32, "angles": 8,
+             "file": "fp_n32_a8.hlo.txt"},
+            {"name": "bp_n32_a8", "op": "backward",
+             "nx": 32, "ny": 32, "nz": 32, "nu": 32, "nv": 32, "angles": 8,
+             "file": "bp_n32_a8.hlo.txt"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_finds() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find(ArtifactOp::Forward, [32, 32, 32], [32, 32], 8).unwrap();
+        assert_eq!(e.name, "fp_n32_a8");
+        assert!(e.file.ends_with("fp_n32_a8.hlo.txt"));
+        assert!(m.find(ArtifactOp::Forward, [32, 32, 32], [32, 32], 9).is_none());
+        assert!(m.find(ArtifactOp::Backward, [32, 32, 32], [32, 32], 8).is_some());
+    }
+
+    #[test]
+    fn missing_manifest_is_empty() {
+        let m = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap();
+        assert!(m.entries.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "entries": []}"#, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"version": 1, "entries": [{"op": "forward", "nx": 1}]}"#;
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,56 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts (HLO text) and
+//! execute them from the rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`): `python/compile/aot.py`
+//! lowers the L2 jax operators (which call the L1 Pallas kernels) to HLO
+//! *text* — not serialized protos; the image's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5's 64-bit instruction ids, while the text parser reassigns ids
+//! (see /opt/xla-example/README.md) — plus a `manifest.json` describing
+//! the shapes. This module loads the manifest, compiles the modules on the
+//! PJRT CPU client once (cached per thread) and executes them.
+//!
+//! Artifacts exist for the manifest's shape set; any other shape falls
+//! back to the native rust kernels, so the coordinator works for
+//! arbitrary sizes either way (the paper's kernel-agnosticism, §2).
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{Manifest, ManifestEntry};
+
+use crate::geometry::Geometry;
+use crate::volume::{ProjectionSet, Volume};
+use std::path::Path;
+
+/// Forward projection via a PJRT artifact when the manifest has the
+/// shape, native Siddon otherwise.
+pub fn forward_or_native(dir: &Path, g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
+    match pjrt::try_forward(dir, g, vol) {
+        Ok(Some(p)) => p,
+        Ok(None) => crate::kernels::forward(g, vol, crate::kernels::Projector::Siddon, threads),
+        Err(e) => {
+            crate::log_warn!("pjrt forward failed ({e:#}); falling back to native");
+            crate::kernels::forward(g, vol, crate::kernels::Projector::Siddon, threads)
+        }
+    }
+}
+
+/// Backprojection via a PJRT artifact when available, native otherwise.
+/// `weight` selects between the FDK-weighted and pseudo-matched artifacts
+/// (the gradient algorithms require the matched pair).
+pub fn backward_or_native(
+    dir: &Path,
+    g: &Geometry,
+    proj: &ProjectionSet,
+    weight: crate::kernels::BackprojWeight,
+    threads: usize,
+) -> Volume {
+    match pjrt::try_backward(dir, g, proj, weight) {
+        Ok(Some(v)) => v,
+        Ok(None) => crate::kernels::backward(g, proj, weight, threads),
+        Err(e) => {
+            crate::log_warn!("pjrt backward failed ({e:#}); falling back to native");
+            crate::kernels::backward(g, proj, weight, threads)
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! Calling convention (fixed jointly with `python/compile/aot.py`):
+//!  * forward:  `(vol f32[nz,ny,nx], params f32[12], angles f32[A])`
+//!              → 1-tuple of `proj f32[A,nv,nu]`
+//!  * backward: `(proj f32[A,nv,nu], params f32[12], angles f32[A])`
+//!              → 1-tuple of `vol f32[nz,ny,nx]`
+//!
+//! `params = [dsd, dso, dx, dy, dz, du, dv, off_u, off_v, ox, oy, oz]`
+//! (voxel/detector pitches, detector offset, volume-origin offset), so a
+//! single artifact serves every geometry of its shape — including the
+//! recentred slab geometries the coordinator produces.
+//!
+//! Executables are compiled once and cached per thread (the xla crate's
+//! handles are not Sync).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::geometry::Geometry;
+use crate::volume::{ProjectionSet, Volume};
+
+use super::manifest::{ArtifactOp, Manifest};
+
+thread_local! {
+    static ENGINE: RefCell<Option<Engine>> = const { RefCell::new(None) };
+}
+
+struct Engine {
+    client: xla::PjRtClient,
+    manifest_dir: PathBuf,
+    manifest: Manifest,
+    compiled: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    fn new(dir: &Path) -> anyhow::Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            manifest_dir: dir.to_path_buf(),
+            manifest: Manifest::load(dir)?,
+            compiled: HashMap::new(),
+        })
+    }
+
+    fn executable(&mut self, file: &Path) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(file) {
+            let proto = xla::HloModuleProto::from_text_file(
+                file.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow::anyhow!("loading HLO text {file:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {file:?}: {e:?}"))?;
+            self.compiled.insert(file.to_path_buf(), exe);
+        }
+        Ok(self.compiled.get(file).unwrap())
+    }
+}
+
+fn with_engine<R>(
+    dir: &Path,
+    f: impl FnOnce(&mut Engine) -> anyhow::Result<R>,
+) -> anyhow::Result<R> {
+    ENGINE.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let rebuild = match slot.as_ref() {
+            Some(e) => e.manifest_dir != dir,
+            None => true,
+        };
+        if rebuild {
+            *slot = Some(Engine::new(dir)?);
+        }
+        f(slot.as_mut().unwrap())
+    })
+}
+
+/// Geometry scalars in the artifact's `params` layout.
+fn params_vec(g: &Geometry) -> Vec<f32> {
+    vec![
+        g.dsd as f32,
+        g.dso as f32,
+        g.d_vox[0] as f32,
+        g.d_vox[1] as f32,
+        g.d_vox[2] as f32,
+        g.d_det[0] as f32,
+        g.d_det[1] as f32,
+        g.offset_det[0] as f32,
+        g.offset_det[1] as f32,
+        g.offset_origin[0] as f32,
+        g.offset_origin[1] as f32,
+        g.offset_origin[2] as f32,
+    ]
+}
+
+fn angles_vec(g: &Geometry) -> Vec<f32> {
+    g.angles.iter().map(|&a| a as f32).collect()
+}
+
+fn run3(
+    engine: &mut Engine,
+    file: &Path,
+    main_in: (&[f32], &[i64]),
+    g: &Geometry,
+    out_len: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let exe = engine.executable(file)?;
+    let x = xla::Literal::vec1(main_in.0)
+        .reshape(main_in.1)
+        .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))?;
+    let p = xla::Literal::vec1(&params_vec(g));
+    let a = xla::Literal::vec1(&angles_vec(g));
+    let result = exe
+        .execute::<xla::Literal>(&[x, p, a])
+        .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+    let out = result
+        .to_tuple1()
+        .map_err(|e| anyhow::anyhow!("unwrap tuple: {e:?}"))?;
+    let v = out
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+    anyhow::ensure!(v.len() == out_len, "artifact output length {} != {out_len}", v.len());
+    Ok(v)
+}
+
+/// Try the forward projection via an artifact. `Ok(None)` = no artifact
+/// for this shape (caller falls back to native).
+pub fn try_forward(dir: &Path, g: &Geometry, vol: &Volume) -> anyhow::Result<Option<ProjectionSet>> {
+    with_engine(dir, |engine| {
+        let Some(entry) = engine
+            .manifest
+            .find(ArtifactOp::Forward, g.n_vox, g.n_det, g.n_angles())
+            .cloned()
+        else {
+            return Ok(None);
+        };
+        let dims = [vol.nz as i64, vol.ny as i64, vol.nx as i64];
+        let out_len = g.n_det[0] * g.n_det[1] * g.n_angles();
+        let data = run3(engine, &entry.file, (&vol.data, &dims), g, out_len)?;
+        Ok(Some(ProjectionSet {
+            nu: g.n_det[0],
+            nv: g.n_det[1],
+            n_angles: g.n_angles(),
+            data,
+        }))
+    })
+}
+
+/// Try the backprojection via an artifact (FDK or matched weights).
+pub fn try_backward(
+    dir: &Path,
+    g: &Geometry,
+    proj: &ProjectionSet,
+    weight: crate::kernels::BackprojWeight,
+) -> anyhow::Result<Option<Volume>> {
+    let op = match weight {
+        crate::kernels::BackprojWeight::Fdk => ArtifactOp::Backward,
+        crate::kernels::BackprojWeight::Matched => ArtifactOp::BackwardMatched,
+    };
+    with_engine(dir, |engine| {
+        let Some(entry) = engine
+            .manifest
+            .find(op, g.n_vox, g.n_det, g.n_angles())
+            .cloned()
+        else {
+            return Ok(None);
+        };
+        let dims = [proj.n_angles as i64, proj.nv as i64, proj.nu as i64];
+        let out_len = g.n_vox[0] * g.n_vox[1] * g.n_vox[2];
+        let data = run3(engine, &entry.file, (&proj.data, &dims), g, out_len)?;
+        Ok(Some(Volume { nx: g.n_vox[0], ny: g.n_vox[1], nz: g.n_vox[2], data }))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_dir_falls_back() {
+        let g = Geometry::cone_beam(8, 2);
+        let v = crate::phantom::cube(8, 0.5, 1.0);
+        let r = try_forward(Path::new("/nonexistent-artifacts"), &g, &v).unwrap();
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn params_layout_is_twelve_floats() {
+        let g = Geometry::cone_beam(8, 2);
+        assert_eq!(params_vec(&g).len(), 12);
+        assert_eq!(angles_vec(&g).len(), 2);
+    }
+}

@@ -1,0 +1,188 @@
+//! Cost model for the simulated GPU node.
+//!
+//! # Calibration (DESIGN.md §6)
+//!
+//! The constants below are calibrated against the paper's own testbed so
+//! the *ratios* of Figs. 7–9 are meaningful:
+//!
+//! * **PCIe-Gen3 x16 transfers** — the paper states pageable ≈ 4 GB/s and
+//!   pinned ≈ 12 GB/s (§2.1 "from approximately 4GB/s to 12GB/s on a
+//!   PCI-e Gen3").
+//! * **Projection kernel throughput** — from the paper's end-to-end
+//!   anchor: 512³ CGLS×15 runs in 61 s on one GTX 1080 Ti (§4). A CGLS
+//!   iteration is one FP + one BP plus small vector ops; with the
+//!   projection measured slower than backprojection (Fig. 7) we apportion
+//!   ≈2.4 s FP and ≈1.4 s BP per 512-iteration. FP work is
+//!   `rays × chord ≈ 512²·512 × 0.7·1024 ≈ 9.6e10` ray-voxel steps →
+//!   `4e10 steps/s`. BP work `512³·512 = 6.9e10` voxel-angle updates →
+//!   `5e10 updates/s`.
+//! * **Page-lock rate** — cudaHostRegister runs ≈ 3 GB/s on this
+//!   platform class when memory is already resident, and ≈ 1.5 GB/s when
+//!   pinning forces first-touch allocation (the backprojection output
+//!   case the paper highlights in Fig. 9's discussion). Unpinning is
+//!   ≈ 3× faster.
+//! * **Fixed per-call overheads** — property checks + context touch of a
+//!   few ms per call dominate at N=128 where the paper reports total
+//!   times under 20 ms.
+
+/// All tunables of the simulated node, in SI units (seconds, bytes).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Pageable host↔device bandwidth (bytes/s).
+    pub pcie_pageable_bps: f64,
+    /// Pinned host↔device bandwidth (bytes/s).
+    pub pcie_pinned_bps: f64,
+    /// Fixed latency per copy (driver + DMA setup).
+    pub copy_latency_s: f64,
+    /// Page-lock rate for already-resident memory (bytes/s).
+    pub pin_resident_bps: f64,
+    /// Page-lock rate when pinning forces allocation (first touch).
+    pub pin_alloc_bps: f64,
+    /// Unpin rate (bytes/s).
+    pub unpin_bps: f64,
+    /// Forward-projection kernel throughput (ray-voxel steps / s).
+    pub fp_steps_per_s: f64,
+    /// Backprojection kernel throughput (voxel-angle updates / s).
+    pub bp_updates_per_s: f64,
+    /// TV/regularizer kernel throughput (voxel-iterations / s).
+    pub tv_updates_per_s: f64,
+    /// Projection-accumulation throughput (bytes/s) — the paper measures
+    /// accumulation at ≈0.01% of a projection kernel launch.
+    pub accum_bps: f64,
+    /// Kernel launch overhead.
+    pub kernel_launch_s: f64,
+    /// cudaMalloc/cudaFree latency.
+    pub alloc_latency_s: f64,
+    pub free_latency_s: f64,
+    /// Per-device property check (cudaGetDeviceProperties etc.), charged
+    /// once per operator call.
+    pub property_check_s: f64,
+}
+
+impl CostModel {
+    /// GTX 1080 Ti on PCIe Gen3 x16 — the paper's testbed.
+    pub fn gtx1080ti_pcie3() -> Self {
+        Self {
+            pcie_pageable_bps: 4.0e9,
+            pcie_pinned_bps: 12.0e9,
+            copy_latency_s: 10e-6,
+            pin_resident_bps: 3.0e9,
+            pin_alloc_bps: 1.5e9,
+            unpin_bps: 9.0e9,
+            fp_steps_per_s: 4.0e10,
+            bp_updates_per_s: 5.0e10,
+            tv_updates_per_s: 2.0e10,
+            accum_bps: 400e9, // on-device, memory-bound
+            kernel_launch_s: 10e-6,
+            alloc_latency_s: 100e-6,
+            free_latency_s: 50e-6,
+            property_check_s: 1.5e-3,
+        }
+    }
+
+    /// Time to page-lock `bytes` of host memory.
+    pub fn pin_time_s(&self, bytes: u64, already_allocated: bool) -> f64 {
+        let bw = if already_allocated { self.pin_resident_bps } else { self.pin_alloc_bps };
+        bytes as f64 / bw + 1e-4
+    }
+
+    /// Time to unpin `bytes`.
+    pub fn unpin_time_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.unpin_bps + 5e-5
+    }
+
+    /// Forward-projection kernel time for `rays` rays with an average
+    /// traversal of `chord` voxel steps.
+    pub fn fp_kernel_s(&self, rays: u64, chord: f64) -> f64 {
+        rays as f64 * chord / self.fp_steps_per_s
+    }
+
+    /// Estimate of the FP kernel time for one launch over a z-slab:
+    /// `nu×nv×angles` rays; rays that miss the slab cost ~nothing, so the
+    /// effective ray count scales with the slab fraction (plus cone-beam
+    /// overreach), and the chord is the in-plane crossing length.
+    pub fn fp_slab_kernel_s(
+        &self,
+        nu: usize,
+        nv: usize,
+        angles: usize,
+        nx: usize,
+        ny: usize,
+        nz_slab: usize,
+        nz_full: usize,
+    ) -> f64 {
+        let frac = ((nz_slab as f64 / nz_full as f64) * 1.3).min(1.0);
+        let rays = (nu * nv * angles) as f64 * frac;
+        let chord = 0.7 * (nx + ny) as f64;
+        rays * chord / self.fp_steps_per_s
+    }
+
+    /// Backprojection kernel time for one launch updating `nx×ny×nz_slab`
+    /// voxels from `angles` projections.
+    pub fn bp_kernel_s(&self, nx: usize, ny: usize, nz_slab: usize, angles: usize) -> f64 {
+        (nx * ny * nz_slab) as f64 * angles as f64 / self.bp_updates_per_s
+    }
+
+    /// Accumulation kernel time for `bytes` of partial projections.
+    pub fn accum_kernel_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.accum_bps
+    }
+
+    /// TV-regularizer kernel time for `voxels` over `iters` inner
+    /// iterations.
+    pub fn tv_kernel_s(&self, voxels: u64, iters: usize) -> f64 {
+        voxels as f64 * iters as f64 / self.tv_updates_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchor_fp_512_within_band() {
+        // FP of the full 512 problem ≈ 2–3 s (calibration anchor).
+        let c = CostModel::gtx1080ti_pcie3();
+        let t = c.fp_slab_kernel_s(512, 512, 512, 512, 512, 512, 512);
+        assert!((1.5..4.0).contains(&t), "FP(512) = {t}");
+    }
+
+    #[test]
+    fn anchor_bp_512_within_band() {
+        let c = CostModel::gtx1080ti_pcie3();
+        let t = c.bp_kernel_s(512, 512, 512, 512);
+        assert!((0.8..2.5).contains(&t), "BP(512) = {t}");
+        // backprojection is faster than projection (paper §3.1)
+        let fp = c.fp_slab_kernel_s(512, 512, 512, 512, 512, 512, 512);
+        assert!(t < fp);
+    }
+
+    #[test]
+    fn pinned_transfers_3x_faster() {
+        let c = CostModel::gtx1080ti_pcie3();
+        assert!((c.pcie_pinned_bps / c.pcie_pageable_bps - 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn pin_with_allocation_slower() {
+        let c = CostModel::gtx1080ti_pcie3();
+        assert!(c.pin_time_s(1 << 30, false) > c.pin_time_s(1 << 30, true) * 1.5);
+    }
+
+    #[test]
+    fn accumulation_negligible_vs_kernel() {
+        // paper: accumulation ≈ 0.01% of a projection kernel launch.
+        let c = CostModel::gtx1080ti_pcie3();
+        let fp = c.fp_slab_kernel_s(1024, 1024, 9, 1024, 1024, 1024, 1024);
+        let acc = c.accum_kernel_s(1024 * 1024 * 9 * 4);
+        assert!(acc < fp * 0.01, "accum {acc} vs fp {fp}");
+    }
+
+    #[test]
+    fn slab_fraction_reduces_fp_cost() {
+        let c = CostModel::gtx1080ti_pcie3();
+        let full = c.fp_slab_kernel_s(256, 256, 9, 256, 256, 256, 256);
+        let slab = c.fp_slab_kernel_s(256, 256, 9, 256, 256, 64, 256);
+        assert!(slab < full * 0.5, "slab {slab} vs full {full}");
+    }
+}

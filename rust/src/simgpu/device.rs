@@ -1,0 +1,135 @@
+//! Simulated device memory ledger.
+
+use std::collections::BTreeMap;
+
+use crate::util::units::{fmt_bytes, GIB};
+
+/// Static description of a simulated GPU.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Device RAM capacity in bytes.
+    pub mem_bytes: u64,
+}
+
+impl GpuSpec {
+    /// The paper's testbed device: NVIDIA GTX 1080 Ti, 11 GiB.
+    pub fn gtx1080ti() -> Self {
+        Self { name: "GTX 1080 Ti (sim)".into(), mem_bytes: 11 * GIB }
+    }
+
+    /// A deliberately tiny device, used to force many image partitions in
+    /// tests ("arbitrarily small memories", paper abstract).
+    pub fn tiny(mem_bytes: u64) -> Self {
+        Self { name: format!("tiny-{}", fmt_bytes(mem_bytes)), mem_bytes }
+    }
+}
+
+/// Tracks named allocations against the device capacity.
+#[derive(Debug)]
+pub struct DeviceMem {
+    spec: GpuSpec,
+    allocs: BTreeMap<String, u64>,
+    used: u64,
+    peak: u64,
+}
+
+impl DeviceMem {
+    pub fn new(spec: GpuSpec) -> Self {
+        Self { spec, allocs: BTreeMap::new(), used: 0, peak: 0 }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.spec.mem_bytes
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    /// High-water mark of usage (the invariant checked by tests: it must
+    /// never exceed capacity for any problem size).
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity() - self.used
+    }
+
+    /// Allocate; errors if capacity would be exceeded or the label exists.
+    pub fn alloc(&mut self, label: &str, bytes: u64) -> Result<(), String> {
+        if self.allocs.contains_key(label) {
+            return Err(format!("allocation '{label}' already exists"));
+        }
+        if self.used + bytes > self.capacity() {
+            return Err(format!(
+                "requested {} but only {} free of {}",
+                fmt_bytes(bytes),
+                fmt_bytes(self.free_bytes()),
+                fmt_bytes(self.capacity())
+            ));
+        }
+        self.allocs.insert(label.to_string(), bytes);
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    /// Free by label (no-op for unknown labels, mirroring cudaFree(null)).
+    pub fn free(&mut self, label: &str) {
+        if let Some(bytes) = self.allocs.remove(label) {
+            self.used -= bytes;
+        }
+    }
+
+    pub fn get(&self, label: &str) -> Option<u64> {
+        self.allocs.get(label).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_tracks_usage_and_peak() {
+        let mut m = DeviceMem::new(GpuSpec::tiny(1000));
+        m.alloc("a", 600).unwrap();
+        m.alloc("b", 300).unwrap();
+        assert_eq!(m.used(), 900);
+        m.free("a");
+        assert_eq!(m.used(), 300);
+        assert_eq!(m.peak(), 900);
+        m.alloc("c", 700).unwrap();
+        assert_eq!(m.peak(), 1000);
+    }
+
+    #[test]
+    fn over_capacity_rejected() {
+        let mut m = DeviceMem::new(GpuSpec::tiny(100));
+        assert!(m.alloc("x", 101).is_err());
+        m.alloc("y", 60).unwrap();
+        assert!(m.alloc("z", 41).is_err());
+        assert_eq!(m.used(), 60);
+    }
+
+    #[test]
+    fn duplicate_label_rejected() {
+        let mut m = DeviceMem::new(GpuSpec::tiny(100));
+        m.alloc("x", 10).unwrap();
+        assert!(m.alloc("x", 10).is_err());
+    }
+
+    #[test]
+    fn free_unknown_is_noop() {
+        let mut m = DeviceMem::new(GpuSpec::tiny(100));
+        m.free("ghost");
+        assert_eq!(m.used(), 0);
+    }
+
+    #[test]
+    fn gtx1080ti_capacity() {
+        assert_eq!(GpuSpec::gtx1080ti().mem_bytes, 11 * GIB);
+    }
+}

@@ -1,0 +1,176 @@
+//! Timeline events and the Fig.-9 style breakdown.
+
+/// The three bins of the paper's Fig. 9.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Category {
+    /// Kernel launches (including copies fully hidden behind them).
+    Compute,
+    /// Host memory page-locking and unlocking.
+    PinUnpin,
+    /// Non-overlapped memory work: allocation, freeing, exposed copies.
+    OtherMem,
+}
+
+/// One simulated operation on the timeline.
+#[derive(Clone, Debug)]
+pub struct TimelineEvent {
+    /// Device index, or `None` for host-only operations (pin/unpin …).
+    pub device: Option<usize>,
+    pub category: Category,
+    pub t_start: f64,
+    pub t_end: f64,
+    pub label: String,
+}
+
+impl TimelineEvent {
+    pub fn duration(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+}
+
+/// Fig.-9 binning of a timeline: the makespan `[0, T]` is split into
+/// * `compute` — instants where at least one compute engine is busy,
+/// * `pin`     — remaining instants covered by pin/unpin work,
+/// * `othermem`— remaining instants covered by memory operations,
+/// * `idle`    — nothing happening (host logic between queue submissions).
+///
+/// This matches the paper's accounting: "Computing contains the time for
+/// kernel launches, which includes simultaneous memory copies as they
+/// happen concurrently"; only *exposed* memory time counts as memory.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    pub compute: f64,
+    pub pin: f64,
+    pub othermem: f64,
+    pub idle: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.pin + self.othermem + self.idle
+    }
+
+    pub fn fractions(&self) -> (f64, f64, f64, f64) {
+        let t = self.total().max(1e-300);
+        (self.compute / t, self.pin / t, self.othermem / t, self.idle / t)
+    }
+}
+
+/// Compute the exposed-time breakdown over the events' makespan with an
+/// O(E log E) boundary sweep (the Fig. 7–9 sweeps produce tens of
+/// thousands of events at N = 3072, so the naive per-interval scan is
+/// far too slow).
+pub fn breakdown(events: &[TimelineEvent]) -> Breakdown {
+    if events.is_empty() {
+        return Breakdown::default();
+    }
+    // boundary list: (time, category index, delta)
+    let mut bounds: Vec<(f64, usize, i64)> = Vec::with_capacity(events.len() * 2 + 1);
+    for e in events {
+        if e.t_end <= e.t_start {
+            continue;
+        }
+        let c = match e.category {
+            Category::Compute => 0,
+            Category::PinUnpin => 1,
+            Category::OtherMem => 2,
+        };
+        bounds.push((e.t_start, c, 1));
+        bounds.push((e.t_end, c, -1));
+    }
+    bounds.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    let mut out = Breakdown::default();
+    let mut active = [0i64; 3];
+    let mut t_prev = 0.0f64;
+    let mut i = 0;
+    while i < bounds.len() {
+        let t = bounds[i].0;
+        if t > t_prev {
+            let d = t - t_prev;
+            if active[0] > 0 {
+                out.compute += d;
+            } else if active[1] > 0 {
+                out.pin += d;
+            } else if active[2] > 0 {
+                out.othermem += d;
+            } else {
+                out.idle += d;
+            }
+        }
+        // apply all deltas at this timestamp
+        while i < bounds.len() && bounds[i].0 == t {
+            active[bounds[i].1] += bounds[i].2;
+            i += 1;
+        }
+        t_prev = t_prev.max(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cat: Category, t0: f64, t1: f64) -> TimelineEvent {
+        TimelineEvent { device: Some(0), category: cat, t_start: t0, t_end: t1, label: String::new() }
+    }
+
+    #[test]
+    fn empty_timeline() {
+        assert_eq!(breakdown(&[]).total(), 0.0);
+    }
+
+    #[test]
+    fn copy_hidden_behind_compute_counts_as_compute() {
+        let events = vec![
+            ev(Category::Compute, 0.0, 2.0),
+            ev(Category::OtherMem, 0.5, 1.5), // fully overlapped copy
+        ];
+        let b = breakdown(&events);
+        assert!((b.compute - 2.0).abs() < 1e-12);
+        assert_eq!(b.othermem, 0.0);
+    }
+
+    #[test]
+    fn exposed_copy_counts_as_memory() {
+        let events = vec![
+            ev(Category::Compute, 0.0, 1.0),
+            ev(Category::OtherMem, 1.0, 1.6), // after the kernel: exposed
+        ];
+        let b = breakdown(&events);
+        assert!((b.compute - 1.0).abs() < 1e-12);
+        assert!((b.othermem - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pin_beats_memory_in_precedence() {
+        let events = vec![
+            ev(Category::PinUnpin, 0.0, 1.0),
+            ev(Category::OtherMem, 0.5, 1.5),
+        ];
+        let b = breakdown(&events);
+        assert!((b.pin - 1.0).abs() < 1e-12);
+        assert!((b.othermem - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_gap_counted() {
+        let events = vec![ev(Category::Compute, 1.0, 2.0)];
+        let b = breakdown(&events);
+        assert!((b.idle - 1.0).abs() < 1e-12, "gap [0,1) is idle");
+        assert!((b.total() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let events = vec![
+            ev(Category::Compute, 0.0, 1.0),
+            ev(Category::PinUnpin, 1.0, 1.5),
+            ev(Category::OtherMem, 1.5, 2.0),
+        ];
+        let (c, p, m, i) = breakdown(&events).fractions();
+        assert!((c + p + m + i - 1.0).abs() < 1e-12);
+        assert!((c - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,201 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Model: `tigre <subcommand> [--flag] [--key value]...`. Options are
+//! declared up front so `--help` output and unknown-option errors are
+//! automatic.
+
+use std::collections::BTreeMap;
+
+/// Declared option (always `--name <value>` unless `is_flag`).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments after options.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("option --{name} expects an integer, got '{v}'")
+            })?)),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("option --{name} expects a number, got '{v}'")
+            })?)),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--gpus 1,2,4`.
+    pub fn get_usize_list(&self, name: &str) -> anyhow::Result<Option<Vec<usize>>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|tok| {
+                    tok.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("option --{name}: bad integer '{tok}'")
+                    })
+                })
+                .collect::<anyhow::Result<Vec<usize>>>()
+                .map(Some),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// A subcommand with declared options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: default.map(|s| s.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse raw arguments (excluding the subcommand itself).
+    pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        for spec in &self.opts {
+            if let Some(d) = &spec.default {
+                args.values.insert(spec.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", self.usage()))?;
+                if spec.is_flag {
+                    args.flags.push(name.to_string());
+                } else {
+                    i += 1;
+                    let val = raw.get(i).ok_or_else(|| {
+                        anyhow::anyhow!("option --{name} requires a value")
+                    })?;
+                    args.values.insert(name.to_string(), val.clone());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: tigre {} [options]\n  {}\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let default = o
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            if o.is_flag {
+                s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, default));
+            } else {
+                s.push_str(&format!("  --{:<18} {}{}\n", format!("{} <v>", o.name), o.help, default));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("bench", "run benchmark")
+            .opt("size", "image size", Some("128"))
+            .opt("gpus", "gpu list", Some("1,2"))
+            .flag("verbose", "chatty")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&[]).unwrap();
+        assert_eq!(a.get_usize("size").unwrap(), Some(128));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let a = cmd().parse(&s(&["--size", "256", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get_usize("size").unwrap(), Some(256));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = cmd().parse(&s(&["--gpus", "1,2,4"])).unwrap();
+        assert_eq!(a.get_usize_list("gpus").unwrap(), Some(vec![1, 2, 4]));
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(cmd().parse(&s(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(cmd().parse(&s(&["--size"])).is_err());
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = cmd().parse(&s(&["--size", "abc"])).unwrap();
+        assert!(a.get_usize("size").is_err());
+    }
+}

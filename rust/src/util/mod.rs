@@ -1,0 +1,14 @@
+//! Substrate utilities.
+//!
+//! The build environment is fully offline, so everything that a networked
+//! project would pull from crates.io (arg parsing, JSON, PRNG, thread pool,
+//! property testing, bench statistics) is implemented here from scratch.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod pcg;
+pub mod prop;
+pub mod stats;
+pub mod threadpool;
+pub mod units;

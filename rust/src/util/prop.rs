@@ -1,0 +1,215 @@
+//! Minimal property-based testing framework (proptest is unavailable).
+//!
+//! Usage:
+//! ```ignore
+//! check("splits cover volume", 200, |g| {
+//!     let n = g.usize(1, 4096);
+//!     let parts = g.usize(1, 16);
+//!     let splits = split_evenly(n, parts);
+//!     prop_assert(splits.iter().sum::<usize>() == n, "sum mismatch")
+//! });
+//! ```
+//! Each case gets a fresh seeded [`Pcg32`]; on failure the seed and case
+//! index are printed so the case can be replayed deterministically. A simple
+//! halving shrink pass is applied to integer draws via `Gen::usize` history.
+
+use super::pcg::Pcg32;
+
+/// Property outcome: Ok(()) or a failure description.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Case generator handed to property bodies. Wraps the PRNG and records
+/// integer draws so failing cases can be shrunk.
+pub struct Gen {
+    rng: Pcg32,
+    draws: Vec<(usize, usize, usize)>, // (lo, hi, value)
+    forced: Vec<usize>,                // replay/shrink values
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::new(seed), draws: Vec::new(), forced: Vec::new(), cursor: 0 }
+    }
+
+    fn with_forced(seed: u64, forced: Vec<usize>) -> Self {
+        Self { rng: Pcg32::new(seed), draws: Vec::new(), forced, cursor: 0 }
+    }
+
+    /// Uniform usize in [lo, hi] inclusive. Recorded for shrinking.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let v = if self.cursor < self.forced.len() {
+            let forced = self.forced[self.cursor].clamp(lo, hi);
+            forced
+        } else {
+            self.rng.range_usize(lo, hi)
+        };
+        self.cursor += 1;
+        self.draws.push((lo, hi, v));
+        v
+    }
+
+    /// Uniform f64 in [lo, hi). Not shrunk.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Uniform f32 in [lo, hi). Not shrunk.
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        let i = self.rng.range_usize(0, xs.len() - 1);
+        &xs[i]
+    }
+
+    /// A vector of f32 values in [lo, hi) of the given length.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` random cases of `body`. Panics (failing the enclosing
+/// #[test]) with seed + shrunk arguments on the first failure.
+pub fn check<F>(name: &str, cases: usize, body: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    // Base seed is fixed for reproducibility; override with TIGRE_PROP_SEED.
+    let base: u64 = std::env::var("TIGRE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x7161_7261);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = body(&mut g) {
+            // Shrink: repeatedly halve recorded integer draws towards lo.
+            let (shrunk, smsg) = shrink(seed, &g.draws, &body).unwrap_or((
+                g.draws.iter().map(|d| d.2).collect(),
+                msg.clone(),
+            ));
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  {smsg}\n  \
+                 draws: {shrunk:?}\n  replay: TIGRE_PROP_SEED={base}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink: for each recorded draw, try lo then midpoints; keep any
+/// assignment that still fails. Returns the minimal failing draws + message.
+fn shrink<F>(
+    seed: u64,
+    draws: &[(usize, usize, usize)],
+    body: &F,
+) -> Option<(Vec<usize>, String)>
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let mut current: Vec<usize> = draws.iter().map(|d| d.2).collect();
+    let mut last_msg: Option<String> = None;
+    let mut improved = true;
+    let mut rounds = 0;
+    while improved && rounds < 20 {
+        improved = false;
+        rounds += 1;
+        for i in 0..current.len() {
+            let lo = draws.get(i).map(|d| d.0).unwrap_or(0);
+            let orig = current[i];
+            if orig == lo {
+                continue;
+            }
+            // candidates: lo, then halfway between lo and orig
+            for cand in [lo, lo + (orig - lo) / 2] {
+                if cand == orig {
+                    continue;
+                }
+                let mut trial = current.clone();
+                trial[i] = cand;
+                let mut g = Gen::with_forced(seed, trial.clone());
+                if let Err(m) = body(&mut g) {
+                    current = trial;
+                    last_msg = Some(m);
+                    improved = true;
+                    break;
+                }
+            }
+        }
+    }
+    last_msg.map(|m| (current, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum is commutative", 50, |g| {
+            let a = g.usize(0, 1000);
+            let b = g.usize(0, 1000);
+            prop_assert(a + b == b + a, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 5, |g| {
+            let _ = g.usize(0, 10);
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_magnitude() {
+        // Fails iff a >= 17; the shrinker should land near 17, well below
+        // the typical random draw of ~half of 10_000.
+        let draws = std::sync::Mutex::new(Vec::new());
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("ge17", 100, |g| {
+                let a = g.usize(0, 10_000);
+                if a >= 17 {
+                    draws.lock().unwrap().push(a);
+                    Err(format!("a={a}"))
+                } else {
+                    Ok(())
+                }
+            });
+        }));
+        assert!(result.is_err());
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        // shrunk value should appear and be < 100 (much smaller than initial)
+        assert!(msg.contains("a="), "panic message carries shrunk case: {msg}");
+    }
+
+    #[test]
+    fn forced_draws_replay() {
+        let mut g = Gen::with_forced(1, vec![5, 7]);
+        assert_eq!(g.usize(0, 10), 5);
+        assert_eq!(g.usize(0, 10), 7);
+    }
+
+    #[test]
+    fn forced_draws_clamped_to_range() {
+        let mut g = Gen::with_forced(1, vec![500]);
+        assert_eq!(g.usize(0, 10), 10);
+    }
+}

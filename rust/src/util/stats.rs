@@ -1,0 +1,237 @@
+//! Benchmark statistics + micro-bench harness (criterion is unavailable).
+//!
+//! [`Samples`] accumulates raw observations and reports robust summary
+//! statistics; [`bench`] runs a closure with warmup and a time budget and
+//! returns the samples. All benches under `rust/benches/` use this.
+
+use std::time::{Duration, Instant};
+
+/// A set of numeric observations (seconds, bytes, ratios, ...).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    values: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self { values: Vec::new() }
+    }
+
+    pub fn from(values: Vec<f64>) -> Self {
+        Self { values }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, p in [0,100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.values.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (v.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            v[lo]
+        } else {
+            v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Result of a [`bench`] run.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Samples,
+}
+
+impl BenchResult {
+    /// One-line criterion-style summary, durations in adaptive units.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} time: [{} {} {}] ±{} ({} samples)",
+            self.name,
+            fmt_duration(self.samples.min()),
+            fmt_duration(self.samples.median()),
+            fmt_duration(self.samples.max()),
+            fmt_duration(self.samples.stddev()),
+            self.samples.len(),
+        )
+    }
+}
+
+/// Format seconds with adaptive unit (ns/µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if !secs.is_finite() {
+        return "n/a".to_string();
+    }
+    let abs = secs.abs();
+    if abs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if abs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3}µs", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations, then measured
+/// iterations until both `min_iters` and `budget` are satisfied (at least
+/// one measured iteration always runs).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Samples::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= min_iters && start.elapsed() >= budget {
+            break;
+        }
+        // hard cap to keep bench suites bounded
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+/// Fixed-width table printer for bench output (aligned, markdown-ish).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Samples::from(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.stddev() - 1.5811388).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = Samples::from(vec![0.0, 10.0]);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn bench_runs_minimum_iterations() {
+        let mut count = 0;
+        let r = bench("t", 1, 5, Duration::from_millis(0), || count += 1);
+        assert!(r.samples.len() >= 5);
+        assert_eq!(count, r.samples.len() + 1); // +1 warmup
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(2.0), "2.000s");
+        assert_eq!(fmt_duration(0.002), "2.000ms");
+        assert_eq!(fmt_duration(2e-6), "2.000µs");
+        assert_eq!(fmt_duration(2e-9), "2.0ns");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["N", "time"]);
+        t.row(vec!["128".into(), "1.2ms".into()]);
+        t.row(vec!["2048".into(), "900ms".into()]);
+        let out = t.render();
+        assert!(out.contains("| 2048 |"));
+        assert!(out.lines().count() == 4);
+    }
+}

@@ -1,0 +1,73 @@
+//! Byte-size units and formatting helpers.
+
+/// Bytes per KiB/MiB/GiB.
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// Size of one f32 element.
+pub const F32_BYTES: u64 = 4;
+
+/// Format a byte count with adaptive binary units.
+pub fn fmt_bytes(bytes: u64) -> String {
+    if bytes >= GIB {
+        format!("{:.2} GiB", bytes as f64 / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", bytes as f64 / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", bytes as f64 / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Parse strings like "11GiB", "256MiB", "1.5GiB", "4096" (bytes).
+pub fn parse_bytes(s: &str) -> anyhow::Result<u64> {
+    let s = s.trim();
+    let (num, mult) = if let Some(p) = s.strip_suffix("GiB") {
+        (p, GIB as f64)
+    } else if let Some(p) = s.strip_suffix("MiB") {
+        (p, MIB as f64)
+    } else if let Some(p) = s.strip_suffix("KiB") {
+        (p, KIB as f64)
+    } else if let Some(p) = s.strip_suffix('B') {
+        (p, 1.0)
+    } else {
+        (s, 1.0)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("cannot parse byte size '{s}'"))?;
+    if v < 0.0 {
+        anyhow::bail!("negative byte size '{s}'");
+    }
+    Ok((v * mult) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_adaptive() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(11 * GIB), "11.00 GiB");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(parse_bytes("11GiB").unwrap(), 11 * GIB);
+        assert_eq!(parse_bytes("256MiB").unwrap(), 256 * MIB);
+        assert_eq!(parse_bytes("1.5GiB").unwrap(), (1.5 * GIB as f64) as u64);
+        assert_eq!(parse_bytes("4096").unwrap(), 4096);
+        assert_eq!(parse_bytes(" 64 KiB ").unwrap(), 64 * KIB);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("-5GiB").is_err());
+    }
+}

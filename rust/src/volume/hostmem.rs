@@ -1,0 +1,149 @@
+//! Host (CPU) memory state tracking: pageable vs page-locked (pinned).
+//!
+//! The paper's strategy depends on *when* host buffers are pinned:
+//! pinned memory transfers ~3× faster over PCIe-Gen3 (≈12 vs ≈4 GB/s) and
+//! enables asynchronous copies, but the pin operation itself is expensive
+//! and forces physical allocation. This registry records allocation and
+//! pin/unpin events so the cost model can charge them and Fig. 9 can bin
+//! them ("memory page-locking and unlocking").
+
+use std::collections::BTreeMap;
+
+/// Pageable vs pinned state of a host allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemState {
+    /// OS-managed memory: synchronous transfers at pageable bandwidth.
+    Pageable,
+    /// Page-locked memory: async transfers at pinned bandwidth.
+    Pinned,
+}
+
+/// A pin or unpin event, for cost accounting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PinEvent {
+    pub bytes: u64,
+    pub pin: bool, // true = pin, false = unpin
+}
+
+/// Registry of named host allocations and their pin states.
+#[derive(Debug, Default)]
+pub struct HostMemRegistry {
+    allocs: BTreeMap<String, (u64, MemState)>,
+    events: Vec<PinEvent>,
+}
+
+impl HostMemRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an allocation (host buffers start pageable, as in
+    /// MATLAB/Python-managed memory — paper §2).
+    pub fn alloc(&mut self, name: &str, bytes: u64) {
+        self.allocs.insert(name.to_string(), (bytes, MemState::Pageable));
+    }
+
+    pub fn free(&mut self, name: &str) {
+        self.allocs.remove(name);
+    }
+
+    pub fn state(&self, name: &str) -> Option<MemState> {
+        self.allocs.get(name).map(|(_, s)| *s)
+    }
+
+    pub fn bytes(&self, name: &str) -> Option<u64> {
+        self.allocs.get(name).map(|(b, _)| *b)
+    }
+
+    /// Page-lock an allocation. Idempotent; returns the bytes newly pinned
+    /// (0 if it was already pinned).
+    pub fn pin(&mut self, name: &str) -> u64 {
+        match self.allocs.get_mut(name) {
+            Some((bytes, state)) if *state == MemState::Pageable => {
+                *state = MemState::Pinned;
+                let b = *bytes;
+                self.events.push(PinEvent { bytes: b, pin: true });
+                b
+            }
+            _ => 0,
+        }
+    }
+
+    /// Unpin an allocation. Idempotent; returns bytes newly unpinned.
+    pub fn unpin(&mut self, name: &str) -> u64 {
+        match self.allocs.get_mut(name) {
+            Some((bytes, state)) if *state == MemState::Pinned => {
+                *state = MemState::Pageable;
+                let b = *bytes;
+                self.events.push(PinEvent { bytes: b, pin: false });
+                b
+            }
+            _ => 0,
+        }
+    }
+
+    /// Total currently-pinned bytes.
+    pub fn pinned_bytes(&self) -> u64 {
+        self.allocs
+            .values()
+            .filter(|(_, s)| *s == MemState::Pinned)
+            .map(|(b, _)| *b)
+            .sum()
+    }
+
+    /// Total registered bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.allocs.values().map(|(b, _)| *b).sum()
+    }
+
+    /// All pin/unpin events since construction.
+    pub fn events(&self) -> &[PinEvent] {
+        &self.events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_starts_pageable() {
+        let mut r = HostMemRegistry::new();
+        r.alloc("image", 1024);
+        assert_eq!(r.state("image"), Some(MemState::Pageable));
+        assert_eq!(r.bytes("image"), Some(1024));
+    }
+
+    #[test]
+    fn pin_unpin_events_and_idempotence() {
+        let mut r = HostMemRegistry::new();
+        r.alloc("image", 100);
+        assert_eq!(r.pin("image"), 100);
+        assert_eq!(r.pin("image"), 0); // idempotent
+        assert_eq!(r.pinned_bytes(), 100);
+        assert_eq!(r.unpin("image"), 100);
+        assert_eq!(r.unpin("image"), 0);
+        assert_eq!(r.events().len(), 2);
+        assert!(r.events()[0].pin && !r.events()[1].pin);
+    }
+
+    #[test]
+    fn unknown_names_are_noops() {
+        let mut r = HostMemRegistry::new();
+        assert_eq!(r.pin("nope"), 0);
+        assert_eq!(r.state("nope"), None);
+    }
+
+    #[test]
+    fn totals() {
+        let mut r = HostMemRegistry::new();
+        r.alloc("a", 10);
+        r.alloc("b", 20);
+        r.pin("b");
+        assert_eq!(r.total_bytes(), 30);
+        assert_eq!(r.pinned_bytes(), 20);
+        r.free("b");
+        assert_eq!(r.total_bytes(), 10);
+        assert_eq!(r.pinned_bytes(), 0);
+    }
+}

@@ -1,0 +1,322 @@
+//! Volume and projection containers + host memory accounting.
+//!
+//! Layout conventions (chosen so the paper's partitions are contiguous):
+//!  * [`Volume`]: `data[(z*ny + y)*nx + x]` — z slowest, so an axial z-slab
+//!    is one contiguous memory range (single H2D copy).
+//!  * [`ProjectionSet`]: `data[(a*nv + v)*nu + u]` — angle slowest, so an
+//!    angle chunk is one contiguous range.
+
+mod hostmem;
+
+pub use hostmem::{HostMemRegistry, MemState, PinEvent};
+
+use crate::geometry::Geometry;
+
+/// A 3-D image volume of f32 attenuation values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Volume {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub data: Vec<f32>,
+}
+
+impl Volume {
+    pub fn zeros(nx: usize, ny: usize, nz: usize) -> Self {
+        Self { nx, ny, nz, data: vec![0.0; nx * ny * nz] }
+    }
+
+    pub fn zeros_like(g: &Geometry) -> Self {
+        Self::zeros(g.n_vox[0], g.n_vox[1], g.n_vox[2])
+    }
+
+    pub fn from_fn(nx: usize, ny: usize, nz: usize, f: impl Fn(usize, usize, usize) -> f32) -> Self {
+        let mut v = Self::zeros(nx, ny, nz);
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    v.data[(z * ny + y) * nx + x] = f(x, y, z);
+                }
+            }
+        }
+        v
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, x: usize, y: usize, z: usize) -> usize {
+        (z * self.ny + y) * self.nx + x
+    }
+
+    #[inline(always)]
+    pub fn at(&self, x: usize, y: usize, z: usize) -> f32 {
+        self.data[self.idx(x, y, z)]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, x: usize, y: usize, z: usize) -> &mut f32 {
+        let i = self.idx(x, y, z);
+        &mut self.data[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64 * 4
+    }
+
+    /// Borrow the contiguous z-slab `[z0, z1)`.
+    pub fn slab(&self, z0: usize, z1: usize) -> &[f32] {
+        let plane = self.nx * self.ny;
+        &self.data[z0 * plane..z1 * plane]
+    }
+
+    /// Mutably borrow the contiguous z-slab `[z0, z1)`.
+    pub fn slab_mut(&mut self, z0: usize, z1: usize) -> &mut [f32] {
+        let plane = self.nx * self.ny;
+        &mut self.data[z0 * plane..z1 * plane]
+    }
+
+    /// Copy a z-slab out into an owned sub-volume.
+    pub fn extract_slab(&self, z0: usize, z1: usize) -> Volume {
+        Volume { nx: self.nx, ny: self.ny, nz: z1 - z0, data: self.slab(z0, z1).to_vec() }
+    }
+
+    /// Write a sub-volume back into the z-slab `[z0, z0+sub.nz)`.
+    pub fn insert_slab(&mut self, z0: usize, sub: &Volume) {
+        assert_eq!(sub.nx, self.nx);
+        assert_eq!(sub.ny, self.ny);
+        let dst = self.slab_mut(z0, z0 + sub.nz);
+        dst.copy_from_slice(&sub.data);
+    }
+
+    // -- elementwise math used by the algorithms -------------------------
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_scaled(&mut self, other: &Volume, s: f32) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn clamp_min(&mut self, lo: f32) {
+        for v in &mut self.data {
+            if *v < lo {
+                *v = lo;
+            }
+        }
+    }
+
+    pub fn dot(&self, other: &Volume) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data.iter().zip(&other.data).map(|(a, b)| *a as f64 * *b as f64).sum()
+    }
+
+    pub fn norm2(&self) -> f64 {
+        self.data.iter().map(|v| *v as f64 * *v as f64).sum::<f64>().sqrt()
+    }
+
+    /// Central axial slice (handy for figure export).
+    pub fn mid_slice(&self) -> Vec<f32> {
+        let z = self.nz / 2;
+        self.slab(z, z + 1).to_vec()
+    }
+}
+
+/// A stack of 2-D projections (detector readings), one per angle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProjectionSet {
+    pub nu: usize,
+    pub nv: usize,
+    pub n_angles: usize,
+    pub data: Vec<f32>,
+}
+
+impl ProjectionSet {
+    pub fn zeros(nu: usize, nv: usize, n_angles: usize) -> Self {
+        Self { nu, nv, n_angles, data: vec![0.0; nu * nv * n_angles] }
+    }
+
+    pub fn zeros_like(g: &Geometry) -> Self {
+        Self::zeros(g.n_det[0], g.n_det[1], g.n_angles())
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, iu: usize, iv: usize, a: usize) -> usize {
+        (a * self.nv + iv) * self.nu + iu
+    }
+
+    #[inline(always)]
+    pub fn at(&self, iu: usize, iv: usize, a: usize) -> f32 {
+        self.data[self.idx(iu, iv, a)]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, iu: usize, iv: usize, a: usize) -> &mut f32 {
+        let i = self.idx(iu, iv, a);
+        &mut self.data[i]
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64 * 4
+    }
+
+    /// Borrow the contiguous angle chunk `[a0, a1)`.
+    pub fn chunk(&self, a0: usize, a1: usize) -> &[f32] {
+        let per = self.nu * self.nv;
+        &self.data[a0 * per..a1 * per]
+    }
+
+    /// Mutably borrow the contiguous angle chunk `[a0, a1)`.
+    pub fn chunk_mut(&mut self, a0: usize, a1: usize) -> &mut [f32] {
+        let per = self.nu * self.nv;
+        &mut self.data[a0 * per..a1 * per]
+    }
+
+    /// Copy an angle chunk into an owned projection set.
+    pub fn extract_chunk(&self, a0: usize, a1: usize) -> ProjectionSet {
+        ProjectionSet {
+            nu: self.nu,
+            nv: self.nv,
+            n_angles: a1 - a0,
+            data: self.chunk(a0, a1).to_vec(),
+        }
+    }
+
+    /// Write an owned chunk back at angle offset `a0`.
+    pub fn insert_chunk(&mut self, a0: usize, sub: &ProjectionSet) {
+        assert_eq!(sub.nu, self.nu);
+        assert_eq!(sub.nv, self.nv);
+        self.chunk_mut(a0, a0 + sub.n_angles).copy_from_slice(&sub.data);
+    }
+
+    /// Extract a non-contiguous angle subset (OS-SART ordered subsets).
+    pub fn extract_subset(&self, idxs: &[usize]) -> ProjectionSet {
+        let per = self.nu * self.nv;
+        let mut out = ProjectionSet::zeros(self.nu, self.nv, idxs.len());
+        for (k, &a) in idxs.iter().enumerate() {
+            out.data[k * per..(k + 1) * per].copy_from_slice(&self.data[a * per..(a + 1) * per]);
+        }
+        out
+    }
+
+    /// Accumulate (`+=`) another projection set of identical shape. This is
+    /// the paper's "ultra-fast" accumulation step that merges per-slab
+    /// partial projections.
+    pub fn accumulate(&mut self, other: &ProjectionSet) {
+        assert_eq!(self.data.len(), other.data.len(), "accumulate shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn add_scaled(&mut self, other: &ProjectionSet, s: f32) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn dot(&self, other: &ProjectionSet) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data.iter().zip(&other.data).map(|(a, b)| *a as f64 * *b as f64).sum()
+    }
+
+    pub fn norm2(&self) -> f64 {
+        self.data.iter().map(|v| *v as f64 * *v as f64).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_indexing_is_z_slowest() {
+        let v = Volume::from_fn(3, 4, 5, |x, y, z| (x + 10 * y + 100 * z) as f32);
+        assert_eq!(v.at(2, 3, 4), 432.0);
+        // slab of z=4 is the last contiguous plane
+        let slab = v.slab(4, 5);
+        assert_eq!(slab.len(), 12);
+        assert_eq!(slab[0], 400.0);
+        assert_eq!(slab[11], 432.0);
+    }
+
+    #[test]
+    fn slab_roundtrip() {
+        let v = Volume::from_fn(4, 4, 8, |x, y, z| (x * y * z) as f32);
+        let slab = v.extract_slab(2, 5);
+        assert_eq!(slab.nz, 3);
+        let mut w = Volume::zeros(4, 4, 8);
+        w.insert_slab(2, &slab);
+        assert_eq!(w.at(3, 3, 4), v.at(3, 3, 4));
+        assert_eq!(w.at(3, 3, 0), 0.0);
+    }
+
+    #[test]
+    fn projection_chunk_roundtrip() {
+        let mut p = ProjectionSet::zeros(5, 3, 7);
+        for a in 0..7 {
+            for iv in 0..3 {
+                for iu in 0..5 {
+                    *p.at_mut(iu, iv, a) = (a * 100 + iv * 10 + iu) as f32;
+                }
+            }
+        }
+        let c = p.extract_chunk(2, 4);
+        assert_eq!(c.n_angles, 2);
+        assert_eq!(c.at(4, 2, 0), 224.0);
+        let mut q = ProjectionSet::zeros(5, 3, 7);
+        q.insert_chunk(2, &c);
+        assert_eq!(q.at(4, 2, 3), p.at(4, 2, 3));
+        assert_eq!(q.at(4, 2, 5), 0.0);
+    }
+
+    #[test]
+    fn subset_extraction() {
+        let mut p = ProjectionSet::zeros(2, 2, 5);
+        for a in 0..5 {
+            *p.at_mut(0, 0, a) = a as f32;
+        }
+        let s = p.extract_subset(&[4, 1]);
+        assert_eq!(s.n_angles, 2);
+        assert_eq!(s.at(0, 0, 0), 4.0);
+        assert_eq!(s.at(0, 0, 1), 1.0);
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let mut a = ProjectionSet::zeros(2, 2, 1);
+        let mut b = ProjectionSet::zeros(2, 2, 1);
+        *a.at_mut(0, 0, 0) = 1.0;
+        *b.at_mut(0, 0, 0) = 2.5;
+        a.accumulate(&b);
+        assert_eq!(a.at(0, 0, 0), 3.5);
+    }
+
+    #[test]
+    fn math_helpers() {
+        let mut v = Volume::zeros(2, 1, 1);
+        v.data = vec![3.0, 4.0];
+        assert_eq!(v.norm2(), 5.0);
+        let w = Volume { nx: 2, ny: 1, nz: 1, data: vec![1.0, 2.0] };
+        assert_eq!(v.dot(&w), 11.0);
+        v.add_scaled(&w, 2.0);
+        assert_eq!(v.data, vec![5.0, 8.0]);
+        v.clamp_min(6.0);
+        assert_eq!(v.data, vec![6.0, 8.0]);
+        v.scale(0.5);
+        assert_eq!(v.data, vec![3.0, 4.0]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Integration: the AOT-compiled Pallas/JAX artifacts (PJRT backend)
+//! against the native rust kernels, and through the full coordinator.
+//!
+//! Requires `make artifacts` to have produced `artifacts/manifest.json`;
+//! when artifacts are missing the tests are skipped (pass vacuously) so
+//! `cargo test` works in a fresh checkout.
+
+use std::path::PathBuf;
+
+use tigre::coordinator::{Backend, ExecMode, MultiGpu};
+use tigre::geometry::Geometry;
+use tigre::kernels::{BackprojWeight, Projector};
+use tigre::metrics;
+use tigre::phantom;
+use tigre::runtime::Manifest;
+use tigre::volume::ProjectionSet;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let m = Manifest::load(&dir).ok()?;
+    if m.entries.is_empty() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    } else {
+        Some(dir)
+    }
+}
+
+#[test]
+fn pjrt_forward_close_to_native_joseph() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = Geometry::cone_beam(32, 8);
+    let v = phantom::shepp_logan(32);
+    let pjrt = tigre::runtime::pjrt::try_forward(&dir, &g, &v)
+        .expect("pjrt forward")
+        .expect("manifest should contain fp 32/8");
+    // The artifact implements the interpolated (Joseph) projector; the
+    // native Joseph kernel is the right comparator.
+    let native = tigre::kernels::forward(&g, &v, Projector::Joseph, 2);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in native.data.iter().zip(&pjrt.data) {
+        num += ((a - b) as f64).powi(2);
+        den += (*a as f64).powi(2);
+    }
+    let rel = (num / den.max(1e-12)).sqrt();
+    assert!(rel < 0.05, "pjrt vs native joseph rel error {rel}");
+}
+
+#[test]
+fn pjrt_backward_close_to_native_fdk() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = Geometry::cone_beam(32, 8);
+    let v = phantom::shepp_logan(32);
+    let p = tigre::kernels::forward(&g, &v, Projector::Siddon, 2);
+    let pjrt = tigre::runtime::pjrt::try_backward(&dir, &g, &p, BackprojWeight::Fdk)
+        .expect("pjrt backward")
+        .expect("manifest should contain bp 32/8");
+    let native = tigre::kernels::backward(&g, &p, BackprojWeight::Fdk, 2);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in native.data.iter().zip(&pjrt.data) {
+        num += ((a - b) as f64).powi(2);
+        den += (*a as f64).powi(2);
+    }
+    let rel = (num / den.max(1e-12)).sqrt();
+    assert!(rel < 1e-3, "pjrt vs native fdk backprojection rel error {rel}");
+}
+
+#[test]
+fn pjrt_unknown_shape_falls_back_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = Geometry::cone_beam(20, 5); // not in the manifest
+    let v = phantom::cube(20, 0.5, 1.0);
+    let out = tigre::runtime::forward_or_native(&dir, &g, &v, 2);
+    let native = tigre::kernels::forward(&g, &v, Projector::Siddon, 2);
+    assert_eq!(out.data, native.data, "fallback must be exactly native");
+}
+
+#[test]
+fn coordinator_full_mode_with_pjrt_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = Geometry::cone_beam(32, 16);
+    let v = phantom::shepp_logan(32);
+    let ctx = MultiGpu::gtx1080ti(2)
+        .with_backend(Backend::Pjrt { artifacts_dir: dir, weight: BackprojWeight::Fdk, threads: 2 });
+    let (proj, stats) = ctx.forward(&g, Some(&v), ExecMode::Full).unwrap();
+    let proj = proj.unwrap();
+    assert_eq!(stats.splits_per_device, 1);
+    assert!(proj.norm2() > 0.0);
+    // and a backprojection through the same backend
+    let (vol, _) = ctx.backward(&g, Some(&proj), ExecMode::Full).unwrap();
+    let vol = vol.unwrap();
+    // recon-ish sanity: centre > edge
+    assert!(vol.at(16, 16, 16) > vol.at(0, 16, 16));
+}
+
+#[test]
+fn pjrt_respects_detector_offset() {
+    // panel-shift: the offset detector artifact path must match native
+    let Some(dir) = artifacts_dir() else { return };
+    let mut g = Geometry::cone_beam(32, 8);
+    g.offset_det[0] = 3.0;
+    let v = phantom::shepp_logan(32);
+    let pjrt = tigre::runtime::pjrt::try_forward(&dir, &g, &v)
+        .expect("pjrt forward")
+        .expect("entry exists");
+    let native = tigre::kernels::forward(&g, &v, Projector::Joseph, 2);
+    let corr = {
+        let a = tigre::volume::Volume { nx: pjrt.data.len(), ny: 1, nz: 1, data: pjrt.data.clone() };
+        let b = tigre::volume::Volume { nx: native.data.len(), ny: 1, nz: 1, data: native.data.clone() };
+        metrics::correlation(&a, &b)
+    };
+    assert!(corr > 0.999, "offset-detector correlation {corr}");
+    let _ = ProjectionSet::zeros(1, 1, 1);
+}

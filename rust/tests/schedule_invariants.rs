@@ -1,0 +1,103 @@
+//! Property tests over the coordinator schedules: for random geometries,
+//! device counts and device memories, the simulated schedules must
+//! (a) never exceed device memory, (b) beat the naive baseline at scale,
+//! (c) produce breakdown fractions that sum to 1, and (d) keep split
+//! numerics equal to unsplit numerics.
+
+use tigre::coordinator::{baseline, ExecMode, MultiGpu};
+use tigre::geometry::Geometry;
+use tigre::phantom;
+use tigre::util::prop::{check, prop_assert};
+use tigre::util::units::MIB;
+
+#[test]
+fn prop_fp_schedule_memory_and_breakdown() {
+    check("fp schedule invariants", 40, |g| {
+        let n = g.usize(64, 512);
+        let n_angles = g.usize(8, 128);
+        let n_gpus = g.usize(1, 4);
+        let mem = (g.usize(48, 2048) as u64) * MIB;
+        let geo = Geometry::cone_beam(n, n_angles);
+        let ctx = MultiGpu::gtx1080ti(n_gpus).with_device_mem(mem);
+        let Ok((_, stats)) = ctx.forward(&geo, None, ExecMode::SimOnly) else {
+            // undersized device for even one slice + buffers: legal reject
+            return Ok(());
+        };
+        prop_assert(stats.peak_device_bytes <= mem, "device memory exceeded")?;
+        let (c, p, m, i) = stats.breakdown.fractions();
+        prop_assert((c + p + m + i - 1.0).abs() < 1e-9, "fractions must sum to 1")?;
+        prop_assert(stats.makespan_s > 0.0, "makespan positive")
+    });
+}
+
+#[test]
+fn prop_bp_schedule_memory_and_breakdown() {
+    check("bp schedule invariants", 40, |g| {
+        let n = g.usize(64, 512);
+        let n_angles = g.usize(8, 128);
+        let n_gpus = g.usize(1, 4);
+        let mem = (g.usize(48, 2048) as u64) * MIB;
+        let geo = Geometry::cone_beam(n, n_angles);
+        let ctx = MultiGpu::gtx1080ti(n_gpus).with_device_mem(mem);
+        let Ok((_, stats)) = ctx.backward(&geo, None, ExecMode::SimOnly) else {
+            return Ok(());
+        };
+        prop_assert(stats.peak_device_bytes <= mem, "device memory exceeded")?;
+        let (c, p, m, i) = stats.breakdown.fractions();
+        prop_assert((c + p + m + i - 1.0).abs() < 1e-9, "fractions must sum to 1")
+    });
+}
+
+#[test]
+fn prop_proposed_never_slower_than_naive_at_scale() {
+    check("proposed ≤ naive for compute-heavy problems", 12, |g| {
+        let n = *g.choose(&[768usize, 1024, 1536]);
+        let geo = Geometry::cone_beam(n, n);
+        let n_gpus = g.usize(1, 4);
+        let ctx = MultiGpu::gtx1080ti(n_gpus);
+        let (_, fp) = ctx.forward(&geo, None, ExecMode::SimOnly).map_err(|e| e.to_string())?;
+        let nfp = baseline::naive_forward(&ctx, &geo).map_err(|e| e.to_string())?;
+        prop_assert(
+            fp.makespan_s <= nfp.makespan_s * 1.02,
+            format!("fp {} vs naive {}", fp.makespan_s, nfp.makespan_s),
+        )?;
+        let (_, bp) = ctx.backward(&geo, None, ExecMode::SimOnly).map_err(|e| e.to_string())?;
+        let nbp = baseline::naive_backward(&ctx, &geo).map_err(|e| e.to_string())?;
+        prop_assert(
+            bp.makespan_s <= nbp.makespan_s * 1.02,
+            format!("bp {} vs naive {}", bp.makespan_s, nbp.makespan_s),
+        )
+    });
+}
+
+#[test]
+fn prop_split_fp_numerics_invariant_to_device_memory() {
+    check("fp numerics invariant to split granularity", 8, |g| {
+        let n = 16;
+        let n_angles = g.usize(4, 12);
+        let geo = Geometry::cone_beam(n, n_angles);
+        let truth = phantom::shepp_logan(n);
+        let reference = tigre::kernels::forward(
+            &geo,
+            &truth,
+            tigre::kernels::Projector::Siddon,
+            2,
+        );
+        let plane = (n * n * 4) as u64;
+        let slices = g.usize(3, 10) as u64;
+        let mem = slices * plane + 3 * n_angles as u64 * geo.single_proj_bytes();
+        let n_gpus = g.usize(1, 3);
+        let ctx = MultiGpu::gtx1080ti(n_gpus).with_device_mem(mem);
+        let Ok((proj, _)) = ctx.forward(&geo, Some(&truth), ExecMode::Full) else {
+            return Ok(());
+        };
+        let proj = proj.unwrap();
+        for (a, b) in reference.data.iter().zip(&proj.data) {
+            prop_assert(
+                (a - b).abs() <= 2e-3 * (1.0 + a.abs()),
+                format!("split numerics deviate: {a} vs {b}"),
+            )?;
+        }
+        Ok(())
+    });
+}
