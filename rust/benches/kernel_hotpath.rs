@@ -1,110 +1,134 @@
 //! Hot-path micro-benchmarks of the real (native rust) kernels — the
-//! substrate for the §Perf optimization pass. Not a paper figure; this
-//! is the profile-and-iterate harness of EXPERIMENTS.md §Perf L3.
+//! substrate for the §Perf optimization pass (EXPERIMENTS.md §Perf) and
+//! the producer of the `BENCH_kernels.json` perf trajectory.
+//!
+//! Usage:
+//!   cargo bench --bench kernel_hotpath                       # print table
+//!   cargo bench --bench kernel_hotpath -- --smoke            # CI sanity run
+//!   cargo bench --bench kernel_hotpath -- \
+//!       --json BENCH_kernels.json --label post-PR2           # append a run
+//!
+//! With `--json` the run is appended to the trajectory file (created if
+//! absent); when the file then holds ≥2 runs, a before/after speedup
+//! table (first vs. last run, matched by workload name) is printed.
+//! Thread count follows `TIGRE_THREADS` when set, so trajectory entries
+//! are comparable across machines with pinned parallelism.
 
+use std::path::PathBuf;
 use std::time::Duration;
 
+use tigre::bench::kernels as kb;
 use tigre::geometry::Geometry;
-use tigre::kernels::{self, BackprojWeight, Projector};
-use tigre::phantom;
-use tigre::util::stats::bench;
-use tigre::volume::ProjectionSet;
+use tigre::kernels;
+use tigre::util::json::Json;
+use tigre::util::stats::{bench, fmt_duration};
 
 fn main() {
-    let threads = kernels::kernel_threads();
-    println!("=== native kernel hot paths ({threads} host threads) ===");
-
-    for &n in &[32usize, 48, 64] {
-        let g = Geometry::cone_beam(n, 16);
-        let v = phantom::shepp_logan(n);
-        let r = bench(
-            &format!("fp_siddon n={n} a=16"),
-            1,
-            3,
-            Duration::from_millis(600),
-            || {
-                std::hint::black_box(kernels::forward(&g, &v, Projector::Siddon, threads));
-            },
-        );
-        println!("{}", r.summary());
-    }
-
-    for &n in &[32usize, 48] {
-        let g = Geometry::cone_beam(n, 16);
-        let v = phantom::shepp_logan(n);
-        let r = bench(
-            &format!("fp_joseph n={n} a=16"),
-            1,
-            3,
-            Duration::from_millis(600),
-            || {
-                std::hint::black_box(kernels::forward(&g, &v, Projector::Joseph, threads));
-            },
-        );
-        println!("{}", r.summary());
-    }
-
-    for &n in &[32usize, 48, 64] {
-        let g = Geometry::cone_beam(n, 16);
-        let v = phantom::shepp_logan(n);
-        let p = kernels::forward(&g, &v, Projector::Siddon, threads);
-        let r = bench(
-            &format!("bp_fdk n={n} a=16"),
-            1,
-            3,
-            Duration::from_millis(600),
-            || {
-                std::hint::black_box(kernels::backward(&g, &p, BackprojWeight::Fdk, threads));
-            },
-        );
-        println!("{}", r.summary());
-    }
-
-    // FDK filtering (FFT hot path)
-    for &n in &[64usize, 128] {
-        let g = Geometry::cone_beam(n, 32);
-        let mut p = ProjectionSet::zeros_like(&g);
-        let mut rng = tigre::util::pcg::Pcg32::new(1);
-        for v in &mut p.data {
-            *v = rng.next_f32();
+    // hand-rolled flag parsing (the bench harness passes args after `--`)
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut smoke = false;
+    let mut json_path: Option<PathBuf> = None;
+    let mut label = String::from("run");
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--smoke" => smoke = true,
+            "--json" => {
+                i += 1;
+                json_path = Some(PathBuf::from(args.get(i).map(String::as_str).unwrap_or_else(
+                    || {
+                        eprintln!("--json requires a path");
+                        std::process::exit(2);
+                    },
+                )));
+            }
+            "--label" => {
+                i += 1;
+                label = args.get(i).cloned().unwrap_or_else(|| {
+                    eprintln!("--label requires a value");
+                    std::process::exit(2);
+                });
+            }
+            "--bench" | "--test" => {} // ignore libtest-style flags
+            other => {
+                eprintln!("unknown flag '{other}' (known: --smoke --json <path> --label <name>)");
+                std::process::exit(2);
+            }
         }
-        let r = bench(
-            &format!("fdk_filter n={n} a=32"),
-            1,
-            3,
-            Duration::from_millis(500),
-            || {
-                let mut q = p.clone();
-                tigre::kernels::filtering::fdk_filter(
-                    &g,
-                    &mut q,
-                    tigre::kernels::filtering::Window::Hann,
-                    threads,
-                );
-                std::hint::black_box(q);
-            },
+        i += 1;
+    }
+
+    let threads = kernels::kernel_threads();
+    println!(
+        "=== native kernel hot paths ({threads} host threads{}) ===",
+        if smoke { ", smoke mode" } else { "" }
+    );
+
+    let entries = kb::run_suite(smoke, threads);
+    for e in &entries {
+        println!(
+            "{:<28} median {:>10}  min {:>10}  {:>14.3e} {} ({} samples)",
+            e.name,
+            fmt_duration(e.median_s),
+            fmt_duration(e.min_s),
+            e.throughput(),
+            e.unit,
+            e.samples,
         );
+    }
+
+    // auxiliary (non-trajectory) workloads: TV/ROF + the DES scheduler
+    if !smoke {
+        let v = tigre::phantom::random(32, 32, 32, 5);
+        let r = bench("rof_denoise 32³ x10", 1, 3, Duration::from_millis(500), || {
+            std::hint::black_box(tigre::kernels::tv::rof_denoise(&v, 0.2, 10));
+        });
+        println!("{}", r.summary());
+        let r = bench("tv_gradient 32³", 1, 3, Duration::from_millis(500), || {
+            std::hint::black_box(tigre::kernels::tv::tv_gradient(&v));
+        });
+        println!("{}", r.summary());
+
+        // DES scheduler itself (must be negligible vs what it models)
+        let g = Geometry::cone_beam(2048, 2048);
+        let ctx = tigre::coordinator::MultiGpu::gtx1080ti(4);
+        let r = bench("des_schedule fp N=2048 4gpu", 1, 3, Duration::from_millis(500), || {
+            std::hint::black_box(
+                ctx.forward(&g, None, tigre::coordinator::ExecMode::SimOnly).unwrap(),
+            );
+        });
         println!("{}", r.summary());
     }
 
-    // TV / ROF regularizers
-    let v = phantom::random(32, 32, 32, 5);
-    let r = bench("rof_denoise 32³ x10", 1, 3, Duration::from_millis(500), || {
-        std::hint::black_box(tigre::kernels::tv::rof_denoise(&v, 0.2, 10));
-    });
-    println!("{}", r.summary());
-    let r = bench("tv_gradient 32³", 1, 3, Duration::from_millis(500), || {
-        std::hint::black_box(tigre::kernels::tv::tv_gradient(&v));
-    });
-    println!("{}", r.summary());
-
-    // DES scheduler itself (must be negligible vs what it models)
-    let g = Geometry::cone_beam(2048, 2048);
-    let ctx = tigre::coordinator::MultiGpu::gtx1080ti(4);
-    let r = bench("des_schedule fp N=2048 4gpu", 1, 3, Duration::from_millis(500), || {
-        std::hint::black_box(
-            ctx.forward(&g, None, tigre::coordinator::ExecMode::SimOnly).unwrap(),
-        );
-    });
-    println!("{}", r.summary());
+    if let Some(path) = json_path {
+        if let Err(e) = kb::append_run_to_file(&path, &label, threads, smoke, &entries) {
+            eprintln!("error: writing {}: {e:#}", path.display());
+            std::process::exit(1);
+        }
+        println!("appended run '{label}' to {}", path.display());
+        match std::fs::read_to_string(&path).map_err(|e| e.to_string()).and_then(|t| {
+            Json::parse(&t).map_err(|e| e.to_string())
+        }) {
+            Ok(doc) => {
+                let rows = kb::speedups(&doc);
+                let n_runs = doc.get("runs").and_then(Json::as_arr).map_or(0, |r| r.len());
+                if !rows.is_empty() {
+                    println!("--- trajectory: first vs last run ---");
+                    for (name, before, after, speedup) in rows {
+                        println!(
+                            "{name:<28} {:>10} -> {:>10}  {speedup:.2}x",
+                            fmt_duration(before),
+                            fmt_duration(after),
+                        );
+                    }
+                } else if n_runs >= 2 {
+                    println!(
+                        "(no speedup table: first/last runs differ in threads/smoke \
+                         config or share no workload names)"
+                    );
+                }
+            }
+            Err(e) => eprintln!("warning: could not re-read trajectory: {e}"),
+        }
+    }
 }

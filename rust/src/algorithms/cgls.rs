@@ -7,6 +7,7 @@
 
 use crate::coordinator::MultiGpu;
 use crate::geometry::Geometry;
+use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, Volume};
 
 use super::common::{ReconOpts, ReconResult, TrackedOps};
@@ -43,12 +44,13 @@ pub fn cgls(
         let alpha = (gamma / qq) as f32;
         x.add_scaled(&p, alpha);
         r.add_scaled(&q, -alpha);
+        scratch::recycle_projections(q);
         residuals.push(r.norm2());
         if opts.verbose {
             crate::log_info!("cgls iter {it}: residual {:.4e}", r.norm2());
         }
-        // s = Aᵀr
-        s = ops.backward(g, &r)?;
+        // s = Aᵀr (previous direction buffer goes back to the arena)
+        scratch::recycle_volume(std::mem::replace(&mut s, ops.backward(g, &r)?));
         let gamma_new = s.dot(&s);
         let beta = (gamma_new / gamma) as f32;
         gamma = gamma_new;

@@ -5,6 +5,7 @@
 use crate::coordinator::regularizer::rof_denoise_split;
 use crate::coordinator::MultiGpu;
 use crate::geometry::Geometry;
+use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, Volume};
 
 use super::common::{ReconOpts, ReconResult, TrackedOps};
@@ -52,9 +53,10 @@ pub fn fista(
             for _ in 0..4 {
                 let av = ops.forward(g, &v)?;
                 let atav = ops.backward(g, &av)?;
+                scratch::recycle_projections(av);
                 lmax = atav.norm2() / v.norm2().max(1e-30);
                 let n = atav.norm2().max(1e-30) as f32;
-                v = atav;
+                scratch::recycle_volume(std::mem::replace(&mut v, atav));
                 v.scale(1.0 / n);
             }
             (1.0 / lmax.max(1e-30)) as f32
@@ -72,11 +74,14 @@ pub fn fista(
         ay.add_scaled(proj, -1.0);
         residuals.push(ay.norm2());
         let grad = ops.backward(g, &ay)?;
+        scratch::recycle_projections(ay);
         let mut z = y.clone();
         z.add_scaled(&grad, -step);
+        scratch::recycle_volume(grad);
         // prox: multi-GPU ROF TV denoise
         let (x_new, stats) =
             rof_denoise_split(&ctx, &z, opts.tv_lambda * step, opts.tv_iters, opts.tv_iters);
+        scratch::recycle_volume(z);
         ops.sim_time_s += stats.makespan_s;
         let mut x_new = x_new;
         if opts.common.nonneg {
@@ -89,8 +94,8 @@ pub fn fista(
         for (yv, (xn, xo)) in y_new.data.iter_mut().zip(x_new.data.iter().zip(&x.data)) {
             *yv = xn + beta * (xn - xo);
         }
-        x = x_new;
-        y = y_new;
+        scratch::recycle_volume(std::mem::replace(&mut x, x_new));
+        scratch::recycle_volume(std::mem::replace(&mut y, y_new));
         t = t_new;
         if opts.common.verbose {
             crate::log_info!("fista iter {it}: residual {:.4e}", residuals.last().unwrap());

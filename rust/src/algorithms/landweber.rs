@@ -9,6 +9,7 @@
 
 use crate::coordinator::MultiGpu;
 use crate::geometry::Geometry;
+use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, Volume};
 
 use super::common::{ReconOpts, ReconResult, TrackedOps};
@@ -24,15 +25,17 @@ pub fn landweber(
     let ctx = matched_ctx(ctx);
     let mut ops = TrackedOps::new(&ctx, g);
 
-    // step = λ / ‖AᵀA‖ (power iteration)
+    // step = λ / ‖AᵀA‖ (power iteration); per-round temporaries go back
+    // to the kernels::scratch arena so each operator call reuses buffers
     let mut v = crate::phantom::random(g.n_vox[0], g.n_vox[1], g.n_vox[2], 17);
     let mut lmax = 1.0f64;
     for _ in 0..4 {
         let av = ops.forward(g, &v)?;
         let atav = ops.backward(g, &av)?;
+        scratch::recycle_projections(av);
         lmax = atav.norm2() / v.norm2().max(1e-30);
         let n = atav.norm2().max(1e-30) as f32;
-        v = atav;
+        scratch::recycle_volume(std::mem::replace(&mut v, atav));
         v.scale(1.0 / n);
     }
     let step = opts.lambda / lmax.max(1e-30) as f32;
@@ -47,7 +50,9 @@ pub fn landweber(
         }
         residuals.push(r.norm2());
         let upd = ops.backward(g, &r)?;
+        scratch::recycle_projections(r);
         x.add_scaled(&upd, step);
+        scratch::recycle_volume(upd);
         if opts.nonneg {
             x.clamp_min(0.0);
         }
@@ -94,19 +99,21 @@ pub fn mlem(
     }
     let mut residuals = Vec::with_capacity(opts.iterations);
     for it in 0..opts.iterations {
-        let ax = ops.forward(g, &x)?;
-        let mut ratio = ProjectionSet::zeros_like(g);
+        // reuse Ax in place as the ratio buffer b ⊘ Ax
+        let mut ratio = ops.forward(g, &x)?;
         let mut res2 = 0.0f64;
-        for ((rv, bv), av) in ratio.data.iter_mut().zip(&proj.data).zip(&ax.data) {
-            let d = (bv - av) as f64;
+        for (av, bv) in ratio.data.iter_mut().zip(&proj.data) {
+            let d = (bv - *av) as f64;
             res2 += d * d;
-            *rv = if *av > 1e-8 { bv / av } else { 0.0 };
+            *av = if *av > 1e-8 { bv / *av } else { 0.0 };
         }
         residuals.push(res2.sqrt());
         let corr = ops.backward(g, &ratio)?;
+        scratch::recycle_projections(ratio);
         for ((xv, cv), sv) in x.data.iter_mut().zip(&corr.data).zip(&sens.data) {
             *xv = if *sv > 1e-8 { *xv * cv / sv } else { 0.0 };
         }
+        scratch::recycle_volume(corr);
         if opts.verbose {
             crate::log_info!("mlem iter {it}: residual {:.4e}", residuals.last().unwrap());
         }

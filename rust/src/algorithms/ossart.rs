@@ -9,7 +9,7 @@
 
 use crate::coordinator::MultiGpu;
 use crate::geometry::Geometry;
-use crate::kernels::BackprojWeight;
+use crate::kernels::{scratch, BackprojWeight};
 use crate::volume::{ProjectionSet, Volume};
 
 use super::common::{ordered_subsets, safe_recip, ReconOpts, ReconResult, TrackedOps};
@@ -62,6 +62,7 @@ pub fn os_sart(
             p
         };
         let mut v = ops.backward(&geo, &ones_proj)?;
+        scratch::recycle_projections(ones_proj);
         safe_recip(&mut v.data);
         subs.push(Subset { geo, idxs: idxs.clone(), w, v });
     }
@@ -79,9 +80,12 @@ pub fn os_sart(
             }
             // x += λ · V ∘ Aᵀ_s r
             let upd = ops.backward(&sub.geo, &r)?;
+            scratch::recycle_projections(r);
+            scratch::recycle_projections(b_s);
             for ((xv, uv), vv) in x.data.iter_mut().zip(&upd.data).zip(&sub.v.data) {
                 *xv += opts.lambda * uv * vv;
             }
+            scratch::recycle_volume(upd);
             if opts.nonneg {
                 x.clamp_min(0.0);
             }

@@ -1,0 +1,334 @@
+//! Machine-readable kernel hot-path benchmark — the substrate of the
+//! `BENCH_kernels.json` perf trajectory (EXPERIMENTS.md §Perf).
+//!
+//! `benches/kernel_hotpath.rs` is the runner; this module owns the
+//! workload definitions, the throughput accounting (rays/s for the
+//! projectors, voxel-updates/s for the backprojector) and the JSON
+//! record so that every PR's before/after numbers land in one tracked
+//! file with a stable schema. Appending rather than overwriting keeps
+//! the trajectory: each run is one element of `runs`, labelled by the
+//! caller (e.g. `pre-PR2-seed`, `post-PR2`).
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::geometry::Geometry;
+use crate::kernels::{self, BackprojWeight, Projector};
+use crate::phantom;
+use crate::util::json::Json;
+use crate::util::stats::{bench, BenchResult};
+use crate::volume::ProjectionSet;
+
+/// Schema tag of `BENCH_kernels.json`; bump on breaking layout changes.
+pub const SCHEMA: &str = "tigre-bench-kernels/v1";
+
+/// One benchmarked kernel workload.
+#[derive(Clone, Debug)]
+pub struct KernelBenchEntry {
+    /// Workload id, e.g. `fp_siddon n=64 a=16`.
+    pub name: String,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub samples: usize,
+    /// Units of work per call (rays, voxel-updates, pixels).
+    pub work_per_call: f64,
+    /// Throughput unit, e.g. `rays/s`.
+    pub unit: &'static str,
+}
+
+impl KernelBenchEntry {
+    pub fn throughput(&self) -> f64 {
+        if self.median_s > 0.0 {
+            self.work_per_call / self.median_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn from_result(r: &BenchResult, work_per_call: f64, unit: &'static str) -> Self {
+        Self {
+            name: r.name.clone(),
+            median_s: r.samples.median(),
+            min_s: r.samples.min(),
+            samples: r.samples.len(),
+            work_per_call,
+            unit,
+        }
+    }
+}
+
+/// Run the kernel hot-path suite. `smoke` shrinks sizes and budgets to a
+/// sub-second CI sanity run; the entry set (names modulo `n=` values)
+/// stays the same so JSON consumers need no special cases.
+pub fn run_suite(smoke: bool, threads: usize) -> Vec<KernelBenchEntry> {
+    let mut out = Vec::new();
+    let (fp_sizes, bp_sizes, joseph_sizes): (&[usize], &[usize], &[usize]) = if smoke {
+        (&[16, 32], &[16, 32], &[16])
+    } else {
+        (&[32, 48, 64], &[32, 48, 64], &[32, 48])
+    };
+    let budget = if smoke { Duration::from_millis(40) } else { Duration::from_millis(600) };
+    let (warmup, min_iters) = if smoke { (0, 1) } else { (1, 3) };
+    let n_angles = 16usize;
+
+    for &n in fp_sizes {
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let r = bench(&format!("fp_siddon n={n} a={n_angles}"), warmup, min_iters, budget, || {
+            std::hint::black_box(kernels::forward(&g, &v, Projector::Siddon, threads));
+        });
+        let rays = (n * n * n_angles) as f64;
+        out.push(KernelBenchEntry::from_result(&r, rays, "rays/s"));
+    }
+
+    for &n in joseph_sizes {
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let r = bench(&format!("fp_joseph n={n} a={n_angles}"), warmup, min_iters, budget, || {
+            std::hint::black_box(kernels::forward(&g, &v, Projector::Joseph, threads));
+        });
+        let rays = (n * n * n_angles) as f64;
+        out.push(KernelBenchEntry::from_result(&r, rays, "rays/s"));
+    }
+
+    for &n in bp_sizes {
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = kernels::forward(&g, &v, Projector::Siddon, threads);
+        let r = bench(&format!("bp_fdk n={n} a={n_angles}"), warmup, min_iters, budget, || {
+            std::hint::black_box(kernels::backward(&g, &p, BackprojWeight::Fdk, threads));
+        });
+        let updates = (n * n * n * n_angles) as f64;
+        out.push(KernelBenchEntry::from_result(&r, updates, "voxel_updates/s"));
+    }
+
+    // FDK filtering (FFT hot path)
+    {
+        let n = if smoke { 32 } else { 64 };
+        let g = Geometry::cone_beam(n, 32);
+        let mut p = ProjectionSet::zeros_like(&g);
+        let mut rng = crate::util::pcg::Pcg32::new(1);
+        for v in &mut p.data {
+            *v = rng.next_f32();
+        }
+        let r = bench(&format!("fdk_filter n={n} a=32"), warmup, min_iters, budget, || {
+            let mut q = p.clone();
+            kernels::filtering::fdk_filter(&g, &mut q, kernels::filtering::Window::Hann, threads);
+            std::hint::black_box(q);
+        });
+        let pixels = (n * n * 32) as f64;
+        out.push(KernelBenchEntry::from_result(&r, pixels, "pixels/s"));
+    }
+
+    out
+}
+
+/// Encode one run (label + entries) as a JSON object.
+pub fn run_to_json(label: &str, threads: usize, smoke: bool, entries: &[KernelBenchEntry]) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(label)),
+        ("threads", Json::num(threads as f64)),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "entries",
+            Json::arr(
+                entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("name", Json::str(e.name.clone())),
+                            ("median_s", Json::num(e.median_s)),
+                            ("min_s", Json::num(e.min_s)),
+                            ("samples", Json::num(e.samples as f64)),
+                            ("work_per_call", Json::num(e.work_per_call)),
+                            ("unit", Json::str(e.unit)),
+                            ("throughput", Json::num(e.throughput())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Append a run to `path` (created if absent, schema-checked if present)
+/// and write the file back pretty-printed. Top-level fields other than
+/// `runs` (e.g. the checked-in `notes` block) are preserved verbatim.
+pub fn append_run_to_file(
+    path: &Path,
+    label: &str,
+    threads: usize,
+    smoke: bool,
+    entries: &[KernelBenchEntry],
+) -> anyhow::Result<()> {
+    let mut top: std::collections::BTreeMap<String, Json> = std::collections::BTreeMap::new();
+    let mut runs: Vec<Json> = Vec::new();
+    if path.exists() {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        anyhow::ensure!(
+            doc.get("schema").and_then(Json::as_str) == Some(SCHEMA),
+            "{}: unexpected schema (want {SCHEMA})",
+            path.display()
+        );
+        if let Some(obj) = doc.as_obj() {
+            top = obj.clone();
+        }
+        if let Some(existing) = doc.get("runs").and_then(Json::as_arr) {
+            runs = existing.to_vec();
+        }
+    }
+    runs.push(run_to_json(label, threads, smoke, entries));
+    top.insert("schema".into(), Json::str(SCHEMA));
+    top.insert("runs".into(), Json::arr(runs));
+    std::fs::write(path, Json::Obj(top).pretty() + "\n")?;
+    Ok(())
+}
+
+/// Speedup table between the first and last runs of a trajectory file
+/// (matched by entry name): `(name, before_s, after_s, speedup)` rows.
+/// Runs recorded with different configurations (`threads`, `smoke`) are
+/// not comparable — an empty table is returned rather than attributing
+/// configuration differences to kernel changes.
+pub fn speedups(doc: &Json) -> Vec<(String, f64, f64, f64)> {
+    let Some(runs) = doc.get("runs").and_then(Json::as_arr) else { return Vec::new() };
+    let (Some(first), Some(last)) = (runs.first(), runs.last()) else { return Vec::new() };
+    if runs.len() < 2 {
+        return Vec::new();
+    }
+    let config = |run: &Json| {
+        (
+            run.get("threads").and_then(Json::as_usize),
+            run.get("smoke").and_then(Json::as_bool),
+        )
+    };
+    if config(first) != config(last) {
+        return Vec::new();
+    }
+    let entries = |run: &Json| -> Vec<(String, f64)> {
+        run.get("entries")
+            .and_then(Json::as_arr)
+            .map(|es| {
+                es.iter()
+                    .filter_map(|e| {
+                        Some((
+                            e.get("name")?.as_str()?.to_string(),
+                            e.get("median_s")?.as_f64()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let before = entries(first);
+    let after = entries(last);
+    let mut rows = Vec::new();
+    for (name, b) in &before {
+        if let Some((_, a)) = after.iter().find(|(n, _)| n == name) {
+            rows.push((name.clone(), *b, *a, if *a > 0.0 { *b / *a } else { f64::INFINITY }));
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_entries() -> Vec<KernelBenchEntry> {
+        vec![KernelBenchEntry {
+            name: "fp_siddon n=64 a=16".into(),
+            median_s: 0.5,
+            min_s: 0.4,
+            samples: 3,
+            work_per_call: 65536.0,
+            unit: "rays/s",
+        }]
+    }
+
+    #[test]
+    fn run_json_has_schema_fields() {
+        let j = run_to_json("test", 4, true, &fake_entries());
+        assert_eq!(j.get("label").and_then(Json::as_str), Some("test"));
+        assert_eq!(j.get("threads").and_then(Json::as_usize), Some(4));
+        let es = j.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(es.len(), 1);
+        assert_eq!(es[0].get("unit").and_then(Json::as_str), Some("rays/s"));
+        assert!(es[0].get("throughput").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn append_creates_then_appends_and_speedups_match() {
+        let dir = std::env::temp_dir().join(format!("tigre_bench_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_kernels.json");
+        let _ = std::fs::remove_file(&path);
+
+        let mut before = fake_entries();
+        append_run_to_file(&path, "before", 4, true, &before).unwrap();
+        before[0].median_s = 0.25; // 2× faster "after"
+        append_run_to_file(&path, "after", 4, true, &before).unwrap();
+
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        assert_eq!(doc.get("runs").and_then(Json::as_arr).unwrap().len(), 2);
+        let rows = speedups(&doc);
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert_eq!(row.0.as_str(), "fp_siddon n=64 a=16");
+        assert!((row.1 / row.2 - 2.0).abs() < 1e-12);
+        assert!((row.3 - 2.0).abs() < 1e-12);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_preserves_unknown_top_level_fields() {
+        let dir = std::env::temp_dir().join(format!("tigre_bench_notes_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_kernels.json");
+        std::fs::write(
+            &path,
+            format!(r#"{{"schema": "{SCHEMA}", "notes": ["keep me"], "runs": []}}"#),
+        )
+        .unwrap();
+        append_run_to_file(&path, "r1", 2, true, &fake_entries()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let notes = doc.get("notes").and_then(Json::as_arr).expect("notes survive append");
+        assert_eq!(notes[0].as_str(), Some("keep me"));
+        assert_eq!(doc.get("runs").and_then(Json::as_arr).unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn speedups_refuse_mismatched_configs() {
+        let mk = |threads: usize, smoke: bool| run_to_json("r", threads, smoke, &fake_entries());
+        let doc = Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("runs", Json::arr(vec![mk(16, false), mk(2, false)])),
+        ]);
+        assert!(speedups(&doc).is_empty(), "different thread counts must not compare");
+        let doc = Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("runs", Json::arr(vec![mk(4, false), mk(4, true)])),
+        ]);
+        assert!(speedups(&doc).is_empty(), "smoke vs full must not compare");
+        let doc = Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("runs", Json::arr(vec![mk(4, false), mk(4, false)])),
+        ]);
+        assert_eq!(speedups(&doc).len(), 1);
+    }
+
+    #[test]
+    fn smoke_suite_runs_quickly_and_covers_kernels() {
+        let entries = run_suite(true, 2);
+        assert!(entries.iter().any(|e| e.name.starts_with("fp_siddon")));
+        assert!(entries.iter().any(|e| e.name.starts_with("fp_joseph")));
+        assert!(entries.iter().any(|e| e.name.starts_with("bp_fdk")));
+        assert!(entries.iter().any(|e| e.name.starts_with("fdk_filter")));
+        for e in &entries {
+            assert!(e.median_s > 0.0 && e.samples >= 1, "{}: empty samples", e.name);
+            assert!(e.throughput() > 0.0);
+        }
+    }
+}

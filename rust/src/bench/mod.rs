@@ -1,6 +1,10 @@
 //! Shared benchmark workloads and sweep runners, used by every target in
 //! `rust/benches/` (each bench regenerates one table/figure of the
 //! paper's evaluation; see DESIGN.md §5 for the experiment index).
+//! [`kernels`] owns the machine-readable kernel hot-path suite behind
+//! the `BENCH_kernels.json` trajectory.
+
+pub mod kernels;
 
 use crate::coordinator::{baseline, ExecMode, MultiGpu};
 use crate::geometry::Geometry;

@@ -151,20 +151,26 @@ pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
     sim.sync_all();
 }
 
-/// Real numerics with the identical partitioning.
+/// Real numerics with the identical partitioning. Chunk partials and the
+/// per-slab accumulator are recycled through the `kernels::scratch` arena
+/// once merged (see forward.rs — same rationale).
 fn execute_real(ctx: &MultiGpu, g: &Geometry, proj: &ProjectionSet, plan: &Plan) -> Volume {
+    use crate::kernels::scratch;
     let mut out = Volume::zeros_like(g);
     for dev in &plan.per_device {
         for slab in &dev.slabs {
             let gs = g.slab_geometry(slab.z0, slab.z1);
-            let mut acc = Volume::zeros(g.n_vox[0], g.n_vox[1], slab.len());
+            let mut acc = scratch::take_volume(g.n_vox[0], g.n_vox[1], slab.len());
             for ch in &plan.angle_chunks {
                 let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
                 let sub = proj.extract_chunk(ch.a0, ch.a1);
                 let part = ctx.kernel_backward(&gc, &sub);
                 acc.add_scaled(&part, 1.0);
+                scratch::recycle_volume(part);
+                scratch::recycle_projections(sub);
             }
             out.insert_slab(slab.z0, &acc);
+            scratch::recycle_volume(acc);
         }
     }
     out

@@ -101,6 +101,15 @@ impl MultiGpu {
         self
     }
 
+    /// Override the host thread count of the kernel backend (reproducible
+    /// benchmarking; see also the `TIGRE_THREADS` env var).
+    pub fn with_threads(mut self, n: usize) -> Self {
+        match &mut self.backend {
+            Backend::Native { threads, .. } | Backend::Pjrt { threads, .. } => *threads = n,
+        }
+        self
+    }
+
     pub fn fresh_sim(&self) -> SimNode {
         SimNode::new(self.n_gpus, self.spec.clone(), self.cost.clone())
     }
@@ -126,6 +135,12 @@ impl MultiGpu {
     }
 
     /// Run the real kernels for an angle-chunk of a (slab) geometry.
+    ///
+    /// Arena contract: the returned buffer is drawn from the calling
+    /// thread's `kernels::scratch` arena; callers that consume the result
+    /// (forward/backward `execute_real`, the iterative algorithms) hand it
+    /// back via `scratch::recycle_projections` / `scratch::recycle_volume`
+    /// so the next operator call reuses the allocation.
     pub(crate) fn kernel_forward(&self, g: &Geometry, vol: &Volume) -> ProjectionSet {
         match &self.backend {
             Backend::Native { projector, threads, .. } => {

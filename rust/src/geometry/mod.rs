@@ -54,6 +54,55 @@ pub struct AngleFrame {
     pub v_dir: [f64; 3],
 }
 
+/// Affine per-angle detector addressing, precomputed once per angle:
+///
+/// `pix(iu, iv) = origin + iu·u_step + iv·v_step`
+///
+/// where `origin` is the world centre of pixel `(0, 0)` and the step
+/// vectors already include the pixel pitch. The projector inner loops use
+/// this instead of [`Geometry::det_pixel`], which re-derives the panel
+/// placement (9 multiplies + 12 adds) for every single ray; with the
+/// affine frame a pixel address is 6 fused multiply-adds, and a detector
+/// row walk is pure increments. This mirrors what the CUDA kernels get by
+/// stashing `deltaU`/`deltaV`/`uvOrigin` in constant memory per angle.
+#[derive(Clone, Copy, Debug)]
+pub struct DetFrame {
+    /// Source position.
+    pub src: [f64; 3],
+    /// World centre of detector pixel (0, 0).
+    pub origin: [f64; 3],
+    /// World step for +1 pixel along `u` (includes the `du` pitch).
+    pub u_step: [f64; 3],
+    /// World step for +1 pixel along `v` (includes the `dv` pitch).
+    pub v_step: [f64; 3],
+}
+
+impl DetFrame {
+    /// World centre of pixel `(iu, iv)`.
+    #[inline(always)]
+    pub fn pix(&self, iu: usize, iv: usize) -> [f64; 3] {
+        let fu = iu as f64;
+        let fv = iv as f64;
+        [
+            self.origin[0] + fu * self.u_step[0] + fv * self.v_step[0],
+            self.origin[1] + fu * self.u_step[1] + fv * self.v_step[1],
+            self.origin[2] + fu * self.u_step[2] + fv * self.v_step[2],
+        ]
+    }
+
+    /// World centre of pixel `(0, iv)` — the start of detector row `iv`;
+    /// the row is then spanned by multiples of `u_step`.
+    #[inline(always)]
+    pub fn row_origin(&self, iv: usize) -> [f64; 3] {
+        let fv = iv as f64;
+        [
+            self.origin[0] + fv * self.v_step[0],
+            self.origin[1] + fv * self.v_step[1],
+            self.origin[2] + fv * self.v_step[2],
+        ]
+    }
+}
+
 impl Geometry {
     /// A standard circular cone-beam geometry for an `n³` volume with an
     /// `n×n` detector and `n_angles` uniformly spaced angles over 2π.
@@ -180,6 +229,33 @@ impl Geometry {
             self.offset_det[1],
         ];
         AngleFrame { src, det_center, u_dir, v_dir }
+    }
+
+    /// Affine detector frame for `angle_idx` (see [`DetFrame`]). The
+    /// projector kernels compute this once per angle; per-pixel addressing
+    /// is then affine in `(iu, iv)`.
+    pub fn det_frame(&self, angle_idx: usize) -> DetFrame {
+        let f = self.frame(angle_idx);
+        let u0 = (0.5 - self.n_det[0] as f64 / 2.0) * self.d_det[0];
+        let v0 = (0.5 - self.n_det[1] as f64 / 2.0) * self.d_det[1];
+        DetFrame {
+            src: f.src,
+            origin: [
+                f.det_center[0] + u0 * f.u_dir[0] + v0 * f.v_dir[0],
+                f.det_center[1] + u0 * f.u_dir[1] + v0 * f.v_dir[1],
+                f.det_center[2] + u0 * f.u_dir[2] + v0 * f.v_dir[2],
+            ],
+            u_step: [
+                self.d_det[0] * f.u_dir[0],
+                self.d_det[0] * f.u_dir[1],
+                self.d_det[0] * f.u_dir[2],
+            ],
+            v_step: [
+                self.d_det[1] * f.v_dir[0],
+                self.d_det[1] * f.v_dir[1],
+                self.d_det[1] * f.v_dir[2],
+            ],
+        }
     }
 
     /// World position of detector pixel centre `(iu, iv)` at `angle_idx`.
@@ -333,6 +409,37 @@ mod tests {
             + (p[2] - f.det_center[2]).powi(2))
         .sqrt();
         assert!(dist <= (du * du * 2.0).sqrt() + 1e-9);
+    }
+
+    #[test]
+    fn det_frame_matches_det_pixel() {
+        // the affine frame must address exactly the same pixel centres as
+        // the per-pixel derivation, including with a panel offset
+        let mut g = Geometry::cone_beam(32, 8);
+        g.offset_det = [3.5, -1.25];
+        for a in 0..g.n_angles() {
+            let f = g.frame(a);
+            let df = g.det_frame(a);
+            assert_eq!(df.src, f.src);
+            for &(iu, iv) in &[(0usize, 0usize), (31, 0), (0, 31), (17, 23)] {
+                let want = g.det_pixel(&f, iu, iv);
+                let got = df.pix(iu, iv);
+                for k in 0..3 {
+                    assert!(
+                        (want[k] - got[k]).abs() < 1e-9,
+                        "angle {a} pixel ({iu},{iv}) axis {k}: {} vs {}",
+                        want[k],
+                        got[k]
+                    );
+                }
+                // row_origin + iu·u_step is the same address
+                let r = df.row_origin(iv);
+                for k in 0..3 {
+                    let via_row = r[k] + iu as f64 * df.u_step[k];
+                    assert!((want[k] - via_row).abs() < 1e-9);
+                }
+            }
+        }
     }
 
     #[test]

@@ -6,8 +6,15 @@
 //! lerp here and in the Pallas kernel). Slower than Siddon but smoother;
 //! the paper notes it "gave virtually the same results" and is kept for
 //! completeness.
+//!
+//! Hot-path structure (EXPERIMENTS.md §Perf): the ray is clipped and its
+//! sampling schedule fixed in f64, then the sample walk runs in f32 over
+//! *voxel-space* coordinates (the world→voxel transform is folded into the
+//! per-ray affine setup). Interior samples take a stride-based trilinear
+//! fast path with no clamping and unchecked 2×2×2 loads; only samples
+//! whose neighborhood touches a face fall back to the clamped path.
 
-use crate::geometry::Geometry;
+use crate::geometry::{DetFrame, Geometry};
 use crate::util::threadpool::parallel_for;
 use crate::volume::{ProjectionSet, Volume};
 
@@ -24,11 +31,12 @@ pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
     let nu = g.n_det[0];
     let nv = g.n_det[1];
     let n_angles = g.n_angles();
-    let mut out = ProjectionSet::zeros(nu, nv, n_angles);
+    let mut out = crate::kernels::scratch::take_projections(nu, nv, n_angles);
 
-    let frames: Vec<_> = (0..n_angles).map(|a| g.frame(a)).collect();
+    let frames: Vec<DetFrame> = (0..n_angles).map(|a| g.det_frame(a)).collect();
     let (lo, hi) = g.volume_bbox();
     let step = STEP_FRACTION * g.d_vox.iter().cloned().fold(f64::INFINITY, f64::min);
+    let sampler = VolSampler::new(vol);
 
     let rows = n_angles * nv;
     let ptr = SendPtr(out.data.as_mut_ptr());
@@ -38,9 +46,16 @@ pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
             let a = row / nv;
             let iv = row % nv;
             let frame = &frames[a];
+            let row0 = frame.row_origin(iv);
+            let us = frame.u_step;
             for iu in 0..nu {
-                let pix = g.det_pixel(frame, iu, iv);
-                let val = sample_ray(&frame.src, &pix, &lo, &hi, g, vol, step);
+                let fu = iu as f64;
+                let pix = [
+                    row0[0] + fu * us[0],
+                    row0[1] + fu * us[1],
+                    row0[2] + fu * us[2],
+                ];
+                let val = sample_ray(&frame.src, &pix, &lo, &hi, g, &sampler, step);
                 unsafe {
                     *ptr.0.add((a * nv + iv) * nu + iu) = val;
                 }
@@ -55,6 +70,101 @@ struct SendPtr(*mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
+/// Volume view with the strides and bounds the trilinear fast path needs.
+struct VolSampler<'a> {
+    data: &'a [f32],
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    /// y/z strides in elements (x stride is 1).
+    sy: usize,
+    sz: usize,
+}
+
+impl<'a> VolSampler<'a> {
+    fn new(vol: &'a Volume) -> Self {
+        Self {
+            data: &vol.data,
+            nx: vol.nx,
+            ny: vol.ny,
+            nz: vol.nz,
+            sy: vol.nx,
+            sz: vol.nx * vol.ny,
+        }
+    }
+
+    /// Trilinear sample at voxel-space coordinates (`q = (p-lo)/dvox - ½`,
+    /// i.e. sample coordinates where integers are voxel centres).
+    #[inline(always)]
+    fn trilinear_q(&self, qx: f32, qy: f32, qz: f32) -> f32 {
+        let x0 = qx.floor();
+        let y0 = qy.floor();
+        let z0 = qz.floor();
+        let wx = qx - x0;
+        let wy = qy - y0;
+        let wz = qz - z0;
+        let xi = x0 as isize;
+        let yi = y0 as isize;
+        let zi = z0 as isize;
+        // Interior fast path: the whole 2×2×2 neighborhood is in-bounds,
+        // so the eight taps are unchecked loads at fixed stride offsets.
+        if xi >= 0
+            && yi >= 0
+            && zi >= 0
+            && (xi as usize) + 1 < self.nx
+            && (yi as usize) + 1 < self.ny
+            && (zi as usize) + 1 < self.nz
+        {
+            let base = zi as usize * self.sz + yi as usize * self.sy + xi as usize;
+            // SAFETY: base + sz + sy + 1 < data.len() by the bounds above.
+            unsafe {
+                let v000 = *self.data.get_unchecked(base);
+                let v100 = *self.data.get_unchecked(base + 1);
+                let v010 = *self.data.get_unchecked(base + self.sy);
+                let v110 = *self.data.get_unchecked(base + self.sy + 1);
+                let v001 = *self.data.get_unchecked(base + self.sz);
+                let v101 = *self.data.get_unchecked(base + self.sz + 1);
+                let v011 = *self.data.get_unchecked(base + self.sz + self.sy);
+                let v111 = *self.data.get_unchecked(base + self.sz + self.sy + 1);
+                let c00 = v000 + (v100 - v000) * wx;
+                let c10 = v010 + (v110 - v010) * wx;
+                let c01 = v001 + (v101 - v001) * wx;
+                let c11 = v011 + (v111 - v011) * wx;
+                let c0 = c00 + (c10 - c00) * wy;
+                let c1 = c01 + (c11 - c01) * wy;
+                return c0 + (c1 - c0) * wz;
+            }
+        }
+        self.trilinear_q_edge(xi, yi, zi, wx, wy, wz)
+    }
+
+    /// Clamped slow path for samples whose neighborhood touches a face
+    /// (CUDA texture clamp addressing).
+    #[inline(never)]
+    fn trilinear_q_edge(&self, xi: isize, yi: isize, zi: isize, wx: f32, wy: f32, wz: f32) -> f32 {
+        let cl = |i: isize, n: usize| (i.max(0) as usize).min(n - 1);
+        let (x0i, x1i) = (cl(xi, self.nx), cl(xi + 1, self.nx));
+        let (y0i, y1i) = (cl(yi, self.ny), cl(yi + 1, self.ny));
+        let (z0i, z1i) = (cl(zi, self.nz), cl(zi + 1, self.nz));
+        let at = |x: usize, y: usize, z: usize| self.data[z * self.sz + y * self.sy + x];
+        let v000 = at(x0i, y0i, z0i);
+        let v100 = at(x1i, y0i, z0i);
+        let v010 = at(x0i, y1i, z0i);
+        let v110 = at(x1i, y1i, z0i);
+        let v001 = at(x0i, y0i, z1i);
+        let v101 = at(x1i, y0i, z1i);
+        let v011 = at(x0i, y1i, z1i);
+        let v111 = at(x1i, y1i, z1i);
+        let c00 = v000 + (v100 - v000) * wx;
+        let c10 = v010 + (v110 - v010) * wx;
+        let c01 = v001 + (v101 - v001) * wx;
+        let c11 = v011 + (v111 - v011) * wx;
+        let c0 = c00 + (c10 - c00) * wy;
+        let c1 = c01 + (c11 - c01) * wy;
+        c0 + (c1 - c0) * wz
+    }
+}
+
 /// Integrate by sampling `src→dst` every `step` mm with trilinear lookups.
 fn sample_ray(
     src: &[f64; 3],
@@ -62,7 +172,7 @@ fn sample_ray(
     lo: &[f64; 3],
     hi: &[f64; 3],
     g: &Geometry,
-    vol: &Volume,
+    sampler: &VolSampler<'_>,
     step: f64,
 ) -> f32 {
     let dir = [dst[0] - src[0], dst[1] - src[1], dst[2] - src[2]];
@@ -70,7 +180,7 @@ fn sample_ray(
     if len == 0.0 {
         return 0.0;
     }
-    // Clip to the volume box.
+    // Clip to the volume box (f64 setup).
     let mut tmin = 0.0f64;
     let mut tmax = 1.0f64;
     for k in 0..3 {
@@ -95,61 +205,197 @@ fn sample_ray(
     let n_steps = (((tmax - tmin) / dt).ceil() as usize).max(1);
     let dt = (tmax - tmin) / n_steps as f64; // equalize last step
     let seg = dt * len;
-    let mut acc = 0.0f64;
-    // Midpoint rule: sample at the centre of each step.
-    let mut t = tmin + 0.5 * dt;
-    for _ in 0..n_steps {
-        let p = [src[0] + t * dir[0], src[1] + t * dir[1], src[2] + t * dir[2]];
-        acc += trilinear(g, vol, lo, &p) as f64 * seg;
-        t += dt;
+
+    // Voxel-space affine sampling schedule (f64 setup → f32 walk): sample
+    // k sits at q0 + k·qs, where integers are voxel centres. Multiplying
+    // by k instead of incrementally adding avoids f32 drift along the ray.
+    let t0 = tmin + 0.5 * dt;
+    let mut q0 = [0.0f32; 3];
+    let mut qs = [0.0f32; 3];
+    for k in 0..3 {
+        let p0 = src[k] + t0 * dir[k];
+        q0[k] = ((p0 - lo[k]) / g.d_vox[k] - 0.5) as f32;
+        qs[k] = (dt * dir[k] / g.d_vox[k]) as f32;
     }
-    acc as f32
+
+    // Midpoint rule: sample at the centre of each step, accumulate in f32
+    // and scale by the segment length once.
+    let mut acc = 0.0f32;
+    for k in 0..n_steps {
+        let fk = k as f32;
+        let qx = q0[0] + fk * qs[0];
+        let qy = q0[1] + fk * qs[1];
+        let qz = q0[2] + fk * qs[2];
+        acc += sampler.trilinear_q(qx, qy, qz);
+    }
+    acc * seg as f32
 }
 
 /// Trilinear interpolation at world point `p`; samples are at voxel
 /// centres, clamped at the faces (matching CUDA texture clamp addressing).
+///
+/// Public reference entry point (tests, external callers); the kernel
+/// itself uses the precomputed-stride [`VolSampler`] fast path, which this
+/// delegates to.
 #[inline]
 pub fn trilinear(g: &Geometry, vol: &Volume, lo: &[f64; 3], p: &[f64; 3]) -> f32 {
-    let fx = (p[0] - lo[0]) / g.d_vox[0] - 0.5;
-    let fy = (p[1] - lo[1]) / g.d_vox[1] - 0.5;
-    let fz = (p[2] - lo[2]) / g.d_vox[2] - 0.5;
-
-    let x0 = fx.floor();
-    let y0 = fy.floor();
-    let z0 = fz.floor();
-    let wx = (fx - x0) as f32;
-    let wy = (fy - y0) as f32;
-    let wz = (fz - z0) as f32;
-
-    let cx = |i: f64| (i.max(0.0) as usize).min(vol.nx - 1);
-    let cy = |i: f64| (i.max(0.0) as usize).min(vol.ny - 1);
-    let cz = |i: f64| (i.max(0.0) as usize).min(vol.nz - 1);
-    let (x0i, x1i) = (cx(x0), cx(x0 + 1.0));
-    let (y0i, y1i) = (cy(y0), cy(y0 + 1.0));
-    let (z0i, z1i) = (cz(z0), cz(z0 + 1.0));
-
-    let v000 = vol.at(x0i, y0i, z0i);
-    let v100 = vol.at(x1i, y0i, z0i);
-    let v010 = vol.at(x0i, y1i, z0i);
-    let v110 = vol.at(x1i, y1i, z0i);
-    let v001 = vol.at(x0i, y0i, z1i);
-    let v101 = vol.at(x1i, y0i, z1i);
-    let v011 = vol.at(x0i, y1i, z1i);
-    let v111 = vol.at(x1i, y1i, z1i);
-
-    let c00 = v000 + (v100 - v000) * wx;
-    let c10 = v010 + (v110 - v010) * wx;
-    let c01 = v001 + (v101 - v001) * wx;
-    let c11 = v011 + (v111 - v011) * wx;
-    let c0 = c00 + (c10 - c00) * wy;
-    let c1 = c01 + (c11 - c01) * wy;
-    c0 + (c1 - c0) * wz
+    let fx = ((p[0] - lo[0]) / g.d_vox[0] - 0.5) as f32;
+    let fy = ((p[1] - lo[1]) / g.d_vox[1] - 0.5) as f32;
+    let fz = ((p[2] - lo[2]) / g.d_vox[2] - 0.5) as f32;
+    VolSampler::new(vol).trilinear_q(fx, fy, fz)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::phantom;
+
+    /// Pre-refactor scalar trilinear (f64 world-space weights, closure
+    /// clamps on every tap) — the golden oracle for the fast path.
+    fn trilinear_ref(g: &Geometry, vol: &Volume, lo: &[f64; 3], p: &[f64; 3]) -> f32 {
+        let fx = (p[0] - lo[0]) / g.d_vox[0] - 0.5;
+        let fy = (p[1] - lo[1]) / g.d_vox[1] - 0.5;
+        let fz = (p[2] - lo[2]) / g.d_vox[2] - 0.5;
+        let x0 = fx.floor();
+        let y0 = fy.floor();
+        let z0 = fz.floor();
+        let wx = (fx - x0) as f32;
+        let wy = (fy - y0) as f32;
+        let wz = (fz - z0) as f32;
+        let cx = |i: f64| (i.max(0.0) as usize).min(vol.nx - 1);
+        let cy = |i: f64| (i.max(0.0) as usize).min(vol.ny - 1);
+        let cz = |i: f64| (i.max(0.0) as usize).min(vol.nz - 1);
+        let (x0i, x1i) = (cx(x0), cx(x0 + 1.0));
+        let (y0i, y1i) = (cy(y0), cy(y0 + 1.0));
+        let (z0i, z1i) = (cz(z0), cz(z0 + 1.0));
+        let v000 = vol.at(x0i, y0i, z0i);
+        let v100 = vol.at(x1i, y0i, z0i);
+        let v010 = vol.at(x0i, y1i, z0i);
+        let v110 = vol.at(x1i, y1i, z0i);
+        let v001 = vol.at(x0i, y0i, z1i);
+        let v101 = vol.at(x1i, y0i, z1i);
+        let v011 = vol.at(x0i, y1i, z1i);
+        let v111 = vol.at(x1i, y1i, z1i);
+        let c00 = v000 + (v100 - v000) * wx;
+        let c10 = v010 + (v110 - v010) * wx;
+        let c01 = v001 + (v101 - v001) * wx;
+        let c11 = v011 + (v111 - v011) * wx;
+        let c0 = c00 + (c10 - c00) * wy;
+        let c1 = c01 + (c11 - c01) * wy;
+        c0 + (c1 - c0) * wz
+    }
+
+    /// Pre-refactor sampling projector: per-pixel `det_pixel` addressing,
+    /// f64 midpoint walk, per-sample f64 `seg` multiply — the golden
+    /// oracle for the optimized `project`.
+    fn project_ref(g: &Geometry, vol: &Volume) -> ProjectionSet {
+        let nu = g.n_det[0];
+        let nv = g.n_det[1];
+        let mut out = ProjectionSet::zeros(nu, nv, g.n_angles());
+        let (lo, hi) = g.volume_bbox();
+        let step = STEP_FRACTION * g.d_vox.iter().cloned().fold(f64::INFINITY, f64::min);
+        for a in 0..g.n_angles() {
+            let frame = g.frame(a);
+            for iv in 0..nv {
+                for iu in 0..nu {
+                    let pix = g.det_pixel(&frame, iu, iv);
+                    *out.at_mut(iu, iv, a) =
+                        sample_ray_ref(&frame.src, &pix, &lo, &hi, g, vol, step);
+                }
+            }
+        }
+        out
+    }
+
+    fn sample_ray_ref(
+        src: &[f64; 3],
+        dst: &[f64; 3],
+        lo: &[f64; 3],
+        hi: &[f64; 3],
+        g: &Geometry,
+        vol: &Volume,
+        step: f64,
+    ) -> f32 {
+        let dir = [dst[0] - src[0], dst[1] - src[1], dst[2] - src[2]];
+        let len = (dir[0] * dir[0] + dir[1] * dir[1] + dir[2] * dir[2]).sqrt();
+        if len == 0.0 {
+            return 0.0;
+        }
+        let mut tmin = 0.0f64;
+        let mut tmax = 1.0f64;
+        for k in 0..3 {
+            if dir[k].abs() < 1e-12 {
+                if src[k] < lo[k] || src[k] > hi[k] {
+                    return 0.0;
+                }
+            } else {
+                let inv = 1.0 / dir[k];
+                let t0 = (lo[k] - src[k]) * inv;
+                let t1 = (hi[k] - src[k]) * inv;
+                let (t0, t1) = if t0 <= t1 { (t0, t1) } else { (t1, t0) };
+                tmin = tmin.max(t0);
+                tmax = tmax.min(t1);
+            }
+        }
+        if tmin >= tmax {
+            return 0.0;
+        }
+        let dt = step / len;
+        let n_steps = (((tmax - tmin) / dt).ceil() as usize).max(1);
+        let dt = (tmax - tmin) / n_steps as f64;
+        let seg = dt * len;
+        let mut acc = 0.0f64;
+        let mut t = tmin + 0.5 * dt;
+        for _ in 0..n_steps {
+            let p = [src[0] + t * dir[0], src[1] + t * dir[1], src[2] + t * dir[2]];
+            acc += trilinear_ref(g, vol, lo, &p) as f64 * seg;
+            t += dt;
+        }
+        acc as f32
+    }
+
+    #[test]
+    fn golden_parity_vs_reference() {
+        let n = 20;
+        let g = Geometry::cone_beam(n, 6);
+        let v = phantom::shepp_logan(n);
+        let opt = project(&g, &v, 2);
+        let oracle = project_ref(&g, &v);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (i, (a, b)) in oracle.data.iter().zip(&opt.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 2e-4 * (1.0 + a.abs()),
+                "pixel {i}: oracle {a} vs optimized {b}"
+            );
+            num += ((a - b) as f64).powi(2);
+            den += (*a as f64).powi(2);
+        }
+        let rel = (num / den.max(1e-12)).sqrt();
+        assert!(rel < 1e-4, "relative L2 deviation from oracle: {rel:.3e}");
+    }
+
+    #[test]
+    fn trilinear_fast_path_matches_reference() {
+        let g = Geometry::cone_beam(8, 1);
+        let v = phantom::random(8, 8, 8, 11);
+        let (lo, hi) = g.volume_bbox();
+        // deterministic scatter of sample points covering interior + faces
+        let mut rng = crate::util::pcg::Pcg32::new(3);
+        for _ in 0..500 {
+            let p = [
+                lo[0] + (hi[0] - lo[0]) * rng.next_f32() as f64,
+                lo[1] + (hi[1] - lo[1]) * rng.next_f32() as f64,
+                lo[2] + (hi[2] - lo[2]) * rng.next_f32() as f64,
+            ];
+            let fast = trilinear(&g, &v, &lo, &p);
+            let slow = trilinear_ref(&g, &v, &lo, &p);
+            assert!(
+                (fast - slow).abs() < 1e-5,
+                "at {p:?}: fast {fast} vs ref {slow}"
+            );
+        }
+    }
 
     #[test]
     fn agrees_with_siddon_on_smooth_phantom() {

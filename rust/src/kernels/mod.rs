@@ -17,10 +17,14 @@
 //!    pseudo-matched weights, TIGRE's `Aᵀb`.
 //!  * [`tv`] — total-variation regularizers (gradient-descent and ROF).
 //!  * [`fft`] + [`filtering`] — ramp/Hann filtering for FDK.
+//!  * [`scratch`] — per-thread buffer arena the kernels draw their output
+//!    buffers from; callers recycle consumed buffers so iterative
+//!    algorithms stop paying an allocate-and-fault cycle per operator call.
 
 pub mod fft;
 pub mod filtering;
 pub mod joseph;
+pub mod scratch;
 pub mod siddon;
 pub mod tv;
 pub mod voxel_backproj;
@@ -48,11 +52,16 @@ pub enum BackprojWeight {
     Matched,
 }
 
-/// Number of worker threads used by the native kernels (all of them by
-/// default; the coordinator overrides this to one thread per simulated
-/// device execution lane).
+/// Number of worker threads used by the native kernels: the host
+/// parallelism by default, overridable via the `TIGRE_THREADS` env var
+/// for reproducible benchmarking (the coordinator overrides this to one
+/// thread per simulated device execution lane).
 pub fn kernel_threads() -> usize {
-    crate::util::threadpool::default_threads()
+    std::env::var("TIGRE_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(crate::util::threadpool::default_threads)
 }
 
 /// Forward projection `Ax` with the chosen projector, over all angles of

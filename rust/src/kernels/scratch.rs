@@ -1,0 +1,189 @@
+//! Per-thread scratch buffer arena for the kernel hot path.
+//!
+//! Every `forward`/`backward` call produces a freshly allocated
+//! [`ProjectionSet`] or [`Volume`]; the iterative algorithms (Landweber,
+//! OS-SART, CGLS, FISTA) make two such calls per iteration and immediately
+//! drop the previous iteration's buffers, so the hot loop used to spend a
+//! measurable slice of its time in the allocator (and, worse, in the
+//! kernel page-faulting freshly mmapped zero pages during the first write
+//! pass). This module keeps a small per-thread free list of `Vec<f32>`
+//! buffers: recycling a buffer and re-taking it later turns that
+//! allocate-and-fault cycle into a `memset`.
+//!
+//! Determinism: taken buffers are always fully zeroed, so a kernel using a
+//! recycled buffer produces bit-identical output to one using a fresh
+//! allocation. The arena is thread-local (no locks on the hot path) and
+//! capacity-capped, so it cannot grow without bound when geometries of
+//! many different sizes are used.
+
+use std::cell::{Cell, RefCell};
+
+use crate::volume::{ProjectionSet, Volume};
+
+/// Max buffers kept per thread. Iterative algorithms cycle at most a
+/// handful of distinct shapes (projection set, volume, subset variants).
+const MAX_POOLED: usize = 16;
+
+/// Max total bytes retained per thread (f32 elements × 4). Bounds what a
+/// long-lived process keeps resident after a large reconstruction; work
+/// bigger than this still recycles within an iteration (take→recycle→take
+/// round-trips), it just returns memory to the allocator between phases.
+/// Call [`clear`] to release everything eagerly.
+const MAX_POOLED_BYTES: usize = 256 << 20;
+
+thread_local! {
+    static POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static HITS: Cell<u64> = const { Cell::new(0) };
+    static MISSES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Take a zeroed `f32` buffer of exactly `len` elements, reusing a pooled
+/// allocation when one is large enough.
+pub fn take_zeroed(len: usize) -> Vec<f32> {
+    let reused = POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        // best fit: smallest pooled buffer whose capacity suffices
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, b) in pool.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= len && best.map_or(true, |(_, c)| cap < c) {
+                best = Some((i, cap));
+            }
+        }
+        best.map(|(i, _)| pool.swap_remove(i))
+    });
+    match reused {
+        Some(mut v) => {
+            HITS.with(|c| c.set(c.get() + 1));
+            v.clear();
+            v.resize(len, 0.0);
+            v
+        }
+        None => {
+            MISSES.with(|c| c.set(c.get() + 1));
+            vec![0.0; len]
+        }
+    }
+}
+
+/// Return a buffer to the thread-local pool. Eviction is by recency: the
+/// pool keeps the most recently recycled buffers (the live working set)
+/// and drops the oldest until both the count and total-byte caps hold, so
+/// one burst of huge allocations cannot pin memory for the thread's
+/// lifetime.
+pub fn recycle(buf: Vec<f32>) {
+    if buf.capacity() == 0 || buf.capacity() * 4 > MAX_POOLED_BYTES {
+        return;
+    }
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        pool.push(buf);
+        let total = |pool: &Vec<Vec<f32>>| {
+            pool.iter().map(|b| b.capacity() * 4).sum::<usize>()
+        };
+        while pool.len() > MAX_POOLED || total(&pool) > MAX_POOLED_BYTES {
+            pool.remove(0); // oldest first
+        }
+    });
+}
+
+/// Drop every buffer the calling thread's arena holds.
+pub fn clear() {
+    POOL.with(|p| p.borrow_mut().clear());
+}
+
+/// Take a zeroed volume of the given shape from the arena.
+pub fn take_volume(nx: usize, ny: usize, nz: usize) -> Volume {
+    Volume { nx, ny, nz, data: take_zeroed(nx * ny * nz) }
+}
+
+/// Take a zeroed projection set of the given shape from the arena.
+pub fn take_projections(nu: usize, nv: usize, n_angles: usize) -> ProjectionSet {
+    ProjectionSet { nu, nv, n_angles, data: take_zeroed(nu * nv * n_angles) }
+}
+
+/// Recycle a volume's backing buffer.
+pub fn recycle_volume(v: Volume) {
+    recycle(v.data);
+}
+
+/// Recycle a projection set's backing buffer.
+pub fn recycle_projections(p: ProjectionSet) {
+    recycle(p.data);
+}
+
+/// (hits, misses) of the calling thread's arena — used by tests and the
+/// bench harness to confirm the iterative hot loop actually recycles.
+pub fn thread_stats() -> (u64, u64) {
+    (HITS.with(Cell::get), MISSES.with(Cell::get))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycle_take_reuses_allocation() {
+        clear();
+        let (h0, _) = thread_stats();
+        let v = take_zeroed(4096);
+        let ptr = v.as_ptr();
+        recycle(v);
+        let v2 = take_zeroed(4096);
+        assert_eq!(v2.as_ptr(), ptr, "same-size take should reuse the buffer");
+        assert_eq!(v2.len(), 4096);
+        assert!(v2.iter().all(|&x| x == 0.0), "recycled buffer must be zeroed");
+        let (h1, _) = thread_stats();
+        assert!(h1 > h0);
+        recycle(v2);
+    }
+
+    #[test]
+    fn recycled_buffers_are_rezeroed() {
+        clear();
+        let mut v = take_zeroed(128);
+        for x in v.iter_mut() {
+            *x = 7.5;
+        }
+        recycle(v);
+        let v2 = take_zeroed(64); // smaller take from a larger buffer
+        assert_eq!(v2.len(), 64);
+        assert!(v2.iter().all(|&x| x == 0.0));
+        recycle(v2);
+    }
+
+    #[test]
+    fn pool_is_count_capped_with_recency_eviction() {
+        clear();
+        for len in 1..=(2 * MAX_POOLED) {
+            recycle(vec![0.0; len]);
+        }
+        POOL.with(|p| {
+            let pool = p.borrow();
+            assert!(pool.len() <= MAX_POOLED);
+            // oldest (here: smallest) buffers were the ones evicted
+            assert!(pool.iter().all(|b| b.capacity() > MAX_POOLED));
+        });
+        clear();
+        POOL.with(|p| assert!(p.borrow().is_empty()));
+    }
+
+    #[test]
+    fn oversized_buffers_are_never_pooled() {
+        clear();
+        // reserves virtual address space only; pages are never touched
+        let huge: Vec<f32> = Vec::with_capacity(MAX_POOLED_BYTES / 4 + 1);
+        recycle(huge);
+        POOL.with(|p| assert!(p.borrow().is_empty()));
+    }
+
+    #[test]
+    fn shaped_helpers_roundtrip() {
+        let vol = take_volume(4, 5, 6);
+        assert_eq!((vol.nx, vol.ny, vol.nz, vol.data.len()), (4, 5, 6, 120));
+        recycle_volume(vol);
+        let p = take_projections(3, 4, 5);
+        assert_eq!((p.nu, p.nv, p.n_angles, p.data.len()), (3, 4, 5, 60));
+        recycle_projections(p);
+    }
+}

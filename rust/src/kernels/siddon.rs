@@ -10,8 +10,15 @@
 //! by `Geometry::slab_geometry` — that is what makes the coordinator's
 //! image-partitioning transparent to the kernel, mirroring how the CUDA
 //! kernels in the paper are reused unchanged on image pieces.
+//!
+//! Hot-path structure (EXPERIMENTS.md §Perf): detector pixels are addressed
+//! through the precomputed affine [`DetFrame`] (one per angle) instead of
+//! re-deriving the panel placement per ray; the per-ray *setup* (box clip,
+//! entry voxel, per-axis `t` increments) stays in f64 for robustness, while
+//! the traversal accumulates in f32 with a precomputed linear index walked
+//! by stride increments — one add and one unchecked load per voxel crossed.
 
-use crate::geometry::Geometry;
+use crate::geometry::{DetFrame, Geometry};
 use crate::util::threadpool::parallel_for;
 use crate::volume::{ProjectionSet, Volume};
 
@@ -25,40 +32,41 @@ pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
     let nu = g.n_det[0];
     let nv = g.n_det[1];
     let n_angles = g.n_angles();
-    let mut out = ProjectionSet::zeros(nu, nv, n_angles);
+    let mut out = crate::kernels::scratch::take_projections(nu, nv, n_angles);
 
-    // Precompute per-angle frames once (the CUDA code keeps these in
-    // constant memory).
-    let frames: Vec<_> = (0..n_angles).map(|a| g.frame(a)).collect();
+    // Precompute per-angle affine detector frames once (the CUDA code
+    // keeps these in constant memory).
+    let frames: Vec<DetFrame> = (0..n_angles).map(|a| g.det_frame(a)).collect();
     let (lo, hi) = g.volume_bbox();
     let dv = g.d_vox;
     let n = [vol.nx, vol.ny, vol.nz];
 
-    let data = std::mem::take(&mut out.data);
-    let mut data = data; // rebind mutable
-    {
-        let slice = data.as_mut_slice();
-        // SAFETY-free parallelism: each task owns a disjoint range of rows.
-        let rows = n_angles * nv;
-        let slice_addr = SendPtr(slice.as_mut_ptr());
-        parallel_for(rows, threads, 8, |r0, r1| {
-            let ptr = slice_addr; // copy the Send wrapper into the closure
-            for row in r0..r1 {
-                let a = row / nv;
-                let iv = row % nv;
-                let frame = &frames[a];
-                for iu in 0..nu {
-                    let pix = g.det_pixel(frame, iu, iv);
-                    let val = raytrace(&frame.src, &pix, &lo, &hi, &dv, &n, &vol.data);
-                    // rows are disjoint per task: no data race
-                    unsafe {
-                        *ptr.0.add((a * nv + iv) * nu + iu) = val;
-                    }
+    let rows = n_angles * nv;
+    let ptr = SendPtr(out.data.as_mut_ptr());
+    parallel_for(rows, threads, 8, |r0, r1| {
+        let ptr = ptr; // copy the Send wrapper into the closure
+        for row in r0..r1 {
+            let a = row / nv;
+            let iv = row % nv;
+            let frame = &frames[a];
+            // Detector row iv: pixel centres are affine in iu.
+            let row0 = frame.row_origin(iv);
+            let us = frame.u_step;
+            for iu in 0..nu {
+                let fu = iu as f64;
+                let pix = [
+                    row0[0] + fu * us[0],
+                    row0[1] + fu * us[1],
+                    row0[2] + fu * us[2],
+                ];
+                let val = raytrace(&frame.src, &pix, &lo, &hi, &dv, &n, &vol.data);
+                // rows are disjoint per task: no data race
+                unsafe {
+                    *ptr.0.add((a * nv + iv) * nu + iu) = val;
                 }
             }
-        });
-    }
-    out.data = data;
+        }
+    });
     out
 }
 
@@ -71,6 +79,12 @@ unsafe impl Sync for SendPtr {}
 /// Exact line integral of the volume along segment src→dst using
 /// Amanatides–Woo voxel traversal. `lo`/`hi` bound the volume in mm,
 /// `dvox` is voxel pitch, `n` the voxel counts.
+///
+/// f64 per-ray setup, f32 traversal: the parametric segment lengths are
+/// accumulated against the voxel values in f32 and scaled by the (f64)
+/// ray length once at the end, which keeps the result within ~1e-6
+/// relative of the all-f64 reference (`tests::golden_parity_vs_reference`)
+/// while letting the inner loop run entirely in 32-bit registers.
 #[allow(clippy::too_many_arguments)]
 pub fn raytrace(
     src: &[f64; 3],
@@ -81,6 +95,7 @@ pub fn raytrace(
     n: &[usize; 3],
     data: &[f32],
 ) -> f32 {
+    debug_assert_eq!(data.len(), n[0] * n[1] * n[2]);
     let dir = [dst[0] - src[0], dst[1] - src[1], dst[2] - src[2]];
     let len = (dir[0] * dir[0] + dir[1] * dir[1] + dir[2] * dir[2]).sqrt();
     if len == 0.0 {
@@ -141,9 +156,19 @@ pub fn raytrace(
 
     let nx = n[0] as isize;
     let ny = n[1] as isize;
-    let nz = n[2] as isize;
+    let bound = [nx, ny, n[2] as isize];
+    // Linear index of the current voxel, walked by per-axis strides so the
+    // loop never re-multiplies indices.
+    let stride = [1isize, nx, nx * ny];
+    let istep = [
+        step[0] * stride[0],
+        step[1] * stride[1],
+        step[2] * stride[2],
+    ];
+    let mut idx = (ix[2] * ny + ix[1]) * nx + ix[0];
+
     let mut t = tmin;
-    let mut acc = 0.0f64;
+    let mut acc = 0.0f32;
     loop {
         // Next crossing among the three axes.
         let (axis, tn) = {
@@ -161,20 +186,149 @@ pub fn raytrace(
         };
         let t_end = tn.min(tmax);
         if t_end > t {
-            let idx = ((ix[2] * ny + ix[1]) * nx + ix[0]) as usize;
-            acc += (t_end - t) * len * data[idx] as f64;
+            // SAFETY: ix starts clamped in-bounds and the walk below
+            // breaks before idx leaves the grid, so idx indexes `data`.
+            acc += (t_end - t) as f32 * unsafe { *data.get_unchecked(idx as usize) };
             t = t_end;
         }
         if tn >= tmax {
             break;
         }
         ix[axis] += step[axis];
-        if ix[axis] < 0 || ix[axis] >= [nx, ny, nz][axis] {
+        if ix[axis] < 0 || ix[axis] >= bound[axis] {
             break;
         }
+        idx += istep[axis];
         t_next[axis] += dt[axis];
     }
-    acc as f32
+    acc * len as f32
+}
+
+/// Pre-refactor scalar reference (all-f64 accumulation, per-pixel world
+/// addressing) — kept verbatim as the golden oracle for the optimized
+/// traversal above.
+#[cfg(test)]
+pub(crate) mod reference {
+    use super::*;
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn raytrace_ref(
+        src: &[f64; 3],
+        dst: &[f64; 3],
+        lo: &[f64; 3],
+        hi: &[f64; 3],
+        dvox: &[f64; 3],
+        n: &[usize; 3],
+        data: &[f32],
+    ) -> f32 {
+        let dir = [dst[0] - src[0], dst[1] - src[1], dst[2] - src[2]];
+        let len = (dir[0] * dir[0] + dir[1] * dir[1] + dir[2] * dir[2]).sqrt();
+        if len == 0.0 {
+            return 0.0;
+        }
+        let mut tmin = 0.0f64;
+        let mut tmax = 1.0f64;
+        for k in 0..3 {
+            if dir[k].abs() < 1e-12 {
+                if src[k] < lo[k] || src[k] > hi[k] {
+                    return 0.0;
+                }
+            } else {
+                let inv = 1.0 / dir[k];
+                let t0 = (lo[k] - src[k]) * inv;
+                let t1 = (hi[k] - src[k]) * inv;
+                let (t0, t1) = if t0 <= t1 { (t0, t1) } else { (t1, t0) };
+                tmin = tmin.max(t0);
+                tmax = tmax.min(t1);
+            }
+        }
+        if tmin >= tmax {
+            return 0.0;
+        }
+        let eps = 1e-9;
+        let entry = [
+            src[0] + (tmin + eps) * dir[0],
+            src[1] + (tmin + eps) * dir[1],
+            src[2] + (tmin + eps) * dir[2],
+        ];
+        let mut ix = [0isize; 3];
+        for k in 0..3 {
+            let f = ((entry[k] - lo[k]) / dvox[k]).floor();
+            ix[k] = (f as isize).clamp(0, n[k] as isize - 1);
+        }
+        let mut t_next = [f64::INFINITY; 3];
+        let mut dt = [f64::INFINITY; 3];
+        let mut step = [0isize; 3];
+        for k in 0..3 {
+            if dir[k] > 1e-12 {
+                step[k] = 1;
+                let boundary = lo[k] + (ix[k] + 1) as f64 * dvox[k];
+                t_next[k] = (boundary - src[k]) / dir[k];
+                dt[k] = dvox[k] / dir[k];
+            } else if dir[k] < -1e-12 {
+                step[k] = -1;
+                let boundary = lo[k] + ix[k] as f64 * dvox[k];
+                t_next[k] = (boundary - src[k]) / dir[k];
+                dt[k] = -dvox[k] / dir[k];
+            }
+        }
+        let nx = n[0] as isize;
+        let ny = n[1] as isize;
+        let nz = n[2] as isize;
+        let mut t = tmin;
+        let mut acc = 0.0f64;
+        loop {
+            let (axis, tn) = {
+                let mut axis = 0;
+                let mut tn = t_next[0];
+                if t_next[1] < tn {
+                    axis = 1;
+                    tn = t_next[1];
+                }
+                if t_next[2] < tn {
+                    axis = 2;
+                    tn = t_next[2];
+                }
+                (axis, tn)
+            };
+            let t_end = tn.min(tmax);
+            if t_end > t {
+                let idx = ((ix[2] * ny + ix[1]) * nx + ix[0]) as usize;
+                acc += (t_end - t) * len * data[idx] as f64;
+                t = t_end;
+            }
+            if tn >= tmax {
+                break;
+            }
+            ix[axis] += step[axis];
+            if ix[axis] < 0 || ix[axis] >= [nx, ny, nz][axis] {
+                break;
+            }
+            t_next[axis] += dt[axis];
+        }
+        acc as f32
+    }
+
+    /// Full reference projector: per-pixel `det_pixel` addressing over the
+    /// f64 tracer, single-threaded.
+    pub fn project_ref(g: &Geometry, vol: &Volume) -> ProjectionSet {
+        let nu = g.n_det[0];
+        let nv = g.n_det[1];
+        let mut out = ProjectionSet::zeros(nu, nv, g.n_angles());
+        let (lo, hi) = g.volume_bbox();
+        let n = [vol.nx, vol.ny, vol.nz];
+        for a in 0..g.n_angles() {
+            let frame = g.frame(a);
+            for iv in 0..nv {
+                for iu in 0..nu {
+                    let pix = g.det_pixel(&frame, iu, iv);
+                    *out.at_mut(iu, iv, a) =
+                        raytrace_ref(&frame.src, &pix, &lo, &hi, &g.d_vox, &n, &vol.data);
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -218,6 +372,46 @@ mod tests {
         let data = vec![1.0f32; 512];
         let v = raytrace(&[-100.0, 50.0, 0.0], &[100.0, 50.0, 0.0], &lo, &hi, &dv, &n, &data);
         assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn golden_parity_vs_reference() {
+        // The optimized traversal (affine addressing, f32 accumulation,
+        // stride-walked index) against the pre-refactor f64 oracle.
+        let n = 24;
+        let g = Geometry::cone_beam(n, 8);
+        let v = phantom::shepp_logan(n);
+        let opt = project(&g, &v, 2);
+        let oracle = reference::project_ref(&g, &v);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (i, (a, b)) in oracle.data.iter().zip(&opt.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                "pixel {i}: oracle {a} vs optimized {b}"
+            );
+            num += ((a - b) as f64).powi(2);
+            den += (*a as f64).powi(2);
+        }
+        let rel = (num / den.max(1e-12)).sqrt();
+        assert!(rel < 1e-5, "relative L2 deviation from oracle: {rel:.3e}");
+    }
+
+    #[test]
+    fn golden_parity_with_detector_offset() {
+        // Panel-shifted scans exercise the affine origin path.
+        let n = 16;
+        let mut g = Geometry::cone_beam(n, 6);
+        g.offset_det = [2.5, -1.5];
+        let v = phantom::shepp_logan(n);
+        let opt = project(&g, &v, 2);
+        let oracle = reference::project_ref(&g, &v);
+        for (i, (a, b)) in oracle.data.iter().zip(&opt.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                "pixel {i}: oracle {a} vs optimized {b}"
+            );
+        }
     }
 
     #[test]

@@ -9,11 +9,34 @@
 //!
 //! Like the projectors, the kernel accepts slab geometries, which is how
 //! the coordinator backprojects image pieces independently (paper Alg. 2).
+//!
+//! Hot-path structure (DESIGN.md §Perf, EXPERIMENTS.md §Perf): the angle
+//! loop is **blocked** — a block of [`ANGLE_BLOCK`] projections is swept
+//! over a tile of [`SLICE_TILE`] z-slices before the next block is
+//! touched, so the block stays resident in L2 instead of streaming every
+//! projection past every slice (the CUDA code gets the equivalent locality
+//! from the 3-D texture cache; Petascale-XCT-style loop blocking is the
+//! CPU analogue). Within a detector row the x-inner loop is split into
+//! two passes over a small tile: a pure-FMA f32 pass that computes pixel
+//! coordinates and weights (auto-vectorizable, one divide per voxel), then
+//! a gather pass doing the bilinear fetch and accumulate. Accumulation
+//! order over angles is identical to the naive loop, so results do not
+//! depend on the thread count or the blocking factors.
 
 use crate::geometry::Geometry;
 use crate::kernels::BackprojWeight;
 use crate::util::threadpool::parallel_for;
 use crate::volume::{ProjectionSet, Volume};
+
+/// Projections swept together over a slice tile (~16 × a 64² f32 panel
+/// ≈ 256 KiB — sized for a shared L2).
+const ANGLE_BLOCK: usize = 16;
+/// z-slices per task chunk; the unit of write disjointness and of reuse
+/// of a resident angle block.
+const SLICE_TILE: usize = 4;
+/// x-tile for the two-pass inner loop (coordinate/weight buffers live on
+/// the stack).
+const X_TILE: usize = 128;
 
 /// Backproject all angles of `g` into a volume of `g.n_vox`.
 pub fn backproject(
@@ -27,7 +50,7 @@ pub fn backproject(
     assert_eq!(proj.n_angles, g.n_angles(), "projection angle count mismatch");
 
     let [nx, ny, nz] = g.n_vox;
-    let mut out = Volume::zeros(nx, ny, nz);
+    let mut out = crate::kernels::scratch::take_volume(nx, ny, nz);
     let (lo, _) = g.volume_bbox();
 
     // Per-angle trig, hoisted out of the voxel loop.
@@ -35,78 +58,102 @@ pub fn backproject(
 
     let dso = g.dso;
     let dsd = g.dsd;
-    let inv_du = 1.0 / g.d_det[0];
-    let inv_dv = 1.0 / g.d_det[1];
     let nu = g.n_det[0];
     let nvd = g.n_det[1];
-    let off_u = g.offset_det[0];
-    let off_v = g.offset_det[1];
-    let half_u = nu as f64 / 2.0 - 0.5;
-    let half_v = nvd as f64 / 2.0 - 0.5;
+    let per_proj = nu * nvd;
+    let n_angles = g.n_angles();
+
+    // f32 inner-loop constants (f64 setup).
+    let inv_du = (1.0 / g.d_det[0]) as f32;
+    let inv_dv = (1.0 / g.d_det[1]) as f32;
+    let off_u = g.offset_det[0] as f32;
+    let off_v = g.offset_det[1] as f32;
+    let half_u = (nu as f64 / 2.0 - 0.5) as f32;
+    let half_v = (nvd as f64 / 2.0 - 0.5) as f32;
+    let dso_f = dso as f32;
+    let dsd_f = dsd as f32;
+    let fdk = matches!(weight, BackprojWeight::Fdk);
 
     // Matched-weight scale: approximates Σ_rays ℓ over the voxel footprint
-    // (see module docs in DESIGN.md §Perf / kernels): ℓ̄·(dvox·M)²/(du·dv)
-    // with M = DSD/(DSO − r·ŝ). The constant part is hoisted here.
+    // (see DESIGN.md §Perf / kernels): ℓ̄·(dvox·M)²/(du·dv) with
+    // M = DSD/(DSO − r·ŝ). The constant part is hoisted here.
     let dvox = g.d_vox[0].min(g.d_vox[1]).min(g.d_vox[2]);
-    let matched_scale = dvox * dvox * dvox * dsd * dsd * inv_du * inv_dv;
+    let matched_scale =
+        (dvox * dvox * dvox * dsd * dsd * (1.0 / g.d_det[0]) * (1.0 / g.d_det[1])) as f32;
 
-    // §Perf (EXPERIMENTS.md): angle-OUTER loop over each z-slice keeps a
-    // single projection hot in cache (the CUDA code gets this from the
-    // 3-D texture cache; naive voxel-outer order thrashes between
-    // projections), and the per-(angle,y) geometry is hoisted so the
-    // x-inner loop is a fused multiply-add chain + one bilinear fetch.
+    let dvx = g.d_vox[0];
+    let px0 = lo[0] + 0.5 * dvx; // centre of voxel column x = 0
+
     let ptr = SendPtr(out.data.as_mut_ptr());
-    parallel_for(nz, threads, 1, |z0, z1| {
+    parallel_for(nz, threads, SLICE_TILE, |z0, z1| {
         let ptr = ptr;
-        let mut slice_acc = vec![0.0f32; ny * nx];
-        for z in z0..z1 {
-            let pz = lo[2] + (z as f64 + 0.5) * g.d_vox[2];
-            slice_acc.iter_mut().for_each(|v| *v = 0.0);
-            for (a, &(s, c)) in trig.iter().enumerate() {
-                for y in 0..ny {
-                    let py = lo[1] + (y as f64 + 0.5) * g.d_vox[1];
-                    // hoisted per-(angle, y) terms; x advances linearly so
-                    // rx/ry are affine in px.
-                    let py_s = py * s;
-                    let py_c = py * c;
-                    let row = &mut slice_acc[y * nx..(y + 1) * nx];
-                    for (x, acc) in row.iter_mut().enumerate() {
-                        let px = lo[0] + (x as f64 + 0.5) * g.d_vox[0];
-                        let rx = px * c + py_s;
-                        let depth = dso - rx; // distance along the axis
-                        if depth <= 1e-9 {
-                            continue; // behind the source
-                        }
-                        let ry = -px * s + py_c;
-                        // single division per voxel-angle: everything else
-                        // is multiplies (the inner loop is FMA-bound)
-                        let inv_depth = 1.0 / depth;
-                        let t = dsd * inv_depth;
-                        let fu = (t * ry - off_u) * inv_du + half_u;
-                        let fv = (t * pz - off_v) * inv_dv + half_v;
-                        let sample = bilinear(proj, a, fu, fv);
-                        if sample == 0.0 {
-                            continue;
-                        }
-                        let w = match weight {
-                            BackprojWeight::Fdk => {
-                                let r = dso * inv_depth;
-                                r * r
+        let mut fu_buf = [0.0f32; X_TILE];
+        let mut fv_buf = [0.0f32; X_TILE];
+        let mut w_buf = [0.0f32; X_TILE];
+        // Angle-blocked sweep: each block of projections is reused across
+        // every slice of this task's tile before the next block streams in.
+        for a0 in (0..n_angles).step_by(ANGLE_BLOCK) {
+            let a1 = (a0 + ANGLE_BLOCK).min(n_angles);
+            for z in z0..z1 {
+                let pz = (lo[2] + (z as f64 + 0.5) * g.d_vox[2]) as f32;
+                // SAFETY: tasks own disjoint z ranges, so this mutable
+                // slice aliases nothing in other tasks.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(z * ny * nx), ny * nx)
+                };
+                for a in a0..a1 {
+                    let (s, c) = trig[a];
+                    let pslice = &proj.data[a * per_proj..(a + 1) * per_proj];
+                    for y in 0..ny {
+                        let py = lo[1] + (y as f64 + 0.5) * g.d_vox[1];
+                        // Rotated coordinates are affine in the voxel
+                        // column index x (f64 bases, f32 walk):
+                        //   rx =  px·c + py·s = rx0 + x·drx
+                        //   ry = −px·s + py·c = ry0 + x·dry
+                        let rx0 = (px0 * c + py * s) as f32;
+                        let drx = (dvx * c) as f32;
+                        let ry0 = (-px0 * s + py * c) as f32;
+                        let dry = (-dvx * s) as f32;
+                        let row = &mut slice[y * nx..(y + 1) * nx];
+                        let mut x0 = 0usize;
+                        while x0 < nx {
+                            let tile = (nx - x0).min(X_TILE);
+                            // Pass 1 — pure arithmetic, auto-vectorizable:
+                            // one divide per voxel, everything else FMA.
+                            for i in 0..tile {
+                                let fx = (x0 + i) as f32;
+                                let rx = rx0 + fx * drx;
+                                let ry = ry0 + fx * dry;
+                                let depth = dso_f - rx; // distance along the axis
+                                let inv_depth = 1.0 / depth;
+                                let t = dsd_f * inv_depth;
+                                fu_buf[i] = (t * ry - off_u) * inv_du + half_u;
+                                fv_buf[i] = (t * pz - off_v) * inv_dv + half_v;
+                                let w = if fdk {
+                                    let r = dso_f * inv_depth;
+                                    r * r
+                                } else {
+                                    matched_scale * inv_depth * inv_depth
+                                };
+                                // behind the source → no contribution
+                                w_buf[i] = if depth > 1e-9 { w } else { 0.0 };
                             }
-                            BackprojWeight::Matched => {
-                                matched_scale * inv_depth * inv_depth
+                            // Pass 2 — gather + accumulate.
+                            for i in 0..tile {
+                                let w = w_buf[i];
+                                if w == 0.0 {
+                                    continue;
+                                }
+                                let sample = bilinear(pslice, nu, nvd, fu_buf[i], fv_buf[i]);
+                                if sample == 0.0 {
+                                    continue;
+                                }
+                                row[x0 + i] += w * sample;
                             }
-                        };
-                        *acc += (w * sample as f64) as f32;
+                            x0 += tile;
+                        }
                     }
                 }
-            }
-            unsafe {
-                std::ptr::copy_nonoverlapping(
-                    slice_acc.as_ptr(),
-                    ptr.0.add(z * ny * nx),
-                    ny * nx,
-                );
             }
         }
     });
@@ -118,56 +165,139 @@ struct SendPtr(*mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
-/// Bilinear fetch from projection `a` at fractional pixel `(fu, fv)`.
+/// Bilinear fetch from one projection panel at fractional pixel `(fu, fv)`.
 /// Points more than half a pixel outside the panel contribute zero
 /// (matching TIGRE's boundary handling).
-#[inline]
-fn bilinear(proj: &ProjectionSet, a: usize, fu: f64, fv: f64) -> f32 {
-    let nu = proj.nu;
-    let nv = proj.nv;
+#[inline(always)]
+fn bilinear(panel: &[f32], nu: usize, nv: usize, fu: f32, fv: f32) -> f32 {
     // fast path: strictly interior — no clamping, contiguous 2×2 fetch
-    if fu >= 0.0 && fv >= 0.0 && fu < (nu - 1) as f64 && fv < (nv - 1) as f64 {
+    if fu >= 0.0 && fv >= 0.0 && fu < (nu - 1) as f32 && fv < (nv - 1) as f32 {
         let u0 = fu as usize;
         let v0 = fv as usize;
-        let wu = (fu - u0 as f64) as f32;
-        let wv = (fv - v0 as f64) as f32;
-        let base = (a * nv + v0) * nu + u0;
+        let wu = fu - u0 as f32;
+        let wv = fv - v0 as f32;
+        let base = v0 * nu + u0;
         // SAFETY: u0+1 < nu and v0+1 < nv by the branch condition.
         unsafe {
-            let p00 = *proj.data.get_unchecked(base);
-            let p10 = *proj.data.get_unchecked(base + 1);
-            let p01 = *proj.data.get_unchecked(base + nu);
-            let p11 = *proj.data.get_unchecked(base + nu + 1);
+            let p00 = *panel.get_unchecked(base);
+            let p10 = *panel.get_unchecked(base + 1);
+            let p01 = *panel.get_unchecked(base + nu);
+            let p11 = *panel.get_unchecked(base + nu + 1);
             let c0 = p00 + (p10 - p00) * wu;
             let c1 = p01 + (p11 - p01) * wu;
-            return c0 + (c1 - c0) * wv;
+            c0 + (c1 - c0) * wv
         }
+    } else {
+        bilinear_edge(panel, nu, nv, fu, fv)
     }
-    bilinear_edge(proj, a, fu, fv)
 }
 
 /// Slow path: the half-pixel border (clamped taps) and outside (zero).
 #[inline(never)]
-fn bilinear_edge(proj: &ProjectionSet, a: usize, fu: f64, fv: f64) -> f32 {
-    let nu = proj.nu as isize;
-    let nv = proj.nv as isize;
-    if fu <= -0.5 || fv <= -0.5 || fu >= nu as f64 - 0.5 || fv >= nv as f64 - 0.5 {
-        return 0.0;
+fn bilinear_edge(panel: &[f32], nu: usize, nv: usize, fu: f32, fv: f32) -> f32 {
+    let nui = nu as isize;
+    let nvi = nv as isize;
+    if !(fu > -0.5 && fv > -0.5 && fu < nu as f32 - 0.5 && fv < nv as f32 - 0.5) {
+        return 0.0; // outside the panel (also catches NaN coordinates)
     }
     let u0 = fu.floor();
     let v0 = fv.floor();
-    let wu = (fu - u0) as f32;
-    let wv = (fv - v0) as f32;
-    let cl = |i: f64, n: isize| (i.max(0.0) as isize).min(n - 1) as usize;
-    let (u0i, u1i) = (cl(u0, nu), cl(u0 + 1.0, nu));
-    let (v0i, v1i) = (cl(v0, nv), cl(v0 + 1.0, nv));
-    let p00 = proj.at(u0i, v0i, a);
-    let p10 = proj.at(u1i, v0i, a);
-    let p01 = proj.at(u0i, v1i, a);
-    let p11 = proj.at(u1i, v1i, a);
+    let wu = fu - u0;
+    let wv = fv - v0;
+    let cl = |i: f32, n: isize| (i.max(0.0) as isize).min(n - 1) as usize;
+    let (u0i, u1i) = (cl(u0, nui), cl(u0 + 1.0, nui));
+    let (v0i, v1i) = (cl(v0, nvi), cl(v0 + 1.0, nvi));
+    let p00 = panel[v0i * nu + u0i];
+    let p10 = panel[v0i * nu + u1i];
+    let p01 = panel[v1i * nu + u0i];
+    let p11 = panel[v1i * nu + u1i];
     let c0 = p00 + (p10 - p00) * wu;
     let c1 = p01 + (p11 - p01) * wu;
     c0 + (c1 - c0) * wv
+}
+
+/// Pre-refactor scalar backprojector (f64 per-voxel arithmetic, angle
+/// streaming per z-slice) — kept verbatim as the golden oracle.
+#[cfg(test)]
+pub(crate) mod reference {
+    use super::*;
+
+    pub fn backproject_ref(g: &Geometry, proj: &ProjectionSet, weight: BackprojWeight) -> Volume {
+        let [nx, ny, nz] = g.n_vox;
+        let mut out = Volume::zeros(nx, ny, nz);
+        let (lo, _) = g.volume_bbox();
+        let trig: Vec<(f64, f64)> = g.angles.iter().map(|&t| t.sin_cos()).collect();
+        let dso = g.dso;
+        let dsd = g.dsd;
+        let inv_du = 1.0 / g.d_det[0];
+        let inv_dv = 1.0 / g.d_det[1];
+        let nu = g.n_det[0];
+        let nvd = g.n_det[1];
+        let off_u = g.offset_det[0];
+        let off_v = g.offset_det[1];
+        let half_u = nu as f64 / 2.0 - 0.5;
+        let half_v = nvd as f64 / 2.0 - 0.5;
+        let dvox = g.d_vox[0].min(g.d_vox[1]).min(g.d_vox[2]);
+        let matched_scale = dvox * dvox * dvox * dsd * dsd * inv_du * inv_dv;
+        for z in 0..nz {
+            let pz = lo[2] + (z as f64 + 0.5) * g.d_vox[2];
+            for (a, &(s, c)) in trig.iter().enumerate() {
+                for y in 0..ny {
+                    let py = lo[1] + (y as f64 + 0.5) * g.d_vox[1];
+                    let py_s = py * s;
+                    let py_c = py * c;
+                    for x in 0..nx {
+                        let px = lo[0] + (x as f64 + 0.5) * g.d_vox[0];
+                        let rx = px * c + py_s;
+                        let depth = dso - rx;
+                        if depth <= 1e-9 {
+                            continue;
+                        }
+                        let ry = -px * s + py_c;
+                        let inv_depth = 1.0 / depth;
+                        let t = dsd * inv_depth;
+                        let fu = (t * ry - off_u) * inv_du + half_u;
+                        let fv = (t * pz - off_v) * inv_dv + half_v;
+                        let sample = bilinear_f64(proj, a, fu, fv);
+                        if sample == 0.0 {
+                            continue;
+                        }
+                        let w = match weight {
+                            BackprojWeight::Fdk => {
+                                let r = dso * inv_depth;
+                                r * r
+                            }
+                            BackprojWeight::Matched => matched_scale * inv_depth * inv_depth,
+                        };
+                        out.data[(z * ny + y) * nx + x] += (w * sample as f64) as f32;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn bilinear_f64(proj: &ProjectionSet, a: usize, fu: f64, fv: f64) -> f32 {
+        let nu = proj.nu as isize;
+        let nv = proj.nv as isize;
+        if fu <= -0.5 || fv <= -0.5 || fu >= nu as f64 - 0.5 || fv >= nv as f64 - 0.5 {
+            return 0.0;
+        }
+        let u0 = fu.floor();
+        let v0 = fv.floor();
+        let wu = (fu - u0) as f32;
+        let wv = (fv - v0) as f32;
+        let cl = |i: f64, n: isize| (i.max(0.0) as isize).min(n - 1) as usize;
+        let (u0i, u1i) = (cl(u0, nu), cl(u0 + 1.0, nu));
+        let (v0i, v1i) = (cl(v0, nv), cl(v0 + 1.0, nv));
+        let p00 = proj.at(u0i, v0i, a);
+        let p10 = proj.at(u1i, v0i, a);
+        let p01 = proj.at(u0i, v1i, a);
+        let p11 = proj.at(u1i, v1i, a);
+        let c0 = p00 + (p10 - p00) * wu;
+        let c1 = p01 + (p11 - p01) * wu;
+        c0 + (c1 - c0) * wv
+    }
 }
 
 #[cfg(test)]
@@ -175,6 +305,50 @@ mod tests {
     use super::*;
     use crate::kernels::{forward, Projector};
     use crate::phantom;
+
+    #[test]
+    fn golden_parity_vs_reference() {
+        // Optimized (angle-blocked, two-pass f32) against the pre-refactor
+        // f64 oracle, for both weightings and with enough angles to cross
+        // an ANGLE_BLOCK boundary.
+        let n = 20;
+        let g = Geometry::cone_beam(n, 2 * ANGLE_BLOCK + 3);
+        let v = phantom::shepp_logan(n);
+        let p = forward(&g, &v, Projector::Siddon, 2);
+        for weight in [BackprojWeight::Fdk, BackprojWeight::Matched] {
+            let opt = backproject(&g, &p, weight, 3);
+            let oracle = reference::backproject_ref(&g, &p, weight);
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (i, (a, b)) in oracle.data.iter().zip(&opt.data).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                    "{weight:?} voxel {i}: oracle {a} vs optimized {b}"
+                );
+                num += ((a - b) as f64).powi(2);
+                den += (*a as f64).powi(2);
+            }
+            let rel = (num / den.max(1e-12)).sqrt();
+            assert!(rel < 1e-5, "{weight:?} relative L2 deviation: {rel:.3e}");
+        }
+    }
+
+    #[test]
+    fn golden_parity_with_detector_offset() {
+        let n = 16;
+        let mut g = Geometry::cone_beam(n, 7);
+        g.offset_det = [1.75, -2.5];
+        let v = phantom::shepp_logan(n);
+        let p = forward(&g, &v, Projector::Siddon, 2);
+        let opt = backproject(&g, &p, BackprojWeight::Fdk, 2);
+        let oracle = reference::backproject_ref(&g, &p, BackprojWeight::Fdk);
+        for (i, (a, b)) in oracle.data.iter().zip(&opt.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                "voxel {i}: oracle {a} vs optimized {b}"
+            );
+        }
+    }
 
     #[test]
     fn backprojection_is_linear() {

@@ -36,8 +36,8 @@ pub mod runtime;
 pub mod config;
 pub mod bench;
 
-/// CLI entrypoint (subcommand dispatch lives in `config::cli_main` once
-/// implemented; placeholder until the coordinator lands).
+/// CLI entrypoint: dispatches `tigre <subcommand> ...` to the coordinator,
+/// algorithm suite and bench runners (see `config::cli_main`).
 pub fn run_cli() -> anyhow::Result<()> {
     config::cli_main()
 }

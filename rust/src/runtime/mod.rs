@@ -14,7 +14,36 @@
 //! arbitrary sizes either way (the paper's kernel-agnosticism, §2).
 
 pub mod manifest;
+
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+
+/// Stub backend for offline builds: the `xla` crate ships with the GPU
+/// image only, so the default build reports "no artifact" for every
+/// shape and the callers below fall back to the native kernels.
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt {
+    use crate::geometry::Geometry;
+    use crate::volume::{ProjectionSet, Volume};
+    use std::path::Path;
+
+    pub fn try_forward(
+        _dir: &Path,
+        _g: &Geometry,
+        _vol: &Volume,
+    ) -> anyhow::Result<Option<ProjectionSet>> {
+        Ok(None)
+    }
+
+    pub fn try_backward(
+        _dir: &Path,
+        _g: &Geometry,
+        _proj: &ProjectionSet,
+        _weight: crate::kernels::BackprojWeight,
+    ) -> anyhow::Result<Option<Volume>> {
+        Ok(None)
+    }
+}
 
 pub use manifest::{Manifest, ManifestEntry};
 

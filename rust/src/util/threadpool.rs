@@ -47,11 +47,33 @@ where
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// A persistent thread pool with graceful shutdown on drop.
+type Pending = (Mutex<usize>, std::sync::Condvar);
+
+/// Decrements the pending-job count on drop, so a panicking job can
+/// never leave `wait_idle` blocked forever: the decrement happens during
+/// unwinding as well as on the normal path.
+struct PendingGuard<'a>(&'a Pending);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let (lock, cvar) = self.0;
+        // the count mutex is only ever held for the increment/decrement
+        // itself, so it cannot be poisoned by a job panic
+        let mut p = lock.lock().unwrap_or_else(|e| e.into_inner());
+        *p -= 1;
+        if *p == 0 {
+            cvar.notify_all();
+        }
+    }
+}
+
+/// A persistent thread pool with graceful shutdown on drop. Jobs that
+/// panic are contained: the panic is caught on the worker, the pending
+/// count still drops (drop guard), and the worker keeps serving jobs.
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     handles: Vec<thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    pending: Arc<Pending>,
 }
 
 impl ThreadPool {
@@ -59,7 +81,7 @@ impl ThreadPool {
         let workers = workers.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let pending: Arc<Pending> = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
             let rx = Arc::clone(&rx);
@@ -71,12 +93,18 @@ impl ThreadPool {
                 };
                 match job {
                     Ok(job) => {
-                        job();
-                        let (lock, cvar) = &*pending;
-                        let mut p = lock.lock().unwrap();
-                        *p -= 1;
-                        if *p == 0 {
-                            cvar.notify_all();
+                        let _guard = PendingGuard(&pending);
+                        // contain job panics so the worker survives and
+                        // the guard's decrement runs exactly once
+                        let result =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                        if let Err(payload) = result {
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| payload.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "<non-string panic>".into());
+                            crate::log_warn!("threadpool job panicked: {msg}");
                         }
                     }
                     Err(_) => break,
@@ -99,12 +127,13 @@ impl ThreadPool {
             .expect("worker hung up");
     }
 
-    /// Block until every submitted job has completed.
+    /// Block until every submitted job has completed (including jobs
+    /// that panicked — see [`PendingGuard`]).
     pub fn wait_idle(&self) {
         let (lock, cvar) = &*self.pending;
-        let mut p = lock.lock().unwrap();
+        let mut p = lock.lock().unwrap_or_else(|e| e.into_inner());
         while *p > 0 {
-            p = cvar.wait(p).unwrap();
+            p = cvar.wait(p).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -167,6 +196,46 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs() {
+        // A panicking job must still decrement the pending count (drop
+        // guard) — before the fix this deadlocked wait_idle — and must
+        // not kill the worker thread.
+        let pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.submit(|| panic!("job panic (expected in this test)"));
+        }
+        pool.wait_idle(); // would hang forever without the guard
+
+        // the pool still processes subsequent jobs on all workers
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn pool_mixed_panicking_and_normal_jobs() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for i in 0..30 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                if i % 3 == 0 {
+                    panic!("boom {i}");
+                }
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 20);
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Offline shim for the subset of the `anyhow` API this workspace uses.
+//!
+//! The build environment has no crates.io access, so the real `anyhow`
+//! cannot be fetched; this crate re-implements the pieces the code base
+//! relies on with identical spelling and semantics:
+//!
+//!  * [`Error`] — an opaque error value carrying a context chain.
+//!    `Display` prints the outermost message; alternate display (`{:#}`)
+//!    prints the whole chain joined by `": "`, matching anyhow.
+//!  * [`Result`] — `Result<T, Error>` with a defaulted error type.
+//!  * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//!  * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!    and `Option`.
+//!  * `From<E: std::error::Error>` so `?` converts foreign errors.
+
+use std::fmt;
+
+/// An error with a chain of context messages (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow's Debug prints the message plus a "Caused by" list; a
+        // single joined line carries the same information for test
+        // failures and `main` error returns.
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` to `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.root_cause(), "inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("17").unwrap(), 17);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let n: Option<i32> = None;
+        let e = n.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("formatting").unwrap_err();
+        assert!(format!("{e:#}").starts_with("formatting: "));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too big");
+        let from_string: Error = anyhow!(String::from("owned message"));
+        assert_eq!(format!("{from_string}"), "owned message");
+    }
+}
