@@ -1,0 +1,49 @@
+//! Coordinator-level end-to-end benchmark runner: pipelined executor vs
+//! the sequential baseline (see `tigre::bench::coordinator`), producer of
+//! the `BENCH_coordinator.json` perf trajectory.
+//!
+//! Usage:
+//!   cargo bench --bench coordinator                            # print table
+//!   cargo bench --bench coordinator -- --smoke                 # CI sanity run
+//!   cargo bench --bench coordinator -- \
+//!       --json BENCH_coordinator.json --label post-PR3         # append a run
+//!
+//! Thread count follows `TIGRE_THREADS` when set; the pipelined executor
+//! divides the same total across its device workers, so the comparison is
+//! iso-parallelism. Reported medians are sim-subtracted (the DES replay
+//! cost, identical on both sides, is measured and removed — see
+//! `bench::coordinator`).
+
+use tigre::bench::{coordinator as cb, parse_bench_args};
+use tigre::kernels;
+use tigre::util::stats::fmt_duration;
+
+fn main() {
+    let args = parse_bench_args();
+    let threads = kernels::kernel_threads();
+    println!(
+        "=== coordinator executors: pipelined vs sequential ({threads} host threads{}) ===",
+        if args.smoke { ", smoke mode" } else { "" }
+    );
+
+    let entries = cb::run_suite(args.smoke, threads);
+    for e in &entries {
+        println!(
+            "{:<36} sequential {:>10}  pipelined {:>10}  {:>5.2}x  (sim {:>9}, {} samples)",
+            e.name,
+            fmt_duration(e.sequential_median_s),
+            fmt_duration(e.pipelined_median_s),
+            e.speedup(),
+            fmt_duration(e.sim_median_s),
+            e.samples,
+        );
+    }
+
+    if let Some(path) = args.json_path {
+        if let Err(e) = cb::append_run_to_file(&path, &args.label, threads, args.smoke, &entries) {
+            eprintln!("error: writing {}: {e:#}", path.display());
+            std::process::exit(1);
+        }
+        println!("appended run '{}' to {}", args.label, path.display());
+    }
+}

@@ -14,49 +14,20 @@
 //! Thread count follows `TIGRE_THREADS` when set, so trajectory entries
 //! are comparable across machines with pinned parallelism.
 
-use std::path::PathBuf;
 use std::time::Duration;
 
-use tigre::bench::kernels as kb;
+use tigre::bench::{kernels as kb, parse_bench_args};
 use tigre::geometry::Geometry;
 use tigre::kernels;
 use tigre::util::json::Json;
 use tigre::util::stats::{bench, fmt_duration};
 
 fn main() {
-    // hand-rolled flag parsing (the bench harness passes args after `--`)
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let mut smoke = false;
-    let mut json_path: Option<PathBuf> = None;
-    let mut label = String::from("run");
-    let mut i = 0;
-    while i < args.len() {
-        match args[i].as_str() {
-            "--smoke" => smoke = true,
-            "--json" => {
-                i += 1;
-                json_path = Some(PathBuf::from(args.get(i).map(String::as_str).unwrap_or_else(
-                    || {
-                        eprintln!("--json requires a path");
-                        std::process::exit(2);
-                    },
-                )));
-            }
-            "--label" => {
-                i += 1;
-                label = args.get(i).cloned().unwrap_or_else(|| {
-                    eprintln!("--label requires a value");
-                    std::process::exit(2);
-                });
-            }
-            "--bench" | "--test" => {} // ignore libtest-style flags
-            other => {
-                eprintln!("unknown flag '{other}' (known: --smoke --json <path> --label <name>)");
-                std::process::exit(2);
-            }
-        }
-        i += 1;
-    }
+    // shared trajectory-runner flags (see tigre::bench::parse_bench_args)
+    let args = parse_bench_args();
+    let smoke = args.smoke;
+    let json_path = args.json_path;
+    let label = args.label;
 
     let threads = kernels::kernel_threads();
     println!(

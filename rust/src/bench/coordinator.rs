@@ -1,0 +1,292 @@
+//! Coordinator-level end-to-end benchmark: the pipelined real executor
+//! against the host-sequential baseline, on the operator calls users
+//! actually make (`MultiGpu::forward`/`backward` in `Full` mode). This is
+//! the substrate of the tracked `BENCH_coordinator.json` perf trajectory
+//! (EXPERIMENTS.md §Executor-pipeline); `benches/coordinator.rs` is the
+//! runner.
+//!
+//! Every entry measures the *same plan* twice — `ExecutorConfig::pipelined`
+//! on and off — with the same total **kernel**-thread budget (the
+//! pipelined executor divides the backend's threads across its device
+//! workers and never runs more concurrent workers than that budget; its
+//! per-worker merge lanes are the baseline's inline `+=` folds moved off
+//! the critical path, not additional work), so the speedup isolates what
+//! the pipeline changes: concurrent device workers, zero-copy staging
+//! views, and the merge-fold overlapping kernels, instead of
+//! host-serialized launches with owned-copy staging.
+//!
+//! `Full` mode always replays the discrete-event simulation before the
+//! real execution; that fixed cost is identical on both sides and would
+//! compress every ratio toward 1, so each workload also times
+//! `ExecMode::SimOnly` and reports **sim-subtracted** medians (the raw
+//! sim median is recorded per entry as `sim_median_s`).
+//!
+//! The acceptance workload is the multi-device **image-split** plan
+//! (devices shrunk until slabs + chunk streaming are forced), which is
+//! where the sequential path serializes the most work; the angle-split
+//! plan rides along as the lighter comparison point.
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::coordinator::{ExecMode, MultiGpu, SplitConfig};
+use crate::geometry::Geometry;
+use crate::phantom;
+use crate::util::json::Json;
+use crate::util::stats::bench;
+use crate::volume::{ProjectionSet, Volume};
+
+/// Schema tag of `BENCH_coordinator.json`; bump on breaking layout changes.
+pub const SCHEMA: &str = "tigre-bench-coordinator/v1";
+
+/// The "tiny device" threshold for the acceptance workload (re-exported
+/// from the splitter, which owns the buffer arithmetic it must track).
+pub use crate::coordinator::splitter::image_split_mem;
+
+/// One benchmarked operator workload: sequential vs pipelined. The
+/// executor medians are **sim-subtracted** (see module docs): the planning
+/// + discrete-event replay time — identical for both executors — is
+/// measured separately (`sim_median_s`) and removed, so the speedup
+/// compares real execution against real execution.
+#[derive(Clone, Debug)]
+pub struct CoordBenchEntry {
+    /// Workload id, e.g. `fp image-split n=48 a=24 gpus=2`.
+    pub name: String,
+    pub sequential_median_s: f64,
+    pub pipelined_median_s: f64,
+    /// Median of the `SimOnly` call for this workload (already removed
+    /// from the two executor medians above).
+    pub sim_median_s: f64,
+    /// Measured samples per executor (the smaller of the two sides).
+    pub samples: usize,
+}
+
+impl CoordBenchEntry {
+    /// Sequential time over pipelined time (>1 means the pipeline wins).
+    pub fn speedup(&self) -> f64 {
+        if self.pipelined_median_s > 0.0 {
+            self.sequential_median_s / self.pipelined_median_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Run the executor suite. `smoke` shrinks sizes and budgets to a
+/// sub-second CI sanity run; the entry set (names modulo `n=` values)
+/// stays the same so JSON consumers need no special cases.
+pub fn run_suite(smoke: bool, threads: usize) -> Vec<CoordBenchEntry> {
+    let mut out = Vec::new();
+    // (n, n_angles, gpus) per workload row
+    let cases: &[(usize, usize, usize)] =
+        if smoke { &[(20, 12, 2)] } else { &[(48, 24, 2), (64, 32, 3)] };
+    let budget = if smoke { Duration::from_millis(40) } else { Duration::from_millis(900) };
+    let (warmup, min_iters) = if smoke { (0, 1) } else { (1, 3) };
+
+    for &(n, n_angles, gpus) in cases {
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+
+        // the acceptance workload: multi-device image-split plan
+        let mem = image_split_mem(&g, &SplitConfig::default());
+        let split_ctx = MultiGpu::gtx1080ti(gpus).with_device_mem(mem).with_threads(threads);
+        out.extend(bench_pair(
+            &format!("image-split n={n} a={n_angles} gpus={gpus}"),
+            &split_ctx,
+            &g,
+            &v,
+            warmup,
+            min_iters,
+            budget,
+        ));
+
+        // angle-split comparison point (full image resident per device)
+        let full_ctx = MultiGpu::gtx1080ti(gpus).with_threads(threads);
+        out.extend(bench_pair(
+            &format!("angle-split n={n} a={n_angles} gpus={gpus}"),
+            &full_ctx,
+            &g,
+            &v,
+            warmup,
+            min_iters,
+            budget,
+        ));
+    }
+    out
+}
+
+/// Measure FP and BP for one context, sequential vs pipelined.
+fn bench_pair(
+    tag: &str,
+    ctx: &MultiGpu,
+    g: &Geometry,
+    v: &Volume,
+    warmup: usize,
+    min_iters: usize,
+    budget: Duration,
+) -> Vec<CoordBenchEntry> {
+    let pipe = ctx.clone();
+    let seq = ctx.clone().with_sequential_executor();
+
+    // projections for the BP side (content does not affect timing shape)
+    let p: ProjectionSet =
+        pipe.forward(g, Some(v), ExecMode::Full).expect("bench forward").0.unwrap();
+
+    // The Full-mode calls below each replay the DES schedule before real
+    // execution; time that fixed cost alone so it can be subtracted.
+    let fp_sim = bench(&format!("fp {tag} sim"), warmup, min_iters, budget, || {
+        std::hint::black_box(pipe.forward(g, None, ExecMode::SimOnly).expect("fp sim"));
+    });
+    let bp_sim = bench(&format!("bp {tag} sim"), warmup, min_iters, budget, || {
+        std::hint::black_box(pipe.backward(g, None, ExecMode::SimOnly).expect("bp sim"));
+    });
+
+    let fp_seq = bench(&format!("fp {tag} sequential"), warmup, min_iters, budget, || {
+        std::hint::black_box(seq.forward(g, Some(v), ExecMode::Full).expect("fp seq"));
+    });
+    let fp_pipe = bench(&format!("fp {tag} pipelined"), warmup, min_iters, budget, || {
+        std::hint::black_box(pipe.forward(g, Some(v), ExecMode::Full).expect("fp pipe"));
+    });
+    let bp_seq = bench(&format!("bp {tag} sequential"), warmup, min_iters, budget, || {
+        std::hint::black_box(seq.backward(g, Some(&p), ExecMode::Full).expect("bp seq"));
+    });
+    let bp_pipe = bench(&format!("bp {tag} pipelined"), warmup, min_iters, budget, || {
+        std::hint::black_box(pipe.backward(g, Some(&p), ExecMode::Full).expect("bp pipe"));
+    });
+
+    // sim-subtracted real-execution time, floored against timer noise
+    let minus_sim = |full: f64, sim: f64| (full - sim).max(1e-9);
+    let fp_sim_s = fp_sim.samples.median();
+    let bp_sim_s = bp_sim.samples.median();
+    vec![
+        CoordBenchEntry {
+            name: format!("fp {tag}"),
+            sequential_median_s: minus_sim(fp_seq.samples.median(), fp_sim_s),
+            pipelined_median_s: minus_sim(fp_pipe.samples.median(), fp_sim_s),
+            sim_median_s: fp_sim_s,
+            samples: fp_seq.samples.len().min(fp_pipe.samples.len()),
+        },
+        CoordBenchEntry {
+            name: format!("bp {tag}"),
+            sequential_median_s: minus_sim(bp_seq.samples.median(), bp_sim_s),
+            pipelined_median_s: minus_sim(bp_pipe.samples.median(), bp_sim_s),
+            sim_median_s: bp_sim_s,
+            samples: bp_seq.samples.len().min(bp_pipe.samples.len()),
+        },
+    ]
+}
+
+/// Encode one run (label + entries) as a JSON object.
+pub fn run_to_json(label: &str, threads: usize, smoke: bool, entries: &[CoordBenchEntry]) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(label)),
+        ("threads", Json::num(threads as f64)),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "entries",
+            Json::arr(
+                entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("name", Json::str(e.name.clone())),
+                            ("sequential_median_s", Json::num(e.sequential_median_s)),
+                            ("pipelined_median_s", Json::num(e.pipelined_median_s)),
+                            ("sim_median_s", Json::num(e.sim_median_s)),
+                            ("samples", Json::num(e.samples as f64)),
+                            ("speedup", Json::num(e.speedup())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Append a run to the `BENCH_coordinator.json`-format trajectory at
+/// `path` (created if absent; `notes` and other top-level fields are
+/// preserved — see [`super::append_trajectory_run`]).
+pub fn append_run_to_file(
+    path: &Path,
+    label: &str,
+    threads: usize,
+    smoke: bool,
+    entries: &[CoordBenchEntry],
+) -> anyhow::Result<()> {
+    super::append_trajectory_run(path, SCHEMA, run_to_json(label, threads, smoke, entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_entries() -> Vec<CoordBenchEntry> {
+        vec![CoordBenchEntry {
+            name: "fp image-split n=48 a=24 gpus=2".into(),
+            sequential_median_s: 0.6,
+            pipelined_median_s: 0.3,
+            sim_median_s: 0.001,
+            samples: 3,
+        }]
+    }
+
+    #[test]
+    fn speedup_is_seq_over_pipe() {
+        assert!((fake_entries()[0].speedup() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_json_has_schema_fields() {
+        let j = run_to_json("probe", 4, true, &fake_entries());
+        assert_eq!(j.get("label").and_then(Json::as_str), Some("probe"));
+        let es = j.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(es.len(), 1);
+        assert!(es[0].get("sequential_median_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(es[0].get("pipelined_median_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!((es[0].get("speedup").and_then(Json::as_f64).unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn append_creates_then_appends() {
+        let dir = std::env::temp_dir().join(format!("tigre_bench_coord_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_coordinator.json");
+        let _ = std::fs::remove_file(&path);
+        append_run_to_file(&path, "r1", 4, true, &fake_entries()).unwrap();
+        append_run_to_file(&path, "r2", 4, true, &fake_entries()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        assert_eq!(doc.get("runs").and_then(Json::as_arr).unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn image_split_mem_actually_splits_both_operators() {
+        let g = Geometry::cone_beam(48, 24);
+        let cfg = SplitConfig::default();
+        let mem = image_split_mem(&g, &cfg);
+        for gpus in [2usize, 3] {
+            let fp = crate::coordinator::splitter::plan_forward(&g, gpus, mem, &cfg).unwrap();
+            assert!(fp.image_split, "gpus={gpus}: FP plan must image-split");
+            let bp = crate::coordinator::splitter::plan_backward(&g, gpus, mem, &cfg).unwrap();
+            assert!(bp.image_split, "gpus={gpus}: BP plan must image-split");
+            assert!(bp.splits_per_device() > 1, "gpus={gpus}: BP slab queue expected");
+        }
+    }
+
+    #[test]
+    fn smoke_suite_runs_and_covers_both_operators_and_plans() {
+        let entries = run_suite(true, 2);
+        assert_eq!(entries.len(), 4, "fp/bp × image-split/angle-split");
+        for e in &entries {
+            assert!(
+                e.sequential_median_s > 0.0 && e.pipelined_median_s > 0.0 && e.samples >= 1,
+                "{}: empty measurement",
+                e.name
+            );
+            assert!(e.speedup() > 0.0);
+        }
+        assert!(entries.iter().any(|e| e.name.starts_with("fp image-split")));
+        assert!(entries.iter().any(|e| e.name.starts_with("bp angle-split")));
+    }
+}

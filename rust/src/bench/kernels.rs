@@ -161,28 +161,7 @@ pub fn append_run_to_file(
     smoke: bool,
     entries: &[KernelBenchEntry],
 ) -> anyhow::Result<()> {
-    let mut top: std::collections::BTreeMap<String, Json> = std::collections::BTreeMap::new();
-    let mut runs: Vec<Json> = Vec::new();
-    if path.exists() {
-        let text = std::fs::read_to_string(path)?;
-        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
-        anyhow::ensure!(
-            doc.get("schema").and_then(Json::as_str) == Some(SCHEMA),
-            "{}: unexpected schema (want {SCHEMA})",
-            path.display()
-        );
-        if let Some(obj) = doc.as_obj() {
-            top = obj.clone();
-        }
-        if let Some(existing) = doc.get("runs").and_then(Json::as_arr) {
-            runs = existing.to_vec();
-        }
-    }
-    runs.push(run_to_json(label, threads, smoke, entries));
-    top.insert("schema".into(), Json::str(SCHEMA));
-    top.insert("runs".into(), Json::arr(runs));
-    std::fs::write(path, Json::Obj(top).pretty() + "\n")?;
-    Ok(())
+    super::append_trajectory_run(path, SCHEMA, run_to_json(label, threads, smoke, entries))
 }
 
 /// Speedup table between the first and last runs of a trajectory file

@@ -2,14 +2,99 @@
 //! `rust/benches/` (each bench regenerates one table/figure of the
 //! paper's evaluation; see DESIGN.md §5 for the experiment index).
 //! [`kernels`] owns the machine-readable kernel hot-path suite behind
-//! the `BENCH_kernels.json` trajectory.
+//! the `BENCH_kernels.json` trajectory; [`coordinator`] owns the
+//! pipelined-vs-sequential executor suite behind `BENCH_coordinator.json`
+//! (both share [`append_trajectory_run`] for the JSON file format).
 
+pub mod coordinator;
 pub mod kernels;
 
 use crate::coordinator::{baseline, ExecMode, MultiGpu};
 use crate::geometry::Geometry;
 use crate::simgpu::timeline::Breakdown;
+use crate::util::json::Json;
 use crate::util::stats::Table;
+
+/// Append one run object to a JSON perf-trajectory file: created if
+/// absent, schema-checked if present, `runs` extended by `run`, and every
+/// other top-level field (e.g. a checked-in `notes` block) preserved
+/// verbatim. Shared by the `BENCH_kernels.json` and
+/// `BENCH_coordinator.json` trajectories so both files keep one format.
+pub fn append_trajectory_run(
+    path: &std::path::Path,
+    schema: &str,
+    run: Json,
+) -> anyhow::Result<()> {
+    let mut top: std::collections::BTreeMap<String, Json> = std::collections::BTreeMap::new();
+    let mut runs: Vec<Json> = Vec::new();
+    if path.exists() {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        anyhow::ensure!(
+            doc.get("schema").and_then(Json::as_str) == Some(schema),
+            "{}: unexpected schema (want {schema})",
+            path.display()
+        );
+        if let Some(obj) = doc.as_obj() {
+            top = obj.clone();
+        }
+        if let Some(existing) = doc.get("runs").and_then(Json::as_arr) {
+            runs = existing.to_vec();
+        }
+    }
+    runs.push(run);
+    top.insert("schema".into(), Json::str(schema));
+    top.insert("runs".into(), Json::arr(runs));
+    std::fs::write(path, Json::Obj(top).pretty() + "\n")?;
+    Ok(())
+}
+
+/// Common CLI flags of the JSON-trajectory bench runners
+/// (`kernel_hotpath`, `coordinator`): `--smoke`, `--json <path>`,
+/// `--label <name>`; libtest-style `--bench`/`--test` are ignored.
+pub struct BenchArgs {
+    pub smoke: bool,
+    pub json_path: Option<std::path::PathBuf>,
+    pub label: String,
+}
+
+/// Parse the process arguments for a trajectory bench runner; prints a
+/// usage error and exits on unknown flags.
+pub fn parse_bench_args() -> BenchArgs {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut parsed =
+        BenchArgs { smoke: false, json_path: None, label: String::from("run") };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--smoke" => parsed.smoke = true,
+            "--json" => {
+                i += 1;
+                parsed.json_path =
+                    Some(std::path::PathBuf::from(args.get(i).map(String::as_str).unwrap_or_else(
+                        || {
+                            eprintln!("--json requires a path");
+                            std::process::exit(2);
+                        },
+                    )));
+            }
+            "--label" => {
+                i += 1;
+                parsed.label = args.get(i).cloned().unwrap_or_else(|| {
+                    eprintln!("--label requires a value");
+                    std::process::exit(2);
+                });
+            }
+            "--bench" | "--test" => {} // ignore libtest-style flags
+            other => {
+                eprintln!("unknown flag '{other}' (known: --smoke --json <path> --label <name>)");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+    parsed
+}
 
 /// The paper's Fig. 7–9 size grid (`N³` voxels, `N²` detector pixels,
 /// `N` angles). 3072 included: SimOnly needs no host data.

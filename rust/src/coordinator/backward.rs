@@ -151,29 +151,15 @@ pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
     sim.sync_all();
 }
 
-/// Real numerics with the identical partitioning. Chunk partials and the
-/// per-slab accumulator are recycled through the `kernels::scratch` arena
-/// once merged (see forward.rs — same rationale).
+/// Real numerics with the identical partitioning: the pipelined executor
+/// by default (see `coordinator::pipeline`), or the host-sequential
+/// baseline when `ctx.exec.pipelined` is off.
 fn execute_real(ctx: &MultiGpu, g: &Geometry, proj: &ProjectionSet, plan: &Plan) -> Volume {
-    use crate::kernels::scratch;
-    let mut out = Volume::zeros_like(g);
-    for dev in &plan.per_device {
-        for slab in &dev.slabs {
-            let gs = g.slab_geometry(slab.z0, slab.z1);
-            let mut acc = scratch::take_volume(g.n_vox[0], g.n_vox[1], slab.len());
-            for ch in &plan.angle_chunks {
-                let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
-                let sub = proj.extract_chunk(ch.a0, ch.a1);
-                let part = ctx.kernel_backward(&gc, &sub);
-                acc.add_scaled(&part, 1.0);
-                scratch::recycle_volume(part);
-                scratch::recycle_projections(sub);
-            }
-            out.insert_slab(slab.z0, &acc);
-            scratch::recycle_volume(acc);
-        }
+    if ctx.exec.pipelined {
+        super::pipeline::backward_pipelined(ctx, g, proj, plan)
+    } else {
+        super::pipeline::backward_sequential(ctx, g, proj, plan)
     }
-    out
 }
 
 #[cfg(test)]
@@ -193,18 +179,25 @@ mod tests {
         let reference = crate::kernels::backward(&g, &p, BackprojWeight::Fdk, 2);
 
         for n_gpus in [1, 2, 3] {
-            let plane = (n * n * 4) as u64;
-            // chunk = min(32, 12 angles) = 12 → buffers are 12 projections
-            let mem = 7 * plane + 2 * 12 * g.single_proj_bytes() + 8192;
-            let ctx = MultiGpu::gtx1080ti(n_gpus).with_device_mem(mem);
-            let (vol, stats) = ctx.backward(&g, Some(&p), ExecMode::Full).unwrap();
-            let vol = vol.unwrap();
-            assert!(stats.peak_device_bytes <= mem);
-            for (i, (a, b)) in reference.data.iter().zip(&vol.data).enumerate() {
-                assert!(
-                    (a - b).abs() <= 2e-3 * (1.0 + a.abs()),
-                    "gpus={n_gpus} voxel {i}: ref {a} vs split {b}"
-                );
+            // tiny devices force slab queues (splitter owns the threshold)
+            let mem = crate::coordinator::splitter::image_split_mem(
+                &g,
+                &crate::coordinator::SplitConfig::default(),
+            );
+            // both executors must match the unsplit reference: the
+            // pipelined default and the sequential baseline
+            for sequential in [false, true] {
+                let ctx = MultiGpu::gtx1080ti(n_gpus).with_device_mem(mem);
+                let ctx = if sequential { ctx.with_sequential_executor() } else { ctx };
+                let (vol, stats) = ctx.backward(&g, Some(&p), ExecMode::Full).unwrap();
+                let vol = vol.unwrap();
+                assert!(stats.peak_device_bytes <= mem);
+                for (i, (a, b)) in reference.data.iter().zip(&vol.data).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 2e-3 * (1.0 + a.abs()),
+                        "gpus={n_gpus} seq={sequential} voxel {i}: ref {a} vs split {b}"
+                    );
+                }
             }
         }
     }

@@ -5,7 +5,7 @@ use crate::geometry::Geometry;
 use crate::kernels::{BackprojWeight, Projector};
 use crate::simgpu::timeline::{breakdown, Breakdown};
 use crate::simgpu::{CostModel, GpuSpec, SimNode};
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::{ProjChunkView, ProjectionSet, Volume, VolumeSlabView};
 
 /// Kernel backend for the real-execution path.
 #[derive(Clone, Debug)]
@@ -36,6 +36,29 @@ pub enum ExecMode {
     /// Timeline only — no host data is allocated, so arbitrarily large
     /// problems can be *timed* (the Fig. 7–9 sweeps up to N = 3072).
     SimOnly,
+}
+
+/// How the **real** numeric path executes the plan (the simulated
+/// timeline is unaffected — it always models the paper's schedule).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecutorConfig {
+    /// `true` (default): the pipelined executor — device assignments run
+    /// concurrently on a thread pool, staging goes through zero-copy
+    /// slab/chunk views, and per-launch partials merge on a double-
+    /// buffered lane overlapping the next kernel (coordinator::pipeline).
+    /// `false`: the pre-PR3 host-sequential loops with owned-copy staging,
+    /// kept as the benchmark comparison baseline.
+    pub pipelined: bool,
+    /// Concurrent device workers for the pipelined executor; `0` (default)
+    /// means one per device assignment. Output is bit-identical for every
+    /// value — this only throttles concurrency (tests pin it to 1).
+    pub workers: usize,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        Self { pipelined: true, workers: 0 }
+    }
 }
 
 /// Simulated-time report for one operator call.
@@ -75,6 +98,8 @@ pub struct MultiGpu {
     pub cost: CostModel,
     pub split: super::splitter::SplitConfig,
     pub backend: Backend,
+    /// Real-execution strategy (pipelined vs sequential baseline).
+    pub exec: ExecutorConfig,
 }
 
 impl MultiGpu {
@@ -86,6 +111,7 @@ impl MultiGpu {
             cost: CostModel::gtx1080ti_pcie3(),
             split: super::splitter::SplitConfig::default(),
             backend: Backend::default(),
+            exec: ExecutorConfig::default(),
         }
     }
 
@@ -108,6 +134,27 @@ impl MultiGpu {
             Backend::Native { threads, .. } | Backend::Pjrt { threads, .. } => *threads = n,
         }
         self
+    }
+
+    /// Run the real path through the pre-PR3 host-sequential loops —
+    /// the benchmark baseline the pipelined executor is compared against.
+    pub fn with_sequential_executor(mut self) -> Self {
+        self.exec.pipelined = false;
+        self
+    }
+
+    /// Cap the pipelined executor at `n` concurrent device workers
+    /// (`0` = one per device). Output is identical for every value.
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.exec.workers = n;
+        self
+    }
+
+    /// Total kernel host threads the backend was configured with.
+    pub(crate) fn backend_threads(&self) -> usize {
+        match &self.backend {
+            Backend::Native { threads, .. } | Backend::Pjrt { threads, .. } => *threads,
+        }
     }
 
     pub fn fresh_sim(&self) -> SimNode {
@@ -159,6 +206,64 @@ impl MultiGpu {
             }
             Backend::Pjrt { artifacts_dir, weight, threads } => {
                 crate::runtime::backward_or_native(artifacts_dir, g, proj, *weight, *threads)
+            }
+        }
+    }
+
+    /// Zero-copy forward launch for the pipelined executor: project a
+    /// borrowed slab view into `out`, overwriting every element. `threads`
+    /// is the per-worker kernel thread budget (the pipeline divides the
+    /// backend total across concurrent device workers).
+    ///
+    /// PJRT caveat: artifacts require owned host buffers, so the `Pjrt`
+    /// arm below materializes the view **per launch**. The pipeline never
+    /// takes that arm — it special-cases PJRT onto the owned
+    /// `forward_or_native` path with at most one copy per slab (see
+    /// `coordinator::pipeline`); the arm exists only as a correct fallback
+    /// for callers without an owned buffer. Prefer the owned path.
+    pub(crate) fn kernel_forward_into(
+        &self,
+        g: &Geometry,
+        vol: &VolumeSlabView<'_>,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        match &self.backend {
+            Backend::Native { projector, .. } => {
+                crate::kernels::forward_into(g, vol, out, *projector, threads)
+            }
+            Backend::Pjrt { artifacts_dir, .. } => {
+                let owned = vol.to_volume();
+                let p = crate::runtime::forward_or_native(artifacts_dir, g, &owned, threads);
+                out.copy_from_slice(&p.data);
+                crate::kernels::scratch::recycle_projections(p);
+                crate::kernels::scratch::recycle_volume(owned);
+            }
+        }
+    }
+
+    /// Zero-copy backprojection launch: accumulate (`+=`) a borrowed
+    /// angle-chunk view into `out` (see [`MultiGpu::kernel_forward_into`]
+    /// for the threading and PJRT caveats).
+    pub(crate) fn kernel_backward_into(
+        &self,
+        g: &Geometry,
+        proj: &ProjChunkView<'_>,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        match &self.backend {
+            Backend::Native { weight, .. } => {
+                crate::kernels::backward_into(g, proj, out, *weight, threads)
+            }
+            Backend::Pjrt { artifacts_dir, weight, .. } => {
+                let owned = proj.to_projections();
+                let v = crate::runtime::backward_or_native(artifacts_dir, g, &owned, *weight, threads);
+                for (o, s) in out.iter_mut().zip(&v.data) {
+                    *o += *s;
+                }
+                crate::kernels::scratch::recycle_volume(v);
+                crate::kernels::scratch::recycle_projections(owned);
             }
         }
     }

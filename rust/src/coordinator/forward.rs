@@ -89,8 +89,9 @@ pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
 fn simulate_angle_split(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
     let n_dev = sim.n_devices();
     let chunks = &plan.angle_chunks;
-    // contiguous chunk shares per device
-    let shares = crate::geometry::split::split_even(chunks.len(), n_dev);
+    // contiguous chunk shares per device (same mapping as the real
+    // executors — see Plan::chunk_shares)
+    let shares = plan.chunk_shares(n_dev);
 
     // 8: copy the (whole) image to every device
     let img_bytes = g.volume_bytes();
@@ -261,47 +262,16 @@ fn simulate_image_split(
     }
 }
 
-/// Real numerics with the identical partitioning (order-independent sum).
-/// Per-chunk partials are short-lived, so their buffers go back to the
-/// `kernels::scratch` arena as soon as they are merged — across an
-/// iterative reconstruction this removes an alloc/fault cycle per chunk.
+/// Real numerics with the identical partitioning: the pipelined executor
+/// (concurrent device workers, zero-copy staging views, double-buffered
+/// merge lanes — see `coordinator::pipeline`) by default, or the
+/// host-sequential baseline when `ctx.exec.pipelined` is off.
 fn execute_real(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan) -> ProjectionSet {
-    use crate::kernels::scratch;
-    let mut out = ProjectionSet::zeros_like(g);
-    if !plan.image_split {
-        // angle-split: each device projects the full volume for its chunks
-        let shares = crate::geometry::split::split_even(plan.angle_chunks.len(), ctx.n_gpus);
-        for &(c0, c1) in &shares {
-            for c in c0..c1 {
-                let ch = plan.angle_chunks[c];
-                let gc = g.angle_chunk_geometry(ch.a0, ch.a1);
-                let part = ctx.kernel_forward(&gc, vol);
-                out.insert_chunk(ch.a0, &part);
-                scratch::recycle_projections(part);
-            }
-        }
+    if ctx.exec.pipelined {
+        super::pipeline::forward_pipelined(ctx, g, vol, plan)
     } else {
-        // image-split: partial projections per slab, accumulated
-        for dev in &plan.per_device {
-            for slab in &dev.slabs {
-                let gs = g.slab_geometry(slab.z0, slab.z1);
-                let sub = vol.extract_slab(slab.z0, slab.z1);
-                for ch in &plan.angle_chunks {
-                    let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
-                    let part = ctx.kernel_forward(&gc, &sub);
-                    // accumulate into the global running sum
-                    let dst = out.chunk_mut(ch.a0, ch.a1);
-                    debug_assert_eq!(dst.len(), part.data.len());
-                    for (d, v) in dst.iter_mut().zip(&part.data) {
-                        *d += v;
-                    }
-                    scratch::recycle_projections(part);
-                }
-                scratch::recycle_volume(sub);
-            }
-        }
+        super::pipeline::forward_sequential(ctx, g, vol, plan)
     }
-    out
 }
 
 #[cfg(test)]
@@ -326,18 +296,25 @@ mod tests {
         );
 
         for n_gpus in [1, 2, 3] {
-            // tiny devices force an image split (one slab ≈ 7 slices)
-            let plane = (n * n * 4) as u64;
-            let mem = 7 * plane + 3 * 12 * g.single_proj_bytes();
-            let ctx = MultiGpu::gtx1080ti(n_gpus).with_device_mem(mem);
-            let (proj, stats) = ctx.forward(&g, Some(&v), ExecMode::Full).unwrap();
-            let proj = proj.unwrap();
-            assert!(stats.splits_per_device >= 1);
-            for (i, (a, b)) in reference.data.iter().zip(&proj.data).enumerate() {
-                assert!(
-                    (a - b).abs() <= 2e-3 * (1.0 + a.abs()),
-                    "gpus={n_gpus} pixel {i}: ref {a} vs split {b}"
-                );
+            // tiny devices force an image split (a slab is a few slices)
+            let mem = crate::coordinator::splitter::image_split_mem(
+                &g,
+                &crate::coordinator::SplitConfig::default(),
+            );
+            // both executors must match the unsplit reference: the
+            // pipelined default and the sequential baseline
+            for sequential in [false, true] {
+                let ctx = MultiGpu::gtx1080ti(n_gpus).with_device_mem(mem);
+                let ctx = if sequential { ctx.with_sequential_executor() } else { ctx };
+                let (proj, stats) = ctx.forward(&g, Some(&v), ExecMode::Full).unwrap();
+                let proj = proj.unwrap();
+                assert!(stats.splits_per_device > 1, "device memory must force a split");
+                for (i, (a, b)) in reference.data.iter().zip(&proj.data).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 2e-3 * (1.0 + a.abs()),
+                        "gpus={n_gpus} seq={sequential} pixel {i}: ref {a} vs split {b}"
+                    );
+                }
             }
         }
     }

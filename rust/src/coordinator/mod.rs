@@ -25,13 +25,21 @@
 //! *Backprojection*: z-slabs are distributed across devices; each device
 //! streams **all** projections through a 2-chunk double buffer while its
 //! voxel-update kernels run (paper Fig. 5).
+//!
+//! Since PR 3 the **real** path executes that schedule for real too:
+//! [`pipeline`] runs one concurrent worker per device assignment with
+//! zero-copy slab/chunk staging views and a double-buffered merge lane
+//! per worker, deterministically merged — bit-identical output for every
+//! worker count. The pre-PR3 host-sequential loops survive behind
+//! [`ExecutorConfig::pipelined`]` = false` as the benchmark baseline.
 
 pub mod backward;
 pub mod baseline;
 pub mod executor;
 pub mod forward;
+pub mod pipeline;
 pub mod regularizer;
 pub mod splitter;
 
-pub use executor::{Backend, ExecMode, MultiGpu, OpStats};
+pub use executor::{Backend, ExecMode, ExecutorConfig, MultiGpu, OpStats};
 pub use splitter::{Plan, SplitConfig};

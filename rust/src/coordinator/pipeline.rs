@@ -1,0 +1,625 @@
+//! The pipelined real executor shared by both operators (PR 3).
+//!
+//! The simulated timeline has always modeled the paper's overlap story —
+//! kernels queued before copies so DMA hides behind compute (Alg. 1/2,
+//! Fig. 5) — but the real numeric path used to run every device, slab and
+//! angle chunk strictly sequentially on the host thread, staging each
+//! piece through `extract_slab`/`extract_chunk` memcpys. This module
+//! closes that gap with the CPU analogue of the paper's schedule:
+//!
+//! 1. **Concurrent device workers.** Each [`DeviceAssignment`] becomes one
+//!    scoped job on a [`ThreadPool`] (`Scope::spawn`), so simulated
+//!    devices execute concurrently for real. The backend's kernel-thread
+//!    budget is divided across workers, keeping total host parallelism
+//!    constant.
+//! 2. **Zero-copy staging views.** Slab and chunk inputs reach the
+//!    kernels as borrowed [`VolumeSlabView`]/[`ProjChunkView`] windows of
+//!    the resident arrays (both are contiguous by the layout invariants in
+//!    DESIGN.md), and angle-split outputs are written straight into
+//!    disjoint windows of the shared output — the executor no longer
+//!    copies a single staging buffer on the native backend.
+//! 3. **Double-buffered merge lane.** Within a worker, launches follow the
+//!    Alg. 1/2 queue order: the kernel for launch `k+1` runs while a
+//!    dedicated merge lane folds launch `k`'s partial into the running
+//!    accumulator, cycling two staging buffers exactly like the paper's
+//!    two on-device projection buffers. Compute hides the (memory-bound)
+//!    merge the way the paper hides DMA behind kernels.
+//!
+//! ## Determinism
+//!
+//! Outputs are **bit-identical for every worker/thread count**:
+//! * per launch, the kernels are thread-count-exact (disjoint output
+//!   rows/slices, fixed accumulation order — DESIGN.md §Perf);
+//! * within a worker, the merge lane folds partials in launch order
+//!   (slab-major, then chunk) through a FIFO channel;
+//! * across workers, partial results combine in a fixed order: per-device
+//!   partials are reduced on the host in device index order (forward
+//!   image-split), or land in disjoint regions (forward angle-split
+//!   chunks, backward z-slabs) where order cannot matter.
+//!
+//! The pre-PR3 host-sequential loops are kept below
+//! ([`forward_sequential`], [`backward_sequential`]) behind
+//! [`ExecutorConfig::pipelined`]` = false` as the benchmark comparison
+//! baseline (`bench::coordinator`, `BENCH_coordinator.json`).
+
+use std::sync::mpsc;
+
+use crate::geometry::Geometry;
+use crate::kernels::scratch;
+use crate::util::threadpool::{SendPtr, ThreadPool};
+use crate::volume::{ProjectionSet, Volume};
+
+use super::executor::{Backend, MultiGpu};
+use super::splitter::{DeviceAssignment, Plan};
+
+/// Staging buffers cycled through each worker's merge lane — the paper's
+/// double buffer (Alg. 1 line 6 / Alg. 2 line 6).
+const N_STAGE_BUFFERS: usize = 2;
+
+/// Concurrency for `n_jobs` device jobs under the context's config. Also
+/// capped at the backend's total kernel threads so concurrent **kernel**
+/// threads never exceed the sequential baseline's budget — the
+/// iso-resource premise of `bench::coordinator`'s speedup comparison.
+/// (Each worker additionally runs one merge-lane thread, but that thread
+/// only performs the `+=` fold the sequential path does inline on its
+/// kernel-thread time — moved off the critical path, not added work.)
+///
+/// The pool itself is created per operator call (`ThreadPool::new` below)
+/// rather than held on `MultiGpu`: spawning ≤4 OS threads costs tens of
+/// microseconds against millisecond-scale kernel launches, keeps
+/// `MultiGpu: Clone` trivial, and bounds concurrency exactly per call.
+/// The price — pool-worker scratch arenas are always cold — is paid once
+/// here by taking every partial/staging buffer on the host thread, whose
+/// arena persists across the calls of an iterative reconstruction.
+fn worker_count(ctx: &MultiGpu, n_jobs: usize) -> usize {
+    let cap = if ctx.exec.workers == 0 { n_jobs } else { ctx.exec.workers };
+    cap.min(n_jobs.max(1)).min(ctx.backend_threads().max(1)).max(1)
+}
+
+/// Per-**job** kernel thread budgets (`budgets[i]` for job `i`), keeping
+/// the concurrent total within the backend's thread count — the
+/// iso-resource premise of the bench comparison. When every job has its
+/// own worker (`n_jobs == workers`, the default), the backend total is
+/// split exactly, remainder included. With fewer workers than jobs, pool
+/// workers pick jobs up FIFO-opportunistically, so *any* `workers`-sized
+/// subset of jobs can run concurrently — every job then gets the floor
+/// share, trading a little parallelism for never oversubscribing.
+fn kernel_thread_budgets(ctx: &MultiGpu, workers: usize, n_jobs: usize) -> Vec<usize> {
+    let workers = workers.max(1);
+    let total = ctx.backend_threads();
+    if n_jobs == workers {
+        let base = total / workers;
+        let extra = total % workers;
+        (0..n_jobs).map(|i| (base + usize::from(i < extra)).max(1)).collect()
+    } else {
+        vec![(total / workers).max(1); n_jobs]
+    }
+}
+
+fn join_all<T>(handles: Vec<crate::util::threadpool::ScopedHandle<'_, T>>) -> Vec<T> {
+    let mut out = Vec::with_capacity(handles.len());
+    for h in handles {
+        match h.join() {
+            Ok(v) => out.push(v),
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// forward projection
+// ---------------------------------------------------------------------------
+
+/// Pipelined forward projection (Algorithm 1's plan, executed for real).
+pub fn forward_pipelined(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan) -> ProjectionSet {
+    let mut out = scratch::take_projections(g.n_det[0], g.n_det[1], g.n_angles());
+    if !plan.image_split {
+        // Angle split: every device holds the full image and owns a
+        // disjoint contiguous run of chunks — workers project straight
+        // into their windows of `out` (zero staging, nothing to merge).
+        let shares = plan.chunk_shares(ctx.n_gpus);
+        let n_jobs = shares.iter().filter(|(c0, c1)| c1 > c0).count();
+        let workers = worker_count(ctx, n_jobs);
+        let budgets = kernel_thread_budgets(ctx, workers, n_jobs);
+        let per = g.n_det[0] * g.n_det[1];
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let pool = ThreadPool::new(workers);
+        pool.scope(|s| {
+            let mut handles = Vec::with_capacity(n_jobs);
+            for (i, &(c0, c1)) in shares.iter().filter(|(c0, c1)| c1 > c0).enumerate() {
+                let kt = budgets[i];
+                handles.push(s.spawn(move || {
+                    let out_ptr = out_ptr;
+                    for c in c0..c1 {
+                        let ch = plan.angle_chunks[c];
+                        let gc = g.angle_chunk_geometry(ch.a0, ch.a1);
+                        // SAFETY: chunk runs are disjoint across workers
+                        // and chunks are contiguous in `out`'s layout.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                out_ptr.0.add(ch.a0 * per),
+                                ch.len() * per,
+                            )
+                        };
+                        if let Backend::Pjrt { artifacts_dir, .. } = &ctx.backend {
+                            // PJRT artifacts consume owned host buffers —
+                            // pass the resident volume directly instead of
+                            // letting the view path copy it per chunk
+                            let part =
+                                crate::runtime::forward_or_native(artifacts_dir, &gc, vol, kt);
+                            dst.copy_from_slice(&part.data);
+                            scratch::recycle_projections(part);
+                        } else {
+                            ctx.kernel_forward_into(&gc, &vol.as_view(), dst, kt);
+                        }
+                    }
+                }));
+            }
+            join_all(handles);
+        });
+    } else {
+        // Image split: each device projects all chunks of its slabs into a
+        // private partial projection set (worker + merge lane); partials
+        // then fold into `out` on this thread in device index order — the
+        // deterministic fixed-order merge.
+        let active: Vec<&DeviceAssignment> =
+            plan.per_device.iter().filter(|d| !d.slabs.is_empty()).collect();
+        let workers = worker_count(ctx, active.len());
+        let budgets = kernel_thread_budgets(ctx, workers, active.len());
+        let per = g.n_det[0] * g.n_det[1];
+        let max_stage_len =
+            plan.angle_chunks.iter().map(|c| c.len()).max().unwrap_or(0) * per;
+        let pool = ThreadPool::new(workers);
+        pool.scope(|s| {
+            let handles: Vec<_> = active
+                .iter()
+                .enumerate()
+                .map(|(i, dev)| {
+                    let dev: &DeviceAssignment = dev;
+                    let kt = budgets[i];
+                    // take the device partial and staging buffers on this
+                    // (host) thread: its scratch arena persists across
+                    // operator calls, so iterative algorithms reuse these
+                    // allocations instead of re-faulting them per call
+                    // (pool worker threads are per-call and arena-cold)
+                    let partial =
+                        scratch::take_projections(g.n_det[0], g.n_det[1], g.n_angles());
+                    let stage: Vec<Vec<f32>> =
+                        (0..N_STAGE_BUFFERS).map(|_| scratch::take_zeroed(max_stage_len)).collect();
+                    s.spawn(move || forward_device_partial(ctx, g, vol, plan, dev, kt, partial, stage))
+                })
+                .collect();
+            for (partial, stage) in join_all(handles) {
+                out.accumulate(&partial);
+                scratch::recycle_projections(partial);
+                for buf in stage {
+                    scratch::recycle(buf);
+                }
+            }
+        });
+    }
+    out
+}
+
+/// One device's forward worker (image split): for each of its slabs, run
+/// every angle-chunk kernel on a zero-copy slab view in the Alg. 1 queue
+/// order, handing each launch's chunk partial to the merge lane while the
+/// next kernel runs. `partial` (zeroed) and the `stage` buffers are taken
+/// from — and returned to — the caller's scratch arena; this returns the
+/// device's accumulated partial projections plus the drained buffers.
+#[allow(clippy::too_many_arguments)]
+fn forward_device_partial(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    vol: &Volume,
+    plan: &Plan,
+    dev: &DeviceAssignment,
+    kernel_threads: usize,
+    mut partial: ProjectionSet,
+    stage: Vec<Vec<f32>>,
+) -> (ProjectionSet, Vec<Vec<f32>>) {
+    let per = partial.nu * partial.nv;
+    let dst_ptr = SendPtr(partial.data.as_mut_ptr());
+
+    let (req_tx, req_rx) = mpsc::channel::<(Vec<f32>, usize)>();
+    let (ret_tx, ret_rx) = mpsc::channel::<Vec<f32>>();
+    for buf in stage {
+        ret_tx.send(buf).expect("staging channel open");
+    }
+    std::thread::scope(|sc| {
+        // Merge lane: folds launch k's partial into the device partial
+        // while the worker runs kernel k+1 (FIFO ⇒ launch order).
+        sc.spawn(move || {
+            let dst_ptr = dst_ptr;
+            for (buf, a0) in req_rx {
+                // SAFETY: only the lane writes `partial` during the scope,
+                // and requests are processed one at a time.
+                let dst =
+                    unsafe { std::slice::from_raw_parts_mut(dst_ptr.0.add(a0 * per), buf.len()) };
+                for (o, v) in dst.iter_mut().zip(&buf) {
+                    *o += *v;
+                }
+                if ret_tx.send(buf).is_err() {
+                    break; // worker is done and dropped its receiver
+                }
+            }
+        });
+        for slab in &dev.slabs {
+            let gs = g.slab_geometry(slab.z0, slab.z1);
+            let sub = vol.slab_view(slab.z0, slab.z1);
+            // PJRT artifacts consume owned host buffers: materialize the
+            // slab once per slab (as the sequential path does) rather than
+            // letting the view path copy it per chunk launch.
+            let owned_slab = match &ctx.backend {
+                Backend::Pjrt { .. } => Some(sub.to_volume()),
+                Backend::Native { .. } => None,
+            };
+            for ch in &plan.angle_chunks {
+                let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+                let mut buf = ret_rx.recv().expect("merge lane terminated");
+                // resize only: the kernel overwrites every element, so no
+                // zeroing pass is needed between launches (the BP path,
+                // whose kernel accumulates, does need it)
+                buf.resize(ch.len() * per, 0.0);
+                match (&ctx.backend, &owned_slab) {
+                    (Backend::Pjrt { artifacts_dir, .. }, Some(ov)) => {
+                        let part = crate::runtime::forward_or_native(
+                            artifacts_dir,
+                            &gc,
+                            ov,
+                            kernel_threads,
+                        );
+                        buf.copy_from_slice(&part.data);
+                        scratch::recycle_projections(part);
+                    }
+                    _ => ctx.kernel_forward_into(&gc, &sub, &mut buf, kernel_threads),
+                }
+                req_tx.send((buf, ch.a0)).expect("merge lane terminated");
+            }
+            if let Some(ov) = owned_slab {
+                scratch::recycle_volume(ov);
+            }
+        }
+        drop(req_tx); // lane drains remaining requests, then exits
+    });
+    let mut stage = Vec::with_capacity(N_STAGE_BUFFERS);
+    while let Ok(buf) = ret_rx.try_recv() {
+        stage.push(buf);
+    }
+    (partial, stage)
+}
+
+// ---------------------------------------------------------------------------
+// backprojection
+// ---------------------------------------------------------------------------
+
+/// Pipelined backprojection (Algorithm 2's plan, executed for real).
+pub fn backward_pipelined(ctx: &MultiGpu, g: &Geometry, proj: &ProjectionSet, plan: &Plan) -> Volume {
+    let mut out = scratch::take_volume(g.n_vox[0], g.n_vox[1], g.n_vox[2]);
+    let active: Vec<&DeviceAssignment> =
+        plan.per_device.iter().filter(|d| !d.slabs.is_empty()).collect();
+    let workers = worker_count(ctx, active.len());
+    let budgets = kernel_thread_budgets(ctx, workers, active.len());
+    let plane = g.n_vox[0] * g.n_vox[1];
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    let pool = ThreadPool::new(workers);
+    pool.scope(|s| {
+        let handles: Vec<_> = active
+            .iter()
+            .enumerate()
+            .map(|(i, dev)| {
+                let dev: &DeviceAssignment = dev;
+                let kt = budgets[i];
+                // staging buffers come from the host arena (see the FP
+                // branch for the rationale); sized for the largest slab
+                let max_stage_len =
+                    dev.slabs.iter().map(|sl| sl.len()).max().unwrap_or(0) * plane;
+                let stage: Vec<Vec<f32>> =
+                    (0..N_STAGE_BUFFERS).map(|_| scratch::take_zeroed(max_stage_len)).collect();
+                s.spawn(move || {
+                    backward_device_worker(ctx, g, proj, plan, dev, out_ptr, plane, kt, stage)
+                })
+            })
+            .collect();
+        for stage in join_all(handles) {
+            for buf in stage {
+                scratch::recycle(buf);
+            }
+        }
+    });
+    out
+}
+
+/// One device's backprojection worker: stream every projection chunk (as
+/// a zero-copy view) through the double-buffered kernel/merge pipeline,
+/// with the merge lane accumulating straight into this device's slabs of
+/// the shared output — z-ranges are disjoint across devices (a splitter
+/// invariant), so no cross-worker synchronization is needed and the
+/// voxel-level accumulation order is the chunk order, as in Alg. 2.
+#[allow(clippy::too_many_arguments)]
+fn backward_device_worker(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    proj: &ProjectionSet,
+    plan: &Plan,
+    dev: &DeviceAssignment,
+    out_ptr: SendPtr,
+    plane: usize,
+    kernel_threads: usize,
+    stage: Vec<Vec<f32>>,
+) -> Vec<Vec<f32>> {
+    let (req_tx, req_rx) = mpsc::channel::<(Vec<f32>, usize)>();
+    let (ret_tx, ret_rx) = mpsc::channel::<Vec<f32>>();
+    for buf in stage {
+        ret_tx.send(buf).expect("staging channel open");
+    }
+    std::thread::scope(|sc| {
+        sc.spawn(move || {
+            let out_ptr = out_ptr;
+            for (buf, offset) in req_rx {
+                // SAFETY: `offset` addresses this device's own z-slab of
+                // the shared output; device z-ranges are disjoint.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(offset), buf.len())
+                };
+                for (o, v) in dst.iter_mut().zip(&buf) {
+                    *o += *v;
+                }
+                if ret_tx.send(buf).is_err() {
+                    break;
+                }
+            }
+        });
+        for slab in &dev.slabs {
+            let gs = g.slab_geometry(slab.z0, slab.z1);
+            let slab_len = slab.len() * plane;
+            for ch in &plan.angle_chunks {
+                let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+                let view = proj.chunk_view(ch.a0, ch.a1);
+                let mut buf = ret_rx.recv().expect("merge lane terminated");
+                buf.clear();
+                buf.resize(slab_len, 0.0); // backproject_into accumulates
+                ctx.kernel_backward_into(&gc, &view, &mut buf, kernel_threads);
+                req_tx.send((buf, slab.z0 * plane)).expect("merge lane terminated");
+            }
+        }
+        drop(req_tx);
+    });
+    let mut stage = Vec::with_capacity(N_STAGE_BUFFERS);
+    while let Ok(buf) = ret_rx.try_recv() {
+        stage.push(buf);
+    }
+    stage
+}
+
+// ---------------------------------------------------------------------------
+// sequential baseline (pre-PR3 loops, behind ExecutorConfig::pipelined=false)
+// ---------------------------------------------------------------------------
+
+/// Host-sequential forward execution with owned-copy staging — the
+/// comparison baseline for `bench::coordinator`.
+pub fn forward_sequential(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan) -> ProjectionSet {
+    let mut out = ProjectionSet::zeros_like(g);
+    if !plan.image_split {
+        // angle-split: each device projects the full volume for its chunks
+        for &(c0, c1) in &plan.chunk_shares(ctx.n_gpus) {
+            for c in c0..c1 {
+                let ch = plan.angle_chunks[c];
+                let gc = g.angle_chunk_geometry(ch.a0, ch.a1);
+                let part = ctx.kernel_forward(&gc, vol);
+                out.insert_chunk(ch.a0, &part);
+                scratch::recycle_projections(part);
+            }
+        }
+    } else {
+        // image-split: partial projections per slab, accumulated
+        for dev in &plan.per_device {
+            for slab in &dev.slabs {
+                let gs = g.slab_geometry(slab.z0, slab.z1);
+                let sub = vol.extract_slab(slab.z0, slab.z1);
+                for ch in &plan.angle_chunks {
+                    let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+                    let part = ctx.kernel_forward(&gc, &sub);
+                    // accumulate into the global running sum
+                    let dst = out.chunk_mut(ch.a0, ch.a1);
+                    debug_assert_eq!(dst.len(), part.data.len());
+                    for (d, v) in dst.iter_mut().zip(&part.data) {
+                        *d += v;
+                    }
+                    scratch::recycle_projections(part);
+                }
+                scratch::recycle_volume(sub);
+            }
+        }
+    }
+    out
+}
+
+/// Host-sequential backprojection with owned-copy staging — the
+/// comparison baseline for `bench::coordinator`.
+pub fn backward_sequential(ctx: &MultiGpu, g: &Geometry, proj: &ProjectionSet, plan: &Plan) -> Volume {
+    let mut out = Volume::zeros_like(g);
+    for dev in &plan.per_device {
+        for slab in &dev.slabs {
+            let gs = g.slab_geometry(slab.z0, slab.z1);
+            let mut acc = scratch::take_volume(g.n_vox[0], g.n_vox[1], slab.len());
+            for ch in &plan.angle_chunks {
+                let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+                let sub = proj.extract_chunk(ch.a0, ch.a1);
+                let part = ctx.kernel_backward(&gc, &sub);
+                acc.add_scaled(&part, 1.0);
+                scratch::recycle_volume(part);
+                scratch::recycle_projections(sub);
+            }
+            out.insert_slab(slab.z0, &acc);
+            scratch::recycle_volume(acc);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::executor::{ExecMode, MultiGpu};
+    use crate::geometry::Geometry;
+    use crate::phantom;
+
+    /// Device memory that forces the image-split regime (the splitter owns
+    /// the arithmetic — see `splitter::image_split_mem`).
+    fn tiny_mem(g: &Geometry) -> u64 {
+        crate::coordinator::splitter::image_split_mem(
+            g,
+            &crate::coordinator::splitter::SplitConfig::default(),
+        )
+    }
+
+    #[test]
+    fn pipelined_fp_bit_identical_across_worker_counts() {
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        for n_gpus in [1usize, 2, 3] {
+            for image_split in [false, true] {
+                let base = MultiGpu::gtx1080ti(n_gpus);
+                let base = if image_split {
+                    base.with_device_mem(tiny_mem(&g))
+                } else {
+                    base
+                };
+                let reference = base
+                    .clone()
+                    .with_workers(1)
+                    .forward(&g, Some(&v), ExecMode::Full)
+                    .unwrap()
+                    .0
+                    .unwrap();
+                for workers in [2usize, 4] {
+                    let got = base
+                        .clone()
+                        .with_workers(workers)
+                        .forward(&g, Some(&v), ExecMode::Full)
+                        .unwrap()
+                        .0
+                        .unwrap();
+                    assert_eq!(
+                        reference.data, got.data,
+                        "gpus={n_gpus} image_split={image_split} workers={workers}: \
+                         pipelined FP must be bit-identical to the single-worker path"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_bp_bit_identical_across_worker_counts() {
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        for n_gpus in [1usize, 2, 3] {
+            for image_split in [false, true] {
+                let base = MultiGpu::gtx1080ti(n_gpus);
+                let base = if image_split {
+                    base.with_device_mem(tiny_mem(&g))
+                } else {
+                    base
+                };
+                let reference = base
+                    .clone()
+                    .with_workers(1)
+                    .backward(&g, Some(&p), ExecMode::Full)
+                    .unwrap()
+                    .0
+                    .unwrap();
+                for workers in [2usize, 4] {
+                    let got = base
+                        .clone()
+                        .with_workers(workers)
+                        .backward(&g, Some(&p), ExecMode::Full)
+                        .unwrap()
+                        .0
+                        .unwrap();
+                    assert_eq!(
+                        reference.data, got.data,
+                        "gpus={n_gpus} image_split={image_split} workers={workers}: \
+                         pipelined BP must be bit-identical to the single-worker path"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn angle_split_fp_bit_identical_to_sequential_baseline() {
+        // With no image split both executors run the identical kernels on
+        // disjoint chunks — the pipelined path merely skips the staging
+        // copies — so they agree bit for bit.
+        let g = Geometry::cone_beam(16, 10);
+        let v = phantom::shepp_logan(16);
+        let pipe = MultiGpu::gtx1080ti(2).forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+        let seq = MultiGpu::gtx1080ti(2)
+            .with_sequential_executor()
+            .forward(&g, Some(&v), ExecMode::Full)
+            .unwrap()
+            .0
+            .unwrap();
+        assert_eq!(pipe.data, seq.data);
+    }
+
+    #[test]
+    fn bp_bit_identical_to_sequential_baseline() {
+        // The pipelined BP merge (slab region += chunk partial, in chunk
+        // order, from zero) reassociates nothing vs the sequential
+        // accumulator, so the two executors agree bit for bit.
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        for image_split in [false, true] {
+            let base = MultiGpu::gtx1080ti(2);
+            let base = if image_split {
+                base.with_device_mem(tiny_mem(&g))
+            } else {
+                base
+            };
+            let pipe = base.clone().backward(&g, Some(&p), ExecMode::Full).unwrap().0.unwrap();
+            let seq = base
+                .with_sequential_executor()
+                .backward(&g, Some(&p), ExecMode::Full)
+                .unwrap()
+                .0
+                .unwrap();
+            assert_eq!(pipe.data, seq.data, "image_split={image_split}");
+        }
+    }
+
+    #[test]
+    fn image_split_fp_matches_sequential_baseline_within_tolerance() {
+        // The image-split FP merge is reassociated (per-device partials,
+        // then a device-order fold) — deterministic, but not bitwise equal
+        // to the host-sequential order; it must still agree tightly.
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let base = MultiGpu::gtx1080ti(2).with_device_mem(tiny_mem(&g));
+        let pipe = base.clone().forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+        let seq = base
+            .with_sequential_executor()
+            .forward(&g, Some(&v), ExecMode::Full)
+            .unwrap()
+            .0
+            .unwrap();
+        for (i, (a, b)) in seq.data.iter().zip(&pipe.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + a.abs()),
+                "pixel {i}: sequential {a} vs pipelined {b}"
+            );
+        }
+    }
+}

@@ -79,6 +79,15 @@ impl Plan {
         self.per_device.iter().map(|d| d.slabs.len()).max().unwrap_or(0)
     }
 
+    /// Contiguous angle-chunk shares per device for the angle-split
+    /// forward path (image resident on every device, no accumulation):
+    /// device `d` computes chunks `[shares[d].0, shares[d].1)`. Shared by
+    /// the simulated schedule and both real executors so their device ↔
+    /// work mapping can never drift apart.
+    pub fn chunk_shares(&self, n_gpus: usize) -> Vec<(usize, usize)> {
+        split_even(self.angle_chunks.len(), n_gpus)
+    }
+
     /// Sanity invariants; used by property tests.
     pub fn validate(&self, g: &Geometry, mem_bytes: u64, cfg: &SplitConfig) -> Result<(), String> {
         // slabs of each device tile its z-range, contiguously, non-empty
@@ -155,6 +164,23 @@ impl Plan {
 /// the simultaneous copies).
 pub fn should_pin_image(image_split: bool, n_gpus: usize) -> bool {
     image_split || n_gpus > 2
+}
+
+/// Device memory that forces the **image-split** regime for `g` under
+/// both planners — room for FP's three (or BP's two) chunk buffers plus a
+/// 6-slice slab, well below full-volume residency. The single source of
+/// the "tiny device" threshold used by the executor/parity tests and the
+/// `bench::coordinator` acceptance workload, so it tracks the buffer
+/// arithmetic above instead of drifting as hand-copied constants.
+pub fn image_split_mem(g: &Geometry, cfg: &SplitConfig) -> u64 {
+    let plane = (g.n_vox[0] * g.n_vox[1]) as u64 * F32_BYTES;
+    let fp_bufs = 3 * cfg.fp_chunk.min(g.n_angles()).max(1) as u64 * g.single_proj_bytes();
+    let bp_bufs = 2 * cfg.bp_chunk.min(g.n_angles()).max(1) as u64 * g.single_proj_bytes();
+    let usable_target = fp_bufs.max(bp_bufs) + 6 * plane;
+    // The planners derive usable memory as `mem · mem_fraction`; invert
+    // that here (+1 byte against float truncation) so the *usable* budget
+    // hits the target for any configured fraction, not just the default.
+    (usable_target as f64 / cfg.mem_fraction.max(f64::EPSILON)).ceil() as u64 + 1
 }
 
 /// Plan the forward projection (Algorithm 1).

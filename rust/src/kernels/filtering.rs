@@ -7,7 +7,7 @@
 
 use crate::geometry::Geometry;
 use crate::kernels::fft::{fft, ifft, next_pow2, C64};
-use crate::util::threadpool::parallel_for;
+use crate::util::threadpool::{parallel_for, SendPtr};
 use crate::volume::ProjectionSet;
 
 /// Apodization window applied on top of the ramp.
@@ -144,11 +144,6 @@ pub fn fdk_filter(g: &Geometry, proj: &mut ProjectionSet, window: Window, thread
         }
     });
 }
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 /// Angular span covered by an angle list (assumes uniform spacing).
 fn angular_span(angles: &[f64]) -> f64 {

@@ -15,14 +15,25 @@
 //! whose neighborhood touches a face fall back to the clamped path.
 
 use crate::geometry::{DetFrame, Geometry};
-use crate::util::threadpool::parallel_for;
-use crate::volume::{ProjectionSet, Volume};
+use crate::util::threadpool::{parallel_for, SendPtr};
+use crate::volume::{ProjectionSet, Volume, VolumeSlabView};
 
 /// Sampling step as a fraction of the smallest voxel pitch.
 pub const STEP_FRACTION: f64 = 0.5;
 
 /// Forward-project all angles of `g` by sampled trilinear interpolation.
 pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
+    let nu = g.n_det[0];
+    let nv = g.n_det[1];
+    let mut out = crate::kernels::scratch::take_projections(nu, nv, g.n_angles());
+    project_into(g, &vol.as_view(), &mut out.data, threads);
+    out
+}
+
+/// Forward-project a borrowed (slab) volume view straight into `out`
+/// (every element overwritten) — the zero-copy entry point used by the
+/// pipelined executor; see `siddon::project_into` for the contract.
+pub fn project_into(g: &Geometry, vol: &VolumeSlabView<'_>, out: &mut [f32], threads: usize) {
     assert_eq!(
         [vol.nx, vol.ny, vol.nz],
         [g.n_vox[0], g.n_vox[1], g.n_vox[2]],
@@ -31,7 +42,7 @@ pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
     let nu = g.n_det[0];
     let nv = g.n_det[1];
     let n_angles = g.n_angles();
-    let mut out = crate::kernels::scratch::take_projections(nu, nv, n_angles);
+    assert_eq!(out.len(), nu * nv * n_angles, "output length mismatch");
 
     let frames: Vec<DetFrame> = (0..n_angles).map(|a| g.det_frame(a)).collect();
     let (lo, hi) = g.volume_bbox();
@@ -39,7 +50,7 @@ pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
     let sampler = VolSampler::new(vol);
 
     let rows = n_angles * nv;
-    let ptr = SendPtr(out.data.as_mut_ptr());
+    let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(rows, threads, 8, |r0, r1| {
         let ptr = ptr;
         for row in r0..r1 {
@@ -62,13 +73,7 @@ pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
             }
         }
     });
-    out
 }
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 /// Volume view with the strides and bounds the trilinear fast path needs.
 struct VolSampler<'a> {
@@ -82,9 +87,9 @@ struct VolSampler<'a> {
 }
 
 impl<'a> VolSampler<'a> {
-    fn new(vol: &'a Volume) -> Self {
+    fn new(vol: &VolumeSlabView<'a>) -> Self {
         Self {
-            data: &vol.data,
+            data: vol.data,
             nx: vol.nx,
             ny: vol.ny,
             nz: vol.nz,
@@ -242,7 +247,7 @@ pub fn trilinear(g: &Geometry, vol: &Volume, lo: &[f64; 3], p: &[f64; 3]) -> f32
     let fx = ((p[0] - lo[0]) / g.d_vox[0] - 0.5) as f32;
     let fy = ((p[1] - lo[1]) / g.d_vox[1] - 0.5) as f32;
     let fz = ((p[2] - lo[2]) / g.d_vox[2] - 0.5) as f32;
-    VolSampler::new(vol).trilinear_q(fx, fy, fz)
+    VolSampler::new(&vol.as_view()).trilinear_q(fx, fy, fz)
 }
 
 #[cfg(test)]
@@ -479,5 +484,18 @@ mod tests {
         let g = Geometry::cone_beam(12, 3);
         let v = phantom::shepp_logan(12);
         assert_eq!(project(&g, &v, 1).data, project(&g, &v, 4).data);
+    }
+
+    #[test]
+    fn view_projection_bit_identical_to_owned_slab() {
+        let n = 14;
+        let g = Geometry::cone_beam(n, 4);
+        let v = phantom::shepp_logan(n);
+        let (z0, z1) = (3, 10);
+        let gs = g.slab_geometry(z0, z1);
+        let owned = project(&gs, &v.extract_slab(z0, z1), 2);
+        let mut via_view = vec![0.0f32; owned.data.len()];
+        project_into(&gs, &v.slab_view(z0, z1), &mut via_view, 2);
+        assert_eq!(owned.data, via_view);
     }
 }

@@ -30,7 +30,7 @@ pub mod tv;
 pub mod voxel_backproj;
 
 use crate::geometry::Geometry;
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::{ProjChunkView, ProjectionSet, Volume, VolumeSlabView};
 
 /// Which forward projector to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,6 +81,33 @@ pub fn backward(
     threads: usize,
 ) -> Volume {
     voxel_backproj::backproject(g, proj, weight, threads)
+}
+
+/// Zero-copy forward projection: project a borrowed (slab) view straight
+/// into `out` (every element overwritten). The executor's staging path.
+pub fn forward_into(
+    g: &Geometry,
+    vol: &VolumeSlabView<'_>,
+    out: &mut [f32],
+    kind: Projector,
+    threads: usize,
+) {
+    match kind {
+        Projector::Siddon => siddon::project_into(g, vol, out, threads),
+        Projector::Joseph => joseph::project_into(g, vol, out, threads),
+    }
+}
+
+/// Zero-copy backprojection: accumulate (`+=`) a borrowed angle-chunk view
+/// into `out` (zero it first for a plain backprojection).
+pub fn backward_into(
+    g: &Geometry,
+    proj: &ProjChunkView<'_>,
+    out: &mut [f32],
+    weight: BackprojWeight,
+    threads: usize,
+) {
+    voxel_backproj::backproject_into(g, proj, out, weight, threads)
 }
 
 #[cfg(test)]

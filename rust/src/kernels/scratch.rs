@@ -15,6 +15,18 @@
 //! allocation. The arena is thread-local (no locks on the hot path) and
 //! capacity-capped, so it cannot grow without bound when geometries of
 //! many different sizes are used.
+//!
+//! Concurrency (audited for the pipelined executor, whose device workers
+//! take/recycle from `ThreadPool` worker threads concurrently): every pool
+//! is `thread_local!`, so a `take_zeroed` can only ever pop buffers the
+//! *same* thread recycled — two threads can never receive aliasing
+//! buffers, with no synchronization needed. Buffers may legally migrate:
+//! a buffer taken on a pool worker and recycled on the host (or vice
+//! versa) simply joins the recycling thread's free list; ownership is by
+//! `Vec` move the whole way, so there is no window in which a buffer is
+//! simultaneously in a free list and in use
+//! (`concurrent_pool_take_recycle_never_aliases_live_buffers` is the
+//! regression test for this invariant).
 
 use std::cell::{Cell, RefCell};
 
@@ -175,6 +187,79 @@ mod tests {
         let huge: Vec<f32> = Vec::with_capacity(MAX_POOLED_BYTES / 4 + 1);
         recycle(huge);
         POOL.with(|p| assert!(p.borrow().is_empty()));
+    }
+
+    #[test]
+    fn concurrent_pool_take_recycle_never_aliases_live_buffers() {
+        // Regression test for the pipelined executor: device workers on
+        // ThreadPool threads take/recycle concurrently (and buffers
+        // migrate between threads via channels/returns). A live buffer's
+        // address must never be handed out again while it is live, and
+        // buffer contents must never be clobbered by another thread.
+        use crate::util::threadpool::ThreadPool;
+        use std::collections::HashSet;
+        use std::sync::{Arc, Mutex};
+
+        let live: Arc<Mutex<HashSet<usize>>> = Arc::new(Mutex::new(HashSet::new()));
+        let pool = ThreadPool::new(4);
+        for i in 0..400usize {
+            let live = Arc::clone(&live);
+            pool.submit(move || {
+                let len = 512 + (i % 5) * 256;
+                let mut a = take_zeroed(len);
+                let mut b = take_zeroed(len);
+                assert_ne!(a.as_ptr(), b.as_ptr(), "two live takes alias");
+                {
+                    let mut l = live.lock().unwrap();
+                    assert!(
+                        l.insert(a.as_ptr() as usize),
+                        "take returned a buffer another thread holds live"
+                    );
+                    assert!(
+                        l.insert(b.as_ptr() as usize),
+                        "take returned a buffer another thread holds live"
+                    );
+                }
+                // stamp both, do some "kernel work", verify the stamps
+                // survived (no cross-thread clobbering)
+                let stamp = i as f32 + 1.0;
+                a.iter_mut().for_each(|v| *v = stamp);
+                b.iter_mut().for_each(|v| *v = -stamp);
+                std::thread::yield_now();
+                assert!(a.iter().all(|&v| v == stamp), "live buffer clobbered");
+                assert!(b.iter().all(|&v| v == -stamp), "live buffer clobbered");
+                // un-register strictly before recycling, so a concurrent
+                // take of the recycled buffer can never race the registry
+                {
+                    let mut l = live.lock().unwrap();
+                    l.remove(&(a.as_ptr() as usize));
+                    l.remove(&(b.as_ptr() as usize));
+                }
+                recycle(a);
+                recycle(b);
+            });
+        }
+        pool.wait_idle();
+        assert!(live.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn cross_thread_recycling_is_safe_and_rezeroed() {
+        // The executor returns worker-taken buffers to the host thread,
+        // which recycles them there: the buffer joins the host arena and
+        // the next host take must see zeroed contents.
+        clear();
+        let buf = std::thread::spawn(|| {
+            let mut b = take_zeroed(1024);
+            b.iter_mut().for_each(|v| *v = 3.25);
+            b
+        })
+        .join()
+        .unwrap();
+        recycle(buf);
+        let again = take_zeroed(1024);
+        assert!(again.iter().all(|&v| v == 0.0), "migrated buffer must re-zero");
+        recycle(again);
     }
 
     #[test]

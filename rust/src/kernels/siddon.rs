@@ -19,11 +19,25 @@
 //! by stride increments — one add and one unchecked load per voxel crossed.
 
 use crate::geometry::{DetFrame, Geometry};
-use crate::util::threadpool::parallel_for;
-use crate::volume::{ProjectionSet, Volume};
+use crate::util::threadpool::{parallel_for, SendPtr};
+use crate::volume::{ProjectionSet, Volume, VolumeSlabView};
 
 /// Forward-project all angles of `g`. `vol` must match `g.n_vox`.
 pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
+    let nu = g.n_det[0];
+    let nv = g.n_det[1];
+    let mut out = crate::kernels::scratch::take_projections(nu, nv, g.n_angles());
+    project_into(g, &vol.as_view(), &mut out.data, threads);
+    out
+}
+
+/// Forward-project a borrowed (slab) volume view straight into `out`
+/// (layout `(a·nv + iv)·nu + iu`, every element overwritten). This is the
+/// zero-copy entry point the pipelined executor uses: the view borrows the
+/// caller's resident volume and `out` is the caller's staging buffer or a
+/// disjoint window of the shared output, so neither input nor output is
+/// copied around the kernel.
+pub fn project_into(g: &Geometry, vol: &VolumeSlabView<'_>, out: &mut [f32], threads: usize) {
     assert_eq!(
         [vol.nx, vol.ny, vol.nz],
         [g.n_vox[0], g.n_vox[1], g.n_vox[2]],
@@ -32,7 +46,7 @@ pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
     let nu = g.n_det[0];
     let nv = g.n_det[1];
     let n_angles = g.n_angles();
-    let mut out = crate::kernels::scratch::take_projections(nu, nv, n_angles);
+    assert_eq!(out.len(), nu * nv * n_angles, "output length mismatch");
 
     // Precompute per-angle affine detector frames once (the CUDA code
     // keeps these in constant memory).
@@ -40,9 +54,10 @@ pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
     let (lo, hi) = g.volume_bbox();
     let dv = g.d_vox;
     let n = [vol.nx, vol.ny, vol.nz];
+    let data = vol.data;
 
     let rows = n_angles * nv;
-    let ptr = SendPtr(out.data.as_mut_ptr());
+    let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(rows, threads, 8, |r0, r1| {
         let ptr = ptr; // copy the Send wrapper into the closure
         for row in r0..r1 {
@@ -59,7 +74,7 @@ pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
                     row0[1] + fu * us[1],
                     row0[2] + fu * us[2],
                 ];
-                let val = raytrace(&frame.src, &pix, &lo, &hi, &dv, &n, &vol.data);
+                let val = raytrace(&frame.src, &pix, &lo, &hi, &dv, &n, data);
                 // rows are disjoint per task: no data race
                 unsafe {
                     *ptr.0.add((a * nv + iv) * nu + iu) = val;
@@ -67,14 +82,7 @@ pub fn project(g: &Geometry, vol: &Volume, threads: usize) -> ProjectionSet {
             }
         }
     });
-    out
 }
-
-/// Raw pointer wrapper that asserts Send (tasks write disjoint rows).
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 /// Exact line integral of the volume along segment src→dst using
 /// Amanatides–Woo voxel traversal. `lo`/`hi` bound the volume in mm,
@@ -495,5 +503,20 @@ mod tests {
         let p1 = project(&g, &v, 1);
         let p4 = project(&g, &v, 4);
         assert_eq!(p1.data, p4.data);
+    }
+
+    #[test]
+    fn view_projection_bit_identical_to_owned_slab() {
+        // The zero-copy staging path: projecting a borrowed slab view must
+        // equal projecting the extracted (copied) slab, bit for bit.
+        let n = 16;
+        let g = Geometry::cone_beam(n, 5);
+        let v = phantom::shepp_logan(n);
+        let (z0, z1) = (4, 11);
+        let gs = g.slab_geometry(z0, z1);
+        let owned = project(&gs, &v.extract_slab(z0, z1), 2);
+        let mut via_view = vec![0.0f32; owned.data.len()];
+        project_into(&gs, &v.slab_view(z0, z1), &mut via_view, 2);
+        assert_eq!(owned.data, via_view);
     }
 }

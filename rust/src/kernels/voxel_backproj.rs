@@ -25,8 +25,8 @@
 
 use crate::geometry::Geometry;
 use crate::kernels::BackprojWeight;
-use crate::util::threadpool::parallel_for;
-use crate::volume::{ProjectionSet, Volume};
+use crate::util::threadpool::{parallel_for, SendPtr};
+use crate::volume::{ProjChunkView, ProjectionSet, Volume};
 
 /// Projections swept together over a slice tile (~16 × a 64² f32 panel
 /// ≈ 256 KiB — sized for a shared L2).
@@ -45,12 +45,32 @@ pub fn backproject(
     weight: BackprojWeight,
     threads: usize,
 ) -> Volume {
+    let [nx, ny, nz] = g.n_vox;
+    let mut out = crate::kernels::scratch::take_volume(nx, ny, nz);
+    backproject_into(g, &proj.as_view(), &mut out.data, weight, threads);
+    out
+}
+
+/// Backproject a borrowed angle-chunk view, **accumulating** (`+=`) into
+/// `out` (layout `(z·ny + y)·nx + x`, length `nx·ny·nz`; zero it first for
+/// a plain backprojection). This is the zero-copy entry point the
+/// pipelined executor uses: the view borrows the resident projection set
+/// and `out` is a per-launch staging buffer or a disjoint slab of the
+/// shared output. The accumulation order over angles is the view's angle
+/// order, independent of `threads` (tasks own disjoint z-slices).
+pub fn backproject_into(
+    g: &Geometry,
+    proj: &ProjChunkView<'_>,
+    out: &mut [f32],
+    weight: BackprojWeight,
+    threads: usize,
+) {
     assert_eq!(proj.nu, g.n_det[0], "projection nu mismatch");
     assert_eq!(proj.nv, g.n_det[1], "projection nv mismatch");
     assert_eq!(proj.n_angles, g.n_angles(), "projection angle count mismatch");
 
     let [nx, ny, nz] = g.n_vox;
-    let mut out = crate::kernels::scratch::take_volume(nx, ny, nz);
+    assert_eq!(out.len(), nx * ny * nz, "output length mismatch");
     let (lo, _) = g.volume_bbox();
 
     // Per-angle trig, hoisted out of the voxel loop.
@@ -84,7 +104,7 @@ pub fn backproject(
     let dvx = g.d_vox[0];
     let px0 = lo[0] + 0.5 * dvx; // centre of voxel column x = 0
 
-    let ptr = SendPtr(out.data.as_mut_ptr());
+    let ptr = SendPtr(out.as_mut_ptr());
     parallel_for(nz, threads, SLICE_TILE, |z0, z1| {
         let ptr = ptr;
         let mut fu_buf = [0.0f32; X_TILE];
@@ -157,13 +177,7 @@ pub fn backproject(
             }
         }
     });
-    out
 }
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 /// Bilinear fetch from one projection panel at fractional pixel `(fu, fv)`.
 /// Points more than half a pixel outside the panel contribute zero
@@ -459,6 +473,33 @@ mod tests {
         let b1 = backproject(&g, &p, BackprojWeight::Fdk, 1);
         let b4 = backproject(&g, &p, BackprojWeight::Fdk, 4);
         assert_eq!(b1.data, b4.data);
+    }
+
+    #[test]
+    fn view_backprojection_accumulates_and_matches_owned_chunk() {
+        // backproject_into on a borrowed chunk view (a) accumulates into a
+        // non-zero output and (b) is bit-identical to the owned-chunk path.
+        let n = 12;
+        let g = Geometry::cone_beam(n, 9);
+        let v = phantom::shepp_logan(n);
+        let p = forward(&g, &v, Projector::Siddon, 2);
+        let (a0, a1) = (3, 8);
+        let gc = g.angle_chunk_geometry(a0, a1);
+        let owned = backproject(&gc, &p.extract_chunk(a0, a1), BackprojWeight::Fdk, 2);
+
+        let mut via_view = vec![0.0f32; owned.data.len()];
+        backproject_into(&gc, &p.chunk_view(a0, a1), &mut via_view, BackprojWeight::Fdk, 2);
+        assert_eq!(owned.data, via_view);
+
+        // accumulate semantics: a second pass adds the same contribution
+        // (up to reassociation of the running f32 sum)
+        backproject_into(&gc, &p.chunk_view(a0, a1), &mut via_view, BackprojWeight::Fdk, 2);
+        for (once, twice) in owned.data.iter().zip(&via_view) {
+            assert!(
+                (twice - 2.0 * once).abs() <= 1e-5 * (1.0 + once.abs()),
+                "second pass must accumulate: {once} then {twice}"
+            );
+        }
     }
 
     #[test]

@@ -1,14 +1,18 @@
 //! Scoped thread-pool / parallel-for substrate (rayon is unavailable).
 //!
-//! Two entry points:
+//! Three entry points:
 //!  * [`parallel_for`] — split an index range into chunks and run a closure
 //!    over each chunk on worker threads (used by the native kernels).
 //!  * [`ThreadPool`] — a persistent pool with a job queue (used by the
 //!    coordinator to model one host thread per simulated GPU).
+//!  * [`ThreadPool::scope`] — submit jobs that borrow from the caller's
+//!    stack and get a [`ScopedHandle`] per job; the coordinator's
+//!    pipelined executor runs one device worker per [`Scope::spawn`].
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 /// Number of worker threads to use by default: the host parallelism.
@@ -44,6 +48,17 @@ where
         }
     });
 }
+
+/// Raw mutable `f32` pointer wrapper asserting `Send + Sync`. Every use
+/// site guarantees that concurrent tasks write **disjoint** regions of the
+/// pointee (see the SAFETY comments at each dereference); the wrapper
+/// exists so kernels and the pipelined executor can hand one output
+/// pointer to scoped tasks. Shared here instead of per-module copies so
+/// the safety contract lives in one place.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -116,15 +131,15 @@ impl ThreadPool {
 
     /// Submit a job; returns immediately.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.submit_boxed(Box::new(f));
+    }
+
+    fn submit_boxed(&self, job: Job) {
         {
             let (lock, _) = &*self.pending;
             *lock.lock().unwrap() += 1;
         }
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker hung up");
+        self.tx.as_ref().expect("pool shut down").send(job).expect("worker hung up");
     }
 
     /// Block until every submitted job has completed (including jobs
@@ -134,6 +149,131 @@ impl ThreadPool {
         let mut p = lock.lock().unwrap_or_else(|e| e.into_inner());
         while *p > 0 {
             p = cvar.wait(p).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Run `f` with a [`Scope`] through which jobs that **borrow from the
+    /// caller's environment** can be submitted to this pool. `scope` does
+    /// not return until every job spawned inside it has finished (even if
+    /// `f` or a job panics), which is what makes the borrows sound.
+    ///
+    /// Unlike [`std::thread::scope`] this does not spawn a thread per job:
+    /// jobs run on the pool's persistent workers, so a caller can bound
+    /// concurrency by the pool size. Jobs must not block on *other* jobs
+    /// of the same pool (the workers they would need may be occupied).
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> R,
+    {
+        let scope = Scope {
+            pool: self,
+            pending: Arc::new((Mutex::new(0), Condvar::new())),
+            _scope: PhantomData,
+            _env: PhantomData,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&scope)));
+        // Jobs may still borrow the environment: block until all are done
+        // before returning/unwinding, on the success and the panic path.
+        scope.wait_all();
+        match result {
+            Ok(r) => r,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+}
+
+/// Job-submission scope over a [`ThreadPool`]; see [`ThreadPool::scope`].
+pub struct Scope<'scope, 'env: 'scope> {
+    pool: &'scope ThreadPool,
+    /// Jobs spawned in this scope that have not finished yet.
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    _scope: PhantomData<&'scope mut &'scope ()>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Submit a job that may borrow from the environment of the enclosing
+    /// [`ThreadPool::scope`] call. Returns a [`ScopedHandle`] carrying the
+    /// job's return value (or its panic payload).
+    pub fn spawn<T, F>(&'scope self, f: F) -> ScopedHandle<'scope, T>
+    where
+        T: Send + 'env,
+        F: FnOnce() -> T + Send + 'env,
+    {
+        let state: HandleState<T> = Arc::new((Mutex::new(None), Condvar::new()));
+        let job_state = Arc::clone(&state);
+        let scope_pending = Arc::clone(&self.pending);
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+        }
+        let job = move || {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            {
+                let (lock, cvar) = &*job_state;
+                *lock.lock().unwrap_or_else(|e| e.into_inner()) = Some(result);
+                cvar.notify_all();
+            }
+            // Release this job's handle-state reference BEFORE the
+            // decrement: if the caller dropped the handle unjoined, this
+            // is the last Arc and the stored `T` (which may borrow 'env)
+            // drops here — while wait_all still holds the environment
+            // alive. Decrementing first would let `scope` return and free
+            // 'env before a borrowed T's Drop ran on this worker.
+            drop(job_state);
+            // decrement strictly after the result is published (and the
+            // worker's state reference released) so wait_all implies every
+            // handle is ready and every unclaimed result is already dropped
+            let (lock, cvar) = &*scope_pending;
+            let mut p = lock.lock().unwrap_or_else(|e| e.into_inner());
+            *p -= 1;
+            if *p == 0 {
+                cvar.notify_all();
+            }
+        };
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(job);
+        // SAFETY: `ThreadPool::scope` blocks (wait_all) until this scope's
+        // pending count reaches zero before returning or unwinding, so the
+        // job — and everything it borrows with lifetime 'env — is done
+        // executing before any borrowed data can be dropped. Extending the
+        // closure's lifetime to 'static is therefore sound, exactly as in
+        // std::thread::scope.
+        let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Box<dyn FnOnce() + Send>>(job)
+        };
+        self.pool.submit_boxed(job);
+        ScopedHandle { state, _scope: PhantomData }
+    }
+
+    fn wait_all(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut p = lock.lock().unwrap_or_else(|e| e.into_inner());
+        while *p > 0 {
+            p = cvar.wait(p).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+type HandleState<T> = Arc<(Mutex<Option<thread::Result<T>>>, Condvar)>;
+
+/// Handle to one scoped job: blocks until the job finishes and yields its
+/// return value, or `Err(payload)` if the job panicked (mirroring
+/// [`std::thread::JoinHandle::join`]). Dropping the handle detaches the
+/// job's *result* only — the job itself still completes within the scope.
+pub struct ScopedHandle<'scope, T> {
+    state: HandleState<T>,
+    _scope: PhantomData<&'scope ()>,
+}
+
+impl<T> ScopedHandle<'_, T> {
+    pub fn join(self) -> thread::Result<T> {
+        let (lock, cvar) = &*self.state;
+        let mut slot = lock.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            match slot.take() {
+                Some(result) => return result,
+                None => slot = cvar.wait(slot).unwrap_or_else(|e| e.into_inner()),
+            }
         }
     }
 }
@@ -236,6 +376,66 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn scope_jobs_borrow_environment() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..1000).collect();
+        let (lo_half, hi_half) = data.split_at(data.len() / 2);
+        let total: u64 = pool.scope(|s| {
+            let lo = s.spawn(move || lo_half.iter().sum::<u64>());
+            let hi = s.spawn(move || hi_half.iter().sum::<u64>());
+            lo.join().unwrap() + hi.join().unwrap()
+        });
+        assert_eq!(total, 499_500);
+        // the pool is reusable after a scope
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn scope_handle_reports_job_panic() {
+        let pool = ThreadPool::new(2);
+        let (ok, bad) = pool.scope(|s| {
+            let ok = s.spawn(|| 7usize);
+            let bad = s.spawn(|| -> usize { panic!("scoped job panic (expected)") });
+            (ok.join(), bad.join())
+        });
+        assert_eq!(ok.unwrap(), 7);
+        assert!(bad.is_err(), "panic must surface through the handle");
+    }
+
+    #[test]
+    fn scope_waits_for_unjoined_jobs() {
+        // A job whose handle is dropped must still complete before scope
+        // returns — otherwise its borrow of `hits` would dangle.
+        let pool = ThreadPool::new(2);
+        let hits = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..16 {
+                let _unjoined = s.spawn(|| {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn single_worker_pool_serializes_scope_jobs() {
+        // With one worker the jobs run strictly one at a time, in
+        // submission order — the "single-worker path" the executor's
+        // determinism tests compare against.
+        let pool = ThreadPool::new(1);
+        let order = Mutex::new(Vec::new());
+        let order_ref = &order;
+        pool.scope(|s| {
+            for i in 0..8 {
+                s.spawn(move || order_ref.lock().unwrap().push(i));
+            }
+        });
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
     }
 
     #[test]

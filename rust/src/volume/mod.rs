@@ -87,6 +87,18 @@ impl Volume {
         Volume { nx: self.nx, ny: self.ny, nz: z1 - z0, data: self.slab(z0, z1).to_vec() }
     }
 
+    /// Borrow a z-slab as a zero-copy kernel input (see
+    /// [`VolumeSlabView`]); the pipelined executor stages slabs this way
+    /// instead of through [`Volume::extract_slab`] memcpys.
+    pub fn slab_view(&self, z0: usize, z1: usize) -> VolumeSlabView<'_> {
+        VolumeSlabView { nx: self.nx, ny: self.ny, nz: z1 - z0, data: self.slab(z0, z1) }
+    }
+
+    /// Borrow the whole volume as a kernel-input view.
+    pub fn as_view(&self) -> VolumeSlabView<'_> {
+        VolumeSlabView { nx: self.nx, ny: self.ny, nz: self.nz, data: &self.data }
+    }
+
     /// Write a sub-volume back into the z-slab `[z0, z0+sub.nz)`.
     pub fn insert_slab(&mut self, z0: usize, sub: &Volume) {
         assert_eq!(sub.nx, self.nx);
@@ -131,6 +143,66 @@ impl Volume {
     pub fn mid_slice(&self) -> Vec<f32> {
         let z = self.nz / 2;
         self.slab(z, z + 1).to_vec()
+    }
+}
+
+/// Borrowed z-slab of a [`Volume`]: the zero-copy staging unit of the
+/// pipelined executor. Because volumes are stored z-slowest, a slab is one
+/// contiguous range and the view is just `(shape, &[f32])`; kernels walk
+/// it with the same `(x + nx·(y + ny·z))` strides as an owned volume, so
+/// no kernel code changes between owned and borrowed inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct VolumeSlabView<'a> {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub data: &'a [f32],
+}
+
+impl VolumeSlabView<'_> {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Materialize an owned copy (only needed by backends that require
+    /// owned host buffers, e.g. PJRT artifact execution).
+    pub fn to_volume(&self) -> Volume {
+        Volume { nx: self.nx, ny: self.ny, nz: self.nz, data: self.data.to_vec() }
+    }
+}
+
+/// Borrowed angle chunk of a [`ProjectionSet`]: the zero-copy staging unit
+/// for backprojection inputs (angle-slowest layout ⇒ one contiguous range).
+#[derive(Clone, Copy, Debug)]
+pub struct ProjChunkView<'a> {
+    pub nu: usize,
+    pub nv: usize,
+    pub n_angles: usize,
+    pub data: &'a [f32],
+}
+
+impl ProjChunkView<'_> {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Materialize an owned copy (PJRT backend only — see
+    /// [`VolumeSlabView::to_volume`]).
+    pub fn to_projections(&self) -> ProjectionSet {
+        ProjectionSet {
+            nu: self.nu,
+            nv: self.nv,
+            n_angles: self.n_angles,
+            data: self.data.to_vec(),
+        }
     }
 }
 
@@ -182,6 +254,18 @@ impl ProjectionSet {
     pub fn chunk_mut(&mut self, a0: usize, a1: usize) -> &mut [f32] {
         let per = self.nu * self.nv;
         &mut self.data[a0 * per..a1 * per]
+    }
+
+    /// Borrow an angle chunk as a zero-copy kernel input (see
+    /// [`ProjChunkView`]); replaces [`ProjectionSet::extract_chunk`] copies
+    /// on the pipelined executor's staging path.
+    pub fn chunk_view(&self, a0: usize, a1: usize) -> ProjChunkView<'_> {
+        ProjChunkView { nu: self.nu, nv: self.nv, n_angles: a1 - a0, data: self.chunk(a0, a1) }
+    }
+
+    /// Borrow the whole set as a kernel-input view.
+    pub fn as_view(&self) -> ProjChunkView<'_> {
+        ProjChunkView { nu: self.nu, nv: self.nv, n_angles: self.n_angles, data: &self.data }
     }
 
     /// Copy an angle chunk into an owned projection set.
@@ -281,6 +365,34 @@ mod tests {
         q.insert_chunk(2, &c);
         assert_eq!(q.at(4, 2, 3), p.at(4, 2, 3));
         assert_eq!(q.at(4, 2, 5), 0.0);
+    }
+
+    #[test]
+    fn slab_view_is_zero_copy_and_matches_extract() {
+        let v = Volume::from_fn(4, 3, 8, |x, y, z| (x + 10 * y + 100 * z) as f32);
+        let view = v.slab_view(2, 5);
+        assert_eq!((view.nx, view.ny, view.nz), (4, 3, 3));
+        // the view borrows the volume's own storage — no copy
+        assert_eq!(view.data.as_ptr(), v.slab(2, 5).as_ptr());
+        assert_eq!(view.data, &v.extract_slab(2, 5).data[..]);
+        assert_eq!(view.to_volume(), v.extract_slab(2, 5));
+        let full = v.as_view();
+        assert_eq!(full.data.as_ptr(), v.data.as_ptr());
+        assert_eq!(full.len(), v.len());
+    }
+
+    #[test]
+    fn chunk_view_is_zero_copy_and_matches_extract() {
+        let mut p = ProjectionSet::zeros(5, 3, 7);
+        for (i, v) in p.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let view = p.chunk_view(2, 4);
+        assert_eq!((view.nu, view.nv, view.n_angles), (5, 3, 2));
+        assert_eq!(view.data.as_ptr(), p.chunk(2, 4).as_ptr());
+        assert_eq!(view.data, &p.extract_chunk(2, 4).data[..]);
+        assert_eq!(view.to_projections(), p.extract_chunk(2, 4));
+        assert_eq!(p.as_view().len(), p.data.len());
     }
 
     #[test]
