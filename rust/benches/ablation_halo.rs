@@ -17,7 +17,8 @@ fn main() {
     let mut t = Table::new(&["N_in", "rounds", "sim time [s]", "redundant slices/device"]);
     let mut best = (0usize, f64::INFINITY);
     for &n_in in &[1usize, 5, 15, 30, 60, 120] {
-        let (_, stats) = rof_denoise_split(&ctx, &vol, 0.2, total_iters, n_in);
+        let (_, stats) =
+            rof_denoise_split(&ctx, &vol, 0.2, total_iters, n_in).expect("halo schedule fits");
         let rounds = total_iters.div_ceil(n_in);
         let redundant = 2 * n_in.min(96); // halo slices recomputed per round
         if stats.makespan_s < best.1 {

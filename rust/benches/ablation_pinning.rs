@@ -21,9 +21,9 @@ fn run_with_pin(n: usize, gpus: usize, fwd: bool, pin: Option<bool>) -> (f64, bo
     }
     let mut sim = SimNode::new(gpus, ctx.spec.clone(), ctx.cost.clone());
     if fwd {
-        forward::simulate(&g, &plan, &mut sim);
+        forward::simulate(&g, &plan, &mut sim).expect("schedule fits device memory");
     } else {
-        backward::simulate(&g, &plan, &mut sim);
+        backward::simulate(&g, &plan, &mut sim).expect("schedule fits device memory");
     }
     (sim.makespan(), plan.image_split)
 }

@@ -5,9 +5,10 @@
 //! The TV inner loop runs on the multi-GPU halo-split regularizer (§2.3).
 
 use crate::coordinator::regularizer::tv_gradient_descent_split;
-use crate::coordinator::MultiGpu;
+use crate::coordinator::{MultiGpu, ReconSession};
 use crate::geometry::Geometry;
-use crate::volume::{ProjectionSet, Volume};
+use crate::kernels::scratch;
+use crate::volume::{ProjectionSet, TrackedVolume, Volume};
 
 use super::common::{ReconOpts, ReconResult};
 use super::ossart::os_sart;
@@ -45,7 +46,9 @@ pub fn asd_pocs(
     proj: &ProjectionSet,
     opts: &AsdPocsOpts,
 ) -> anyhow::Result<ReconResult> {
-    let mut x = Volume::zeros_like(g);
+    // one session carries the outer residual forwards across iterations
+    let mut sess = ReconSession::new(ctx, g)?;
+    let mut x = TrackedVolume::new(Volume::zeros_like(g));
     let mut residuals = Vec::with_capacity(opts.common.iterations);
     let mut sim_time = 0.0;
     let mut peak = 0;
@@ -55,34 +58,41 @@ pub fn asd_pocs(
         // --- data fidelity sweep (OS-SART), warm-started from x ---
         // os_sart starts from zero, so apply it to the residual problem:
         // Δb = b − A x, then x ← x + recon(Δb).
-        let (ax, stats) = ctx.forward(g, Some(&x), crate::coordinator::ExecMode::Full)?;
-        sim_time += stats.makespan_s;
-        peak = peak.max(stats.peak_device_bytes);
+        let ax = sess.forward(&x)?;
         let mut db = proj.clone();
-        db.add_scaled(&ax.unwrap(), -1.0);
+        db.add_scaled(ax.get(), -1.0);
+        sess.recycle_projections(ax);
         residuals.push(db.norm2());
 
         let r = os_sart(ctx, g, &db, opts.subset_size, &one_iter)?;
         sim_time += r.sim_time_s;
         peak = peak.max(r.peak_device_bytes);
         let dx_norm = r.volume.norm2();
-        x.add_scaled(&r.volume, 1.0);
+        x.write().add_scaled(&r.volume, 1.0);
         if opts.common.nonneg {
-            x.clamp_min(0.0);
+            x.write().clamp_min(0.0);
         }
 
         // --- TV minimization, step adapted to the data update ---
         let alpha = if dx_norm > 0.0 { opts.alpha } else { opts.alpha * 0.5 };
-        let (x_tv, stats) = tv_gradient_descent_split(ctx, &x, opts.tv_iters, alpha, opts.n_in);
+        let (x_tv, stats) =
+            tv_gradient_descent_split(ctx, x.get(), opts.tv_iters, alpha, opts.n_in)?;
         sim_time += stats.makespan_s;
-        x = x_tv;
+        scratch::recycle_volume(x.replace(x_tv));
 
         if opts.common.verbose {
             crate::log_info!("asd-pocs iter {it}: residual {:.4e}", residuals.last().unwrap());
         }
     }
+    sim_time += sess.sim_time_s;
+    peak = peak.max(sess.peak_device_bytes);
 
-    Ok(ReconResult { volume: x, residuals, sim_time_s: sim_time, peak_device_bytes: peak })
+    Ok(ReconResult {
+        volume: x.into_inner(),
+        residuals,
+        sim_time_s: sim_time,
+        peak_device_bytes: peak,
+    })
 }
 
 #[cfg(test)]

@@ -5,15 +5,21 @@
 //! CGLS "fundamentally requires a matched backprojection" (paper §3.1),
 //! so the context is forced to pseudo-matched weights.
 
-use crate::coordinator::MultiGpu;
+use crate::coordinator::{MultiGpu, ReconSession};
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{ReconOpts, ReconResult, TrackedOps};
+use super::common::{ReconOpts, ReconResult};
 use super::ossart::matched_ctx;
 
 /// CGLS reconstruction from zero initial guess.
+///
+/// CGLS updates its residual incrementally (`r ← r − αq`), so unlike the
+/// Landweber family there is no constant projection input to keep
+/// device-resident — the session still skips nothing stale (epochs bump
+/// on every in-place update) and still reuses each forward output's
+/// device-resident chunks when `Aᵀ` consumes them unmodified.
 pub fn cgls(
     ctx: &MultiGpu,
     g: &Geometry,
@@ -21,13 +27,13 @@ pub fn cgls(
     opts: &ReconOpts,
 ) -> anyhow::Result<ReconResult> {
     let ctx = matched_ctx(ctx);
-    let mut ops = TrackedOps::new(&ctx, g);
+    let mut sess = ReconSession::new(&ctx, g)?;
 
     let mut x = Volume::zeros_like(g);
     // r = b − Ax = b;  p = s = Aᵀr
-    let mut r = proj.clone();
-    let mut s = ops.backward(g, &r)?;
-    let mut p = s.clone();
+    let mut r = TrackedProjections::new(proj.clone());
+    let mut s = sess.backward(&r)?;
+    let mut p = TrackedVolume::new(s.clone());
     let mut gamma = s.dot(&s);
 
     let mut residuals = Vec::with_capacity(opts.iterations);
@@ -36,38 +42,42 @@ pub fn cgls(
             break;
         }
         // q = Ap
-        let q = ops.forward(g, &p)?;
-        let qq = q.dot(&q);
+        let q = sess.forward(&p)?;
+        let qq = q.get().dot(q.get());
         if qq <= 0.0 {
+            sess.recycle_projections(q);
             break;
         }
         let alpha = (gamma / qq) as f32;
-        x.add_scaled(&p, alpha);
-        r.add_scaled(&q, -alpha);
-        scratch::recycle_projections(q);
-        residuals.push(r.norm2());
+        x.add_scaled(p.get(), alpha);
+        r.write().add_scaled(q.get(), -alpha);
+        sess.recycle_projections(q);
+        residuals.push(r.get().norm2());
         if opts.verbose {
-            crate::log_info!("cgls iter {it}: residual {:.4e}", r.norm2());
+            crate::log_info!("cgls iter {it}: residual {:.4e}", r.get().norm2());
         }
         // s = Aᵀr (previous direction buffer goes back to the arena)
-        scratch::recycle_volume(std::mem::replace(&mut s, ops.backward(g, &r)?));
+        scratch::recycle_volume(std::mem::replace(&mut s, sess.backward(&r)?));
         let gamma_new = s.dot(&s);
         let beta = (gamma_new / gamma) as f32;
         gamma = gamma_new;
         // p = s + β p
-        for (pv, sv) in p.data.iter_mut().zip(&s.data) {
+        for (pv, sv) in p.write().data.iter_mut().zip(&s.data) {
             *pv = sv + beta * *pv;
         }
     }
     if opts.nonneg {
         x.clamp_min(0.0);
     }
+    sess.recycle_projections(r);
+    scratch::recycle_volume(s);
+    scratch::recycle_volume(p.into_inner());
 
     Ok(ReconResult {
         volume: x,
         residuals,
-        sim_time_s: ops.sim_time_s,
-        peak_device_bytes: ops.peak_device_bytes,
+        sim_time_s: sess.sim_time_s,
+        peak_device_bytes: sess.peak_device_bytes,
     })
 }
 

@@ -1,9 +1,10 @@
-//! Shared algorithm plumbing: operator wrappers that accumulate the
-//! simulated multi-GPU time, convergence traces and result reporting.
+//! Shared algorithm plumbing: options, convergence traces and result
+//! reporting. The operator wrapper the algorithms drive their loops
+//! through is `coordinator::residency::ReconSession` (PR 4): it carries
+//! the cumulative simulated time and peak memory the old `TrackedOps`
+//! tracked, plus the cross-iteration device residency cache.
 
-use crate::coordinator::{ExecMode, MultiGpu};
-use crate::geometry::Geometry;
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::Volume;
 
 /// Options common to the iterative algorithms.
 #[derive(Clone, Debug)]
@@ -34,37 +35,6 @@ pub struct ReconResult {
     pub sim_time_s: f64,
     /// Peak simulated device memory over all calls.
     pub peak_device_bytes: u64,
-}
-
-/// Wraps a [`MultiGpu`] and counts simulated seconds across operator
-/// calls — the algorithm-level analogue of the paper's timing runs.
-pub struct TrackedOps<'a> {
-    pub ctx: &'a MultiGpu,
-    pub g: &'a Geometry,
-    pub sim_time_s: f64,
-    pub peak_device_bytes: u64,
-}
-
-impl<'a> TrackedOps<'a> {
-    pub fn new(ctx: &'a MultiGpu, g: &'a Geometry) -> Self {
-        Self { ctx, g, sim_time_s: 0.0, peak_device_bytes: 0 }
-    }
-
-    /// Forward projection of `vol` over all angles of a (possibly subset)
-    /// geometry `g`.
-    pub fn forward(&mut self, g: &Geometry, vol: &Volume) -> anyhow::Result<ProjectionSet> {
-        let (p, stats) = self.ctx.forward(g, Some(vol), ExecMode::Full)?;
-        self.sim_time_s += stats.makespan_s;
-        self.peak_device_bytes = self.peak_device_bytes.max(stats.peak_device_bytes);
-        Ok(p.expect("Full mode returns data"))
-    }
-
-    pub fn backward(&mut self, g: &Geometry, proj: &ProjectionSet) -> anyhow::Result<Volume> {
-        let (v, stats) = self.ctx.backward(g, Some(proj), ExecMode::Full)?;
-        self.sim_time_s += stats.makespan_s;
-        self.peak_device_bytes = self.peak_device_bytes.max(stats.peak_device_bytes);
-        Ok(v.expect("Full mode returns data"))
-    }
 }
 
 /// `max(x, eps)` reciprocal used for SART weight volumes.

@@ -3,12 +3,13 @@
 //! The TV prox is solved by the multi-GPU ROF denoiser (§2.3).
 
 use crate::coordinator::regularizer::rof_denoise_split;
-use crate::coordinator::MultiGpu;
+use crate::coordinator::{MultiGpu, ReconSession};
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{ReconOpts, ReconResult, TrackedOps};
+use super::common::{ReconOpts, ReconResult};
+use super::landweber::power_iteration_norm;
 use super::ossart::matched_ctx;
 
 /// FISTA options beyond the common ones.
@@ -42,47 +43,40 @@ pub fn fista(
     opts: &FistaOpts,
 ) -> anyhow::Result<ReconResult> {
     let ctx = matched_ctx(ctx);
-    let mut ops = TrackedOps::new(&ctx, g);
+    let mut sess = ReconSession::new(&ctx, g)?;
 
     // Estimate the Lipschitz constant L = ‖AᵀA‖ by power iteration.
     let step = match opts.step {
         Some(s) => s,
-        None => {
-            let mut v = crate::phantom::random(g.n_vox[0], g.n_vox[1], g.n_vox[2], 42);
-            let mut lmax = 1.0f64;
-            for _ in 0..4 {
-                let av = ops.forward(g, &v)?;
-                let atav = ops.backward(g, &av)?;
-                scratch::recycle_projections(av);
-                lmax = atav.norm2() / v.norm2().max(1e-30);
-                let n = atav.norm2().max(1e-30) as f32;
-                scratch::recycle_volume(std::mem::replace(&mut v, atav));
-                v.scale(1.0 / n);
-            }
-            (1.0 / lmax.max(1e-30)) as f32
-        }
+        None => (1.0 / power_iteration_norm(&mut sess, g, 42)?.max(1e-30)) as f32,
     };
 
+    // constant measurement, device-resident across iterations
+    let b = TrackedProjections::new(proj.clone());
     let mut x = Volume::zeros_like(g);
-    let mut y = x.clone();
+    let mut y = TrackedVolume::new(x.clone());
     let mut t = 1.0f32;
     let mut residuals = Vec::with_capacity(opts.common.iterations);
+    // simulated time of the TV prox calls (outside the session)
+    let mut prox_sim_s = 0.0f64;
 
     for it in 0..opts.common.iterations {
-        // gradient step on y: y − step·Aᵀ(Ay − b)
-        let mut ay = ops.forward(g, &y)?;
-        ay.add_scaled(proj, -1.0);
-        residuals.push(ay.norm2());
-        let grad = ops.backward(g, &ay)?;
-        scratch::recycle_projections(ay);
-        let mut z = y.clone();
-        z.add_scaled(&grad, -step);
-        scratch::recycle_volume(grad);
+        // gradient step on y: y − step·Aᵀ(Ay − b). The session forms the
+        // residual against the resident b, returning Aᵀ(b − Ay) — the
+        // negated gradient — so the update adds `+step` (IEEE negation is
+        // exact: numerics are bit-identical to the old Aᵀ(Ay − b) form).
+        let ay = sess.forward(&y)?;
+        let (neg_grad, res_norm) = sess.backward_residual(&b, &ay)?;
+        sess.recycle_projections(ay);
+        residuals.push(res_norm); // ‖b − Ay‖₂ = ‖Ay − b‖₂
+        let mut z = y.get().clone();
+        z.add_scaled(&neg_grad, step);
+        scratch::recycle_volume(neg_grad);
         // prox: multi-GPU ROF TV denoise
         let (x_new, stats) =
-            rof_denoise_split(&ctx, &z, opts.tv_lambda * step, opts.tv_iters, opts.tv_iters);
+            rof_denoise_split(&ctx, &z, opts.tv_lambda * step, opts.tv_iters, opts.tv_iters)?;
         scratch::recycle_volume(z);
-        ops.sim_time_s += stats.makespan_s;
+        prox_sim_s += stats.makespan_s;
         let mut x_new = x_new;
         if opts.common.nonneg {
             x_new.clamp_min(0.0);
@@ -95,18 +89,20 @@ pub fn fista(
             *yv = xn + beta * (xn - xo);
         }
         scratch::recycle_volume(std::mem::replace(&mut x, x_new));
-        scratch::recycle_volume(std::mem::replace(&mut y, y_new));
+        scratch::recycle_volume(y.replace(y_new));
         t = t_new;
         if opts.common.verbose {
             crate::log_info!("fista iter {it}: residual {:.4e}", residuals.last().unwrap());
         }
     }
+    sess.recycle_projections(b);
+    scratch::recycle_volume(y.into_inner());
 
     Ok(ReconResult {
         volume: x,
         residuals,
-        sim_time_s: ops.sim_time_s,
-        peak_device_bytes: ops.peak_device_bytes,
+        sim_time_s: sess.sim_time_s + prox_sim_s,
+        peak_device_bytes: sess.peak_device_bytes,
     })
 }
 

@@ -7,13 +7,37 @@
 //! * MLEM: `x ← x ∘ Aᵀ(b ⊘ Ax) ⊘ Aᵀ1` — the multiplicative EM update for
 //!   Poisson data (requires non-negative projections).
 
-use crate::coordinator::MultiGpu;
+use crate::coordinator::{MultiGpu, ReconSession};
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{ReconOpts, ReconResult, TrackedOps};
+use super::common::{ReconOpts, ReconResult};
 use super::ossart::matched_ctx;
+
+/// Estimate `‖AᵀA‖` by power iteration through a session (shared by
+/// Landweber and FISTA). Temporaries go back to the `kernels::scratch`
+/// arena; the session's residency cache sees each round's fresh epochs.
+pub(crate) fn power_iteration_norm(
+    sess: &mut ReconSession,
+    g: &Geometry,
+    seed: u64,
+) -> anyhow::Result<f64> {
+    let mut v =
+        TrackedVolume::new(crate::phantom::random(g.n_vox[0], g.n_vox[1], g.n_vox[2], seed));
+    let mut lmax = 1.0f64;
+    for _ in 0..4 {
+        let av = sess.forward(&v)?;
+        let atav = sess.backward(&av)?;
+        sess.recycle_projections(av);
+        lmax = atav.norm2() / v.get().norm2().max(1e-30);
+        let n = atav.norm2().max(1e-30) as f32;
+        scratch::recycle_volume(v.replace(atav));
+        v.write().scale(1.0 / n);
+    }
+    scratch::recycle_volume(v.into_inner());
+    Ok(lmax)
+}
 
 /// Landweber iteration; `opts.lambda` scales the power-iteration step.
 pub fn landweber(
@@ -23,48 +47,39 @@ pub fn landweber(
     opts: &ReconOpts,
 ) -> anyhow::Result<ReconResult> {
     let ctx = matched_ctx(ctx);
-    let mut ops = TrackedOps::new(&ctx, g);
+    let mut sess = ReconSession::new(&ctx, g)?;
 
-    // step = λ / ‖AᵀA‖ (power iteration); per-round temporaries go back
-    // to the kernels::scratch arena so each operator call reuses buffers
-    let mut v = crate::phantom::random(g.n_vox[0], g.n_vox[1], g.n_vox[2], 17);
-    let mut lmax = 1.0f64;
-    for _ in 0..4 {
-        let av = ops.forward(g, &v)?;
-        let atav = ops.backward(g, &av)?;
-        scratch::recycle_projections(av);
-        lmax = atav.norm2() / v.norm2().max(1e-30);
-        let n = atav.norm2().max(1e-30) as f32;
-        scratch::recycle_volume(std::mem::replace(&mut v, atav));
-        v.scale(1.0 / n);
-    }
+    // step = λ / ‖AᵀA‖ (power iteration)
+    let lmax = power_iteration_norm(&mut sess, g, 17)?;
     let step = opts.lambda / lmax.max(1e-30) as f32;
 
-    let mut x = Volume::zeros_like(g);
+    // the measured projections are constant across iterations — exactly
+    // what the session keeps device-resident from the first iteration on
+    let b = TrackedProjections::new(proj.clone());
+    let mut x = TrackedVolume::new(Volume::zeros_like(g));
     let mut residuals = Vec::with_capacity(opts.iterations);
     for it in 0..opts.iterations {
-        let mut r = ops.forward(g, &x)?;
-        // r = b − Ax
-        for (rv, bv) in r.data.iter_mut().zip(&proj.data) {
-            *rv = bv - *rv;
-        }
-        residuals.push(r.norm2());
-        let upd = ops.backward(g, &r)?;
-        scratch::recycle_projections(r);
-        x.add_scaled(&upd, step);
+        let ax = sess.forward(&x)?;
+        // upd = Aᵀ(b − Ax), with the residual formed on-device against
+        // the resident b (see ReconSession::backward_residual)
+        let (upd, res_norm) = sess.backward_residual(&b, &ax)?;
+        sess.recycle_projections(ax);
+        residuals.push(res_norm);
+        x.write().add_scaled(&upd, step);
         scratch::recycle_volume(upd);
         if opts.nonneg {
-            x.clamp_min(0.0);
+            x.write().clamp_min(0.0);
         }
         if opts.verbose {
             crate::log_info!("landweber iter {it}: residual {:.4e}", residuals.last().unwrap());
         }
     }
+    sess.recycle_projections(b);
     Ok(ReconResult {
-        volume: x,
+        volume: x.into_inner(),
         residuals,
-        sim_time_s: ops.sim_time_s,
-        peak_device_bytes: ops.peak_device_bytes,
+        sim_time_s: sess.sim_time_s,
+        peak_device_bytes: sess.peak_device_bytes,
     })
 }
 
@@ -80,37 +95,42 @@ pub fn mlem(
         "MLEM requires non-negative projections"
     );
     let ctx = matched_ctx(ctx);
-    let mut ops = TrackedOps::new(&ctx, g);
+    let mut sess = ReconSession::new(&ctx, g)?;
 
     // sensitivity image Aᵀ1
-    let ones = {
+    let ones = TrackedProjections::new({
         let mut p = ProjectionSet::zeros_like(g);
         for v in &mut p.data {
             *v = 1.0;
         }
         p
-    };
-    let sens = ops.backward(g, &ones)?;
+    });
+    let sens = sess.backward(&ones)?;
+    sess.recycle_projections(ones);
 
     // start from a uniform positive image
-    let mut x = Volume::zeros_like(g);
-    for v in &mut x.data {
-        *v = 1.0;
-    }
+    let mut x = TrackedVolume::new({
+        let mut v = Volume::zeros_like(g);
+        for xv in &mut v.data {
+            *xv = 1.0;
+        }
+        v
+    });
     let mut residuals = Vec::with_capacity(opts.iterations);
     for it in 0..opts.iterations {
-        // reuse Ax in place as the ratio buffer b ⊘ Ax
-        let mut ratio = ops.forward(g, &x)?;
+        // reuse Ax in place as the ratio buffer b ⊘ Ax (the in-place
+        // write bumps the epoch, so the session restages it — correctly)
+        let mut ratio = sess.forward(&x)?;
         let mut res2 = 0.0f64;
-        for (av, bv) in ratio.data.iter_mut().zip(&proj.data) {
+        for (av, bv) in ratio.write().data.iter_mut().zip(&proj.data) {
             let d = (bv - *av) as f64;
             res2 += d * d;
             *av = if *av > 1e-8 { bv / *av } else { 0.0 };
         }
         residuals.push(res2.sqrt());
-        let corr = ops.backward(g, &ratio)?;
-        scratch::recycle_projections(ratio);
-        for ((xv, cv), sv) in x.data.iter_mut().zip(&corr.data).zip(&sens.data) {
+        let corr = sess.backward(&ratio)?;
+        sess.recycle_projections(ratio);
+        for ((xv, cv), sv) in x.write().data.iter_mut().zip(&corr.data).zip(&sens.data) {
             *xv = if *sv > 1e-8 { *xv * cv / sv } else { 0.0 };
         }
         scratch::recycle_volume(corr);
@@ -118,11 +138,12 @@ pub fn mlem(
             crate::log_info!("mlem iter {it}: residual {:.4e}", residuals.last().unwrap());
         }
     }
+    scratch::recycle_volume(sens);
     Ok(ReconResult {
-        volume: x,
+        volume: x.into_inner(),
         residuals,
-        sim_time_s: ops.sim_time_s,
-        peak_device_bytes: ops.peak_device_bytes,
+        sim_time_s: sess.sim_time_s,
+        peak_device_bytes: sess.peak_device_bytes,
     })
 }
 

@@ -7,14 +7,19 @@
 //! the volume) and `V_s = 1 / Aᵀ_s·1` (backprojection weights). Subset
 //! size 1 gives SART, the full angle set gives SIRT.
 
-use crate::coordinator::MultiGpu;
+use crate::coordinator::{MultiGpu, ReconSession};
 use crate::geometry::Geometry;
 use crate::kernels::{scratch, BackprojWeight};
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{ordered_subsets, safe_recip, ReconOpts, ReconResult, TrackedOps};
+use super::common::{ordered_subsets, safe_recip, ReconOpts, ReconResult};
 
 /// OS-SART with the given subset size.
+///
+/// Each angle subset is its own operator geometry, so each gets its own
+/// [`ReconSession`] (plans computed once per subset, reused across every
+/// iteration; each session is an independent residency domain — see the
+/// `coordinator::residency` docs).
 pub fn os_sart(
     ctx: &MultiGpu,
     g: &Geometry,
@@ -25,24 +30,23 @@ pub fn os_sart(
     // SART-family updates need the pseudo-matched backprojector: FDK
     // distance weights would bias the row/column normalization.
     let ctx = matched_ctx(ctx);
-    let mut ops = TrackedOps::new(&ctx, g);
     let subsets = ordered_subsets(g.n_angles(), subset_size);
 
     // Per-subset geometries and weights.
-    let ones_vol = {
+    let ones_vol = TrackedVolume::new({
         let mut v = Volume::zeros_like(g);
         for x in &mut v.data {
             *x = 1.0;
         }
         v
-    };
+    });
 
-    let mut x = Volume::zeros_like(g);
+    let mut x = TrackedVolume::new(Volume::zeros_like(g));
     let mut residuals = Vec::with_capacity(opts.iterations);
 
-    // Precompute per-subset structures (geometry + W + V).
+    // Precompute per-subset structures (session + W + V).
     struct Subset {
-        geo: Geometry,
+        sess: ReconSession,
         idxs: Vec<usize>,
         w: ProjectionSet,
         v: Volume,
@@ -50,44 +54,45 @@ pub fn os_sart(
     let mut subs = Vec::with_capacity(subsets.len());
     for idxs in &subsets {
         let geo = g.angle_subset_geometry(idxs);
+        let mut sess = ReconSession::new(&ctx, &geo)?;
         // W = 1 / (A_s 1): ray lengths through a ones-volume
-        let mut w = ops.forward(&geo, &ones_vol)?;
+        let mut w = sess.forward(&ones_vol)?.into_inner();
         safe_recip(&mut w.data);
         // V = 1 / (Aᵀ_s 1): backprojection of ones
-        let ones_proj = {
+        let ones_proj = TrackedProjections::new({
             let mut p = ProjectionSet::zeros_like(&geo);
             for v in &mut p.data {
                 *v = 1.0;
             }
             p
-        };
-        let mut v = ops.backward(&geo, &ones_proj)?;
-        scratch::recycle_projections(ones_proj);
+        });
+        let mut v = sess.backward(&ones_proj)?;
+        sess.recycle_projections(ones_proj);
         safe_recip(&mut v.data);
-        subs.push(Subset { geo, idxs: idxs.clone(), w, v });
+        subs.push(Subset { sess, idxs: idxs.clone(), w, v });
     }
 
     for it in 0..opts.iterations {
         let mut res2 = 0.0f64;
-        for sub in &subs {
+        for sub in &mut subs {
             let b_s = proj.extract_subset(&sub.idxs);
             // residual r = W ∘ (b_s − A_s x)
-            let mut r = ops.forward(&sub.geo, &x)?;
-            for ((rv, bv), wv) in r.data.iter_mut().zip(&b_s.data).zip(&sub.w.data) {
+            let mut r = sub.sess.forward(&x)?;
+            for ((rv, bv), wv) in r.write().data.iter_mut().zip(&b_s.data).zip(&sub.w.data) {
                 let raw = bv - *rv;
                 res2 += (raw as f64) * (raw as f64);
                 *rv = raw * wv;
             }
             // x += λ · V ∘ Aᵀ_s r
-            let upd = ops.backward(&sub.geo, &r)?;
-            scratch::recycle_projections(r);
+            let upd = sub.sess.backward(&r)?;
+            sub.sess.recycle_projections(r);
             scratch::recycle_projections(b_s);
-            for ((xv, uv), vv) in x.data.iter_mut().zip(&upd.data).zip(&sub.v.data) {
+            for ((xv, uv), vv) in x.write().data.iter_mut().zip(&upd.data).zip(&sub.v.data) {
                 *xv += opts.lambda * uv * vv;
             }
             scratch::recycle_volume(upd);
             if opts.nonneg {
-                x.clamp_min(0.0);
+                x.write().clamp_min(0.0);
             }
         }
         let res = res2.sqrt();
@@ -97,12 +102,11 @@ pub fn os_sart(
         }
     }
 
-    Ok(ReconResult {
-        volume: x,
-        residuals,
-        sim_time_s: ops.sim_time_s,
-        peak_device_bytes: ops.peak_device_bytes,
-    })
+    let (sim_time_s, peak_device_bytes) = subs
+        .iter()
+        .fold((0.0, 0), |(t, p), s| (t + s.sess.sim_time_s, p.max(s.sess.peak_device_bytes)));
+    scratch::recycle_volume(ones_vol.into_inner());
+    Ok(ReconResult { volume: x.into_inner(), residuals, sim_time_s, peak_device_bytes })
 }
 
 /// SART: ordered subsets of size 1.

@@ -29,12 +29,13 @@
 use std::path::Path;
 use std::time::Duration;
 
-use crate::coordinator::{ExecMode, MultiGpu, SplitConfig};
+use crate::coordinator::{ExecMode, MultiGpu, ReconSession, SplitConfig};
 use crate::geometry::Geometry;
+use crate::kernels::scratch;
 use crate::phantom;
 use crate::util::json::Json;
 use crate::util::stats::bench;
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
 /// Schema tag of `BENCH_coordinator.json`; bump on breaking layout changes.
 pub const SCHEMA: &str = "tigre-bench-coordinator/v1";
@@ -111,8 +112,53 @@ pub fn run_suite(smoke: bool, threads: usize) -> Vec<CoordBenchEntry> {
             min_iters,
             budget,
         ));
+
+        // cross-iteration residency: cached vs uncached session on a
+        // 1-GPU iterative loop (the regime where 2nd+ iterations stage
+        // no projections at all — see coordinator::residency)
+        out.push(bench_residency(
+            &format!("residency landweber-3it n={n} a={n_angles} gpus=1"),
+            &MultiGpu::gtx1080ti(1).with_threads(threads),
+            &g,
+            &v,
+        ));
     }
     out
+}
+
+/// Simulated-makespan comparison of a 3-iteration Landweber-style loop
+/// with the residency cache on vs off. The real numeric path is identical
+/// on both sides (bit-parity is a tested invariant), so the entry reports
+/// the deterministic DES makespans: `sequential_median_s` = uncached,
+/// `pipelined_median_s` = cached, `speedup` = the residency win.
+fn bench_residency(tag: &str, ctx: &MultiGpu, g: &Geometry, v: &Volume) -> CoordBenchEntry {
+    const ITERS: usize = 3;
+    let proj: ProjectionSet =
+        ctx.forward(g, Some(v), ExecMode::Full).expect("bench forward").0.unwrap();
+    let run = |cached: bool| -> f64 {
+        let mut sess = ReconSession::new(ctx, g).expect("bench session");
+        if !cached {
+            sess = sess.without_residency();
+        }
+        let b = TrackedProjections::new(proj.clone());
+        let mut x = TrackedVolume::new(Volume::zeros_like(g));
+        for _ in 0..ITERS {
+            let ax = sess.forward(&x).expect("bench fp");
+            let (upd, _) = sess.backward_residual(&b, &ax).expect("bench bp");
+            sess.recycle_projections(ax);
+            x.write().add_scaled(&upd, 1e-3);
+            scratch::recycle_volume(upd);
+        }
+        sess.recycle_projections(b);
+        sess.sim_time_s
+    };
+    CoordBenchEntry {
+        name: tag.to_string(),
+        sequential_median_s: run(false),
+        pipelined_median_s: run(true),
+        sim_median_s: 0.0,
+        samples: ITERS,
+    }
 }
 
 /// Measure FP and BP for one context, sequential vs pipelined.
@@ -277,7 +323,7 @@ mod tests {
     #[test]
     fn smoke_suite_runs_and_covers_both_operators_and_plans() {
         let entries = run_suite(true, 2);
-        assert_eq!(entries.len(), 4, "fp/bp × image-split/angle-split");
+        assert_eq!(entries.len(), 5, "fp/bp × image-split/angle-split + residency");
         for e in &entries {
             assert!(
                 e.sequential_median_s > 0.0 && e.pipelined_median_s > 0.0 && e.samples >= 1,
@@ -288,5 +334,9 @@ mod tests {
         }
         assert!(entries.iter().any(|e| e.name.starts_with("fp image-split")));
         assert!(entries.iter().any(|e| e.name.starts_with("bp angle-split")));
+        // the residency entry compares deterministic DES makespans: at
+        // 1 GPU the cached loop must beat the uncached one
+        let res = entries.iter().find(|e| e.name.starts_with("residency")).unwrap();
+        assert!(res.speedup() > 1.0, "residency speedup {} ≤ 1", res.speedup());
     }
 }

@@ -262,6 +262,16 @@ fn print_op(name: &str, stats: &crate::coordinator::OpStats) {
         m * 100.0,
         i * 100.0
     );
+    let r = &stats.residency;
+    if r.hits + r.misses > 0 {
+        println!(
+            "  residency:       {} hits / {} misses, {} B saved ({:.2}ms transfer)",
+            r.hits,
+            r.misses,
+            r.bytes_saved,
+            r.transfer_saved_s * 1e3
+        );
+    }
 }
 
 fn sweep(rest: &[String]) -> anyhow::Result<()> {

@@ -10,10 +10,11 @@
 use anyhow::Context;
 
 use crate::geometry::Geometry;
-use crate::simgpu::{Ev, SimNode};
+use crate::simgpu::{Ev, SimNode, SimOom};
 use crate::volume::{ProjectionSet, Volume};
 
 use super::executor::{ExecMode, MultiGpu, OpStats};
+use super::residency::BpResidency;
 use super::splitter::{plan_backward, Plan};
 
 /// Run the backprojection: returns the real volume (in `Full` mode) and
@@ -26,23 +27,53 @@ pub fn run(
 ) -> anyhow::Result<(Option<Volume>, OpStats)> {
     let plan = plan_backward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
         .map_err(|e| anyhow::anyhow!("backward plan: {e}"))?;
+    run_with(ctx, g, proj, mode, &plan, None)
+}
 
+/// Like [`run`] but against a pre-computed plan and optional residency
+/// decisions (`coordinator::residency::ReconSession`'s entry point).
+pub(crate) fn run_with(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    proj: Option<&ProjectionSet>,
+    mode: ExecMode,
+    plan: &Plan,
+    res: Option<&BpResidency>,
+) -> anyhow::Result<(Option<Volume>, OpStats)> {
     let mut sim = ctx.fresh_sim();
-    simulate(g, &plan, &mut sim);
-    let stats = OpStats::from_sim(&sim, &plan);
+    if let Some(r) = res {
+        for (d, &bytes) in r.reserve.iter().enumerate() {
+            sim.reserve(d, "resident", bytes)?;
+        }
+    }
+    simulate_with(g, plan, &mut sim, res)?;
+    let stats = OpStats::from_sim(&sim, plan);
 
     let vol = match mode {
         ExecMode::SimOnly => None,
         ExecMode::Full => {
             let proj = proj.context("Full mode requires projection data")?;
-            Some(execute_real(ctx, g, proj, &plan))
+            Some(execute_real(ctx, g, proj, plan))
         }
     };
     Ok((vol, stats))
 }
 
 /// Replay Algorithm 2 on the discrete-event node.
-pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
+pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) -> Result<(), SimOom> {
+    simulate_with(g, plan, sim, None)
+}
+
+/// [`simulate`] with residency decisions: chunk uploads shrink to the
+/// bytes the cache does not already hold (possibly zero — the copy is
+/// skipped entirely), and residual mode charges the on-device `b − Ax`
+/// subtraction before the first kernel that consumes each chunk.
+pub(crate) fn simulate_with(
+    g: &Geometry,
+    plan: &Plan,
+    sim: &mut SimNode,
+    res: Option<&BpResidency>,
+) -> Result<(), SimOom> {
     let n_dev = sim.n_devices();
     let chunks = &plan.angle_chunks;
 
@@ -59,7 +90,7 @@ pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
     // 6: projection double buffers
     for d in 0..n_dev {
         for b in 0..plan.n_proj_buffers {
-            sim.alloc(d, &format!("projbuf{b}"), plan.proj_buffer_bytes);
+            sim.alloc(d, &format!("projbuf{b}"), plan.proj_buffer_bytes)?;
         }
     }
 
@@ -74,7 +105,7 @@ pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
             if slab_alloced[d] {
                 sim.free(d, "slab");
             }
-            sim.alloc(d, "slab", g.slab_bytes(slab.len()));
+            sim.alloc(d, "slab", g.slab_bytes(slab.len()))?;
             slab_alloced[d] = true;
             // the output slab starts as zeros on-device: no H2D needed
         }
@@ -91,13 +122,21 @@ pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
             // long finished from the host's point of view because the
             // host synchronizes each kernel (line 10/Synchronize). The
             // copy still overlaps kernel c-1 on the compute engine.
+            // With residency decisions the transferred bytes shrink to
+            // what is not already resident; zero bytes = no copy at all.
             let mut copy_ev: Vec<Option<Ev>> = vec![None; n_dev];
             for d in 0..n_dev {
                 if !active[d] {
                     continue;
                 }
-                let dep = prev_prev_copy[d].unwrap_or(Ev::ZERO);
-                copy_ev[d] = Some(sim.h2d(d, bytes, plan.pin_image, dep));
+                let h2d_bytes = match res {
+                    Some(r) => r.stage[d][s][c].h2d_bytes,
+                    None => bytes,
+                };
+                if h2d_bytes > 0 {
+                    let dep = prev_prev_copy[d].unwrap_or(Ev::ZERO);
+                    copy_ev[d] = Some(sim.h2d(d, h2d_bytes, plan.pin_image, dep));
+                }
             }
             // 10: Synchronize() — wait for the copies
             for d in 0..n_dev {
@@ -105,14 +144,20 @@ pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
                     sim.host_sync(e);
                 }
             }
-            // 11: queue the backprojection kernel (async)
+            // 11: queue the backprojection kernel (async). In residual
+            // mode the on-device `b − Ax` subtraction is fused into the
+            // consuming launch (memory-bound accumulation time, no extra
+            // launch overhead — the paper measures accumulation at
+            // ~0.01% of a projection kernel).
             for d in 0..n_dev {
                 if !active[d] {
                     continue;
                 }
                 let slab = plan.per_device[d].slabs[s];
-                let t = sim.cost.bp_kernel_s(g.n_vox[0], g.n_vox[1], slab.len(), ch.len());
-                let dep = copy_ev[d].unwrap().max(prev_kernel[d].unwrap_or(Ev::ZERO));
+                let sub = res.map_or(0.0, |r| r.stage[d][s][c].subtract_s);
+                let t = sim.cost.bp_kernel_s(g.n_vox[0], g.n_vox[1], slab.len(), ch.len()) + sub;
+                let dep =
+                    copy_ev[d].unwrap_or(Ev::ZERO).max(prev_kernel[d].unwrap_or(Ev::ZERO));
                 let ev = sim.kernel(d, t, dep, &format!("bp d{d} s{s} c{c}"));
                 prev_kernel[d] = Some(ev);
             }
@@ -149,6 +194,7 @@ pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
         sim.unpin_host(g.volume_bytes());
     }
     sim.sync_all();
+    Ok(())
 }
 
 /// Real numerics with the identical partitioning: the pipelined executor

@@ -22,7 +22,7 @@ pub fn naive_forward(ctx: &MultiGpu, g: &Geometry) -> anyhow::Result<OpStats> {
         .map_err(|e| anyhow::anyhow!("naive forward plan: {e}"))?;
     plan.pin_image = false; // the naive strategy never pins
     let mut sim = ctx.fresh_sim();
-    simulate_forward(g, &plan, &mut sim, &ctx.cost);
+    simulate_forward(g, &plan, &mut sim, &ctx.cost)?;
     Ok(OpStats::from_sim(&sim, &plan))
 }
 
@@ -32,15 +32,20 @@ pub fn naive_backward(ctx: &MultiGpu, g: &Geometry) -> anyhow::Result<OpStats> {
         .map_err(|e| anyhow::anyhow!("naive backward plan: {e}"))?;
     plan.pin_image = false;
     let mut sim = ctx.fresh_sim();
-    simulate_backward(g, &plan, &mut sim, &ctx.cost);
+    simulate_backward(g, &plan, &mut sim, &ctx.cost)?;
     Ok(OpStats::from_sim(&sim, &plan))
 }
 
-fn simulate_forward(g: &Geometry, plan: &Plan, sim: &mut SimNode, cost: &crate::simgpu::CostModel) {
+fn simulate_forward(
+    g: &Geometry,
+    plan: &Plan,
+    sim: &mut SimNode,
+    cost: &crate::simgpu::CostModel,
+) -> Result<(), crate::simgpu::SimOom> {
     sim.property_check();
     let n_dev = sim.n_devices();
     for d in 0..n_dev {
-        sim.alloc(d, "projbuf", plan.proj_buffer_bytes);
+        sim.alloc(d, "projbuf", plan.proj_buffer_bytes)?;
     }
     // host-side accumulation rate for the gather step
     let host_add_bps = 5.0e9;
@@ -49,7 +54,7 @@ fn simulate_forward(g: &Geometry, plan: &Plan, sim: &mut SimNode, cost: &crate::
         let shares = crate::geometry::split::split_even(plan.angle_chunks.len(), n_dev);
         let img = g.volume_bytes();
         for d in 0..n_dev {
-            sim.alloc(d, "slab", img);
+            sim.alloc(d, "slab", img)?;
             // pageable, synchronous; devices get the image one at a time
             let e = sim.h2d(d, img, false, Ev::ZERO);
             sim.host_sync(e);
@@ -86,7 +91,7 @@ fn simulate_forward(g: &Geometry, plan: &Plan, sim: &mut SimNode, cost: &crate::
             for d in 0..n_dev {
                 let Some(slab) = plan.per_device[d].slabs.get(s) else { continue };
                 sim.free(d, "slab");
-                sim.alloc(d, "slab", g.slab_bytes(slab.len()));
+                sim.alloc(d, "slab", g.slab_bytes(slab.len()))?;
                 let e = sim.h2d(d, g.slab_bytes(slab.len()), false, Ev::ZERO);
                 sim.host_sync(e);
                 for (c, ch) in plan.angle_chunks.iter().enumerate() {
@@ -119,20 +124,26 @@ fn simulate_forward(g: &Geometry, plan: &Plan, sim: &mut SimNode, cost: &crate::
         sim.free(d, "slab");
     }
     sim.sync_all();
+    Ok(())
 }
 
-fn simulate_backward(g: &Geometry, plan: &Plan, sim: &mut SimNode, cost: &crate::simgpu::CostModel) {
+fn simulate_backward(
+    g: &Geometry,
+    plan: &Plan,
+    sim: &mut SimNode,
+    cost: &crate::simgpu::CostModel,
+) -> Result<(), crate::simgpu::SimOom> {
     sim.property_check();
     let n_dev = sim.n_devices();
     for d in 0..n_dev {
-        sim.alloc(d, "projbuf", plan.proj_buffer_bytes);
+        sim.alloc(d, "projbuf", plan.proj_buffer_bytes)?;
     }
     let max_slabs = plan.splits_per_device();
     for s in 0..max_slabs {
         for d in 0..n_dev {
             let Some(slab) = plan.per_device[d].slabs.get(s) else { continue };
             sim.free(d, "slab");
-            sim.alloc(d, "slab", g.slab_bytes(slab.len()));
+            sim.alloc(d, "slab", g.slab_bytes(slab.len()))?;
             for (c, ch) in plan.angle_chunks.iter().enumerate() {
                 // serialized: copy chunk → wait → kernel → wait
                 let bytes = ch.len() as u64 * g.single_proj_bytes();
@@ -151,6 +162,7 @@ fn simulate_backward(g: &Geometry, plan: &Plan, sim: &mut SimNode, cost: &crate:
         sim.free(d, "slab");
     }
     sim.sync_all();
+    Ok(())
 }
 
 #[cfg(test)]

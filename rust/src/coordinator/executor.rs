@@ -7,6 +7,8 @@ use crate::simgpu::timeline::{breakdown, Breakdown};
 use crate::simgpu::{CostModel, GpuSpec, SimNode};
 use crate::volume::{ProjChunkView, ProjectionSet, Volume, VolumeSlabView};
 
+use super::residency::ResidencyStats;
+
 /// Kernel backend for the real-execution path.
 #[derive(Clone, Debug)]
 pub enum Backend {
@@ -74,6 +76,9 @@ pub struct OpStats {
     pub pinned: bool,
     /// Peak device memory over the call, bytes (must be ≤ capacity).
     pub peak_device_bytes: u64,
+    /// Residency-cache accounting for this call (all-zero when the call
+    /// ran outside a `ReconSession` or with the cache disabled).
+    pub residency: ResidencyStats,
 }
 
 impl OpStats {
@@ -85,6 +90,7 @@ impl OpStats {
             splits_per_device: plan.splits_per_device(),
             pinned: plan.pin_image,
             peak_device_bytes: peak,
+            residency: ResidencyStats::default(),
         }
     }
 }

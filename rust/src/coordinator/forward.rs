@@ -10,10 +10,11 @@
 use anyhow::Context;
 
 use crate::geometry::Geometry;
-use crate::simgpu::{Ev, SimNode};
+use crate::simgpu::{Ev, SimNode, SimOom};
 use crate::volume::{ProjectionSet, Volume};
 
 use super::executor::{ExecMode, MultiGpu, OpStats};
+use super::residency::FpResidency;
 use super::splitter::{plan_forward, Plan};
 
 /// Run the forward projection: returns real projections (in `Full` mode)
@@ -26,23 +27,56 @@ pub fn run(
 ) -> anyhow::Result<(Option<ProjectionSet>, OpStats)> {
     let plan = plan_forward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
         .map_err(|e| anyhow::anyhow!("forward plan: {e}"))?;
+    run_with(ctx, g, vol, mode, &plan, None)
+}
 
+/// Like [`run`] but against a pre-computed plan and optional residency
+/// decisions — the entry point `coordinator::residency::ReconSession`
+/// drives its iterations through (plans are computed once per session,
+/// not once per call).
+pub(crate) fn run_with(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    vol: Option<&Volume>,
+    mode: ExecMode,
+    plan: &Plan,
+    res: Option<&FpResidency>,
+) -> anyhow::Result<(Option<ProjectionSet>, OpStats)> {
     let mut sim = ctx.fresh_sim();
-    simulate(g, &plan, &mut sim);
-    let stats = OpStats::from_sim(&sim, &plan);
+    if let Some(r) = res {
+        // buffers still resident from previous calls occupy device RAM
+        // before this call does anything (ledger-only, no time)
+        for (d, &bytes) in r.reserve.iter().enumerate() {
+            sim.reserve(d, "resident", bytes)?;
+        }
+    }
+    simulate_with(g, plan, &mut sim, res)?;
+    let stats = OpStats::from_sim(&sim, plan);
 
     let proj = match mode {
         ExecMode::SimOnly => None,
         ExecMode::Full => {
             let vol = vol.context("Full mode requires the volume data")?;
-            Some(execute_real(ctx, g, vol, &plan))
+            Some(execute_real(ctx, g, vol, plan))
         }
     };
     Ok((proj, stats))
 }
 
 /// Replay Algorithm 1 on the discrete-event node.
-pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
+pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) -> Result<(), SimOom> {
+    simulate_with(g, plan, sim, None)
+}
+
+/// [`simulate`] with residency decisions: uploads of units the cache
+/// holds fresh are skipped, and a cached image allocation survives the
+/// operator's resource-free epilogue.
+pub(crate) fn simulate_with(
+    g: &Geometry,
+    plan: &Plan,
+    sim: &mut SimNode,
+    res: Option<&FpResidency>,
+) -> Result<(), SimOom> {
     let chunks = &plan.angle_chunks;
     let n_chunks = chunks.len();
     let n_dev = sim.n_devices();
@@ -61,44 +95,65 @@ pub fn simulate(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
     // accumulation buffer when the image is split).
     for d in 0..n_dev {
         for b in 0..plan.n_proj_buffers {
-            sim.alloc(d, &format!("projbuf{b}"), plan.proj_buffer_bytes);
+            sim.alloc(d, &format!("projbuf{b}"), plan.proj_buffer_bytes)?;
         }
     }
 
     if !plan.image_split {
-        simulate_angle_split(g, plan, sim);
+        simulate_angle_split(g, plan, sim, res)?;
     } else {
-        simulate_image_split(g, plan, sim, n_chunks, &chunk_bytes);
+        simulate_image_split(g, plan, sim, n_chunks, &chunk_bytes)?;
     }
 
-    // 25: free GPU resources
+    // 25: free GPU resources. A cached image stays resident for the next
+    // call (skipping its free is exactly the point of the cache); an
+    // image that was never allocated here (residency hit) has nothing to
+    // free either.
     for d in 0..n_dev {
         for b in 0..plan.n_proj_buffers {
             sim.free(d, &format!("projbuf{b}"));
         }
-        sim.free(d, "slab");
+        let keep = res.is_some_and(|r| {
+            r.keep_image.get(d).copied().unwrap_or(false)
+                || r.skip_image_h2d.get(d).copied().unwrap_or(false)
+        });
+        if !keep {
+            sim.free(d, "slab");
+        }
     }
     if plan.pin_image {
         sim.unpin_host(g.volume_bytes());
     }
     sim.sync_all();
+    Ok(())
 }
 
 /// Image fits on every device: each device projects the whole image for
 /// its share of the angles. No accumulation.
-fn simulate_angle_split(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
+fn simulate_angle_split(
+    g: &Geometry,
+    plan: &Plan,
+    sim: &mut SimNode,
+    res: Option<&FpResidency>,
+) -> Result<(), SimOom> {
     let n_dev = sim.n_devices();
     let chunks = &plan.angle_chunks;
     // contiguous chunk shares per device (same mapping as the real
     // executors — see Plan::chunk_shares)
     let shares = plan.chunk_shares(n_dev);
 
-    // 8: copy the (whole) image to every device
+    // 8: copy the (whole) image to every device — unless the device still
+    // holds an epoch-fresh copy from a previous call (residency hit)
     let img_bytes = g.volume_bytes();
     let mut img_ready = vec![Ev::ZERO; n_dev];
     for d in 0..n_dev {
-        sim.alloc(d, "slab", img_bytes);
-        img_ready[d] = sim.h2d(d, img_bytes, plan.pin_image, Ev::ZERO);
+        let skip = res.is_some_and(|r| r.skip_image_h2d.get(d).copied().unwrap_or(false));
+        if skip {
+            img_ready[d] = Ev::ZERO; // already on-device, no upload
+        } else {
+            sim.alloc(d, "slab", img_bytes)?;
+            img_ready[d] = sim.h2d(d, img_bytes, plan.pin_image, Ev::ZERO);
+        }
     }
     // 9: Synchronize()
     for &e in &img_ready {
@@ -152,19 +207,22 @@ fn simulate_angle_split(g: &Geometry, plan: &Plan, sim: &mut SimNode) {
             sim.d2h(d, bytes, false, ev);
         }
     }
+    Ok(())
 }
 
 /// Image larger than the devices: z-slabs are distributed across devices;
 /// every device projects all angle chunks of each of its slabs in a
 /// staggered order, accumulating per-chunk partial projections on-device
-/// (third buffer) against the host-resident running sum.
+/// (third buffer) against the host-resident running sum. Slabs cycle
+/// through one staging allocation, so there is nothing for the residency
+/// cache to keep here (see `coordinator::residency`).
 fn simulate_image_split(
     g: &Geometry,
     plan: &Plan,
     sim: &mut SimNode,
     n_chunks: usize,
     chunk_bytes: &dyn Fn(usize) -> u64,
-) {
+) -> Result<(), SimOom> {
     let n_dev = sim.n_devices();
     let chunks = &plan.angle_chunks;
     let stagger = n_chunks.div_ceil(n_dev.max(1));
@@ -184,7 +242,7 @@ fn simulate_image_split(
             if slab_alloced[d] {
                 sim.free(d, "slab");
             }
-            sim.alloc(d, "slab", bytes);
+            sim.alloc(d, "slab", bytes)?;
             slab_alloced[d] = true;
             slab_ready[d] = sim.h2d(d, bytes, plan.pin_image, Ev::ZERO);
         }
@@ -260,6 +318,7 @@ fn simulate_image_split(
             }
         }
     }
+    Ok(())
 }
 
 /// Real numerics with the identical partitioning: the pipelined executor

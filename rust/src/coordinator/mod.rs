@@ -32,6 +32,13 @@
 //! per worker, deterministically merged — bit-identical output for every
 //! worker count. The pre-PR3 host-sequential loops survive behind
 //! [`ExecutorConfig::pipelined`]` = false` as the benchmark baseline.
+//!
+//! Since PR 4 the iterative algorithms drive their loops through a
+//! [`residency::ReconSession`]: a cross-iteration device residency cache
+//! keeps constant inputs (the measured projections, an unchanged volume,
+//! each device's own forward-output chunks) staged across operator calls,
+//! with write-epochs making stale reuse impossible. Only the simulated
+//! schedule changes; the real executors stay stateless and bit-identical.
 
 pub mod backward;
 pub mod baseline;
@@ -39,7 +46,9 @@ pub mod executor;
 pub mod forward;
 pub mod pipeline;
 pub mod regularizer;
+pub mod residency;
 pub mod splitter;
 
 pub use executor::{Backend, ExecMode, ExecutorConfig, MultiGpu, OpStats};
+pub use residency::{ReconSession, ResidencyCache, ResidencyStats};
 pub use splitter::{Plan, SplitConfig};

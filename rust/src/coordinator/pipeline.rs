@@ -41,6 +41,15 @@
 //! ([`forward_sequential`], [`backward_sequential`]) behind
 //! [`ExecutorConfig::pipelined`]` = false` as the benchmark comparison
 //! baseline (`bench::coordinator`, `BENCH_coordinator.json`).
+//!
+//! ## Statelessness contract (PR 4)
+//!
+//! The cross-iteration residency layer (`coordinator::residency`) sits
+//! *above* these executors: it decides which simulated transfers are
+//! skipped, but always hands this module the same host-resident arrays.
+//! Everything here must therefore stay stateless and deterministic in its
+//! inputs — that is what lets `ReconSession` guarantee bit-identical
+//! output with the cache on or off, for every worker count.
 
 use std::sync::mpsc;
 

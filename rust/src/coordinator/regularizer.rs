@@ -56,7 +56,7 @@ pub fn tv_gradient_descent_split(
     total_iters: usize,
     alpha: f32,
     n_in: usize,
-) -> (Volume, OpStats) {
+) -> anyhow::Result<(Volume, OpStats)> {
     run_split(ctx, vol, total_iters, n_in, |slab, iters, info| {
         tv_gd_approx_norm(slab, iters, alpha, info);
     })
@@ -72,7 +72,7 @@ pub fn rof_denoise_split(
     lambda: f32,
     iters: usize,
     n_in: usize,
-) -> (Volume, OpStats) {
+) -> anyhow::Result<(Volume, OpStats)> {
     run_split(ctx, vol, iters, n_in, |slab, round_iters, _| {
         *slab = tv::rof_denoise(slab, lambda, round_iters);
     })
@@ -90,7 +90,7 @@ fn run_split<F>(
     total_iters: usize,
     n_in: usize,
     kernel: F,
-) -> (Volume, OpStats)
+) -> anyhow::Result<(Volume, OpStats)>
 where
     F: Fn(&mut Volume, usize, GlobalInfo),
 {
@@ -127,7 +127,7 @@ where
         for (d, hs) in slabs.iter().enumerate() {
             let ext_bytes = (hs.ext_z1 - hs.ext_z0) as u64 * plane;
             let dev = d % ctx.n_gpus.max(1);
-            sim.alloc(dev, &format!("tv_slab_r{done}"), ext_bytes);
+            sim.alloc(dev, &format!("tv_slab_r{done}"), ext_bytes)?;
             let h = sim.h2d(dev, ext_bytes, true, Ev::ZERO);
             let voxels = (hs.ext_z1 - hs.ext_z0) as u64 * (vol.nx * vol.ny) as u64;
             let t = sim.cost.tv_kernel_s(voxels, round);
@@ -151,8 +151,9 @@ where
         splits_per_device: slabs.len().div_ceil(ctx.n_gpus.max(1)),
         pinned: true,
         peak_device_bytes: (0..sim.n_devices()).map(|d| sim.device_mem(d).peak()).max().unwrap_or(0),
+        residency: Default::default(),
     };
-    (current, stats)
+    Ok((current, stats))
 }
 
 /// TV gradient descent with the paper's approximated global norms: each
@@ -206,7 +207,7 @@ mod tests {
         let iters = 6;
         let full = crate::kernels::tv::rof_denoise(&v, 0.2, iters);
         let ctx = MultiGpu::gtx1080ti(3);
-        let (split, _) = rof_denoise_split(&ctx, &v, 0.2, iters, iters);
+        let (split, _) = rof_denoise_split(&ctx, &v, 0.2, iters, iters).unwrap();
         for (i, (a, b)) in full.data.iter().zip(&split.data).enumerate() {
             assert!((a - b).abs() < 1e-6, "voxel {i}: {a} vs {b}");
         }
@@ -221,8 +222,8 @@ mod tests {
         let iters = 8;
         let full = crate::kernels::tv::rof_denoise(&v, 0.25, iters);
         let ctx = MultiGpu::gtx1080ti(3);
-        let (exact, _) = rof_denoise_split(&ctx, &v, 0.25, iters, iters);
-        let (shallow, _) = rof_denoise_split(&ctx, &v, 0.25, iters, 1);
+        let (exact, _) = rof_denoise_split(&ctx, &v, 0.25, iters, iters).unwrap();
+        let (shallow, _) = rof_denoise_split(&ctx, &v, 0.25, iters, 1).unwrap();
         let err_exact = crate::metrics::rmse(&full, &exact);
         let err_shallow = crate::metrics::rmse(&full, &shallow);
         assert!(err_exact < 1e-6);
@@ -235,7 +236,7 @@ mod tests {
         let mut full = v.clone();
         crate::kernels::tv::tv_gradient_descent(&mut full, 10, 0.01);
         let ctx = MultiGpu::gtx1080ti(2);
-        let (split, _) = tv_gradient_descent_split(&ctx, &v, 10, 0.01, 10);
+        let (split, _) = tv_gradient_descent_split(&ctx, &v, 10, 0.01, 10).unwrap();
         // approximate-norm splitting: within 2% relative error
         let rel = crate::metrics::rel_l2(&full, &split);
         assert!(rel < 0.02, "split TV-GD relative error {rel}");
@@ -246,7 +247,7 @@ mod tests {
         let v = phantom::random(10, 10, 20, 11);
         let before = crate::kernels::tv::tv_value(&v);
         let ctx = MultiGpu::gtx1080ti(2);
-        let (after_vol, stats) = tv_gradient_descent_split(&ctx, &v, 20, 0.01, 5);
+        let (after_vol, stats) = tv_gradient_descent_split(&ctx, &v, 20, 0.01, 5).unwrap();
         let after = crate::kernels::tv::tv_value(&after_vol);
         assert!(after < before * 0.9, "TV {before} → {after}");
         assert!(stats.makespan_s > 0.0);
@@ -259,8 +260,8 @@ mod tests {
         // reduce exchanges (host syncs) but add redundant compute.
         let v = phantom::random(16, 16, 64, 3);
         let ctx = MultiGpu::gtx1080ti(4);
-        let (_, shallow) = rof_denoise_split(&ctx, &v, 0.2, 12, 2);
-        let (_, deep) = rof_denoise_split(&ctx, &v, 0.2, 12, 12);
+        let (_, shallow) = rof_denoise_split(&ctx, &v, 0.2, 12, 2).unwrap();
+        let (_, deep) = rof_denoise_split(&ctx, &v, 0.2, 12, 12).unwrap();
         // deep halo: one round; shallow: six rounds of exchange overhead.
         // At this tiny size the per-round fixed costs dominate, so the
         // deep variant must win.

@@ -1,0 +1,1033 @@
+//! Cross-iteration device residency for the coordinator (PR 4).
+//!
+//! Iterative reconstruction calls the same forward/backprojection every
+//! iteration on data that barely changes: the measured projections are
+//! constant, only the volume updates. The stateless executors re-stage
+//! every input host→device on every call — exactly the redundant traffic
+//! hierarchical-communication schemes (Hidayetoğlu et al., arXiv
+//! 2009.07226) eliminate. This module adds the missing state:
+//!
+//! * [`ResidencyCache`] — a per-device, memory-budget-aware cache of
+//!   staged buffers. Entries are keyed by `(op, unit, source id)` where a
+//!   unit is the full image (angle-split FP) or an angle-chunk range (BP
+//!   input), and carry the source's **epoch**: every host-side write
+//!   through [`TrackedVolume::write`]/[`TrackedProjections::write`] bumps
+//!   the epoch, so a stale device copy simply stops matching — stale
+//!   reuse is impossible by construction. A budget-driven LRU evicts when
+//!   the per-device residency budget (device RAM minus the operators'
+//!   transient working set) would be exceeded.
+//! * [`ReconSession`] — a handle bundling one geometry's FP/BP [`Plan`]s,
+//!   the [`MultiGpu`] context and the cache. The iterative algorithms
+//!   drive their loops through it instead of the stateless
+//!   `MultiGpu::forward`/`backward`:
+//!   - `forward(&TrackedVolume)` skips the per-device image upload when
+//!     the volume is unchanged since it was last staged, and publishes
+//!     its output chunks as device-resident for the next backprojection
+//!     (each device keeps the chunks *it* computed);
+//!   - `backward(&TrackedProjections)` skips the chunk uploads whose
+//!     `(id, epoch)` is already resident;
+//!   - `backward_residual(&b, &ax)` models the paper-style iterative
+//!     update `Aᵀ(b − Ax)`: the constant measurement `b` stays resident
+//!     across iterations (staged once), each device already holds its own
+//!     share of `Ax` from the producing forward call, and the subtraction
+//!     runs on-device at accumulation cost. From the second iteration on,
+//!     the only projection traffic is `Ax` chunks a device did not itself
+//!     compute — **zero redundant staging**.
+//!
+//! Only the *simulated* schedule changes (skipped H2D events, shorter
+//! makespans, honest ledger accounting via `SimNode::reserve`); the real
+//! numeric path runs the identical pipelined executor on host-resident
+//! arrays, so results are bit-identical with the cache on or off — the
+//! parity tests below pin that.
+//!
+//! ## Modeled limitations (documented, not bugs)
+//!
+//! * Image-split plans cycle every slab through one staging allocation
+//!   because the slabs do not fit simultaneously — slab residency is
+//!   structurally impossible within the budget, so those stagings always
+//!   count as misses (the hit-rate stays honest in the memory-starved
+//!   regime).
+//! * The budget is conservative: it reserves the worst-case transient
+//!   working set of *both* operators (including the angle-split FP's full
+//!   image), so a resident buffer can never cause a simulated OOM.
+//! * Each `ReconSession` is an independent residency domain. Algorithms
+//!   that interleave several geometries (OS-SART's angle subsets) hold
+//!   one session per subset; in a real deployment the subsets would
+//!   compete for device RAM, which the per-session budget approximates
+//!   only if the caller sizes budgets accordingly.
+
+use std::collections::HashMap;
+
+use crate::geometry::Geometry;
+use crate::kernels::scratch;
+use crate::volume::{TrackedProjections, TrackedVolume, Volume};
+
+use super::executor::{ExecMode, MultiGpu, OpStats};
+use super::splitter::{plan_backward, plan_forward, Plan};
+
+/// Which operator staged a cached unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Fp,
+    Bp,
+}
+
+/// The staged unit a cache entry covers. Chunks are keyed by their
+/// *angle range* (not a chunk index) because the FP and BP plans chunk
+/// the angles at different granularities — a range can never be confused
+/// between plans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UnitKey {
+    /// The whole volume, resident per device (angle-split forward).
+    Image,
+    /// Projection angles `[a0, a1)` (backprojection input chunk).
+    Chunk { a0: usize, a1: usize },
+}
+
+/// Identity + epoch of the host buffer a device copy was staged from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SourceTag {
+    pub id: u64,
+    pub epoch: u64,
+}
+
+/// Hit/miss accounting for the residency cache, reported per operator
+/// call in [`OpStats::residency`] and cumulatively on [`ReconSession`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResidencyStats {
+    /// Stagings satisfied from a resident device copy (H2D skipped).
+    pub hits: u64,
+    /// Stagings that had to transfer (fresh data, stale epoch, or an
+    /// uncacheable unit).
+    pub misses: u64,
+    /// Bytes of transfers skipped by hits.
+    pub bytes_saved: u64,
+    /// Entries evicted by the budget-driven LRU.
+    pub evictions: u64,
+    /// Simulated seconds of transfer skipped (costmodel `copy_time_s`
+    /// applied to every hit).
+    pub transfer_saved_s: f64,
+}
+
+impl ResidencyStats {
+    /// Field-wise `self − earlier` (both must be cumulative snapshots of
+    /// the same cache, `earlier` taken first).
+    pub fn delta_since(&self, earlier: &ResidencyStats) -> ResidencyStats {
+        ResidencyStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            bytes_saved: self.bytes_saved - earlier.bytes_saved,
+            evictions: self.evictions - earlier.evictions,
+            transfer_saved_s: self.transfer_saved_s - earlier.transfer_saved_s,
+        }
+    }
+
+    /// Field-wise accumulate.
+    pub fn merge(&mut self, other: &ResidencyStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.bytes_saved += other.bytes_saved;
+        self.evictions += other.evictions;
+        self.transfer_saved_s += other.transfer_saved_s;
+    }
+}
+
+type EntryKey = (OpKind, UnitKey, u64);
+
+#[derive(Clone, Debug)]
+struct Entry {
+    src: SourceTag,
+    bytes: u64,
+    last_use: u64,
+}
+
+#[derive(Clone, Debug)]
+struct DeviceCache {
+    entries: HashMap<EntryKey, Entry>,
+    used: u64,
+    budget: u64,
+}
+
+/// Per-device cache of staged device buffers; see the module docs.
+#[derive(Clone, Debug)]
+pub struct ResidencyCache {
+    per_device: Vec<DeviceCache>,
+    /// Monotonic logical clock ordering uses for LRU eviction.
+    clock: u64,
+    stats: ResidencyStats,
+}
+
+impl ResidencyCache {
+    /// A cache for `n_dev` devices with the same residency `budget` each
+    /// (bytes of device RAM available beyond the operators' working set).
+    pub fn new(n_dev: usize, budget: u64) -> Self {
+        Self::with_budgets(vec![budget; n_dev])
+    }
+
+    /// Per-device budgets (tests use asymmetric ones).
+    pub fn with_budgets(budgets: Vec<u64>) -> Self {
+        Self {
+            per_device: budgets
+                .into_iter()
+                .map(|budget| DeviceCache { entries: HashMap::new(), used: 0, budget })
+                .collect(),
+            clock: 0,
+            stats: ResidencyStats::default(),
+        }
+    }
+
+    /// Cumulative statistics snapshot.
+    pub fn stats(&self) -> ResidencyStats {
+        self.stats
+    }
+
+    /// Bytes currently resident on device `dev`.
+    pub fn resident_bytes(&self, dev: usize) -> u64 {
+        self.per_device[dev].used
+    }
+
+    /// The residency budget of device `dev`.
+    pub fn budget(&self, dev: usize) -> u64 {
+        self.per_device[dev].budget
+    }
+
+    /// Whether `(op, unit)` from exactly `src` is resident on `dev`.
+    pub fn contains(&self, dev: usize, op: OpKind, unit: UnitKey, src: SourceTag) -> bool {
+        self.per_device[dev]
+            .entries
+            .get(&(op, unit, src.id))
+            .is_some_and(|e| e.src.epoch == src.epoch)
+    }
+
+    /// Record one staging of `unit` from `src` on device `dev`. Returns
+    /// `true` on a hit (resident and epoch-fresh: the transfer can be
+    /// skipped). On a miss the unit is transferred and then kept resident
+    /// if it fits the budget (evicting LRU entries as needed); a stale
+    /// copy of the same buffer is dropped first, so an outdated epoch can
+    /// never be reused later.
+    ///
+    /// Pure hit/miss accounting: transfer savings are credited by the
+    /// caller via [`ResidencyCache::add_saved`], because what a hit is
+    /// worth depends on what the uncached schedule would have staged
+    /// (residual mode nets two operands against one baseline chunk).
+    pub fn stage(
+        &mut self,
+        dev: usize,
+        op: OpKind,
+        unit: UnitKey,
+        src: SourceTag,
+        bytes: u64,
+    ) -> bool {
+        self.clock += 1;
+        let clock = self.clock;
+        let key = (op, unit, src.id);
+        let dc = &mut self.per_device[dev];
+        if let Some(e) = dc.entries.get_mut(&key) {
+            if e.src.epoch == src.epoch {
+                e.last_use = clock;
+                self.stats.hits += 1;
+                return true;
+            }
+            // stale epoch: the device copy is outdated — drop it
+            let stale = dc.entries.remove(&key).expect("entry just found");
+            dc.used -= stale.bytes;
+        }
+        self.stats.misses += 1;
+        self.insert(dev, key, src, bytes);
+        false
+    }
+
+    /// Count stagings of units that are structurally uncacheable (e.g.
+    /// image-split slabs cycling through one allocation) so the hit rate
+    /// reflects *all* staging traffic, not just the cacheable part.
+    pub fn note_uncacheable_misses(&mut self, n: u64) {
+        self.stats.misses += n;
+    }
+
+    /// Whether a unit of `bytes` could ever be kept resident on `dev`.
+    /// Exactly matches [`ResidencyCache::stage`]'s insert outcome: the
+    /// LRU can always evict down to zero, so only the budget bounds it.
+    pub fn can_cache(&self, dev: usize, bytes: u64) -> bool {
+        bytes <= self.per_device[dev].budget
+    }
+
+    /// Credit transfer savings against the uncached baseline (see
+    /// [`ResidencyCache::stage`] — residual mode nets its two operands
+    /// against the *single* residual chunk the uncached executor would
+    /// have staged, so crediting per hit would double-count the win).
+    pub fn add_saved(&mut self, bytes: u64, secs: f64) {
+        self.stats.bytes_saved += bytes;
+        self.stats.transfer_saved_s += secs;
+    }
+
+    /// Register a buffer the device already holds (an operator *output*
+    /// left resident, e.g. forward-projection chunks). No hit/miss is
+    /// counted — nothing was staged — but the entry competes for budget
+    /// like any other.
+    pub fn publish(&mut self, dev: usize, op: OpKind, unit: UnitKey, src: SourceTag, bytes: u64) {
+        self.clock += 1;
+        let key = (op, unit, src.id);
+        let dc = &mut self.per_device[dev];
+        if let Some(old) = dc.entries.remove(&key) {
+            dc.used -= old.bytes;
+        }
+        self.insert(dev, key, src, bytes);
+    }
+
+    /// Drop every entry sourced from buffer `id` on all devices (the
+    /// producing call's device buffers are being reused).
+    pub fn forget_source(&mut self, id: u64) {
+        for dc in &mut self.per_device {
+            let dead: Vec<EntryKey> =
+                dc.entries.keys().filter(|k| k.2 == id).copied().collect();
+            for k in dead {
+                let e = dc.entries.remove(&k).expect("key just listed");
+                dc.used -= e.bytes;
+            }
+        }
+    }
+
+    fn insert(&mut self, dev: usize, key: EntryKey, src: SourceTag, bytes: u64) {
+        let clock = self.clock;
+        let dc = &mut self.per_device[dev];
+        if bytes > dc.budget {
+            return; // can never fit — stream-only unit
+        }
+        while dc.used + bytes > dc.budget {
+            let Some((&lru, _)) = dc.entries.iter().min_by_key(|(_, e)| e.last_use) else {
+                break;
+            };
+            let e = dc.entries.remove(&lru).expect("LRU key just found");
+            dc.used -= e.bytes;
+            self.stats.evictions += 1;
+        }
+        if dc.used + bytes <= dc.budget {
+            dc.entries.insert(key, Entry { src, bytes, last_use: clock });
+            dc.used += bytes;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-call residency decisions handed to the simulated schedules
+// ---------------------------------------------------------------------------
+
+/// Forward-call residency decisions (computed against the cache before
+/// the simulated schedule replays).
+#[derive(Clone, Debug)]
+pub(crate) struct FpResidency {
+    /// Per device: the resident image is epoch-fresh — skip its upload.
+    pub skip_image_h2d: Vec<bool>,
+    /// Per device: the image is cached after this call — the schedule
+    /// must not free it at operator end.
+    pub keep_image: Vec<bool>,
+    /// Per device: carried-over resident bytes to charge to the ledger.
+    pub reserve: Vec<u64>,
+}
+
+/// One `(device, slab, chunk)` staging decision for the backprojection.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ChunkStage {
+    /// Bytes this launch still has to move host→device (0 = all inputs
+    /// resident).
+    pub h2d_bytes: u64,
+    /// On-device residual subtraction time (`b − Ax`), charged once per
+    /// device×chunk in residual mode.
+    pub subtract_s: f64,
+}
+
+/// Backward-call residency decisions, indexed `[device][slab][chunk]`.
+#[derive(Clone, Debug)]
+pub(crate) struct BpResidency {
+    pub stage: Vec<Vec<Vec<ChunkStage>>>,
+    pub reserve: Vec<u64>,
+}
+
+fn plan_fp_residency(
+    plan: &Plan,
+    g: &Geometry,
+    ctx: &MultiGpu,
+    cache: &mut ResidencyCache,
+    src: SourceTag,
+) -> FpResidency {
+    let n_dev = ctx.n_gpus;
+    let mut skip = vec![false; n_dev];
+    let mut keep = vec![false; n_dev];
+    if plan.full_image_per_device {
+        let bytes = g.volume_bytes();
+        let saved = ctx.cost.copy_time_s(bytes, plan.pin_image);
+        for (d, (sk, kp)) in skip.iter_mut().zip(keep.iter_mut()).enumerate() {
+            *sk = cache.stage(d, OpKind::Fp, UnitKey::Image, src, bytes);
+            if *sk {
+                cache.add_saved(bytes, saved);
+            }
+            *kp = cache.contains(d, OpKind::Fp, UnitKey::Image, src);
+        }
+    } else {
+        // image-split: slabs cycle through one staging allocation and can
+        // never stay resident within the budget — count the traffic
+        let stagings: u64 = plan.per_device.iter().map(|d| d.slabs.len() as u64).sum();
+        cache.note_uncacheable_misses(stagings);
+    }
+    let reserve = fp_reserve_bytes(plan, g, cache, &skip, &keep);
+    FpResidency { skip_image_h2d: skip, keep_image: keep, reserve }
+}
+
+/// Carried-over bytes to pre-charge per device. A freshly-staged image
+/// (miss that got cached) is excluded: the schedule's own `alloc` charges
+/// it this call, and `keep_image` retains the allocation afterwards.
+fn fp_reserve_bytes(
+    plan: &Plan,
+    g: &Geometry,
+    cache: &ResidencyCache,
+    skip: &[bool],
+    keep: &[bool],
+) -> Vec<u64> {
+    (0..skip.len())
+        .map(|d| {
+            let mut r = cache.resident_bytes(d);
+            if plan.full_image_per_device && keep[d] && !skip[d] {
+                r = r.saturating_sub(g.volume_bytes());
+            }
+            r
+        })
+        .collect()
+}
+
+fn plan_bp_residency(
+    plan: &Plan,
+    g: &Geometry,
+    ctx: &MultiGpu,
+    cache: &mut ResidencyCache,
+    sources: &[SourceTag],
+) -> BpResidency {
+    let n_dev = ctx.n_gpus;
+    let residual = sources.len() > 1;
+    let mut stage = Vec::with_capacity(n_dev);
+    for d in 0..n_dev {
+        let n_slabs = plan.per_device[d].slabs.len();
+        let mut first_pass = vec![true; plan.angle_chunks.len()];
+        let mut per_slab = Vec::with_capacity(n_slabs);
+        for _s in 0..n_slabs {
+            let mut per_chunk = Vec::with_capacity(plan.angle_chunks.len());
+            for (c, ch) in plan.angle_chunks.iter().enumerate() {
+                let bytes = ch.len() as u64 * g.single_proj_bytes();
+                let unit = UnitKey::Chunk { a0: ch.a0, a1: ch.a1 };
+                let saved = ctx.cost.copy_time_s(bytes, plan.pin_image);
+                let (h2d_bytes, on_device) = if !residual {
+                    let hit = cache.stage(d, OpKind::Bp, unit, sources[0], bytes);
+                    if hit {
+                        cache.add_saved(bytes, saved);
+                    }
+                    (if hit { 0 } else { bytes }, false)
+                } else if cache.can_cache(d, bytes) {
+                    // invest: stage b once (resident for every later
+                    // iteration) and the fresh Ax share, subtract
+                    // on-device — the residual never crosses the bus.
+                    // Savings are netted against the baseline's single
+                    // residual-chunk staging, not credited per operand.
+                    let mut h2d = 0;
+                    for &src in sources {
+                        if !cache.stage(d, OpKind::Bp, unit, src, bytes) {
+                            h2d += bytes;
+                        }
+                    }
+                    let actual_s =
+                        if h2d > 0 { ctx.cost.copy_time_s(h2d, plan.pin_image) } else { 0.0 };
+                    let saved_s = (saved - actual_s).max(0.0);
+                    let saved_b = bytes.saturating_sub(h2d);
+                    if saved_b > 0 || saved_s > 0.0 {
+                        cache.add_saved(saved_b, saved_s);
+                    }
+                    (h2d, true)
+                } else {
+                    // the device can never keep b: stream the host-formed
+                    // residual exactly like the uncached executor (no
+                    // double staging, no on-device subtraction)
+                    cache.note_uncacheable_misses(1);
+                    (bytes, false)
+                };
+                let subtract_s = if on_device && first_pass[c] {
+                    first_pass[c] = false;
+                    ctx.cost.accum_kernel_s(bytes)
+                } else {
+                    0.0
+                };
+                per_chunk.push(ChunkStage { h2d_bytes, subtract_s });
+            }
+            per_slab.push(per_chunk);
+        }
+        stage.push(per_slab);
+    }
+    let reserve = (0..n_dev).map(|d| cache.resident_bytes(d)).collect();
+    BpResidency { stage, reserve }
+}
+
+/// Leave the forward call's output chunks resident on the devices that
+/// computed them, at the *backprojection* plan's chunk granularity: a BP
+/// chunk is resident on device `d` iff its angle range lies entirely
+/// within `d`'s forward share.
+fn publish_fp_outputs(
+    fp_plan: &Plan,
+    bp_plan: &Plan,
+    g: &Geometry,
+    n_dev: usize,
+    cache: &mut ResidencyCache,
+    src: SourceTag,
+) {
+    let shares = fp_plan.chunk_shares(n_dev);
+    for (d, &(c0, c1)) in shares.iter().enumerate() {
+        if c1 <= c0 {
+            continue;
+        }
+        let a_lo = fp_plan.angle_chunks[c0].a0;
+        let a_hi = fp_plan.angle_chunks[c1 - 1].a1;
+        for ch in &bp_plan.angle_chunks {
+            if ch.a0 >= a_lo && ch.a1 <= a_hi {
+                let bytes = ch.len() as u64 * g.single_proj_bytes();
+                cache.publish(d, OpKind::Bp, UnitKey::Chunk { a0: ch.a0, a1: ch.a1 }, src, bytes);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReconSession
+// ---------------------------------------------------------------------------
+
+/// A reconstruction session: one geometry's operator plans, the device
+/// context and the cross-iteration residency state, plus cumulative
+/// accounting. See the module docs for the protocol.
+pub struct ReconSession {
+    ctx: MultiGpu,
+    g: Geometry,
+    fp_plan: Plan,
+    bp_plan: Plan,
+    cache: ResidencyCache,
+    enabled: bool,
+    /// Source id of the forward output currently published as resident.
+    last_fp_output: Option<u64>,
+    /// Total simulated seconds across all operator calls.
+    pub sim_time_s: f64,
+    /// Peak simulated device memory across all calls.
+    pub peak_device_bytes: u64,
+    /// Cumulative residency accounting across all calls.
+    pub residency: ResidencyStats,
+    /// Stats of the most recent operator call (tests assert on this).
+    pub last: Option<OpStats>,
+}
+
+impl ReconSession {
+    /// Plan both operators for `g` on `ctx` and derive the per-device
+    /// residency budget: usable device RAM minus the larger of the two
+    /// operators' transient working sets.
+    pub fn new(ctx: &MultiGpu, g: &Geometry) -> anyhow::Result<Self> {
+        let fp_plan = plan_forward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
+            .map_err(|e| anyhow::anyhow!("session forward plan: {e}"))?;
+        let bp_plan = plan_backward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
+            .map_err(|e| anyhow::anyhow!("session backward plan: {e}"))?;
+        let usable = (ctx.spec.mem_bytes as f64 * ctx.split.mem_fraction) as u64;
+        let working_set = fp_plan.working_set_bytes(g).max(bp_plan.working_set_bytes(g));
+        let budget = usable.saturating_sub(working_set);
+        Ok(Self {
+            ctx: ctx.clone(),
+            g: g.clone(),
+            fp_plan,
+            bp_plan,
+            cache: ResidencyCache::new(ctx.n_gpus, budget),
+            enabled: true,
+            last_fp_output: None,
+            sim_time_s: 0.0,
+            peak_device_bytes: 0,
+            residency: ResidencyStats::default(),
+            last: None,
+        })
+    }
+
+    /// Disable the cache (every staging transfers, as pre-session code
+    /// did) — the baseline side of cached-vs-uncached comparisons.
+    pub fn without_residency(mut self) -> Self {
+        self.enabled = false;
+        self
+    }
+
+    /// The per-device residency budget, bytes.
+    pub fn residency_budget(&self) -> u64 {
+        self.cache.budget(0)
+    }
+
+    /// Forward projection `A·vol`. Residency: the per-device image upload
+    /// is skipped when `vol` is unchanged since last staged; the output
+    /// chunks are published as device-resident for the following
+    /// backprojection.
+    pub fn forward(&mut self, vol: &TrackedVolume) -> anyhow::Result<TrackedProjections> {
+        let before = self.cache.stats();
+        let res = if self.enabled {
+            // the device output buffers are about to be reused: the
+            // previous forward's published chunks are gone
+            if let Some(prev) = self.last_fp_output.take() {
+                self.cache.forget_source(prev);
+            }
+            let src = SourceTag { id: vol.id(), epoch: vol.epoch() };
+            Some(plan_fp_residency(&self.fp_plan, &self.g, &self.ctx, &mut self.cache, src))
+        } else {
+            None
+        };
+        let (p, mut stats) = super::forward::run_with(
+            &self.ctx,
+            &self.g,
+            Some(vol.get()),
+            ExecMode::Full,
+            &self.fp_plan,
+            res.as_ref(),
+        )?;
+        let out = TrackedProjections::new(p.expect("Full mode returns projections"));
+        if self.enabled && self.fp_plan.full_image_per_device {
+            let src = SourceTag { id: out.id(), epoch: out.epoch() };
+            publish_fp_outputs(
+                &self.fp_plan,
+                &self.bp_plan,
+                &self.g,
+                self.ctx.n_gpus,
+                &mut self.cache,
+                src,
+            );
+            self.last_fp_output = Some(out.id());
+        }
+        // delta taken after publishing, so evictions the publication
+        // causes are attributed to this call instead of vanishing into
+        // the next call's baseline snapshot
+        stats.residency = self.cache.stats().delta_since(&before);
+        self.account(stats);
+        Ok(out)
+    }
+
+    /// Backprojection `Aᵀ·proj`. Chunk uploads whose `(id, epoch)` is
+    /// already resident are skipped; missed chunks stay resident for the
+    /// next call (budget permitting).
+    pub fn backward(&mut self, proj: &TrackedProjections) -> anyhow::Result<Volume> {
+        let src = SourceTag { id: proj.id(), epoch: proj.epoch() };
+        self.backward_inner(proj.get(), &[src])
+    }
+
+    /// The iterative update `Aᵀ(b − ax)` with residual formation modeled
+    /// on-device: `b` stays resident across iterations, each device
+    /// already holds its own share of `ax` (the session's forward
+    /// output), and the subtraction costs an accumulation kernel. Returns
+    /// the backprojected update and `‖b − ax‖₂`.
+    ///
+    /// Numerically this computes the residual host-side and runs the
+    /// standard pipelined executor on it — bit-identical to doing the
+    /// same two steps without a session.
+    pub fn backward_residual(
+        &mut self,
+        b: &TrackedProjections,
+        ax: &TrackedProjections,
+    ) -> anyhow::Result<(Volume, f64)> {
+        let bp = b.get();
+        let ap = ax.get();
+        anyhow::ensure!(
+            bp.data.len() == ap.data.len(),
+            "backward_residual: b has {} samples but ax has {}",
+            bp.data.len(),
+            ap.data.len()
+        );
+        let mut r = scratch::take_projections(bp.nu, bp.nv, bp.n_angles);
+        for ((rv, bv), av) in r.data.iter_mut().zip(&bp.data).zip(&ap.data) {
+            *rv = bv - av;
+        }
+        let norm = r.norm2();
+        let sources = [
+            SourceTag { id: b.id(), epoch: b.epoch() },
+            SourceTag { id: ax.id(), epoch: ax.epoch() },
+        ];
+        let vol = self.backward_inner(&r, &sources)?;
+        scratch::recycle_projections(r);
+        Ok((vol, norm))
+    }
+
+    fn backward_inner(
+        &mut self,
+        proj: &crate::volume::ProjectionSet,
+        sources: &[SourceTag],
+    ) -> anyhow::Result<Volume> {
+        let before = self.cache.stats();
+        let res = if self.enabled {
+            Some(plan_bp_residency(&self.bp_plan, &self.g, &self.ctx, &mut self.cache, sources))
+        } else {
+            None
+        };
+        let (v, mut stats) = super::backward::run_with(
+            &self.ctx,
+            &self.g,
+            Some(proj),
+            ExecMode::Full,
+            &self.bp_plan,
+            res.as_ref(),
+        )?;
+        stats.residency = self.cache.stats().delta_since(&before);
+        self.account(stats);
+        Ok(v.expect("Full mode returns the volume"))
+    }
+
+    /// Recycle a tracked projection buffer through the `kernels::scratch`
+    /// arena *and* drop any device-resident copies of it from the cache:
+    /// the host buffer is gone, so keeping entries would charge dead
+    /// bytes to the ledger (and squeeze the LRU budget) forever.
+    pub fn recycle_projections(&mut self, p: TrackedProjections) {
+        self.cache.forget_source(p.id());
+        if self.last_fp_output == Some(p.id()) {
+            self.last_fp_output = None;
+        }
+        scratch::recycle_projections(p.into_inner());
+    }
+
+    fn account(&mut self, stats: OpStats) {
+        self.sim_time_s += stats.makespan_s;
+        self.peak_device_bytes = self.peak_device_bytes.max(stats.peak_device_bytes);
+        self.residency.merge(&stats.residency);
+        self.last = Some(stats);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::{ExecMode, MultiGpu};
+    use crate::coordinator::splitter::{image_split_mem, SplitConfig};
+    use crate::phantom;
+
+    fn tag(id: u64, epoch: u64) -> SourceTag {
+        SourceTag { id, epoch }
+    }
+
+    #[test]
+    fn cache_hit_only_on_matching_id_and_epoch() {
+        let mut c = ResidencyCache::new(1, 1 << 20);
+        let unit = UnitKey::Chunk { a0: 0, a1: 9 };
+        assert!(!c.stage(0, OpKind::Bp, unit, tag(1, 0), 100), "first staging misses");
+        assert!(c.stage(0, OpKind::Bp, unit, tag(1, 0), 100), "unchanged source hits");
+        // epoch bump = host write: the resident copy must stop matching
+        assert!(!c.stage(0, OpKind::Bp, unit, tag(1, 1), 100), "stale epoch misses");
+        assert!(c.stage(0, OpKind::Bp, unit, tag(1, 1), 100), "restaged copy hits again");
+        // the stale epoch can never hit again
+        assert!(!c.stage(0, OpKind::Bp, unit, tag(1, 0), 100));
+        // a different buffer at the same unit is a distinct entry
+        assert!(!c.stage(0, OpKind::Bp, unit, tag(2, 0), 100));
+        assert!(c.stage(0, OpKind::Bp, unit, tag(2, 0), 100));
+        let s = c.stats();
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.misses, 4);
+        // savings are credited by the caller, not by stage()
+        assert_eq!(s.bytes_saved, 0);
+        c.add_saved(300, 3.0);
+        assert_eq!(c.stats().bytes_saved, 300);
+        assert!((c.stats().transfer_saved_s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_lru_evicts_under_tight_budget() {
+        // budget of 250 bytes: holds two 100-byte chunks, not three
+        let mut c = ResidencyCache::new(1, 250);
+        let u = |i: usize| UnitKey::Chunk { a0: i, a1: i + 1 };
+        assert!(!c.stage(0, OpKind::Bp, u(0), tag(1, 0), 100));
+        assert!(!c.stage(0, OpKind::Bp, u(1), tag(2, 0), 100));
+        assert_eq!(c.resident_bytes(0), 200);
+        // touch chunk 0 so chunk 1 becomes the LRU
+        assert!(c.stage(0, OpKind::Bp, u(0), tag(1, 0), 100));
+        // inserting chunk 2 must evict chunk 1 (LRU), not chunk 0
+        assert!(!c.stage(0, OpKind::Bp, u(2), tag(3, 0), 100));
+        assert_eq!(c.resident_bytes(0), 200);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.contains(0, OpKind::Bp, u(0), tag(1, 0)), "recently-used survives");
+        assert!(!c.contains(0, OpKind::Bp, u(1), tag(2, 0)), "LRU evicted");
+        assert!(c.contains(0, OpKind::Bp, u(2), tag(3, 0)));
+        // a unit bigger than the whole budget is never cached
+        assert!(!c.stage(0, OpKind::Bp, u(3), tag(4, 0), 1000));
+        assert!(!c.contains(0, OpKind::Bp, u(3), tag(4, 0)));
+        assert_eq!(c.resident_bytes(0), 200, "oversized unit must not evict anything");
+    }
+
+    #[test]
+    fn cache_forget_source_drops_all_devices() {
+        let mut c = ResidencyCache::new(2, 1 << 20);
+        let u = UnitKey::Chunk { a0: 0, a1: 4 };
+        c.publish(0, OpKind::Bp, u, tag(7, 0), 64);
+        c.publish(1, OpKind::Bp, u, tag(7, 0), 64);
+        c.publish(1, OpKind::Bp, u, tag(8, 0), 64);
+        c.forget_source(7);
+        assert!(!c.contains(0, OpKind::Bp, u, tag(7, 0)));
+        assert!(!c.contains(1, OpKind::Bp, u, tag(7, 0)));
+        assert!(c.contains(1, OpKind::Bp, u, tag(8, 0)), "other sources survive");
+        assert_eq!(c.resident_bytes(0), 0);
+        assert_eq!(c.resident_bytes(1), 64);
+    }
+
+    /// Device memory that forces the image-split regime for `g`.
+    fn tiny_mem(g: &Geometry) -> u64 {
+        image_split_mem(g, &SplitConfig::default())
+    }
+
+    fn contexts(n_gpus: usize, g: &Geometry, image_split: bool) -> MultiGpu {
+        let ctx = MultiGpu::gtx1080ti(n_gpus);
+        if image_split {
+            ctx.with_device_mem(tiny_mem(g))
+        } else {
+            ctx
+        }
+    }
+
+    #[test]
+    fn fp_image_residency_hits_until_the_volume_is_written() {
+        let g = Geometry::cone_beam(16, 10);
+        let ctx = MultiGpu::gtx1080ti(2);
+        let reference = ctx.forward(&g, Some(&phantom::shepp_logan(16)), ExecMode::Full)
+            .unwrap()
+            .0
+            .unwrap();
+        let mut sess = ReconSession::new(&ctx, &g).unwrap();
+        let mut x = TrackedVolume::new(phantom::shepp_logan(16));
+
+        let p1 = sess.forward(&x).unwrap();
+        let s1 = sess.last.as_ref().unwrap().residency;
+        assert_eq!(s1.hits, 0, "first call stages everything");
+        assert_eq!(s1.misses, 2, "one image upload per device");
+        assert_eq!(p1.get().data, reference.data, "residency must not change numerics");
+
+        let p2 = sess.forward(&x).unwrap();
+        let s2 = sess.last.as_ref().unwrap().residency;
+        assert_eq!(s2.hits, 2, "unchanged volume: both devices reuse the resident image");
+        assert_eq!(s2.misses, 0);
+        assert!(s2.bytes_saved >= 2 * g.volume_bytes());
+        assert!(s2.transfer_saved_s > 0.0);
+        assert_eq!(p2.get().data, reference.data);
+        // the cached call must be simulated-faster than the uncached one
+        let t1 = sess.last.as_ref().unwrap().makespan_s;
+        let (_, uncached) = ctx.forward(&g, Some(x.get()), ExecMode::Full).unwrap();
+        assert!(t1 < uncached.makespan_s, "cached {t1} vs uncached {}", uncached.makespan_s);
+
+        // host-side write bumps the epoch: stale reuse must be impossible
+        x.write().data[0] += 1.0;
+        let p3 = sess.forward(&x).unwrap();
+        let s3 = sess.last.as_ref().unwrap().residency;
+        assert_eq!(s3.hits, 0, "written volume must re-stage everywhere");
+        assert_eq!(s3.misses, 2);
+        let fresh = ctx.forward(&g, Some(x.get()), ExecMode::Full).unwrap().0.unwrap();
+        assert_eq!(p3.get().data, fresh.data, "post-write output must track the new data");
+    }
+
+    #[test]
+    fn bp_caches_unchanged_projections_across_calls() {
+        let g = Geometry::cone_beam(16, 10);
+        let ctx = MultiGpu::gtx1080ti(2);
+        let v = phantom::shepp_logan(16);
+        let p = ctx.forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+        let reference = ctx.backward(&g, Some(&p), ExecMode::Full).unwrap().0.unwrap();
+
+        let mut sess = ReconSession::new(&ctx, &g).unwrap();
+        let b = TrackedProjections::new(p);
+        let v1 = sess.backward(&b).unwrap();
+        let s1 = sess.last.as_ref().unwrap().residency;
+        assert_eq!(s1.hits, 0);
+        assert!(s1.misses > 0);
+        assert_eq!(v1.data, reference.data);
+
+        let v2 = sess.backward(&b).unwrap();
+        let s2 = sess.last.as_ref().unwrap().residency;
+        assert_eq!(s2.misses, 0, "unchanged projections: zero redundant staging");
+        assert_eq!(s2.hits, s1.misses, "every prior staging is now a hit");
+        assert_eq!(v2.data, reference.data);
+    }
+
+    /// The acceptance criterion: an iterative loop's 2nd+ iterations
+    /// perform zero redundant projection staging while staying
+    /// bit-identical to the uncached pipelined executor, across
+    /// 1–3 simulated GPUs × angle/image split.
+    #[test]
+    fn iterative_loop_bit_parity_and_zero_redundant_staging() {
+        let n = 16;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let truth = phantom::shepp_logan(n);
+        for n_gpus in [1usize, 2, 3] {
+            for image_split in [false, true] {
+                let ctx = contexts(n_gpus, &g, image_split);
+                let proj = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap().0.unwrap();
+
+                // session-driven Landweber-style loop
+                let mut sess = ReconSession::new(&ctx, &g).unwrap();
+                let b = TrackedProjections::new(proj.clone());
+                let mut x = TrackedVolume::new(Volume::zeros_like(&g));
+                // uncached reference loop: identical math through the
+                // stateless executor
+                let mut x_ref = Volume::zeros_like(&g);
+
+                for it in 0..3 {
+                    let ax = sess.forward(&x).unwrap();
+                    let (upd, norm) = sess.backward_residual(&b, &ax).unwrap();
+                    let bp_stats = sess.last.as_ref().unwrap().residency;
+                    drop(ax);
+                    x.write().add_scaled(&upd, 1e-3);
+
+                    let (ax_ref, _) = ctx.forward(&g, Some(&x_ref), ExecMode::Full).unwrap();
+                    let mut r_ref = proj.clone();
+                    r_ref.add_scaled(&ax_ref.unwrap(), -1.0);
+                    assert!((norm - r_ref.norm2()).abs() <= 1e-9 * (1.0 + norm));
+                    let (upd_ref, _) = ctx.backward(&g, Some(&r_ref), ExecMode::Full).unwrap();
+                    x_ref.add_scaled(&upd_ref.unwrap(), 1e-3);
+
+                    assert_eq!(
+                        x.get().data, x_ref.data,
+                        "gpus={n_gpus} split={image_split} iter={it}: \
+                         session must be bit-identical to the uncached executor"
+                    );
+
+                    if it >= 1 && !image_split {
+                        // 2nd+ iterations: b is resident everywhere and each
+                        // device holds its own share of Ax — the only
+                        // staging left is cross-device Ax chunks, which is
+                        // fresh data, not redundancy.
+                        let bp_plan = crate::coordinator::splitter::plan_backward(
+                            &g,
+                            ctx.n_gpus,
+                            ctx.spec.mem_bytes,
+                            &ctx.split,
+                        )
+                        .unwrap();
+                        let fp_plan = crate::coordinator::splitter::plan_forward(
+                            &g,
+                            ctx.n_gpus,
+                            ctx.spec.mem_bytes,
+                            &ctx.split,
+                        )
+                        .unwrap();
+                        let shares = fp_plan.chunk_shares(ctx.n_gpus);
+                        let mut expected_misses = 0u64;
+                        for &(c0, c1) in &shares {
+                            let (a_lo, a_hi) = if c1 > c0 {
+                                (fp_plan.angle_chunks[c0].a0, fp_plan.angle_chunks[c1 - 1].a1)
+                            } else {
+                                (0, 0)
+                            };
+                            for ch in &bp_plan.angle_chunks {
+                                if !(ch.a0 >= a_lo && ch.a1 <= a_hi) {
+                                    expected_misses += 1; // cross-device Ax chunk
+                                }
+                            }
+                        }
+                        assert_eq!(
+                            bp_stats.misses, expected_misses,
+                            "gpus={n_gpus} iter={it}: only cross-device Ax chunks may stage"
+                        );
+                        assert!(bp_stats.hits > 0, "gpus={n_gpus} iter={it}: hits expected");
+                        if n_gpus == 1 {
+                            assert_eq!(
+                                bp_stats.misses, 0,
+                                "1 GPU: 2nd+ iterations must stage no projections at all"
+                            );
+                        }
+                    }
+                }
+                // Cached-vs-uncached simulated time. At this tiny test
+                // geometry the single BP chunk spans all angles, so with
+                // >1 GPU no FP output share covers it and the residual
+                // scheme's steady state matches (not beats) the uncached
+                // traffic; the guaranteed win is the 1-GPU case, where
+                // 2nd+ iterations stage nothing at all. (At paper-scale
+                // angle counts the BP chunks mostly fall inside one FP
+                // share — see `bench::coordinator`'s residency entries.)
+                if !image_split {
+                    let mut un = ReconSession::new(&ctx, &g).unwrap().without_residency();
+                    let ub = TrackedProjections::new(proj.clone());
+                    let mut ux = TrackedVolume::new(Volume::zeros_like(&g));
+                    for _ in 0..3 {
+                        let ax = un.forward(&ux).unwrap();
+                        let (upd, _) = un.backward_residual(&ub, &ax).unwrap();
+                        ux.write().add_scaled(&upd, 1e-3);
+                    }
+                    assert_eq!(un.residency, ResidencyStats::default());
+                    if n_gpus == 1 {
+                        assert!(
+                            sess.sim_time_s < un.sim_time_s,
+                            "1 GPU: cached {} !< uncached {}",
+                            sess.sim_time_s,
+                            un.sim_time_s
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn image_split_budget_is_zero_and_everything_misses() {
+        let g = Geometry::cone_beam(16, 12);
+        let ctx = contexts(2, &g, true);
+        let mut sess = ReconSession::new(&ctx, &g).unwrap();
+        // the split regime leaves less than one BP chunk of slack beyond
+        // the working set, so nothing is ever cacheable
+        let bp_chunk_bytes =
+            SplitConfig::default().bp_chunk.min(g.n_angles()) as u64 * g.single_proj_bytes();
+        assert!(
+            sess.residency_budget() < bp_chunk_bytes,
+            "budget {} should not fit a BP chunk ({bp_chunk_bytes})",
+            sess.residency_budget()
+        );
+        let x = TrackedVolume::new(phantom::shepp_logan(16));
+        let p = sess.forward(&x).unwrap();
+        assert_eq!(sess.last.as_ref().unwrap().residency.hits, 0);
+        assert!(sess.last.as_ref().unwrap().residency.misses > 0);
+        let _ = sess.backward(&p).unwrap();
+        let bp = sess.last.as_ref().unwrap().residency;
+        assert_eq!(bp.hits, 0, "no budget ⇒ no hits, but still correct");
+        assert!(bp.misses > 0);
+    }
+
+    #[test]
+    fn session_peak_memory_never_exceeds_capacity() {
+        // resident buffers + working set must respect the ledger: the
+        // conservative budget guarantees no simulated OOM and a peak
+        // within capacity even with the cache as full as it gets.
+        let g = Geometry::cone_beam(16, 12);
+        for image_split in [false, true] {
+            let ctx = contexts(2, &g, image_split);
+            let mut sess = ReconSession::new(&ctx, &g).unwrap();
+            let b = TrackedProjections::new(
+                ctx.forward(&g, Some(&phantom::shepp_logan(16)), ExecMode::Full)
+                    .unwrap()
+                    .0
+                    .unwrap(),
+            );
+            let mut x = TrackedVolume::new(Volume::zeros_like(&g));
+            for _ in 0..3 {
+                let ax = sess.forward(&x).unwrap();
+                let (upd, _) = sess.backward_residual(&b, &ax).unwrap();
+                x.write().add_scaled(&upd, 1e-3);
+            }
+            assert!(
+                sess.peak_device_bytes <= ctx.spec.mem_bytes,
+                "split={image_split}: peak {} > capacity {}",
+                sess.peak_device_bytes,
+                ctx.spec.mem_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn forward_output_can_be_mutated_and_backprojected() {
+        // MLEM/OS-SART pattern: mutate the forward output in place, then
+        // backproject it — the epoch bump must force a (correct) restage.
+        let g = Geometry::cone_beam(14, 8);
+        let ctx = MultiGpu::gtx1080ti(1);
+        let v = phantom::cube(14, 0.5, 1.0);
+        let mut sess = ReconSession::new(&ctx, &g).unwrap();
+        let x = TrackedVolume::new(v);
+        let mut ratio = sess.forward(&x).unwrap();
+        for r in &mut ratio.write().data {
+            *r *= 0.5;
+        }
+        let got = sess.backward(&ratio).unwrap();
+        let expect = ctx.backward(&g, Some(ratio.get()), ExecMode::Full).unwrap().0.unwrap();
+        assert_eq!(got.data, expect.data);
+    }
+}

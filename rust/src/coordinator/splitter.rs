@@ -88,6 +88,25 @@ impl Plan {
         split_even(self.angle_chunks.len(), n_gpus)
     }
 
+    /// Transient working set one operator call needs on a device beyond
+    /// anything the residency cache may keep resident: the projection
+    /// buffers plus the largest staged unit the schedule cycles through.
+    /// For the angle-split forward the "staged unit" is the full image
+    /// (counted even though it is the cacheable unit — the conservative
+    /// double-count is what guarantees a resident buffer can never push a
+    /// later call over device capacity); for slab-cycling plans it is the
+    /// largest slab. `coordinator::residency` derives the per-device
+    /// cache budget as `usable − max(FP, BP working set)`.
+    pub fn working_set_bytes(&self, g: &Geometry) -> u64 {
+        let bufs = self.n_proj_buffers as u64 * self.proj_buffer_bytes;
+        let staged = if self.full_image_per_device {
+            g.volume_bytes()
+        } else {
+            self.max_slab_bytes
+        };
+        bufs + staged
+    }
+
     /// Sanity invariants; used by property tests.
     pub fn validate(&self, g: &Geometry, mem_bytes: u64, cfg: &SplitConfig) -> Result<(), String> {
         // slabs of each device tile its z-range, contiguously, non-empty
@@ -385,6 +404,28 @@ mod tests {
         assert!((16500..18000).contains(&fp), "FP max N = {fp} (paper ≈17000)");
         assert!((8300..8800).contains(&bp), "BP max N = {bp} (paper ≈8500)");
         assert!((26500..27800).contains(&relaxed), "relaxed max N = {relaxed} (paper ≈27000)");
+    }
+
+    #[test]
+    fn working_set_counts_buffers_plus_staged_unit() {
+        let g = fig7_geometry(128);
+        // angle-split FP: staged unit is the full image
+        let fp = plan_forward(&g, 2, 11 * GIB, &SplitConfig::default()).unwrap();
+        assert!(fp.full_image_per_device);
+        assert_eq!(
+            fp.working_set_bytes(&g),
+            fp.n_proj_buffers as u64 * fp.proj_buffer_bytes + g.volume_bytes()
+        );
+        // BP: staged unit is the largest slab
+        let bp = plan_backward(&g, 2, 11 * GIB, &SplitConfig::default()).unwrap();
+        assert!(!bp.full_image_per_device);
+        assert_eq!(
+            bp.working_set_bytes(&g),
+            bp.n_proj_buffers as u64 * bp.proj_buffer_bytes + bp.max_slab_bytes
+        );
+        // the working set always fits the device (plan feasibility)
+        assert!(fp.working_set_bytes(&g) <= 11 * GIB);
+        assert!(bp.working_set_bytes(&g) <= 11 * GIB);
     }
 
     #[test]

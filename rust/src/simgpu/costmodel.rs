@@ -80,6 +80,17 @@ impl CostModel {
         }
     }
 
+    /// Host↔device transfer time for `bytes` over the pageable or pinned
+    /// path (bandwidth + fixed DMA-setup latency). This is the single
+    /// model both for copies the schedule *performs* (`SimNode::h2d`/`d2h`)
+    /// and for copies the residency cache *skips* — the coordinator uses
+    /// it to convert a cache hit's `bytes_saved` into the
+    /// `transfer_saved_s` reported in `OpStats`.
+    pub fn copy_time_s(&self, bytes: u64, pinned: bool) -> f64 {
+        let bw = if pinned { self.pcie_pinned_bps } else { self.pcie_pageable_bps };
+        bytes as f64 / bw + self.copy_latency_s
+    }
+
     /// Time to page-lock `bytes` of host memory.
     pub fn pin_time_s(&self, bytes: u64, already_allocated: bool) -> f64 {
         let bw = if already_allocated { self.pin_resident_bps } else { self.pin_alloc_bps };
@@ -161,6 +172,19 @@ mod tests {
     fn pinned_transfers_3x_faster() {
         let c = CostModel::gtx1080ti_pcie3();
         assert!((c.pcie_pinned_bps / c.pcie_pageable_bps - 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn copy_time_matches_bandwidth_plus_latency() {
+        let c = CostModel::gtx1080ti_pcie3();
+        let gib = 1u64 << 30;
+        let pageable = c.copy_time_s(gib, false);
+        let pinned = c.copy_time_s(gib, true);
+        assert!((pageable - (gib as f64 / 4.0e9 + 10e-6)).abs() < 1e-9);
+        assert!((pinned - (gib as f64 / 12.0e9 + 10e-6)).abs() < 1e-9);
+        assert!(pageable > pinned);
+        // zero bytes still pay the DMA setup latency
+        assert!((c.copy_time_s(0, true) - 10e-6).abs() < 1e-12);
     }
 
     #[test]

@@ -28,6 +28,31 @@ pub use timeline::{Category, TimelineEvent};
 
 use std::collections::BTreeMap;
 
+/// Typed out-of-memory error for the simulated device ledger.
+///
+/// OOM is a *recoverable planning signal* in a toolbox whose premise is
+/// arbitrarily small GPU memories: it propagates through the executor's
+/// `Result` path (and converts into `anyhow::Error` via `?`) instead of
+/// crashing the process, so callers can re-plan with smaller slabs or
+/// report the infeasible configuration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SimOom {
+    /// Device index whose ledger rejected the allocation.
+    pub device: usize,
+    /// Allocation label (e.g. `slab`, `projbuf0`).
+    pub label: String,
+    /// Ledger detail: requested vs free vs capacity.
+    pub detail: String,
+}
+
+impl std::fmt::Display for SimOom {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "device {} OOM allocating '{}': {}", self.device, self.label, self.detail)
+    }
+}
+
+impl std::error::Error for SimOom {}
+
 /// Identifies a completed (virtual-time) operation for dependencies.
 #[derive(Clone, Copy, Debug, PartialEq, PartialOrd)]
 pub struct Ev(pub f64);
@@ -125,18 +150,36 @@ impl SimNode {
     // ---- memory ledger operations --------------------------------------
 
     /// Allocate `bytes` on device `dev` under `label`. Charges the small
-    /// `alloc` latency to the host (cudaMalloc is synchronous).
-    pub fn alloc(&mut self, dev: usize, label: &str, bytes: u64) -> Ev {
-        self.devices[dev]
-            .mem
-            .alloc(label, bytes)
-            .unwrap_or_else(|e| panic!("device {dev} OOM allocating '{label}': {e}"));
+    /// `alloc` latency to the host (cudaMalloc is synchronous). Exceeding
+    /// the device capacity is a typed, recoverable [`SimOom`] error — not
+    /// a panic — so planners and executors can treat it as a signal.
+    pub fn alloc(&mut self, dev: usize, label: &str, bytes: u64) -> Result<Ev, SimOom> {
+        self.devices[dev].mem.alloc(label, bytes).map_err(|detail| SimOom {
+            device: dev,
+            label: label.to_string(),
+            detail,
+        })?;
         let dur = self.cost.alloc_latency_s;
         let t0 = self.host_free;
         let t1 = t0 + dur;
         self.host_free = t1;
         self.log(dev, Category::OtherMem, t0, t1, format!("alloc {label}"));
-        Ev(t1)
+        Ok(Ev(t1))
+    }
+
+    /// Charge `bytes` that are *already resident* on device `dev` from a
+    /// previous operator call (the residency cache's carried-over staging
+    /// buffers). Ledger-only: no host time and no timeline event, because
+    /// nothing happens at call time — the memory simply never went away.
+    pub fn reserve(&mut self, dev: usize, label: &str, bytes: u64) -> Result<(), SimOom> {
+        if bytes == 0 {
+            return Ok(());
+        }
+        self.devices[dev].mem.alloc(label, bytes).map_err(|detail| SimOom {
+            device: dev,
+            label: label.to_string(),
+            detail,
+        })
     }
 
     /// Free a device allocation (host-synchronous, negligible time).
@@ -213,8 +256,7 @@ impl SimNode {
         after: Ev,
         what: &str,
     ) -> Ev {
-        let bw = if pinned { self.cost.pcie_pinned_bps } else { self.cost.pcie_pageable_bps };
-        let dur = bytes as f64 / bw + self.cost.copy_latency_s;
+        let dur = self.cost.copy_time_s(bytes, pinned);
         let eng_free = self.devices[dev].engine_free[&engine];
         // A copy can start once: the engine is free, dependencies are met,
         // and the host has issued it (queueing takes no time, but a
@@ -336,16 +378,37 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "OOM")]
-    fn device_oom_panics() {
+    fn device_oom_is_a_typed_recoverable_error() {
         let mut sim = small_node(1);
-        sim.alloc(0, "huge", 12 << 30); // > 11 GiB
+        let err = sim.alloc(0, "huge", 12 << 30).unwrap_err(); // > 11 GiB
+        assert_eq!(err.device, 0);
+        assert_eq!(err.label, "huge");
+        assert!(err.to_string().contains("OOM"), "{err}");
+        // the failed allocation left no trace: the node remains usable
+        assert_eq!(sim.device_mem(0).used(), 0);
+        sim.alloc(0, "ok", 1 << 30).unwrap();
+        assert_eq!(sim.device_mem(0).used(), 1 << 30);
+        // and it converts into anyhow::Error through `?`
+        let as_anyhow: anyhow::Error = err.into();
+        assert!(format!("{as_anyhow:#}").contains("OOM"));
+    }
+
+    #[test]
+    fn reserve_charges_ledger_without_host_time_or_events() {
+        let mut sim = small_node(1);
+        let n_events = sim.events().len();
+        sim.reserve(0, "resident", 2 << 30).unwrap();
+        assert_eq!(sim.device_mem(0).used(), 2 << 30);
+        assert_eq!(sim.host_time().0, 0.0, "reserve must not advance the host clock");
+        assert_eq!(sim.events().len(), n_events, "reserve must not log events");
+        // over-reserving is the same typed error as alloc
+        assert!(sim.reserve(0, "more", 10 << 30).is_err());
     }
 
     #[test]
     fn alloc_free_ledger() {
         let mut sim = small_node(1);
-        sim.alloc(0, "img", 4 << 30);
+        sim.alloc(0, "img", 4 << 30).unwrap();
         assert_eq!(sim.device_mem(0).used(), 4 << 30);
         sim.free(0, "img");
         assert_eq!(sim.device_mem(0).used(), 0);
@@ -372,7 +435,7 @@ mod tests {
     #[test]
     fn events_are_logged_with_categories() {
         let mut sim = small_node(1);
-        sim.alloc(0, "x", 1024);
+        sim.alloc(0, "x", 1024).unwrap();
         sim.pin_host(1024, true);
         sim.kernel(0, 0.1, Ev::ZERO, "k");
         let cats: Vec<Category> = sim.events().iter().map(|e| e.category).collect();

@@ -10,7 +10,19 @@ mod hostmem;
 
 pub use hostmem::{HostMemRegistry, MemState, PinEvent};
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::geometry::Geometry;
+
+/// Process-unique identity for epoch-tracked host buffers (see
+/// [`TrackedVolume`] / [`TrackedProjections`]). Monotonic and never
+/// reused, so a residency cache entry keyed by `(id, epoch)` can never
+/// alias a different buffer that later occupies the same address.
+static NEXT_TRACKED_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_tracked_id() -> u64 {
+    NEXT_TRACKED_ID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// A 3-D image volume of f32 attenuation values.
 #[derive(Clone, Debug, PartialEq)]
@@ -206,6 +218,100 @@ impl ProjChunkView<'_> {
     }
 }
 
+/// A [`Volume`] with an identity and a write-epoch, for the coordinator's
+/// cross-iteration device residency cache (`coordinator::residency`).
+///
+/// Every mutable access goes through [`TrackedVolume::write`] (or
+/// [`TrackedVolume::replace`]), which bumps the epoch; a staged device
+/// copy is keyed by `(id, epoch)`, so after any host-side write the stale
+/// device copy can never be reused — it simply stops matching.
+#[derive(Debug)]
+pub struct TrackedVolume {
+    vol: Volume,
+    id: u64,
+    epoch: u64,
+}
+
+impl TrackedVolume {
+    pub fn new(vol: Volume) -> Self {
+        Self { vol, id: next_tracked_id(), epoch: 0 }
+    }
+
+    /// Read access; does not change the epoch.
+    pub fn get(&self) -> &Volume {
+        &self.vol
+    }
+
+    /// Mutable access; bumps the epoch (conservatively — even if the
+    /// caller ends up not writing).
+    pub fn write(&mut self) -> &mut Volume {
+        self.epoch += 1;
+        &mut self.vol
+    }
+
+    /// Swap the wrapped volume for `vol`, returning the old one. Bumps
+    /// the epoch (the identity stays: same logical buffer, new content).
+    pub fn replace(&mut self, vol: Volume) -> Volume {
+        self.epoch += 1;
+        std::mem::replace(&mut self.vol, vol)
+    }
+
+    pub fn into_inner(self) -> Volume {
+        self.vol
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+/// A [`ProjectionSet`] with an identity and a write-epoch; see
+/// [`TrackedVolume`]. `ReconSession::forward` returns its output wrapped
+/// in one of these so the backprojection can recognize chunks that are
+/// still device-resident from the producing forward call.
+#[derive(Debug)]
+pub struct TrackedProjections {
+    proj: ProjectionSet,
+    id: u64,
+    epoch: u64,
+}
+
+impl TrackedProjections {
+    pub fn new(proj: ProjectionSet) -> Self {
+        Self { proj, id: next_tracked_id(), epoch: 0 }
+    }
+
+    pub fn get(&self) -> &ProjectionSet {
+        &self.proj
+    }
+
+    pub fn write(&mut self) -> &mut ProjectionSet {
+        self.epoch += 1;
+        &mut self.proj
+    }
+
+    pub fn replace(&mut self, proj: ProjectionSet) -> ProjectionSet {
+        self.epoch += 1;
+        std::mem::replace(&mut self.proj, proj)
+    }
+
+    pub fn into_inner(self) -> ProjectionSet {
+        self.proj
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
 /// A stack of 2-D projections (detector readings), one per angle.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ProjectionSet {
@@ -393,6 +499,35 @@ mod tests {
         assert_eq!(view.data, &p.extract_chunk(2, 4).data[..]);
         assert_eq!(view.to_projections(), p.extract_chunk(2, 4));
         assert_eq!(p.as_view().len(), p.data.len());
+    }
+
+    #[test]
+    fn tracked_wrappers_bump_epoch_on_every_write_path() {
+        let mut tv = TrackedVolume::new(Volume::zeros(2, 2, 2));
+        let id = tv.id();
+        assert_eq!(tv.epoch(), 0);
+        tv.write().data[0] = 1.0;
+        assert_eq!(tv.epoch(), 1);
+        let old = tv.replace(Volume::zeros(2, 2, 2));
+        assert_eq!(old.data[0], 1.0);
+        assert_eq!(tv.epoch(), 2);
+        assert_eq!(tv.id(), id, "identity survives writes");
+        assert_eq!(tv.into_inner().data.len(), 8);
+
+        let mut tp = TrackedProjections::new(ProjectionSet::zeros(2, 2, 3));
+        assert_eq!(tp.epoch(), 0);
+        *tp.write().at_mut(0, 0, 0) = 2.0;
+        assert_eq!(tp.epoch(), 1);
+        assert_eq!(tp.get().at(0, 0, 0), 2.0);
+    }
+
+    #[test]
+    fn tracked_ids_are_unique() {
+        let a = TrackedVolume::new(Volume::zeros(1, 1, 1));
+        let b = TrackedVolume::new(Volume::zeros(1, 1, 1));
+        let c = TrackedProjections::new(ProjectionSet::zeros(1, 1, 1));
+        assert_ne!(a.id(), b.id());
+        assert_ne!(b.id(), c.id());
     }
 
     #[test]
