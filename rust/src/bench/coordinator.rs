@@ -29,13 +29,18 @@
 use std::path::Path;
 use std::time::Duration;
 
+use crate::coordinator::splitter::{plan_backward_ooc, plan_forward_ooc};
+use crate::coordinator::{backward, forward};
 use crate::coordinator::{ExecMode, MultiGpu, ReconSession, SplitConfig};
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::phantom;
 use crate::util::json::Json;
 use crate::util::stats::bench;
-use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
+use crate::volume::{
+    OocProjections, OocVolume, ProjInput, ProjectionSet, TrackedProjections, TrackedVolume,
+    Volume, VolumeInput,
+};
 
 /// Schema tag of `BENCH_coordinator.json`; bump on breaking layout changes.
 pub const SCHEMA: &str = "tigre-bench-coordinator/v1";
@@ -122,7 +127,156 @@ pub fn run_suite(smoke: bool, threads: usize) -> Vec<CoordBenchEntry> {
             &g,
             &v,
         ));
+
+        // out-of-core streaming (PR 5): disk-backed inputs through the
+        // loader lanes vs in-RAM inputs on the SAME host-budgeted plan
+        out.extend(bench_ooc(
+            &format!("n={n} a={n_angles} gpus={gpus}"),
+            &full_ctx,
+            &g,
+            &v,
+            warmup,
+            min_iters,
+            budget,
+        ));
     }
+    out
+}
+
+/// Streamed-vs-in-RAM throughput of the pipelined executor on identical
+/// host-budgeted OOC plans (bit-identical outputs — only the staging
+/// tier differs). Field mapping for these entries:
+/// `sequential_median_s` = **streamed from disk**, `pipelined_median_s`
+/// = **in-RAM**, so `speedup` is the streaming overhead factor (≈1 when
+/// the loader lanes hide the reads behind kernels, >1 when exposed).
+fn bench_ooc(
+    tag: &str,
+    ctx: &MultiGpu,
+    g: &Geometry,
+    v: &Volume,
+    warmup: usize,
+    min_iters: usize,
+    budget: Duration,
+) -> Vec<CoordBenchEntry> {
+    // host budget smaller than the volume+projection footprint: the
+    // defining constraint of the out-of-core workload class
+    let host_budget = (g.volume_bytes() + g.proj_bytes()) / 2;
+    let fp_plan =
+        plan_forward_ooc(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split, host_budget)
+            .expect("bench ooc fp plan");
+    let bp_plan =
+        plan_backward_ooc(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split, host_budget)
+            .expect("bench ooc bp plan");
+
+    let dir = std::env::temp_dir()
+        .join("tigre_bench_ooc")
+        .join(format!("{}_{}", std::process::id(), tag.replace(' ', "_")));
+    std::fs::create_dir_all(&dir).expect("bench ooc tmpdir");
+    let slab_nz = fp_plan
+        .per_device
+        .iter()
+        .flat_map(|d| &d.slabs)
+        .map(|s| s.len())
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    // Store cache budgets are deliberately MINIMAL (two staging units,
+    // not `host_budget`): with a roomy cache the whole input would be
+    // RAM-resident after warmup and the "streamed" side would measure
+    // memcpys, not disk streaming. Two units keep the double-buffered
+    // loads honest while every pass re-reads the file.
+    let plane_bytes = (g.n_vox[0] * g.n_vox[1]) as u64 * 4;
+    let vstore = OocVolume::from_volume(
+        &dir.join("vol.raw"),
+        v,
+        slab_nz,
+        2 * slab_nz as u64 * plane_bytes,
+    )
+    .expect("vol spill");
+    let p: ProjectionSet =
+        ctx.forward(g, Some(v), ExecMode::Full).expect("bench forward").0.unwrap();
+    let bp_chunk = bp_plan.angle_chunks.iter().map(|c| c.len()).max().unwrap_or(1);
+    let pstore = OocProjections::from_projections(
+        &dir.join("proj.raw"),
+        &p,
+        bp_chunk.max(1),
+        2 * bp_chunk.max(1) as u64 * g.single_proj_bytes(),
+    )
+    .expect("proj spill");
+
+    // the DES replay is plan-driven (identical on the RAM and OOC input
+    // sides of each pair) — measure it once per plan and subtract
+    let fp_sim = bench(&format!("ooc fp {tag} sim"), warmup, min_iters, budget, || {
+        std::hint::black_box(
+            forward::run_with(ctx, g, None, ExecMode::SimOnly, &fp_plan, None).expect("fp sim"),
+        );
+    });
+    let bp_sim = bench(&format!("ooc bp {tag} sim"), warmup, min_iters, budget, || {
+        std::hint::black_box(
+            backward::run_with(ctx, g, None, ExecMode::SimOnly, &bp_plan, None).expect("bp sim"),
+        );
+    });
+    let fp_ram = bench(&format!("ooc fp {tag} ram"), warmup, min_iters, budget, || {
+        std::hint::black_box(
+            forward::run_with(ctx, g, Some(VolumeInput::Ram(v)), ExecMode::Full, &fp_plan, None)
+                .expect("fp ram"),
+        );
+    });
+    let fp_ooc = bench(&format!("ooc fp {tag} stream"), warmup, min_iters, budget, || {
+        std::hint::black_box(
+            forward::run_with(
+                ctx,
+                g,
+                Some(VolumeInput::Ooc(&vstore)),
+                ExecMode::Full,
+                &fp_plan,
+                None,
+            )
+            .expect("fp stream"),
+        );
+    });
+    let bp_ram = bench(&format!("ooc bp {tag} ram"), warmup, min_iters, budget, || {
+        std::hint::black_box(
+            backward::run_with(ctx, g, Some(ProjInput::Ram(&p)), ExecMode::Full, &bp_plan, None)
+                .expect("bp ram"),
+        );
+    });
+    let bp_ooc = bench(&format!("ooc bp {tag} stream"), warmup, min_iters, budget, || {
+        std::hint::black_box(
+            backward::run_with(
+                ctx,
+                g,
+                Some(ProjInput::Ooc(&pstore)),
+                ExecMode::Full,
+                &bp_plan,
+                None,
+            )
+            .expect("bp stream"),
+        );
+    });
+
+    let minus_sim = |full: f64, sim: f64| (full - sim).max(1e-9);
+    let fp_sim_s = fp_sim.samples.median();
+    let bp_sim_s = bp_sim.samples.median();
+    drop(vstore);
+    drop(pstore);
+    let out = vec![
+        CoordBenchEntry {
+            name: format!("ooc fp stream {tag}"),
+            sequential_median_s: minus_sim(fp_ooc.samples.median(), fp_sim_s),
+            pipelined_median_s: minus_sim(fp_ram.samples.median(), fp_sim_s),
+            sim_median_s: fp_sim_s,
+            samples: fp_ooc.samples.len().min(fp_ram.samples.len()),
+        },
+        CoordBenchEntry {
+            name: format!("ooc bp stream {tag}"),
+            sequential_median_s: minus_sim(bp_ooc.samples.median(), bp_sim_s),
+            pipelined_median_s: minus_sim(bp_ram.samples.median(), bp_sim_s),
+            sim_median_s: bp_sim_s,
+            samples: bp_ooc.samples.len().min(bp_ram.samples.len()),
+        },
+    ];
+    let _ = std::fs::remove_dir_all(&dir);
     out
 }
 
@@ -323,7 +477,11 @@ mod tests {
     #[test]
     fn smoke_suite_runs_and_covers_both_operators_and_plans() {
         let entries = run_suite(true, 2);
-        assert_eq!(entries.len(), 5, "fp/bp × image-split/angle-split + residency");
+        assert_eq!(
+            entries.len(),
+            7,
+            "fp/bp × image-split/angle-split + residency + ooc fp/bp"
+        );
         for e in &entries {
             assert!(
                 e.sequential_median_s > 0.0 && e.pipelined_median_s > 0.0 && e.samples >= 1,
@@ -338,5 +496,8 @@ mod tests {
         // 1 GPU the cached loop must beat the uncached one
         let res = entries.iter().find(|e| e.name.starts_with("residency")).unwrap();
         assert!(res.speedup() > 1.0, "residency speedup {} ≤ 1", res.speedup());
+        // ooc entries compare streamed vs in-RAM staging on one plan
+        assert!(entries.iter().any(|e| e.name.starts_with("ooc fp stream")));
+        assert!(entries.iter().any(|e| e.name.starts_with("ooc bp stream")));
     }
 }

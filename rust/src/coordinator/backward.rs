@@ -11,7 +11,7 @@ use anyhow::Context;
 
 use crate::geometry::Geometry;
 use crate::simgpu::{Ev, SimNode, SimOom};
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::{ProjInput, ProjectionSet, Volume};
 
 use super::executor::{ExecMode, MultiGpu, OpStats};
 use super::residency::BpResidency;
@@ -27,15 +27,16 @@ pub fn run(
 ) -> anyhow::Result<(Option<Volume>, OpStats)> {
     let plan = plan_backward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
         .map_err(|e| anyhow::anyhow!("backward plan: {e}"))?;
-    run_with(ctx, g, proj, mode, &plan, None)
+    run_with(ctx, g, proj.map(ProjInput::Ram), mode, &plan, None)
 }
 
-/// Like [`run`] but against a pre-computed plan and optional residency
-/// decisions (`coordinator::residency::ReconSession`'s entry point).
+/// Like [`run`] but against a pre-computed plan, a RAM-or-OOC input and
+/// optional residency decisions (`coordinator::residency::ReconSession`
+/// and `MultiGpu::backward_ooc` enter here).
 pub(crate) fn run_with(
     ctx: &MultiGpu,
     g: &Geometry,
-    proj: Option<&ProjectionSet>,
+    proj: Option<ProjInput<'_>>,
     mode: ExecMode,
     plan: &Plan,
     res: Option<&BpResidency>,
@@ -53,7 +54,7 @@ pub(crate) fn run_with(
         ExecMode::SimOnly => None,
         ExecMode::Full => {
             let proj = proj.context("Full mode requires projection data")?;
-            Some(execute_real(ctx, g, proj, plan))
+            Some(execute_real(ctx, g, proj, plan)?)
         }
     };
     Ok((vol, stats))
@@ -134,7 +135,12 @@ pub(crate) fn simulate_with(
                     None => bytes,
                 };
                 if h2d_bytes > 0 {
-                    let dep = prev_prev_copy[d].unwrap_or(Ev::ZERO);
+                    let mut dep = prev_prev_copy[d].unwrap_or(Ev::ZERO);
+                    if plan.ooc_proj {
+                        // chunk streams from the backing store first
+                        // (loader-lane prefetch on the serialized disk)
+                        dep = dep.max(sim.disk_read(h2d_bytes, Ev::ZERO));
+                    }
                     copy_ev[d] = Some(sim.h2d(d, h2d_bytes, plan.pin_image, dep));
                 }
             }
@@ -165,7 +171,9 @@ pub(crate) fn simulate_with(
             prev_copy = copy_ev;
         }
 
-        // 13: copy the finished image piece back to the host
+        // 13: copy the finished image piece back to the host — and, for
+        // an out-of-core output volume, spill it on to the backing store
+        // (the write overlaps the next slab's compute on the disk engine)
         for d in 0..n_dev {
             if !active[d] {
                 continue;
@@ -178,6 +186,9 @@ pub(crate) fn simulate_with(
                 prev_kernel[d].unwrap_or(Ev::ZERO),
             );
             sim.host_sync(ev);
+            if plan.ooc_volume {
+                sim.disk_write(g.slab_bytes(slab.len()), ev);
+            }
         }
     }
 
@@ -200,7 +211,12 @@ pub(crate) fn simulate_with(
 /// Real numerics with the identical partitioning: the pipelined executor
 /// by default (see `coordinator::pipeline`), or the host-sequential
 /// baseline when `ctx.exec.pipelined` is off.
-fn execute_real(ctx: &MultiGpu, g: &Geometry, proj: &ProjectionSet, plan: &Plan) -> Volume {
+fn execute_real(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    proj: ProjInput<'_>,
+    plan: &Plan,
+) -> anyhow::Result<Volume> {
     if ctx.exec.pipelined {
         super::pipeline::backward_pipelined(ctx, g, proj, plan)
     } else {
@@ -290,6 +306,34 @@ mod tests {
         let (_, stats) = ctx.backward(&g, None, ExecMode::SimOnly).unwrap();
         assert!(stats.peak_device_bytes <= 3 * MIB);
         assert!(stats.splits_per_device > 1);
+    }
+
+    #[test]
+    fn ooc_plans_charge_the_disk_engine_in_simonly() {
+        // streamed chunks wait on disk reads, and an out-of-core output
+        // volume (with_ooc_volume_spill — the add_scaled_volume /
+        // store_slab writeback the caller performs) charges disk writes
+        // after each slab's D2H: both must extend the plain makespan
+        use crate::coordinator::splitter::plan_backward_ooc;
+        let g = Geometry::cone_beam(96, 48);
+        let ctx = MultiGpu::gtx1080ti(1);
+        let cfg = crate::coordinator::SplitConfig::default();
+        let budget = g.proj_bytes() / 2;
+        let ooc_in = plan_backward_ooc(&g, 1, ctx.spec.mem_bytes, &cfg, budget).unwrap();
+        // identical plan with the streaming flags stripped: the only
+        // schedule difference left is the disk engine
+        let mut ram_same = ooc_in.clone();
+        ram_same.ooc_proj = false;
+        ram_same.host_budget_bytes = None;
+        let ooc_in_out = ooc_in.clone().with_ooc_volume_spill();
+        let t = |plan: &crate::coordinator::Plan| {
+            run_with(&ctx, &g, None, ExecMode::SimOnly, plan, None).unwrap().1.makespan_s
+        };
+        let t_ram = t(&ram_same);
+        let t_in = t(&ooc_in);
+        let t_in_out = t(&ooc_in_out);
+        assert!(t_in > t_ram, "chunk disk reads must cost time: {t_in} vs {t_ram}");
+        assert!(t_in_out > t_in, "output spill must cost time: {t_in_out} vs {t_in}");
     }
 
     #[test]

@@ -5,7 +5,10 @@ use crate::geometry::Geometry;
 use crate::kernels::{BackprojWeight, Projector};
 use crate::simgpu::timeline::{breakdown, Breakdown};
 use crate::simgpu::{CostModel, GpuSpec, SimNode};
-use crate::volume::{ProjChunkView, ProjectionSet, Volume, VolumeSlabView};
+use crate::volume::{
+    OocProjections, OocVolume, ProjChunkView, ProjInput, ProjectionSet, Volume, VolumeInput,
+    VolumeSlabView,
+};
 
 use super::residency::ResidencyStats;
 
@@ -185,6 +188,54 @@ impl MultiGpu {
         mode: ExecMode,
     ) -> anyhow::Result<(Option<Volume>, OpStats)> {
         super::backward::run(self, g, proj, mode)
+    }
+
+    /// Forward projection of a volume streamed from an out-of-core store
+    /// (PR 5): plans via `splitter::plan_forward_ooc` with the store's
+    /// cache budget as the host-memory budget, streams slabs through the
+    /// pipelined executor's loader lanes, and charges the simulated disk
+    /// engine — so `SimOnly` predicts when streaming hides behind
+    /// kernels. Bit-identical to [`MultiGpu::forward`] on the same plan.
+    ///
+    /// Budget composition: the store's cache and the plan's staging are
+    /// bounded by the same value **independently**, so worst-case host
+    /// footprint is up to 2× the store budget (cache + in-flight
+    /// staging). Size the store's budget to half the host RAM you are
+    /// willing to spend on streaming.
+    pub fn forward_ooc(
+        &self,
+        g: &Geometry,
+        vol: &OocVolume,
+        mode: ExecMode,
+    ) -> anyhow::Result<(Option<ProjectionSet>, OpStats)> {
+        let plan = super::splitter::plan_forward_ooc(
+            g,
+            self.n_gpus,
+            self.spec.mem_bytes,
+            &self.split,
+            vol.budget_bytes(),
+        )
+        .map_err(|e| anyhow::anyhow!("forward ooc plan: {e}"))?;
+        super::forward::run_with(self, g, Some(VolumeInput::Ooc(vol)), mode, &plan, None)
+    }
+
+    /// Backprojection of projections streamed from an out-of-core store
+    /// (see [`MultiGpu::forward_ooc`]).
+    pub fn backward_ooc(
+        &self,
+        g: &Geometry,
+        proj: &OocProjections,
+        mode: ExecMode,
+    ) -> anyhow::Result<(Option<Volume>, OpStats)> {
+        let plan = super::splitter::plan_backward_ooc(
+            g,
+            self.n_gpus,
+            self.spec.mem_bytes,
+            &self.split,
+            proj.budget_bytes(),
+        )
+        .map_err(|e| anyhow::anyhow!("backward ooc plan: {e}"))?;
+        super::backward::run_with(self, g, Some(ProjInput::Ooc(proj)), mode, &plan, None)
     }
 
     /// Run the real kernels for an angle-chunk of a (slab) geometry.

@@ -11,7 +11,7 @@ use anyhow::Context;
 
 use crate::geometry::Geometry;
 use crate::simgpu::{Ev, SimNode, SimOom};
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::{ProjectionSet, Volume, VolumeInput};
 
 use super::executor::{ExecMode, MultiGpu, OpStats};
 use super::residency::FpResidency;
@@ -27,17 +27,18 @@ pub fn run(
 ) -> anyhow::Result<(Option<ProjectionSet>, OpStats)> {
     let plan = plan_forward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
         .map_err(|e| anyhow::anyhow!("forward plan: {e}"))?;
-    run_with(ctx, g, vol, mode, &plan, None)
+    run_with(ctx, g, vol.map(VolumeInput::Ram), mode, &plan, None)
 }
 
-/// Like [`run`] but against a pre-computed plan and optional residency
-/// decisions — the entry point `coordinator::residency::ReconSession`
-/// drives its iterations through (plans are computed once per session,
-/// not once per call).
+/// Like [`run`] but against a pre-computed plan, a RAM-or-OOC input and
+/// optional residency decisions — the entry point
+/// `coordinator::residency::ReconSession` and `MultiGpu::forward_ooc`
+/// drive their calls through (plans are computed once per session, not
+/// once per call).
 pub(crate) fn run_with(
     ctx: &MultiGpu,
     g: &Geometry,
-    vol: Option<&Volume>,
+    vol: Option<VolumeInput<'_>>,
     mode: ExecMode,
     plan: &Plan,
     res: Option<&FpResidency>,
@@ -57,7 +58,7 @@ pub(crate) fn run_with(
         ExecMode::SimOnly => None,
         ExecMode::Full => {
             let vol = vol.context("Full mode requires the volume data")?;
-            Some(execute_real(ctx, g, vol, plan))
+            Some(execute_real(ctx, g, vol, plan)?)
         }
     };
     Ok((proj, stats))
@@ -143,8 +144,17 @@ fn simulate_angle_split(
     let shares = plan.chunk_shares(n_dev);
 
     // 8: copy the (whole) image to every device — unless the device still
-    // holds an epoch-fresh copy from a previous call (residency hit)
+    // holds an epoch-fresh copy from a previous call (residency hit).
+    // An out-of-core volume is first read from the backing store once
+    // (materialized within the host budget); every upload depends on it.
     let img_bytes = g.volume_bytes();
+    let any_upload = (0..n_dev)
+        .any(|d| !res.is_some_and(|r| r.skip_image_h2d.get(d).copied().unwrap_or(false)));
+    let img_on_host = if plan.ooc_volume && any_upload {
+        sim.disk_read(img_bytes, Ev::ZERO)
+    } else {
+        Ev::ZERO
+    };
     let mut img_ready = vec![Ev::ZERO; n_dev];
     for d in 0..n_dev {
         let skip = res.is_some_and(|r| r.skip_image_h2d.get(d).copied().unwrap_or(false));
@@ -152,7 +162,7 @@ fn simulate_angle_split(
             img_ready[d] = Ev::ZERO; // already on-device, no upload
         } else {
             sim.alloc(d, "slab", img_bytes)?;
-            img_ready[d] = sim.h2d(d, img_bytes, plan.pin_image, Ev::ZERO);
+            img_ready[d] = sim.h2d(d, img_bytes, plan.pin_image, img_on_host);
         }
     }
     // 9: Synchronize()
@@ -232,7 +242,10 @@ fn simulate_image_split(
     let max_slabs = plan.splits_per_device();
     let mut slab_alloced = vec![false; n_dev];
     for s in 0..max_slabs {
-        // 8: copy current image split to each device (contiguous z-slab)
+        // 8: copy current image split to each device (contiguous z-slab).
+        // OOC volumes stream the slab from the backing store first (the
+        // loader lane's prefetch — the disk engine serializes, the host
+        // does not block).
         let mut slab_ready = vec![Ev::ZERO; n_dev];
         let mut active = vec![false; n_dev];
         for d in 0..n_dev {
@@ -244,7 +257,12 @@ fn simulate_image_split(
             }
             sim.alloc(d, "slab", bytes)?;
             slab_alloced[d] = true;
-            slab_ready[d] = sim.h2d(d, bytes, plan.pin_image, Ev::ZERO);
+            let staged = if plan.ooc_volume {
+                sim.disk_read(bytes, Ev::ZERO)
+            } else {
+                Ev::ZERO
+            };
+            slab_ready[d] = sim.h2d(d, bytes, plan.pin_image, staged);
         }
         // 9: Synchronize()
         for (d, &e) in slab_ready.iter().enumerate() {
@@ -322,10 +340,16 @@ fn simulate_image_split(
 }
 
 /// Real numerics with the identical partitioning: the pipelined executor
-/// (concurrent device workers, zero-copy staging views, double-buffered
-/// merge lanes — see `coordinator::pipeline`) by default, or the
-/// host-sequential baseline when `ctx.exec.pipelined` is off.
-fn execute_real(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan) -> ProjectionSet {
+/// (concurrent device workers, zero-copy staging views, OOC loader
+/// lanes, double-buffered merge lanes — see `coordinator::pipeline`) by
+/// default, or the host-sequential baseline when `ctx.exec.pipelined`
+/// is off.
+fn execute_real(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    vol: VolumeInput<'_>,
+    plan: &Plan,
+) -> anyhow::Result<ProjectionSet> {
     if ctx.exec.pipelined {
         super::pipeline::forward_pipelined(ctx, g, vol, plan)
     } else {

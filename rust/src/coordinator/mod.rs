@@ -39,6 +39,17 @@
 //! each device's own forward-output chunks) staged across operator calls,
 //! with write-epochs making stale reuse impossible. Only the simulated
 //! schedule changes; the real executors stay stateless and bit-identical.
+//!
+//! Since PR 5 the same splitting strategy extends one tier up the memory
+//! hierarchy (disk → host → device): volumes and projection sets can live
+//! **out of core** (`volume::outofcore`), plans carry a host-memory
+//! budget ([`splitter::plan_forward_ooc`]/[`splitter::plan_backward_ooc`]
+//! /[`splitter::plan_ooc_pair`]), and the pipelined executor streams
+//! slabs/chunks from the backing store on prefetching loader lanes —
+//! bit-identical to the in-RAM path on the same plan, with the simulated
+//! timeline's disk engine predicting when the streaming hides behind
+//! kernel time. [`ReconSession::new_ooc`](residency::ReconSession::new_ooc)
+//! builds a session in that regime.
 
 pub mod backward;
 pub mod baseline;
@@ -51,4 +62,6 @@ pub mod splitter;
 
 pub use executor::{Backend, ExecMode, ExecutorConfig, MultiGpu, OpStats};
 pub use residency::{ReconSession, ResidencyCache, ResidencyStats};
-pub use splitter::{Plan, SplitConfig};
+pub use splitter::{
+    ooc_bp_chunk, plan_backward_ooc, plan_forward_ooc, plan_ooc_pair, Plan, SplitConfig,
+};

@@ -54,15 +54,22 @@
 use std::sync::mpsc;
 
 use crate::geometry::Geometry;
+use crate::geometry::split::{AngleChunk, ZSlab};
 use crate::kernels::scratch;
 use crate::util::threadpool::{SendPtr, ThreadPool};
-use crate::volume::{ProjectionSet, Volume};
+use crate::volume::{
+    OocProjections, OocVolume, ProjChunkView, ProjInput, ProjectionSet, Volume, VolumeInput,
+    VolumeSlabView,
+};
 
 use super::executor::{Backend, MultiGpu};
 use super::splitter::{DeviceAssignment, Plan};
 
 /// Staging buffers cycled through each worker's merge lane — the paper's
-/// double buffer (Alg. 1 line 6 / Alg. 2 line 6).
+/// double buffer (Alg. 1 line 6 / Alg. 2 line 6). The out-of-core
+/// loader lanes cycle the same number of disk staging buffers, extending
+/// the double-buffer discipline one memory tier up (PR 5): the loader
+/// prefetches unit `k+1` from the store while unit `k` computes.
 const N_STAGE_BUFFERS: usize = 2;
 
 /// Concurrency for `n_jobs` device jobs under the context's config. Also
@@ -121,7 +128,35 @@ fn join_all<T>(handles: Vec<crate::util::threadpool::ScopedHandle<'_, T>>) -> Ve
 // ---------------------------------------------------------------------------
 
 /// Pipelined forward projection (Algorithm 1's plan, executed for real).
-pub fn forward_pipelined(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan) -> ProjectionSet {
+/// RAM inputs stage through zero-copy slab views; OOC inputs stream
+/// slabs from the store on per-worker loader lanes (or materialize once
+/// when the plan keeps the full image per device — the planner bounded
+/// that by the host budget).
+pub fn forward_pipelined(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    vol: VolumeInput<'_>,
+    plan: &Plan,
+) -> anyhow::Result<ProjectionSet> {
+    match vol {
+        VolumeInput::Ram(v) => Ok(forward_pipelined_ram(ctx, g, v, plan)),
+        VolumeInput::Ooc(store) => {
+            if !plan.image_split {
+                // angle-split precondition: the volume fits the host
+                // budget, so read_volume serves from the store cache on
+                // repeat calls (no flush, no file re-read per iteration)
+                let v = store.read_volume()?;
+                let out = forward_pipelined_ram(ctx, g, &v, plan);
+                scratch::recycle_volume(v);
+                Ok(out)
+            } else {
+                Ok(forward_pipelined_ooc(ctx, g, store, plan))
+            }
+        }
+    }
+}
+
+fn forward_pipelined_ram(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan) -> ProjectionSet {
     let mut out = scratch::take_projections(g.n_det[0], g.n_det[1], g.n_angles());
     if !plan.image_split {
         // Angle split: every device holds the full image and owns a
@@ -299,12 +334,200 @@ fn forward_device_partial(
     (partial, stage)
 }
 
+/// Image-split forward projection streaming slabs from an [`OocVolume`]:
+/// the same concurrent device workers and merge lanes as the RAM path,
+/// plus a per-worker **loader lane** that prefetches slab `k+1` from the
+/// store while slab `k`'s chunks compute — the device pipeline's double-
+/// buffer discipline applied to the disk→host tier.
+fn forward_pipelined_ooc(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    store: &OocVolume,
+    plan: &Plan,
+) -> ProjectionSet {
+    let mut out = scratch::take_projections(g.n_det[0], g.n_det[1], g.n_angles());
+    let active: Vec<&DeviceAssignment> =
+        plan.per_device.iter().filter(|d| !d.slabs.is_empty()).collect();
+    let workers = worker_count(ctx, active.len());
+    let budgets = kernel_thread_budgets(ctx, workers, active.len());
+    let per = g.n_det[0] * g.n_det[1];
+    let max_stage_len = plan.angle_chunks.iter().map(|c| c.len()).max().unwrap_or(0) * per;
+    let plane = g.n_vox[0] * g.n_vox[1];
+    let pool = ThreadPool::new(workers);
+    pool.scope(|s| {
+        let handles: Vec<_> = active
+            .iter()
+            .enumerate()
+            .map(|(i, dev)| {
+                let dev: &DeviceAssignment = dev;
+                let kt = budgets[i];
+                let partial = scratch::take_projections(g.n_det[0], g.n_det[1], g.n_angles());
+                let stage: Vec<Vec<f32>> =
+                    (0..N_STAGE_BUFFERS).map(|_| scratch::take_zeroed(max_stage_len)).collect();
+                let max_slab_len =
+                    dev.slabs.iter().map(|sl| sl.len()).max().unwrap_or(0) * plane;
+                let slab_bufs: Vec<Vec<f32>> =
+                    (0..N_STAGE_BUFFERS).map(|_| scratch::take_zeroed(max_slab_len)).collect();
+                s.spawn(move || {
+                    forward_device_partial_ooc(
+                        ctx, g, store, plan, dev, kt, partial, stage, slab_bufs,
+                    )
+                })
+            })
+            .collect();
+        for (partial, stage, slab_bufs) in join_all(handles) {
+            out.accumulate(&partial);
+            scratch::recycle_projections(partial);
+            for buf in stage.into_iter().chain(slab_bufs) {
+                scratch::recycle(buf);
+            }
+        }
+    });
+    out
+}
+
+/// One device's OOC forward worker: loader lane streams this device's
+/// slabs from the store through two staging buffers; the chunk loop and
+/// merge lane are identical to [`forward_device_partial`], consuming a
+/// [`VolumeSlabView`] over the staged buffer instead of a borrow of a
+/// resident volume — so the kernels see identical f32 data and the
+/// output is bit-identical to the RAM path on the same plan.
+#[allow(clippy::too_many_arguments)]
+fn forward_device_partial_ooc(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    store: &OocVolume,
+    plan: &Plan,
+    dev: &DeviceAssignment,
+    kernel_threads: usize,
+    mut partial: ProjectionSet,
+    stage: Vec<Vec<f32>>,
+    slab_bufs: Vec<Vec<f32>>,
+) -> (ProjectionSet, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let per = partial.nu * partial.nv;
+    let plane = g.n_vox[0] * g.n_vox[1];
+    let dst_ptr = SendPtr(partial.data.as_mut_ptr());
+
+    let (req_tx, req_rx) = mpsc::channel::<(Vec<f32>, usize)>();
+    let (ret_tx, ret_rx) = mpsc::channel::<Vec<f32>>();
+    for buf in stage {
+        ret_tx.send(buf).expect("staging channel open");
+    }
+    let (lreq_tx, lreq_rx) = mpsc::channel::<(ZSlab, Vec<f32>)>();
+    let (ldone_tx, ldone_rx) = mpsc::channel::<(ZSlab, Vec<f32>)>();
+    let mut leftover_slab_bufs: Vec<Vec<f32>> = Vec::new();
+    std::thread::scope(|sc| {
+        // merge lane (identical to the RAM worker)
+        sc.spawn(move || {
+            let dst_ptr = dst_ptr;
+            for (buf, a0) in req_rx {
+                // SAFETY: only the lane writes `partial` during the scope,
+                // and requests are processed one at a time.
+                let dst =
+                    unsafe { std::slice::from_raw_parts_mut(dst_ptr.0.add(a0 * per), buf.len()) };
+                for (o, v) in dst.iter_mut().zip(&buf) {
+                    *o += *v;
+                }
+                if ret_tx.send(buf).is_err() {
+                    break;
+                }
+            }
+        });
+        // loader lane: fills staging buffers from the store in request
+        // order (FIFO ⇒ slab order), overlapping the compute below
+        sc.spawn(move || {
+            for (slab, mut buf) in lreq_rx {
+                // resize only (no clear): the store load overwrites every
+                // element, so no zeroing pass is needed between slabs
+                buf.resize(slab.len() * plane, 0.0);
+                store
+                    .load_slab_into(slab.z0, slab.z1, &mut buf)
+                    .expect("OOC volume store read failed");
+                if ldone_tx.send((slab, buf)).is_err() {
+                    break;
+                }
+            }
+        });
+        let slabs = &dev.slabs;
+        let mut free = slab_bufs;
+        if let Some(&s0) = slabs.first() {
+            lreq_tx.send((s0, free.pop().expect("slab buffer"))).expect("loader lane open");
+        }
+        for k in 0..slabs.len() {
+            // prefetch slab k+1 while slab k computes (double buffer)
+            if k + 1 < slabs.len() {
+                let buf = free.pop().expect("double-buffered slab staging");
+                lreq_tx.send((slabs[k + 1], buf)).expect("loader lane open");
+            }
+            let (slab, data) = ldone_rx.recv().expect("loader lane terminated");
+            debug_assert_eq!(slab, slabs[k], "loader lane must deliver in FIFO order");
+            let gs = g.slab_geometry(slab.z0, slab.z1);
+            let sub =
+                VolumeSlabView { nx: g.n_vox[0], ny: g.n_vox[1], nz: slab.len(), data: &data };
+            let owned_slab = match &ctx.backend {
+                Backend::Pjrt { .. } => Some(sub.to_volume()),
+                Backend::Native { .. } => None,
+            };
+            for ch in &plan.angle_chunks {
+                let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+                let mut buf = ret_rx.recv().expect("merge lane terminated");
+                buf.resize(ch.len() * per, 0.0);
+                match (&ctx.backend, &owned_slab) {
+                    (Backend::Pjrt { artifacts_dir, .. }, Some(ov)) => {
+                        let part = crate::runtime::forward_or_native(
+                            artifacts_dir,
+                            &gc,
+                            ov,
+                            kernel_threads,
+                        );
+                        buf.copy_from_slice(&part.data);
+                        scratch::recycle_projections(part);
+                    }
+                    _ => ctx.kernel_forward_into(&gc, &sub, &mut buf, kernel_threads),
+                }
+                req_tx.send((buf, ch.a0)).expect("merge lane terminated");
+            }
+            if let Some(ov) = owned_slab {
+                scratch::recycle_volume(ov);
+            }
+            free.push(data);
+        }
+        drop(lreq_tx); // loader drains and exits
+        drop(req_tx); // merge lane drains remaining requests, then exits
+        leftover_slab_bufs = free;
+    });
+    let mut stage = Vec::with_capacity(N_STAGE_BUFFERS);
+    while let Ok(buf) = ret_rx.try_recv() {
+        stage.push(buf);
+    }
+    (partial, stage, leftover_slab_bufs)
+}
+
 // ---------------------------------------------------------------------------
 // backprojection
 // ---------------------------------------------------------------------------
 
 /// Pipelined backprojection (Algorithm 2's plan, executed for real).
-pub fn backward_pipelined(ctx: &MultiGpu, g: &Geometry, proj: &ProjectionSet, plan: &Plan) -> Volume {
+/// RAM inputs stage through zero-copy chunk views; OOC inputs stream
+/// angle chunks from the store on per-worker loader lanes.
+pub fn backward_pipelined(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    proj: ProjInput<'_>,
+    plan: &Plan,
+) -> anyhow::Result<Volume> {
+    match proj {
+        ProjInput::Ram(p) => Ok(backward_pipelined_ram(ctx, g, p, plan)),
+        ProjInput::Ooc(store) => Ok(backward_pipelined_ooc(ctx, g, store, plan)),
+    }
+}
+
+fn backward_pipelined_ram(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    proj: &ProjectionSet,
+    plan: &Plan,
+) -> Volume {
     let mut out = scratch::take_volume(g.n_vox[0], g.n_vox[1], g.n_vox[2]);
     let active: Vec<&DeviceAssignment> =
         plan.per_device.iter().filter(|d| !d.slabs.is_empty()).collect();
@@ -402,13 +625,207 @@ fn backward_device_worker(
     stage
 }
 
+/// Backprojection streaming projection chunks from an
+/// [`OocProjections`] store: same workers and merge lanes as the RAM
+/// path, plus a per-worker loader lane prefetching chunk `c+1` from the
+/// store while chunk `c`'s kernel runs.
+fn backward_pipelined_ooc(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    store: &OocProjections,
+    plan: &Plan,
+) -> Volume {
+    let mut out = scratch::take_volume(g.n_vox[0], g.n_vox[1], g.n_vox[2]);
+    let active: Vec<&DeviceAssignment> =
+        plan.per_device.iter().filter(|d| !d.slabs.is_empty()).collect();
+    let workers = worker_count(ctx, active.len());
+    let budgets = kernel_thread_budgets(ctx, workers, active.len());
+    let plane = g.n_vox[0] * g.n_vox[1];
+    let per = g.n_det[0] * g.n_det[1];
+    let max_chunk_len = plan.angle_chunks.iter().map(|c| c.len()).max().unwrap_or(0) * per;
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    let pool = ThreadPool::new(workers);
+    pool.scope(|s| {
+        let handles: Vec<_> = active
+            .iter()
+            .enumerate()
+            .map(|(i, dev)| {
+                let dev: &DeviceAssignment = dev;
+                let kt = budgets[i];
+                let max_stage_len =
+                    dev.slabs.iter().map(|sl| sl.len()).max().unwrap_or(0) * plane;
+                let stage: Vec<Vec<f32>> =
+                    (0..N_STAGE_BUFFERS).map(|_| scratch::take_zeroed(max_stage_len)).collect();
+                let chunk_bufs: Vec<Vec<f32>> =
+                    (0..N_STAGE_BUFFERS).map(|_| scratch::take_zeroed(max_chunk_len)).collect();
+                s.spawn(move || {
+                    backward_device_worker_ooc(
+                        ctx, g, store, plan, dev, out_ptr, plane, kt, stage, chunk_bufs,
+                    )
+                })
+            })
+            .collect();
+        for (stage, chunk_bufs) in join_all(handles) {
+            for buf in stage.into_iter().chain(chunk_bufs) {
+                scratch::recycle(buf);
+            }
+        }
+    });
+    out
+}
+
+/// One device's OOC backprojection worker: the loader lane streams the
+/// flattened `(slab, chunk)` launch sequence's chunks from the store
+/// through two staging buffers (prefetching the next launch's chunk
+/// while the current kernel runs); kernels consume a [`ProjChunkView`]
+/// over the staged buffer, so the output is bit-identical to the RAM
+/// path on the same plan.
+#[allow(clippy::too_many_arguments)]
+fn backward_device_worker_ooc(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    store: &OocProjections,
+    plan: &Plan,
+    dev: &DeviceAssignment,
+    out_ptr: SendPtr,
+    plane: usize,
+    kernel_threads: usize,
+    stage: Vec<Vec<f32>>,
+    chunk_bufs: Vec<Vec<f32>>,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let per = g.n_det[0] * g.n_det[1];
+    let (req_tx, req_rx) = mpsc::channel::<(Vec<f32>, usize)>();
+    let (ret_tx, ret_rx) = mpsc::channel::<Vec<f32>>();
+    for buf in stage {
+        ret_tx.send(buf).expect("staging channel open");
+    }
+    let (lreq_tx, lreq_rx) = mpsc::channel::<(AngleChunk, Vec<f32>)>();
+    let (ldone_tx, ldone_rx) = mpsc::channel::<(AngleChunk, Vec<f32>)>();
+    // flattened launch order: slab-major, then chunk (Alg. 2's queue)
+    let launches: Vec<(ZSlab, AngleChunk)> = dev
+        .slabs
+        .iter()
+        .flat_map(|s| plan.angle_chunks.iter().map(move |c| (*s, *c)))
+        .collect();
+    let mut leftover_chunk_bufs: Vec<Vec<f32>> = Vec::new();
+    std::thread::scope(|sc| {
+        // merge lane (identical to the RAM worker)
+        sc.spawn(move || {
+            let out_ptr = out_ptr;
+            for (buf, offset) in req_rx {
+                // SAFETY: `offset` addresses this device's own z-slab of
+                // the shared output; device z-ranges are disjoint.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(offset), buf.len())
+                };
+                for (o, v) in dst.iter_mut().zip(&buf) {
+                    *o += *v;
+                }
+                if ret_tx.send(buf).is_err() {
+                    break;
+                }
+            }
+        });
+        // loader lane: chunk prefetch from the store, FIFO order
+        sc.spawn(move || {
+            for (ch, mut buf) in lreq_rx {
+                // resize only: the store load overwrites every element
+                buf.resize(ch.len() * per, 0.0);
+                store
+                    .load_chunk_into(ch.a0, ch.a1, &mut buf)
+                    .expect("OOC projection store read failed");
+                if ldone_tx.send((ch, buf)).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut free = chunk_bufs;
+        if let Some(&(_, c0)) = launches.first() {
+            lreq_tx.send((c0, free.pop().expect("chunk buffer"))).expect("loader lane open");
+        }
+        for (k, &(slab, ch)) in launches.iter().enumerate() {
+            if k + 1 < launches.len() {
+                let buf = free.pop().expect("double-buffered chunk staging");
+                lreq_tx.send((launches[k + 1].1, buf)).expect("loader lane open");
+            }
+            let (got, data) = ldone_rx.recv().expect("loader lane terminated");
+            debug_assert_eq!(got, ch, "loader lane must deliver in FIFO order");
+            let gs = g.slab_geometry(slab.z0, slab.z1);
+            let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+            let view =
+                ProjChunkView { nu: g.n_det[0], nv: g.n_det[1], n_angles: ch.len(), data: &data };
+            let slab_len = slab.len() * plane;
+            let mut buf = ret_rx.recv().expect("merge lane terminated");
+            buf.clear();
+            buf.resize(slab_len, 0.0); // backproject_into accumulates
+            ctx.kernel_backward_into(&gc, &view, &mut buf, kernel_threads);
+            req_tx.send((buf, slab.z0 * plane)).expect("merge lane terminated");
+            free.push(data);
+        }
+        drop(lreq_tx);
+        drop(req_tx);
+        leftover_chunk_bufs = free;
+    });
+    let mut stage = Vec::with_capacity(N_STAGE_BUFFERS);
+    while let Ok(buf) = ret_rx.try_recv() {
+        stage.push(buf);
+    }
+    (stage, leftover_chunk_bufs)
+}
+
 // ---------------------------------------------------------------------------
 // sequential baseline (pre-PR3 loops, behind ExecutorConfig::pipelined=false)
 // ---------------------------------------------------------------------------
 
 /// Host-sequential forward execution with owned-copy staging — the
-/// comparison baseline for `bench::coordinator`.
-pub fn forward_sequential(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan) -> ProjectionSet {
+/// comparison baseline for `bench::coordinator`. OOC inputs stage each
+/// slab from the store synchronously (no prefetch — the baseline).
+pub fn forward_sequential(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    vol: VolumeInput<'_>,
+    plan: &Plan,
+) -> anyhow::Result<ProjectionSet> {
+    match vol {
+        VolumeInput::Ram(v) => Ok(forward_sequential_ram(ctx, g, v, plan)),
+        VolumeInput::Ooc(store) => {
+            if !plan.image_split {
+                let v = store.read_volume()?;
+                let out = forward_sequential_ram(ctx, g, &v, plan);
+                scratch::recycle_volume(v);
+                return Ok(out);
+            }
+            let mut out = ProjectionSet::zeros_like(g);
+            let plane = g.n_vox[0] * g.n_vox[1];
+            for dev in &plan.per_device {
+                for slab in &dev.slabs {
+                    let gs = g.slab_geometry(slab.z0, slab.z1);
+                    let mut sub = scratch::take_volume(g.n_vox[0], g.n_vox[1], slab.len());
+                    store.load_slab_into(slab.z0, slab.z1, &mut sub.data[..slab.len() * plane])?;
+                    for ch in &plan.angle_chunks {
+                        let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+                        let part = ctx.kernel_forward(&gc, &sub);
+                        let dst = out.chunk_mut(ch.a0, ch.a1);
+                        debug_assert_eq!(dst.len(), part.data.len());
+                        for (d, v) in dst.iter_mut().zip(&part.data) {
+                            *d += v;
+                        }
+                        scratch::recycle_projections(part);
+                    }
+                    scratch::recycle_volume(sub);
+                }
+            }
+            Ok(out)
+        }
+    }
+}
+
+fn forward_sequential_ram(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    vol: &Volume,
+    plan: &Plan,
+) -> ProjectionSet {
     let mut out = ProjectionSet::zeros_like(g);
     if !plan.image_split {
         // angle-split: each device projects the full volume for its chunks
@@ -446,8 +863,48 @@ pub fn forward_sequential(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Pla
 }
 
 /// Host-sequential backprojection with owned-copy staging — the
-/// comparison baseline for `bench::coordinator`.
-pub fn backward_sequential(ctx: &MultiGpu, g: &Geometry, proj: &ProjectionSet, plan: &Plan) -> Volume {
+/// comparison baseline for `bench::coordinator`. OOC inputs stage each
+/// chunk from the store synchronously (no prefetch — the baseline).
+pub fn backward_sequential(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    proj: ProjInput<'_>,
+    plan: &Plan,
+) -> anyhow::Result<Volume> {
+    match proj {
+        ProjInput::Ram(p) => Ok(backward_sequential_ram(ctx, g, p, plan)),
+        ProjInput::Ooc(store) => {
+            let mut out = Volume::zeros_like(g);
+            let per = g.n_det[0] * g.n_det[1];
+            for dev in &plan.per_device {
+                for slab in &dev.slabs {
+                    let gs = g.slab_geometry(slab.z0, slab.z1);
+                    let mut acc = scratch::take_volume(g.n_vox[0], g.n_vox[1], slab.len());
+                    for ch in &plan.angle_chunks {
+                        let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+                        let mut sub =
+                            scratch::take_projections(g.n_det[0], g.n_det[1], ch.len());
+                        store.load_chunk_into(ch.a0, ch.a1, &mut sub.data[..ch.len() * per])?;
+                        let part = ctx.kernel_backward(&gc, &sub);
+                        acc.add_scaled(&part, 1.0);
+                        scratch::recycle_volume(part);
+                        scratch::recycle_projections(sub);
+                    }
+                    out.insert_slab(slab.z0, &acc);
+                    scratch::recycle_volume(acc);
+                }
+            }
+            Ok(out)
+        }
+    }
+}
+
+fn backward_sequential_ram(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    proj: &ProjectionSet,
+    plan: &Plan,
+) -> Volume {
     let mut out = Volume::zeros_like(g);
     for dev in &plan.per_device {
         for slab in &dev.slabs {
@@ -604,6 +1061,84 @@ mod tests {
                 .0
                 .unwrap();
             assert_eq!(pipe.data, seq.data, "image_split={image_split}");
+        }
+    }
+
+    #[test]
+    fn ooc_forward_bit_identical_to_ram_on_the_same_plan() {
+        // THE OOC correctness claim: streaming slabs from disk through
+        // the loader lanes feeds the kernels byte-identical data in the
+        // identical order, so outputs match the RAM path bit for bit.
+        use crate::coordinator::splitter::plan_forward_ooc;
+        use crate::volume::{OocVolume, VolumeInput};
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let dir = std::env::temp_dir()
+            .join("tigre_pipe_ooc_fp")
+            .join(format!("{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let budget = g.volume_bytes() / 2; // forces slab streaming
+        for n_gpus in [1usize, 2, 3] {
+            let ctx = MultiGpu::gtx1080ti(n_gpus);
+            let plan =
+                plan_forward_ooc(&g, n_gpus, ctx.spec.mem_bytes, &ctx.split, budget).unwrap();
+            assert!(plan.image_split, "gpus={n_gpus}: host budget must force streaming");
+            let store = OocVolume::from_volume(
+                &dir.join(format!("v{n_gpus}.raw")),
+                &v,
+                3,
+                budget,
+            )
+            .unwrap();
+            let ram =
+                super::forward_pipelined(&ctx, &g, VolumeInput::Ram(&v), &plan).unwrap();
+            let ooc =
+                super::forward_pipelined(&ctx, &g, VolumeInput::Ooc(&store), &plan).unwrap();
+            assert_eq!(ram.data, ooc.data, "gpus={n_gpus}: streamed FP must be bit-identical");
+            let seq_ram =
+                super::forward_sequential(&ctx, &g, VolumeInput::Ram(&v), &plan).unwrap();
+            let seq_ooc =
+                super::forward_sequential(&ctx, &g, VolumeInput::Ooc(&store), &plan).unwrap();
+            assert_eq!(seq_ram.data, seq_ooc.data, "gpus={n_gpus}: sequential OOC parity");
+        }
+    }
+
+    #[test]
+    fn ooc_backward_bit_identical_to_ram_on_the_same_plan() {
+        use crate::coordinator::splitter::plan_backward_ooc;
+        use crate::volume::{OocProjections, ProjInput};
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        let dir = std::env::temp_dir()
+            .join("tigre_pipe_ooc_bp")
+            .join(format!("{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let budget = g.proj_bytes() / 2; // forces chunk streaming
+        for n_gpus in [1usize, 2, 3] {
+            let ctx = MultiGpu::gtx1080ti(n_gpus);
+            let plan =
+                plan_backward_ooc(&g, n_gpus, ctx.spec.mem_bytes, &ctx.split, budget).unwrap();
+            let store = OocProjections::from_projections(
+                &dir.join(format!("p{n_gpus}.raw")),
+                &p,
+                2,
+                budget,
+            )
+            .unwrap();
+            let ram = super::backward_pipelined(&ctx, &g, ProjInput::Ram(&p), &plan).unwrap();
+            let ooc =
+                super::backward_pipelined(&ctx, &g, ProjInput::Ooc(&store), &plan).unwrap();
+            assert_eq!(ram.data, ooc.data, "gpus={n_gpus}: streamed BP must be bit-identical");
+            let seq_ram =
+                super::backward_sequential(&ctx, &g, ProjInput::Ram(&p), &plan).unwrap();
+            let seq_ooc =
+                super::backward_sequential(&ctx, &g, ProjInput::Ooc(&store), &plan).unwrap();
+            assert_eq!(seq_ram.data, seq_ooc.data, "gpus={n_gpus}: sequential OOC parity");
         }
     }
 

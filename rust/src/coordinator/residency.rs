@@ -60,10 +60,10 @@ use std::collections::HashMap;
 
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
-use crate::volume::{TrackedProjections, TrackedVolume, Volume};
+use crate::volume::{ProjInput, TrackedProjections, TrackedVolume, Volume};
 
 use super::executor::{ExecMode, MultiGpu, OpStats};
-use super::splitter::{plan_backward, plan_forward, Plan};
+use super::splitter::{plan_backward, plan_forward, plan_ooc_pair, Plan};
 
 /// Which operator staged a cached unit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -526,10 +526,33 @@ impl ReconSession {
             .map_err(|e| anyhow::anyhow!("session forward plan: {e}"))?;
         let bp_plan = plan_backward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
             .map_err(|e| anyhow::anyhow!("session backward plan: {e}"))?;
+        Ok(Self::with_plans(ctx, g, fp_plan, bp_plan))
+    }
+
+    /// An out-of-core session (PR 5): plans both operators through
+    /// `splitter::plan_ooc_pair` under `host_budget` bytes of host RAM
+    /// for streaming — slab boundaries aligned across FP and BP so the
+    /// stores' caches hit across passes, the image-split regime forced
+    /// when the volume cannot fit the budget, chunk sizes shrunk to the
+    /// staging budget. Accepts RAM- and OOC-backed tracked inputs alike
+    /// (a RAM input on an OOC plan is simply the parity baseline).
+    ///
+    /// `host_budget` bounds the *streaming staging* this session's plans
+    /// add; the OOC stores' own caches are budgeted separately at store
+    /// construction — size the two together against physical RAM (see
+    /// `MultiGpu::forward_ooc` on the composition).
+    pub fn new_ooc(ctx: &MultiGpu, g: &Geometry, host_budget: u64) -> anyhow::Result<Self> {
+        let (fp_plan, bp_plan) =
+            plan_ooc_pair(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split, host_budget)
+                .map_err(|e| anyhow::anyhow!("session ooc plans: {e}"))?;
+        Ok(Self::with_plans(ctx, g, fp_plan, bp_plan))
+    }
+
+    fn with_plans(ctx: &MultiGpu, g: &Geometry, fp_plan: Plan, bp_plan: Plan) -> Self {
         let usable = (ctx.spec.mem_bytes as f64 * ctx.split.mem_fraction) as u64;
         let working_set = fp_plan.working_set_bytes(g).max(bp_plan.working_set_bytes(g));
         let budget = usable.saturating_sub(working_set);
-        Ok(Self {
+        Self {
             ctx: ctx.clone(),
             g: g.clone(),
             fp_plan,
@@ -541,7 +564,7 @@ impl ReconSession {
             peak_device_bytes: 0,
             residency: ResidencyStats::default(),
             last: None,
-        })
+        }
     }
 
     /// Disable the cache (every staging transfers, as pre-session code
@@ -576,7 +599,7 @@ impl ReconSession {
         let (p, mut stats) = super::forward::run_with(
             &self.ctx,
             &self.g,
-            Some(vol.get()),
+            Some(vol.as_input()),
             ExecMode::Full,
             &self.fp_plan,
             res.as_ref(),
@@ -607,7 +630,7 @@ impl ReconSession {
     /// next call (budget permitting).
     pub fn backward(&mut self, proj: &TrackedProjections) -> anyhow::Result<Volume> {
         let src = SourceTag { id: proj.id(), epoch: proj.epoch() };
-        self.backward_inner(proj.get(), &[src])
+        self.backward_inner(proj.as_input(), &[src])
     }
 
     /// The iterative update `Aᵀ(b − ax)` with residual formation modeled
@@ -624,6 +647,11 @@ impl ReconSession {
         b: &TrackedProjections,
         ax: &TrackedProjections,
     ) -> anyhow::Result<(Volume, f64)> {
+        anyhow::ensure!(
+            !b.is_ooc() && !ax.is_ooc(),
+            "backward_residual requires RAM-backed projections (the residual is formed \
+             host-side); stream OOC inputs through backward() instead"
+        );
         let bp = b.get();
         let ap = ax.get();
         anyhow::ensure!(
@@ -641,14 +669,14 @@ impl ReconSession {
             SourceTag { id: b.id(), epoch: b.epoch() },
             SourceTag { id: ax.id(), epoch: ax.epoch() },
         ];
-        let vol = self.backward_inner(&r, &sources)?;
+        let vol = self.backward_inner(ProjInput::Ram(&r), &sources)?;
         scratch::recycle_projections(r);
         Ok((vol, norm))
     }
 
     fn backward_inner(
         &mut self,
-        proj: &crate::volume::ProjectionSet,
+        proj: ProjInput<'_>,
         sources: &[SourceTag],
     ) -> anyhow::Result<Volume> {
         let before = self.cache.stats();

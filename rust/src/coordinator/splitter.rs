@@ -71,6 +71,18 @@ pub struct Plan {
     /// Forward projection without an image split keeps the *entire*
     /// volume resident on every device (angles are split instead).
     pub full_image_per_device: bool,
+    /// Host-RAM budget the plan's streaming working set must fit in
+    /// (`None` for in-RAM plans, which borrow resident arrays instead of
+    /// staging). Set by the `plan_*_ooc` planners; enforced by
+    /// [`Plan::validate`] via [`Plan::host_working_set_bytes`].
+    pub host_budget_bytes: Option<u64>,
+    /// The volume side of this plan streams from/to an `OocVolume`
+    /// (forward input; backward output when the caller stores slabs).
+    /// Drives the disk-read/-write events of the simulated timeline.
+    pub ooc_volume: bool,
+    /// The projection input streams from an `OocProjections` store
+    /// (backprojection chunks).
+    pub ooc_proj: bool,
 }
 
 impl Plan {
@@ -105,6 +117,58 @@ impl Plan {
             self.max_slab_bytes
         };
         bufs + staged
+    }
+
+    /// Host-RAM bytes the *streaming tier* of this plan adds: the OOC
+    /// loader-lane staging buffers (and the one-off materialized volume
+    /// of an angle-split OOC forward). In-RAM plans stage through
+    /// zero-copy borrows, so their streaming working set is zero.
+    ///
+    /// Scope — what the host budget deliberately does **not** bound
+    /// (all common to the RAM and OOC execution paths, so bounding them
+    /// here would make budgets below the projection footprint
+    /// unplannable rather than honest): the caller's own arrays
+    /// (outputs, iterates — spill those via `OocVolume` when they must
+    /// leave RAM), the per-worker merge-lane stage buffers, and the
+    /// image-split forward's per-device partial projection sets, which
+    /// are full-size at any slab granularity. The budget mirrors the
+    /// device-side semantics of `coordinator::residency`: it governs
+    /// what the *new tier* adds, not the executor's pre-existing
+    /// machinery.
+    pub fn host_working_set_bytes(&self, g: &Geometry) -> u64 {
+        let n_active = self
+            .per_device
+            .iter()
+            .filter(|d| !d.slabs.is_empty())
+            .count()
+            .max(1) as u64;
+        let mut ws = 0;
+        if self.ooc_volume {
+            ws += if self.full_image_per_device {
+                // angle-split forward: the volume is materialized once
+                // from the store and shared by every worker
+                g.volume_bytes()
+            } else {
+                // slab cycling: two loader-lane staging slabs per worker
+                n_active * 2 * self.max_slab_bytes
+            };
+        }
+        if self.ooc_proj {
+            // chunk streaming: two loader-lane chunk buffers per worker
+            ws += n_active * 2 * self.proj_buffer_bytes;
+        }
+        ws
+    }
+
+    /// Mark the plan's volume side as out-of-core for the simulated
+    /// timeline: a backward plan then charges a disk write for every
+    /// output slab spilled after its D2H (the `OocVolume::store_slab` /
+    /// `add_scaled_volume` writeback the caller performs when the
+    /// iterate lives out of core). `SimOnly` sweeps use this to predict
+    /// the spill cost; the real executors always return RAM volumes.
+    pub fn with_ooc_volume_spill(mut self) -> Self {
+        self.ooc_volume = true;
+        self
     }
 
     /// Sanity invariants; used by property tests.
@@ -174,6 +238,15 @@ impl Plan {
         if a != g.n_angles() {
             return Err("angle chunks do not cover all angles".into());
         }
+        // host-memory budget dimension (out-of-core plans)
+        if let Some(h) = self.host_budget_bytes {
+            let ws = self.host_working_set_bytes(g);
+            if ws > h {
+                return Err(format!(
+                    "host streaming working set {ws} B exceeds the host budget {h} B"
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -214,7 +287,7 @@ pub fn plan_forward(
     mem_bytes: u64,
     cfg: &SplitConfig,
 ) -> Result<Plan, String> {
-    plan_operator(g, n_gpus, mem_bytes, cfg, cfg.fp_chunk, true)
+    plan_operator(g, n_gpus, mem_bytes, cfg, cfg.fp_chunk, true, false)
 }
 
 /// Plan the backprojection (Algorithm 2).
@@ -227,7 +300,7 @@ pub fn plan_backward(
     mem_bytes: u64,
     cfg: &SplitConfig,
 ) -> Result<Plan, String> {
-    plan_operator(g, n_gpus, mem_bytes, cfg, cfg.bp_chunk, false)
+    plan_operator(g, n_gpus, mem_bytes, cfg, cfg.bp_chunk, false, false)
 }
 
 fn plan_operator(
@@ -237,6 +310,7 @@ fn plan_operator(
     cfg: &SplitConfig,
     chunk: usize,
     is_forward: bool,
+    force_image_split: bool,
 ) -> Result<Plan, String> {
     if n_gpus == 0 {
         return Err("need at least one GPU".into());
@@ -259,7 +333,7 @@ fn plan_operator(
     let resident = if is_forward { nz } else { max_range };
     let two_buf_need = 2 * proj_buffer_bytes + resident as u64 * plane_bytes;
     let (n_buffers, image_split, slabs_per_device): (usize, bool, Vec<Vec<ZSlab>>) =
-        if two_buf_need <= usable {
+        if !force_image_split && two_buf_need <= usable {
             (
                 2,
                 false,
@@ -331,7 +405,156 @@ fn plan_operator(
         pin_image: should_pin_image(image_split, n_gpus),
         image_split,
         full_image_per_device: is_forward && !image_split,
+        host_budget_bytes: None,
+        ooc_volume: false,
+        ooc_proj: false,
     })
+}
+
+// ---------------------------------------------------------------------------
+// out-of-core planners (PR 5): the host-memory budget dimension
+// ---------------------------------------------------------------------------
+
+/// Re-split every device's z-range into `n_splits(d)` balanced slabs and
+/// refresh `max_slab_bytes`.
+fn resplit_slabs(plan: &mut Plan, g: &Geometry, n_splits: impl Fn(usize) -> usize) {
+    let plane_bytes = (g.n_vox[0] * g.n_vox[1]) as u64 * F32_BYTES;
+    for d in plan.per_device.iter_mut() {
+        let span = d.z_range.len();
+        if span == 0 {
+            continue;
+        }
+        let n = n_splits(d.device).max(1).min(span);
+        d.slabs = split_even(span, n)
+            .into_iter()
+            .filter(|(a, b)| b > a)
+            .map(|(a, b)| ZSlab { z0: d.z_range.z0 + a, z1: d.z_range.z0 + b })
+            .collect();
+    }
+    plan.max_slab_bytes = plan
+        .per_device
+        .iter()
+        .flat_map(|d| &d.slabs)
+        .map(|s| s.len() as u64 * plane_bytes)
+        .max()
+        .unwrap_or(0);
+}
+
+/// Shrink a slab-cycling plan's slabs until the loader-lane staging
+/// (two slab buffers per active worker) fits `host_budget`.
+fn constrain_slabs_to_host_budget(
+    plan: &mut Plan,
+    g: &Geometry,
+    host_budget: u64,
+) -> Result<(), String> {
+    let plane_bytes = (g.n_vox[0] * g.n_vox[1]) as u64 * F32_BYTES;
+    let n_active = plan.per_device.iter().filter(|d| !d.slabs.is_empty()).count().max(1) as u64;
+    let cap_slices = (host_budget / (2 * n_active * plane_bytes)) as usize;
+    if cap_slices == 0 {
+        return Err(format!(
+            "host budget {host_budget} B cannot hold two staging slices per worker \
+             ({n_active} workers × {plane_bytes} B/slice)"
+        ));
+    }
+    let per_dev_splits: Vec<usize> = plan
+        .per_device
+        .iter()
+        .map(|d| d.z_range.len().div_ceil(cap_slices).max(d.slabs.len()).max(1))
+        .collect();
+    resplit_slabs(plan, g, |d| per_dev_splits[d]);
+    Ok(())
+}
+
+/// Largest BP chunk (angles per launch) whose two-buffer loader-lane
+/// staging fits `host_budget` across `n_gpus` workers; used by
+/// [`plan_backward_ooc`] and by tests that need an in-RAM reference plan
+/// with identical chunking.
+pub fn ooc_bp_chunk(g: &Geometry, n_gpus: usize, cfg: &SplitConfig, host_budget: u64) -> usize {
+    let per = g.single_proj_bytes().max(1);
+    let cap = (host_budget / (2 * n_gpus.max(1) as u64 * per)) as usize;
+    cfg.bp_chunk.min(cap)
+}
+
+/// Plan the forward projection of a volume streamed from an
+/// [`crate::volume::OocVolume`] with `host_budget` bytes of host RAM for
+/// staging.
+///
+/// Two regimes:
+/// * the volume fits the host budget → the standard plan, with the
+///   volume materialized once from the store (angle-split stays
+///   available and the disk read is a one-off);
+/// * the volume exceeds the host budget → the **image-split** regime is
+///   forced even on devices that could hold the full image, because the
+///   host can never materialize it: slabs stream disk → host staging →
+///   device, sized so two staging slabs per worker respect the budget.
+pub fn plan_forward_ooc(
+    g: &Geometry,
+    n_gpus: usize,
+    mem_bytes: u64,
+    cfg: &SplitConfig,
+    host_budget: u64,
+) -> Result<Plan, String> {
+    let force_split = g.volume_bytes() > host_budget;
+    let mut plan = plan_operator(g, n_gpus, mem_bytes, cfg, cfg.fp_chunk, true, force_split)?;
+    plan.ooc_volume = true;
+    plan.host_budget_bytes = Some(host_budget);
+    if plan.image_split {
+        constrain_slabs_to_host_budget(&mut plan, g, host_budget)?;
+    }
+    plan.validate(g, mem_bytes, cfg)?;
+    Ok(plan)
+}
+
+/// Plan the backprojection of projections streamed from an
+/// [`crate::volume::OocProjections`] store: chunk sizes shrink until two
+/// staging chunks per worker fit `host_budget`. (The output volume is
+/// the caller's array — write it through `OocVolume::store_slab` when it
+/// too must live out of core.)
+pub fn plan_backward_ooc(
+    g: &Geometry,
+    n_gpus: usize,
+    mem_bytes: u64,
+    cfg: &SplitConfig,
+    host_budget: u64,
+) -> Result<Plan, String> {
+    let chunk = ooc_bp_chunk(g, n_gpus, cfg, host_budget);
+    if chunk == 0 {
+        return Err(format!(
+            "host budget {host_budget} B cannot hold two staging projections per worker"
+        ));
+    }
+    let mut plan = plan_operator(g, n_gpus, mem_bytes, cfg, chunk, false, false)?;
+    plan.ooc_proj = true;
+    plan.host_budget_bytes = Some(host_budget);
+    plan.validate(g, mem_bytes, cfg)?;
+    Ok(plan)
+}
+
+/// Plan both operators of an out-of-core session together and **align
+/// their slab boundaries**: when both plans slab-cycle, each device's
+/// range is re-split to the finer of the two partitions so a store slab
+/// staged by one pass is byte-identical reusable by the other (FP reads
+/// of the iterate, the slab-streamed update `x += s·upd`, BP slab
+/// writebacks). Unaligned plans would stage overlapping-but-unequal
+/// ranges and the store cache could never hit across passes.
+pub fn plan_ooc_pair(
+    g: &Geometry,
+    n_gpus: usize,
+    mem_bytes: u64,
+    cfg: &SplitConfig,
+    host_budget: u64,
+) -> Result<(Plan, Plan), String> {
+    let mut fp = plan_forward_ooc(g, n_gpus, mem_bytes, cfg, host_budget)?;
+    let mut bp = plan_backward_ooc(g, n_gpus, mem_bytes, cfg, host_budget)?;
+    if fp.image_split {
+        let fp_counts: Vec<usize> = fp.per_device.iter().map(|d| d.slabs.len()).collect();
+        let bp_counts: Vec<usize> = bp.per_device.iter().map(|d| d.slabs.len()).collect();
+        resplit_slabs(&mut fp, g, |d| fp_counts[d].max(bp_counts[d]));
+        resplit_slabs(&mut bp, g, |d| fp_counts[d].max(bp_counts[d]));
+        fp.validate(g, mem_bytes, cfg)?;
+        bp.validate(g, mem_bytes, cfg)?;
+    }
+    Ok((fp, bp))
 }
 
 /// Paper §4 size-limit formulas for an `N³` volume / `N²` detector / `N`
@@ -476,6 +699,77 @@ mod tests {
         let nonempty = p.per_device.iter().filter(|d| !d.slabs.is_empty()).count();
         assert_eq!(nonempty, 2);
         p.validate(&g, 11 * GIB, &SplitConfig::default()).unwrap();
+    }
+
+    #[test]
+    fn ooc_forward_forces_image_split_when_volume_exceeds_host_budget() {
+        let g = fig7_geometry(64);
+        let cfg = SplitConfig::default();
+        // plenty of device RAM: the RAM planner would angle-split...
+        let ram = plan_forward(&g, 2, 11 * GIB, &cfg).unwrap();
+        assert!(!ram.image_split && ram.full_image_per_device);
+        // ...but a host budget of half the volume forces slab streaming
+        let budget = g.volume_bytes() / 2;
+        let ooc = plan_forward_ooc(&g, 2, 11 * GIB, &cfg, budget).unwrap();
+        assert!(ooc.image_split && !ooc.full_image_per_device);
+        assert!(ooc.ooc_volume && !ooc.ooc_proj);
+        assert_eq!(ooc.host_budget_bytes, Some(budget));
+        assert!(
+            ooc.host_working_set_bytes(&g) <= budget,
+            "staging {} > budget {budget}",
+            ooc.host_working_set_bytes(&g)
+        );
+        ooc.validate(&g, 11 * GIB, &cfg).unwrap();
+        // a volume that fits the budget keeps the angle-split plan
+        let roomy = plan_forward_ooc(&g, 2, 11 * GIB, &cfg, 2 * g.volume_bytes()).unwrap();
+        assert!(!roomy.image_split && roomy.full_image_per_device && roomy.ooc_volume);
+        roomy.validate(&g, 11 * GIB, &cfg).unwrap();
+    }
+
+    #[test]
+    fn ooc_backward_shrinks_chunks_to_the_host_budget() {
+        let g = fig7_geometry(64);
+        let cfg = SplitConfig::default();
+        // budget fits two staging chunks of 4 angles per worker (2 GPUs)
+        let budget = 2 * 2 * 4 * g.single_proj_bytes();
+        assert_eq!(ooc_bp_chunk(&g, 2, &cfg, budget), 4);
+        let p = plan_backward_ooc(&g, 2, 11 * GIB, &cfg, budget).unwrap();
+        assert!(p.ooc_proj && !p.ooc_volume);
+        assert!(p.angle_chunks.iter().all(|c| c.len() <= 4));
+        assert!(p.host_working_set_bytes(&g) <= budget);
+        p.validate(&g, 11 * GIB, &cfg).unwrap();
+        // a budget below two single projections per worker is infeasible
+        assert!(plan_backward_ooc(&g, 2, 11 * GIB, &cfg, g.single_proj_bytes()).is_err());
+    }
+
+    #[test]
+    fn ooc_pair_aligns_slab_boundaries_across_operators() {
+        let g = fig7_geometry(48);
+        let cfg = SplitConfig::default();
+        let mem = image_split_mem(&g, &cfg); // tiny devices: both split
+        let budget = g.volume_bytes() / 2;
+        let (fp, bp) = plan_ooc_pair(&g, 2, mem, &cfg, budget).unwrap();
+        assert!(fp.image_split);
+        for (df, db) in fp.per_device.iter().zip(&bp.per_device) {
+            assert_eq!(df.z_range, db.z_range);
+            assert_eq!(
+                df.slabs, db.slabs,
+                "device {}: FP and BP must share one slab partition",
+                df.device
+            );
+        }
+        fp.validate(&g, mem, &cfg).unwrap();
+        bp.validate(&g, mem, &cfg).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_over_budget_streaming_working_set() {
+        let g = fig7_geometry(64);
+        let cfg = SplitConfig::default();
+        let mut p = plan_forward_ooc(&g, 1, 11 * GIB, &cfg, 2 * g.volume_bytes()).unwrap();
+        p.host_budget_bytes = Some(16); // absurdly small after the fact
+        let err = p.validate(&g, 11 * GIB, &cfg).unwrap_err();
+        assert!(err.contains("host"), "{err}");
     }
 
     #[test]

@@ -131,6 +131,57 @@ mod tests {
         // truncate the raw file
         let raw = fs::read(&p).unwrap();
         fs::write(&p, &raw[..raw.len() - 4]).unwrap();
+        let err = load_volume(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("size mismatch"), "{err:#}");
+        // and an *extended* file is just as invalid (shape must be exact)
+        let mut grown = raw.clone();
+        grown.extend_from_slice(&[0u8; 8]);
+        fs::write(&p, &grown).unwrap();
+        assert!(load_volume(&p).is_err());
+        // restoring the original bytes restores loadability
+        fs::write(&p, &raw).unwrap();
+        assert_eq!(load_volume(&p).unwrap(), v);
+    }
+
+    #[test]
+    fn load_rejects_missing_or_malformed_sidecar() {
+        let d = tmpdir("sidecar");
+        let v = phantom::cube(4, 0.5, 1.0);
+        let p = d.join("v.raw");
+        save_volume(&p, &v).unwrap();
+        let sidecar = p.with_extension("json");
+        let good = fs::read_to_string(&sidecar).unwrap();
+        // missing sidecar entirely
+        fs::remove_file(&sidecar).unwrap();
+        assert!(load_volume(&p).is_err());
+        // sidecar that is not JSON
+        fs::write(&sidecar, "not json at all").unwrap();
+        assert!(load_volume(&p).is_err());
+        // sidecar missing a dimension
+        fs::write(&sidecar, "{\"nx\": 4, \"ny\": 4}").unwrap();
+        let err = load_volume(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("nz"), "{err:#}");
+        // non-integer dimension
+        fs::write(&sidecar, "{\"nx\": 4, \"ny\": 4, \"nz\": 4.5}").unwrap();
+        assert!(load_volume(&p).is_err());
+        fs::write(&sidecar, good).unwrap();
+        assert_eq!(load_volume(&p).unwrap(), v);
+    }
+
+    #[test]
+    fn load_rejects_sidecar_shape_disagreeing_with_raw_length() {
+        // the OOC store trusts this format; a sidecar claiming a bigger
+        // volume than the raw file holds must be a hard error, not a
+        // short read
+        let d = tmpdir("shape");
+        let v = phantom::cube(4, 0.5, 1.0);
+        let p = d.join("v.raw");
+        save_volume(&p, &v).unwrap();
+        fs::write(
+            p.with_extension("json"),
+            "{\"dtype\": \"f32le\", \"nx\": 4, \"ny\": 4, \"nz\": 8}",
+        )
+        .unwrap();
         assert!(load_volume(&p).is_err());
     }
 

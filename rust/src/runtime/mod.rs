@@ -18,9 +18,12 @@ pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-/// Stub backend for offline builds: the `xla` crate ships with the GPU
-/// image only, so the default build reports "no artifact" for every
-/// shape and the callers below fall back to the native kernels.
+/// Stub backend for default (featureless) builds: reports "no artifact"
+/// for every shape so the callers below fall back to the native
+/// kernels. With `--features pjrt` the real module above compiles
+/// instead — against the GPU image's `xla` crate when present, or the
+/// vendored API shim (`vendor/xla`) offline, which type-checks the
+/// backend in CI and fails at runtime into the same native fallback.
 #[cfg(not(feature = "pjrt"))]
 pub mod pjrt {
     use crate::geometry::Geometry;

@@ -57,6 +57,13 @@ pub struct CostModel {
     /// Per-device property check (cudaGetDeviceProperties etc.), charged
     /// once per operator call.
     pub property_check_s: f64,
+    /// Sequential read bandwidth of the out-of-core backing store
+    /// (bytes/s) — NVMe-class local storage.
+    pub disk_read_bps: f64,
+    /// Sequential write bandwidth of the backing store (bytes/s).
+    pub disk_write_bps: f64,
+    /// Fixed latency per store request (syscall + queue).
+    pub disk_latency_s: f64,
 }
 
 impl CostModel {
@@ -77,7 +84,30 @@ impl CostModel {
             alloc_latency_s: 100e-6,
             free_latency_s: 50e-6,
             property_check_s: 1.5e-3,
+            // workstation NVMe: ~2.5 GB/s sequential read, ~1.2 GB/s
+            // sustained write, ~100 µs per request
+            disk_read_bps: 2.5e9,
+            disk_write_bps: 1.2e9,
+            disk_latency_s: 100e-6,
         }
+    }
+
+    /// Time to read `bytes` from the out-of-core backing store.
+    pub fn disk_read_time_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.disk_read_bps + self.disk_latency_s
+    }
+
+    /// Time to write `bytes` back to the backing store.
+    pub fn disk_write_time_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.disk_write_bps + self.disk_latency_s
+    }
+
+    /// Whether streaming a `bytes`-sized unit from disk hides behind a
+    /// kernel of `kernel_s` seconds (the loader lane prefetches unit
+    /// `k+1` while unit `k` computes, so OOC streaming is free exactly
+    /// when the disk read fits inside the kernel).
+    pub fn ooc_read_hidden(&self, bytes: u64, kernel_s: f64) -> bool {
+        self.disk_read_time_s(bytes) <= kernel_s
     }
 
     /// Host↔device transfer time for `bytes` over the pageable or pinned
@@ -200,6 +230,20 @@ mod tests {
         let fp = c.fp_slab_kernel_s(1024, 1024, 9, 1024, 1024, 1024, 1024);
         let acc = c.accum_kernel_s(1024 * 1024 * 9 * 4);
         assert!(acc < fp * 0.01, "accum {acc} vs fp {fp}");
+    }
+
+    #[test]
+    fn disk_slower_than_pcie_and_hidden_behind_big_kernels() {
+        let c = CostModel::gtx1080ti_pcie3();
+        let slab = 512u64 * 512 * 64 * 4; // a 64-slice slab of the 512 problem
+        assert!(c.disk_read_time_s(slab) > c.copy_time_s(slab, true), "disk slower than pinned");
+        assert!(c.disk_write_time_s(slab) > c.disk_read_time_s(slab), "writes slower than reads");
+        // the FP kernel over that slab takes seconds — the prefetch hides
+        let kernel = c.fp_slab_kernel_s(512, 512, 512, 512, 512, 64, 512);
+        let read = c.disk_read_time_s(slab);
+        assert!(c.ooc_read_hidden(slab, kernel), "read {read} vs kernel {kernel}");
+        // a microsecond kernel cannot hide a gigabyte read
+        assert!(!c.ooc_read_hidden(1 << 30, 1e-6));
     }
 
     #[test]

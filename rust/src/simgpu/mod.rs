@@ -80,6 +80,12 @@ pub struct SimNode {
     devices: Vec<DeviceState>,
     /// Host thread availability time.
     host_free: f64,
+    /// Out-of-core backing store availability time: one disk, shared by
+    /// every loader lane, serializing its requests — but asynchronous to
+    /// the host and the device engines (reads run on loader threads), so
+    /// streaming hides behind kernels exactly when
+    /// `CostModel::ooc_read_hidden` says so.
+    disk_free: f64,
     events: Vec<TimelineEvent>,
 }
 
@@ -102,7 +108,7 @@ impl SimNode {
                 ]),
             })
             .collect();
-        Self { cost, devices, host_free: 0.0, events: Vec::new() }
+        Self { cost, devices, host_free: 0.0, disk_free: 0.0, events: Vec::new() }
     }
 
     pub fn n_devices(&self) -> usize {
@@ -118,7 +124,7 @@ impl SimNode {
         Ev(self.host_free)
     }
 
-    /// Makespan: the latest completion over host and all engines.
+    /// Makespan: the latest completion over host, disk and all engines.
     pub fn makespan(&self) -> f64 {
         let dev_max = self
             .devices
@@ -126,7 +132,7 @@ impl SimNode {
             .flat_map(|d| d.engine_free.values())
             .cloned()
             .fold(0.0f64, f64::max);
-        dev_max.max(self.host_free)
+        dev_max.max(self.host_free).max(self.disk_free)
     }
 
     /// All logged events (chronological by start).
@@ -278,6 +284,33 @@ impl SimNode {
         Ev(t1)
     }
 
+    // ---- out-of-core backing store ---------------------------------------
+
+    /// Read `bytes` from the backing store after `after`: serializes on
+    /// the single disk, does **not** advance the host clock (loader
+    /// threads issue these). Returns the completion event the dependent
+    /// H2D copy must wait on.
+    pub fn disk_read(&mut self, bytes: u64, after: Ev) -> Ev {
+        let dur = self.cost.disk_read_time_s(bytes);
+        let t0 = self.disk_free.max(after.0);
+        let t1 = t0 + dur;
+        self.disk_free = t1;
+        self.log_host(Category::OtherMem, t0, t1, format!("disk read {bytes}B"));
+        Ev(t1)
+    }
+
+    /// Write `bytes` back to the backing store after `after` (dirty-slab
+    /// writeback / result spill). Same engine semantics as
+    /// [`SimNode::disk_read`].
+    pub fn disk_write(&mut self, bytes: u64, after: Ev) -> Ev {
+        let dur = self.cost.disk_write_time_s(bytes);
+        let t0 = self.disk_free.max(after.0);
+        let t1 = t0 + dur;
+        self.disk_free = t1;
+        self.log_host(Category::OtherMem, t0, t1, format!("disk write {bytes}B"));
+        Ev(t1)
+    }
+
     // ---- kernels ----------------------------------------------------------
 
     /// Queue a kernel of `dur_s` seconds on the device's compute engine
@@ -403,6 +436,26 @@ mod tests {
         assert_eq!(sim.events().len(), n_events, "reserve must not log events");
         // over-reserving is the same typed error as alloc
         assert!(sim.reserve(0, "more", 10 << 30).is_err());
+    }
+
+    #[test]
+    fn disk_engine_serializes_reads_but_overlaps_compute() {
+        let mut sim = small_node(1);
+        // two loader-lane reads serialize on the one disk...
+        let r1 = sim.disk_read(5 << 30, Ev::ZERO); // 5 GiB ≈ 2.1 s
+        let r2 = sim.disk_read(5 << 30, Ev::ZERO);
+        assert!(r2.0 > r1.0 + 1.0, "disk requests must serialize: {} vs {}", r2.0, r1.0);
+        // ...without blocking the host or the compute engine
+        assert_eq!(sim.host_time().0, 0.0, "disk reads run on loader threads");
+        let k = sim.kernel(0, 1.0, Ev::ZERO, "fp");
+        assert!((k.0 - 1.0).abs() < 0.01, "kernel overlaps the reads");
+        // a copy depending on a read waits for it
+        let c = sim.h2d(0, 1024, true, r1);
+        assert!(c.0 >= r1.0);
+        // writes occupy the same engine and count toward the makespan
+        let w = sim.disk_write(1 << 30, Ev::ZERO);
+        assert!(w.0 >= r2.0);
+        assert!(sim.makespan() >= w.0);
     }
 
     #[test]

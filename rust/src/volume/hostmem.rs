@@ -25,6 +25,33 @@ pub struct PinEvent {
     pub pin: bool, // true = pin, false = unpin
 }
 
+/// Typed misuse errors for the pin/unpin state machine. Double-pinning
+/// (or unpinning pageable memory) indicates a scheduling bug — in CUDA a
+/// second `cudaHostRegister` of the same range fails — so the registry
+/// reports it instead of silently absorbing it, and pin events are
+/// charged only on an actual state change.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HostMemError {
+    /// No allocation registered under this name.
+    UnknownAlloc(String),
+    /// `pin` on an allocation that is already pinned.
+    AlreadyPinned(String),
+    /// `unpin` on an allocation that is pageable.
+    NotPinned(String),
+}
+
+impl std::fmt::Display for HostMemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HostMemError::UnknownAlloc(n) => write!(f, "no host allocation named '{n}'"),
+            HostMemError::AlreadyPinned(n) => write!(f, "allocation '{n}' is already pinned"),
+            HostMemError::NotPinned(n) => write!(f, "allocation '{n}' is not pinned"),
+        }
+    }
+}
+
+impl std::error::Error for HostMemError {}
+
 /// Registry of named host allocations and their pin states.
 #[derive(Debug, Default)]
 pub struct HostMemRegistry {
@@ -55,30 +82,36 @@ impl HostMemRegistry {
         self.allocs.get(name).map(|(b, _)| *b)
     }
 
-    /// Page-lock an allocation. Idempotent; returns the bytes newly pinned
-    /// (0 if it was already pinned).
-    pub fn pin(&mut self, name: &str) -> u64 {
+    /// Page-lock an allocation, returning the bytes pinned. Pinning an
+    /// already-pinned allocation (or an unknown name) is a typed
+    /// [`HostMemError`]; a pin event is charged only on the actual
+    /// pageable→pinned transition.
+    pub fn pin(&mut self, name: &str) -> Result<u64, HostMemError> {
         match self.allocs.get_mut(name) {
-            Some((bytes, state)) if *state == MemState::Pageable => {
+            None => Err(HostMemError::UnknownAlloc(name.to_string())),
+            Some((_, MemState::Pinned)) => Err(HostMemError::AlreadyPinned(name.to_string())),
+            Some((bytes, state)) => {
                 *state = MemState::Pinned;
                 let b = *bytes;
                 self.events.push(PinEvent { bytes: b, pin: true });
-                b
+                Ok(b)
             }
-            _ => 0,
         }
     }
 
-    /// Unpin an allocation. Idempotent; returns bytes newly unpinned.
-    pub fn unpin(&mut self, name: &str) -> u64 {
+    /// Unpin an allocation, returning the bytes unpinned. Unpinning
+    /// pageable memory (or an unknown name) is a typed [`HostMemError`];
+    /// an unpin event is charged only on the pinned→pageable transition.
+    pub fn unpin(&mut self, name: &str) -> Result<u64, HostMemError> {
         match self.allocs.get_mut(name) {
-            Some((bytes, state)) if *state == MemState::Pinned => {
+            None => Err(HostMemError::UnknownAlloc(name.to_string())),
+            Some((_, MemState::Pageable)) => Err(HostMemError::NotPinned(name.to_string())),
+            Some((bytes, state)) => {
                 *state = MemState::Pageable;
                 let b = *bytes;
                 self.events.push(PinEvent { bytes: b, pin: false });
-                b
+                Ok(b)
             }
-            _ => 0,
         }
     }
 
@@ -115,23 +148,30 @@ mod tests {
     }
 
     #[test]
-    fn pin_unpin_events_and_idempotence() {
+    fn pin_unpin_events_charged_only_on_state_change() {
         let mut r = HostMemRegistry::new();
         r.alloc("image", 100);
-        assert_eq!(r.pin("image"), 100);
-        assert_eq!(r.pin("image"), 0); // idempotent
+        assert_eq!(r.pin("image"), Ok(100));
+        // re-pinning is a typed error, and must not add a second event
+        assert_eq!(r.pin("image"), Err(HostMemError::AlreadyPinned("image".into())));
         assert_eq!(r.pinned_bytes(), 100);
-        assert_eq!(r.unpin("image"), 100);
-        assert_eq!(r.unpin("image"), 0);
-        assert_eq!(r.events().len(), 2);
+        assert_eq!(r.unpin("image"), Ok(100));
+        assert_eq!(r.unpin("image"), Err(HostMemError::NotPinned("image".into())));
+        assert_eq!(r.events().len(), 2, "exactly one pin + one unpin event");
         assert!(r.events()[0].pin && !r.events()[1].pin);
+        // the error type is displayable and a std error
+        let e: Box<dyn std::error::Error> =
+            Box::new(r.unpin("image").unwrap_err());
+        assert!(e.to_string().contains("not pinned"), "{e}");
     }
 
     #[test]
-    fn unknown_names_are_noops() {
+    fn unknown_names_are_typed_errors() {
         let mut r = HostMemRegistry::new();
-        assert_eq!(r.pin("nope"), 0);
+        assert_eq!(r.pin("nope"), Err(HostMemError::UnknownAlloc("nope".into())));
+        assert_eq!(r.unpin("nope"), Err(HostMemError::UnknownAlloc("nope".into())));
         assert_eq!(r.state("nope"), None);
+        assert!(r.events().is_empty(), "failed transitions charge no events");
     }
 
     #[test]
@@ -139,7 +179,7 @@ mod tests {
         let mut r = HostMemRegistry::new();
         r.alloc("a", 10);
         r.alloc("b", 20);
-        r.pin("b");
+        r.pin("b").unwrap();
         assert_eq!(r.total_bytes(), 30);
         assert_eq!(r.pinned_bytes(), 20);
         r.free("b");

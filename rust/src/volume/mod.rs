@@ -7,8 +7,10 @@
 //!    angle chunk is one contiguous range.
 
 mod hostmem;
+pub mod outofcore;
 
-pub use hostmem::{HostMemRegistry, MemState, PinEvent};
+pub use hostmem::{HostMemError, HostMemRegistry, MemState, PinEvent};
+pub use outofcore::{OocProjections, OocVolume, StoreStats};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -218,46 +220,196 @@ impl ProjChunkView<'_> {
     }
 }
 
+/// A kernel-input volume for the executors: either a host-resident
+/// [`Volume`] (staged through zero-copy [`VolumeSlabView`]s) or an
+/// out-of-core [`OocVolume`] (slabs streamed from disk by the pipelined
+/// executor's loader lanes). `Copy`-cheap: both arms borrow.
+#[derive(Clone, Copy, Debug)]
+pub enum VolumeInput<'a> {
+    Ram(&'a Volume),
+    Ooc(&'a OocVolume),
+}
+
+impl VolumeInput<'_> {
+    pub fn dims(&self) -> (usize, usize, usize) {
+        match self {
+            VolumeInput::Ram(v) => (v.nx, v.ny, v.nz),
+            VolumeInput::Ooc(o) => o.dims(),
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        match self {
+            VolumeInput::Ram(v) => v.bytes(),
+            VolumeInput::Ooc(o) => o.bytes(),
+        }
+    }
+
+    pub fn is_ooc(&self) -> bool {
+        matches!(self, VolumeInput::Ooc(_))
+    }
+}
+
+/// A kernel-input projection set: host-resident (zero-copy
+/// [`ProjChunkView`] staging) or out-of-core (angle chunks streamed from
+/// disk). See [`VolumeInput`].
+#[derive(Clone, Copy, Debug)]
+pub enum ProjInput<'a> {
+    Ram(&'a ProjectionSet),
+    Ooc(&'a OocProjections),
+}
+
+impl ProjInput<'_> {
+    pub fn dims(&self) -> (usize, usize, usize) {
+        match self {
+            ProjInput::Ram(p) => (p.nu, p.nv, p.n_angles),
+            ProjInput::Ooc(o) => (o.nu, o.nv, o.n_angles),
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        match self {
+            ProjInput::Ram(p) => p.bytes(),
+            ProjInput::Ooc(o) => o.bytes(),
+        }
+    }
+
+    pub fn is_ooc(&self) -> bool {
+        matches!(self, ProjInput::Ooc(_))
+    }
+}
+
+// OOC stores are boxed: they are cold fat handles (paths, mutexed cache
+// bookkeeping) next to the hot Ram variant.
+#[derive(Debug)]
+enum VolumeBacking {
+    Ram(Volume),
+    Ooc(Box<OocVolume>),
+}
+
+#[derive(Debug)]
+enum ProjBacking {
+    Ram(ProjectionSet),
+    Ooc(Box<OocProjections>),
+}
+
 /// A [`Volume`] with an identity and a write-epoch, for the coordinator's
 /// cross-iteration device residency cache (`coordinator::residency`).
 ///
 /// Every mutable access goes through [`TrackedVolume::write`] (or
-/// [`TrackedVolume::replace`]), which bumps the epoch; a staged device
-/// copy is keyed by `(id, epoch)`, so after any host-side write the stale
-/// device copy can never be reused — it simply stops matching.
+/// [`TrackedVolume::replace`] / [`TrackedVolume::write_ooc`]), which
+/// bumps the epoch; a staged device copy is keyed by `(id, epoch)`, so
+/// after any host-side write the stale device copy can never be reused —
+/// it simply stops matching.
+///
+/// Since PR 5 the wrapper holds either an in-RAM [`Volume`] or an
+/// out-of-core [`OocVolume`] behind one enum, so `ReconSession` and the
+/// algorithms drive both through the same API. The RAM-only accessors
+/// ([`TrackedVolume::get`]/[`write`](TrackedVolume::write)/
+/// [`replace`](TrackedVolume::replace)/[`into_inner`](TrackedVolume::into_inner))
+/// panic on an OOC backing — use [`TrackedVolume::as_input`] /
+/// [`TrackedVolume::ooc`] there.
 #[derive(Debug)]
 pub struct TrackedVolume {
-    vol: Volume,
+    backing: VolumeBacking,
     id: u64,
     epoch: u64,
 }
 
 impl TrackedVolume {
     pub fn new(vol: Volume) -> Self {
-        Self { vol, id: next_tracked_id(), epoch: 0 }
+        Self { backing: VolumeBacking::Ram(vol), id: next_tracked_id(), epoch: 0 }
     }
 
-    /// Read access; does not change the epoch.
+    /// Track an out-of-core volume (streamed by the executors).
+    pub fn new_ooc(vol: OocVolume) -> Self {
+        Self { backing: VolumeBacking::Ooc(Box::new(vol)), id: next_tracked_id(), epoch: 0 }
+    }
+
+    pub fn is_ooc(&self) -> bool {
+        matches!(self.backing, VolumeBacking::Ooc(_))
+    }
+
+    /// The executor-input view of whichever backing this wrapper holds.
+    pub fn as_input(&self) -> VolumeInput<'_> {
+        match &self.backing {
+            VolumeBacking::Ram(v) => VolumeInput::Ram(v),
+            VolumeBacking::Ooc(o) => VolumeInput::Ooc(o),
+        }
+    }
+
+    /// Read access; does not change the epoch. Panics on an OOC backing.
     pub fn get(&self) -> &Volume {
-        &self.vol
+        match &self.backing {
+            VolumeBacking::Ram(v) => v,
+            VolumeBacking::Ooc(_) => {
+                panic!("TrackedVolume::get on an out-of-core volume; use as_input()/ooc()")
+            }
+        }
+    }
+
+    /// The OOC backing, if any. Read-only **by contract**: the store's
+    /// mutators take `&self` (interior mutex), so writing through this
+    /// handle compiles but bypasses the epoch — a `ReconSession` could
+    /// then reuse a device copy it wrongly believes fresh. Mutate
+    /// through [`TrackedVolume::write_ooc`] so the epoch records the
+    /// write.
+    pub fn ooc(&self) -> Option<&OocVolume> {
+        match &self.backing {
+            VolumeBacking::Ooc(o) => Some(o),
+            VolumeBacking::Ram(_) => None,
+        }
     }
 
     /// Mutable access; bumps the epoch (conservatively — even if the
-    /// caller ends up not writing).
+    /// caller ends up not writing). Panics on an OOC backing.
     pub fn write(&mut self) -> &mut Volume {
-        self.epoch += 1;
-        &mut self.vol
+        match &mut self.backing {
+            VolumeBacking::Ram(v) => {
+                self.epoch += 1;
+                v
+            }
+            VolumeBacking::Ooc(_) => {
+                panic!("TrackedVolume::write on an out-of-core volume; use write_ooc()")
+            }
+        }
+    }
+
+    /// Mutable access to an OOC backing, bumping the epoch; `None` on a
+    /// RAM backing (the epoch is then untouched).
+    pub fn write_ooc(&mut self) -> Option<&mut OocVolume> {
+        match &mut self.backing {
+            VolumeBacking::Ooc(o) => {
+                self.epoch += 1;
+                Some(o)
+            }
+            VolumeBacking::Ram(_) => None,
+        }
     }
 
     /// Swap the wrapped volume for `vol`, returning the old one. Bumps
     /// the epoch (the identity stays: same logical buffer, new content).
+    /// Panics on an OOC backing.
     pub fn replace(&mut self, vol: Volume) -> Volume {
-        self.epoch += 1;
-        std::mem::replace(&mut self.vol, vol)
+        match &mut self.backing {
+            VolumeBacking::Ram(v) => {
+                self.epoch += 1;
+                std::mem::replace(v, vol)
+            }
+            VolumeBacking::Ooc(_) => {
+                panic!("TrackedVolume::replace on an out-of-core volume")
+            }
+        }
     }
 
+    /// Unwrap the RAM backing. Panics on an OOC backing.
     pub fn into_inner(self) -> Volume {
-        self.vol
+        match self.backing {
+            VolumeBacking::Ram(v) => v,
+            VolumeBacking::Ooc(_) => {
+                panic!("TrackedVolume::into_inner on an out-of-core volume")
+            }
+        }
     }
 
     pub fn id(&self) -> u64 {
@@ -270,37 +422,105 @@ impl TrackedVolume {
 }
 
 /// A [`ProjectionSet`] with an identity and a write-epoch; see
-/// [`TrackedVolume`]. `ReconSession::forward` returns its output wrapped
-/// in one of these so the backprojection can recognize chunks that are
-/// still device-resident from the producing forward call.
+/// [`TrackedVolume`] (including the RAM-vs-OOC backing contract).
+/// `ReconSession::forward` returns its output wrapped in one of these so
+/// the backprojection can recognize chunks that are still
+/// device-resident from the producing forward call.
 #[derive(Debug)]
 pub struct TrackedProjections {
-    proj: ProjectionSet,
+    backing: ProjBacking,
     id: u64,
     epoch: u64,
 }
 
 impl TrackedProjections {
     pub fn new(proj: ProjectionSet) -> Self {
-        Self { proj, id: next_tracked_id(), epoch: 0 }
+        Self { backing: ProjBacking::Ram(proj), id: next_tracked_id(), epoch: 0 }
     }
 
+    /// Track an out-of-core projection set (streamed by the executors).
+    pub fn new_ooc(proj: OocProjections) -> Self {
+        Self { backing: ProjBacking::Ooc(Box::new(proj)), id: next_tracked_id(), epoch: 0 }
+    }
+
+    pub fn is_ooc(&self) -> bool {
+        matches!(self.backing, ProjBacking::Ooc(_))
+    }
+
+    /// The executor-input view of whichever backing this wrapper holds.
+    pub fn as_input(&self) -> ProjInput<'_> {
+        match &self.backing {
+            ProjBacking::Ram(p) => ProjInput::Ram(p),
+            ProjBacking::Ooc(o) => ProjInput::Ooc(o),
+        }
+    }
+
+    /// Read access; does not change the epoch. Panics on an OOC backing.
     pub fn get(&self) -> &ProjectionSet {
-        &self.proj
+        match &self.backing {
+            ProjBacking::Ram(p) => p,
+            ProjBacking::Ooc(_) => {
+                panic!("TrackedProjections::get on an out-of-core set; use as_input()/ooc()")
+            }
+        }
     }
 
+    /// The OOC backing, if any (read-only by contract; see
+    /// [`TrackedVolume::ooc`]).
+    pub fn ooc(&self) -> Option<&OocProjections> {
+        match &self.backing {
+            ProjBacking::Ooc(o) => Some(o),
+            ProjBacking::Ram(_) => None,
+        }
+    }
+
+    /// Mutable access; bumps the epoch. Panics on an OOC backing.
     pub fn write(&mut self) -> &mut ProjectionSet {
-        self.epoch += 1;
-        &mut self.proj
+        match &mut self.backing {
+            ProjBacking::Ram(p) => {
+                self.epoch += 1;
+                p
+            }
+            ProjBacking::Ooc(_) => {
+                panic!("TrackedProjections::write on an out-of-core set; use write_ooc()")
+            }
+        }
     }
 
+    /// Mutable access to an OOC backing, bumping the epoch; `None` on a
+    /// RAM backing.
+    pub fn write_ooc(&mut self) -> Option<&mut OocProjections> {
+        match &mut self.backing {
+            ProjBacking::Ooc(o) => {
+                self.epoch += 1;
+                Some(o)
+            }
+            ProjBacking::Ram(_) => None,
+        }
+    }
+
+    /// Swap the wrapped set, returning the old one; bumps the epoch.
+    /// Panics on an OOC backing.
     pub fn replace(&mut self, proj: ProjectionSet) -> ProjectionSet {
-        self.epoch += 1;
-        std::mem::replace(&mut self.proj, proj)
+        match &mut self.backing {
+            ProjBacking::Ram(p) => {
+                self.epoch += 1;
+                std::mem::replace(p, proj)
+            }
+            ProjBacking::Ooc(_) => {
+                panic!("TrackedProjections::replace on an out-of-core set")
+            }
+        }
     }
 
+    /// Unwrap the RAM backing. Panics on an OOC backing.
     pub fn into_inner(self) -> ProjectionSet {
-        self.proj
+        match self.backing {
+            ProjBacking::Ram(p) => p,
+            ProjBacking::Ooc(_) => {
+                panic!("TrackedProjections::into_inner on an out-of-core set")
+            }
+        }
     }
 
     pub fn id(&self) -> u64 {
@@ -519,6 +739,28 @@ mod tests {
         *tp.write().at_mut(0, 0, 0) = 2.0;
         assert_eq!(tp.epoch(), 1);
         assert_eq!(tp.get().at(0, 0, 0), 2.0);
+    }
+
+    #[test]
+    fn tracked_ooc_backing_bumps_epoch_through_write_ooc() {
+        let d = std::env::temp_dir()
+            .join("tigre_tracked_ooc")
+            .join(format!("{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let ooc =
+            OocVolume::from_volume(&d.join("x.raw"), &Volume::zeros(4, 4, 4), 2, 1 << 20).unwrap();
+        let mut tv = TrackedVolume::new_ooc(ooc);
+        assert!(tv.is_ooc());
+        assert!(matches!(tv.as_input(), VolumeInput::Ooc(_)));
+        assert_eq!(tv.epoch(), 0);
+        tv.write_ooc().unwrap().store_slab(0, &[1.0; 16]).unwrap();
+        assert_eq!(tv.epoch(), 1, "write_ooc must bump the epoch");
+        assert_eq!(tv.ooc().unwrap().to_volume().unwrap().at(0, 0, 0), 1.0);
+
+        let mut ram = TrackedVolume::new(Volume::zeros(2, 2, 2));
+        assert!(ram.write_ooc().is_none());
+        assert_eq!(ram.epoch(), 0, "write_ooc on RAM backing must not bump");
+        assert!(matches!(ram.as_input(), VolumeInput::Ram(_)));
     }
 
     #[test]

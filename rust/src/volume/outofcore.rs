@@ -1,0 +1,937 @@
+//! Out-of-core backing stores: stream volumes and projection sets from
+//! disk so reconstructions can exceed host RAM (PR 5).
+//!
+//! The paper makes device memory a non-limit by slab/chunk-splitting the
+//! problem between host RAM and the GPUs; this module applies the same
+//! move one level up the memory hierarchy (disk → host → device), the
+//! staging strategy of Petascale XCT (Hidayetoğlu et al., 2020) and
+//! Sparse-Matrix HPC Tomography (Marchesini et al., 2020):
+//!
+//! * [`SlabStore`] — a raw-f32 file addressed in contiguous *planes*
+//!   (axial z-slices of a volume, per-angle projections of a set — both
+//!   contiguous by the crate's layout invariants), cached in slab-granular
+//!   units under a bounded host-RAM budget with LRU eviction and
+//!   dirty-slab writeback. This mirrors `coordinator::residency`'s
+//!   device-side design one tier up: budget-bounded, recency-evicted,
+//!   with the cache never changing what a reader observes.
+//! * [`OocVolume`] / [`OocProjections`] — typed wrappers giving the store
+//!   the shapes and the sidecar format of [`crate::io::save_volume`]
+//!   (raw little-endian f32 + a `.json` shape sidecar), so any OOC file
+//!   is also loadable by `io::load_volume` and numpy.
+//!
+//! All cache state lives behind a `Mutex`, so every method takes `&self`:
+//! the pipelined executor's loader lanes prefetch slabs from worker
+//! threads while the host thread owns the store.
+//!
+//! Determinism: the store is a byte-transparent window onto the file —
+//! a `load` observes exactly the last `store`d bytes for every plane,
+//! whatever the cache did in between (eviction, writeback, bypass). The
+//! executors therefore produce bit-identical results streaming from a
+//! store or borrowing host-resident arrays; `coordinator::pipeline`'s
+//! parity tests pin that.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::volume::{ProjectionSet, Volume};
+
+/// Cumulative accounting of one store's traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Plane-range requests served entirely from cached slabs.
+    pub hits: u64,
+    /// Slab reads that went to disk (cache miss or bypass).
+    pub loads: u64,
+    /// Slabs evicted by the budget-driven LRU.
+    pub evictions: u64,
+    /// Dirty slabs written back (evictions + flushes + write-through).
+    pub writebacks: u64,
+    /// Bytes read from disk.
+    pub bytes_read: u64,
+    /// Bytes written to disk.
+    pub bytes_written: u64,
+}
+
+#[derive(Debug)]
+struct CachedSlab {
+    data: Vec<f32>,
+    dirty: bool,
+    last_use: u64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    file: fs::File,
+    /// Slab index → cached slab.
+    cache: HashMap<usize, CachedSlab>,
+    used_bytes: u64,
+    clock: u64,
+    stats: StoreStats,
+    /// Reused encode/decode byte buffer — file I/O runs under the store
+    /// mutex, so one buffer serves every request without per-slab
+    /// allocation on the streaming hot path.
+    io_buf: Vec<u8>,
+}
+
+/// A disk-backed array of `n_planes` contiguous planes of `plane_elems`
+/// f32 values each, cached in slabs of `slab_planes` planes under
+/// `budget_bytes` of host RAM. See the module docs.
+#[derive(Debug)]
+pub struct SlabStore {
+    path: PathBuf,
+    plane_elems: usize,
+    n_planes: usize,
+    slab_planes: usize,
+    budget_bytes: u64,
+    /// False when the backing file could only be opened read-only
+    /// (write-protected measurement data): loads stream normally,
+    /// stores are a typed error instead of a deferred writeback panic.
+    writable: bool,
+    inner: Mutex<Inner>,
+}
+
+impl SlabStore {
+    /// Create a zero-filled store file of `n_planes × plane_elems` f32s.
+    /// (`set_len` extends sparsely with zeros — creating a store bigger
+    /// than host RAM costs no RAM and no write traffic.)
+    fn create(
+        path: &Path,
+        plane_elems: usize,
+        n_planes: usize,
+        slab_planes: usize,
+        budget_bytes: u64,
+    ) -> anyhow::Result<SlabStore> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let file = fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        file.set_len((plane_elems * n_planes) as u64 * 4)?;
+        Self::from_file(path, file, true, plane_elems, n_planes, slab_planes, budget_bytes)
+    }
+
+    /// Open an existing store file, verifying its length matches the
+    /// shape. Falls back to a read-only open for write-protected input
+    /// files (measured projections on read-only media): loads work,
+    /// stores become a typed error.
+    fn open(
+        path: &Path,
+        plane_elems: usize,
+        n_planes: usize,
+        slab_planes: usize,
+        budget_bytes: u64,
+    ) -> anyhow::Result<SlabStore> {
+        let (file, writable) = match fs::OpenOptions::new().read(true).write(true).open(path) {
+            Ok(f) => (f, true),
+            Err(_) => (fs::OpenOptions::new().read(true).open(path)?, false),
+        };
+        let want = (plane_elems * n_planes) as u64 * 4;
+        let got = file.metadata()?.len();
+        anyhow::ensure!(
+            got == want,
+            "{}: raw size {got} B does not match sidecar shape ({want} B expected)",
+            path.display()
+        );
+        Self::from_file(path, file, writable, plane_elems, n_planes, slab_planes, budget_bytes)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn from_file(
+        path: &Path,
+        file: fs::File,
+        writable: bool,
+        plane_elems: usize,
+        n_planes: usize,
+        slab_planes: usize,
+        budget_bytes: u64,
+    ) -> anyhow::Result<SlabStore> {
+        anyhow::ensure!(plane_elems > 0 && n_planes > 0, "empty store shape");
+        anyhow::ensure!(slab_planes > 0, "slab granularity must be > 0");
+        Ok(SlabStore {
+            path: path.to_path_buf(),
+            plane_elems,
+            n_planes,
+            slab_planes: slab_planes.min(n_planes),
+            budget_bytes,
+            writable,
+            inner: Mutex::new(Inner {
+                file,
+                cache: HashMap::new(),
+                used_bytes: 0,
+                clock: 0,
+                stats: StoreStats::default(),
+                io_buf: Vec::new(),
+            }),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Host-RAM budget the cached slabs must fit in.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Cache granularity, planes per slab.
+    pub fn slab_planes(&self) -> usize {
+        self.slab_planes
+    }
+
+    /// Total stored bytes (the file size).
+    pub fn total_bytes(&self) -> u64 {
+        (self.plane_elems * self.n_planes) as u64 * 4
+    }
+
+    /// Bytes currently cached in host RAM (always ≤ the budget).
+    pub fn resident_bytes(&self) -> u64 {
+        self.lock().used_bytes
+    }
+
+    /// Cumulative traffic statistics.
+    pub fn stats(&self) -> StoreStats {
+        self.lock().stats
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // a poisoned store mutex means a loader/worker thread died mid-
+        // operation; the cache map itself is never left inconsistent
+        // (every section restores invariants before any I/O `?`), so
+        // recover the guard and keep serving
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Planes covered by slab `idx`: `[p0, p1)`.
+    fn slab_range(&self, idx: usize) -> (usize, usize) {
+        let p0 = idx * self.slab_planes;
+        (p0, (p0 + self.slab_planes).min(self.n_planes))
+    }
+
+    fn slab_bytes(&self, idx: usize) -> u64 {
+        let (p0, p1) = self.slab_range(idx);
+        ((p1 - p0) * self.plane_elems) as u64 * 4
+    }
+
+    // ---- raw file I/O (always under the inner lock) ---------------------
+
+    fn read_file(&self, inner: &mut Inner, p0: usize, dst: &mut [f32]) -> anyhow::Result<()> {
+        let off = (p0 * self.plane_elems) as u64 * 4;
+        let n = dst.len() * 4;
+        // reuse the store's I/O buffer; zero-fill only on growth (the
+        // read overwrites every byte it hands to the decoder)
+        let mut bytes = std::mem::take(&mut inner.io_buf);
+        if bytes.len() < n {
+            bytes.resize(n, 0);
+        }
+        inner.file.seek(SeekFrom::Start(off))?;
+        inner.file.read_exact(&mut bytes[..n])?;
+        for (d, b) in dst.iter_mut().zip(bytes[..n].chunks_exact(4)) {
+            *d = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+        inner.io_buf = bytes;
+        inner.stats.loads += 1;
+        inner.stats.bytes_read += n as u64;
+        Ok(())
+    }
+
+    fn write_file(&self, inner: &mut Inner, p0: usize, src: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.writable,
+            "{}: store was opened read-only (write-protected file); writes are not possible",
+            self.path.display()
+        );
+        let off = (p0 * self.plane_elems) as u64 * 4;
+        let mut bytes = std::mem::take(&mut inner.io_buf);
+        bytes.clear();
+        for v in src {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        inner.file.seek(SeekFrom::Start(off))?;
+        inner.file.write_all(&bytes)?;
+        let n = bytes.len() as u64;
+        inner.io_buf = bytes;
+        inner.stats.writebacks += 1;
+        inner.stats.bytes_written += n;
+        Ok(())
+    }
+
+    // ---- cache machinery ------------------------------------------------
+
+    /// Evict LRU slabs (writing dirty ones back) until `need` more bytes
+    /// fit the budget.
+    fn evict_to_fit(&self, inner: &mut Inner, need: u64) -> anyhow::Result<()> {
+        while inner.used_bytes + need > self.budget_bytes {
+            let Some((&lru, _)) = inner.cache.iter().min_by_key(|(_, s)| s.last_use) else {
+                break;
+            };
+            let slab = inner.cache.remove(&lru).expect("LRU key just found");
+            inner.used_bytes -= (slab.data.len() * 4) as u64;
+            inner.stats.evictions += 1;
+            if slab.dirty {
+                let (p0, _) = self.slab_range(lru);
+                self.write_file(inner, p0, &slab.data)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Ensure slab `idx` is cached (reading it from disk on a miss),
+    /// bumping its LRU clock. Precondition: `slab_bytes(idx) ≤ budget`.
+    fn ensure_cached(&self, inner: &mut Inner, idx: usize) -> anyhow::Result<()> {
+        inner.clock += 1;
+        let clock = inner.clock;
+        if let Some(slab) = inner.cache.get_mut(&idx) {
+            slab.last_use = clock;
+            return Ok(());
+        }
+        let bytes = self.slab_bytes(idx);
+        self.evict_to_fit(inner, bytes)?;
+        let (p0, p1) = self.slab_range(idx);
+        let mut data = vec![0.0f32; (p1 - p0) * self.plane_elems];
+        self.read_file(inner, p0, &mut data)?;
+        inner.cache.insert(idx, CachedSlab { data, dirty: false, last_use: clock });
+        inner.used_bytes += bytes;
+        Ok(())
+    }
+
+    // ---- public plane-range API ----------------------------------------
+
+    /// Copy planes `[p0, p1)` into `dst` (`dst.len()` must equal the
+    /// range's element count). Served from cached slabs where possible;
+    /// slabs larger than the whole budget bypass the cache (direct read).
+    pub fn load_planes_into(&self, p0: usize, p1: usize, dst: &mut [f32]) -> anyhow::Result<()> {
+        assert!(p0 < p1 && p1 <= self.n_planes, "bad plane range [{p0},{p1})");
+        assert_eq!(dst.len(), (p1 - p0) * self.plane_elems, "load dst length mismatch");
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        let mut all_cached = true;
+        let mut idx = p0 / self.slab_planes;
+        loop {
+            let (s0, s1) = self.slab_range(idx);
+            if s0 >= p1 {
+                break;
+            }
+            let lo = p0.max(s0);
+            let hi = p1.min(s1);
+            let dst_off = (lo - p0) * self.plane_elems;
+            let len = (hi - lo) * self.plane_elems;
+            if self.slab_bytes(idx) > self.budget_bytes {
+                // stream-only slab: the cache can never hold it
+                all_cached = false;
+                self.read_file(inner, lo, &mut dst[dst_off..dst_off + len])?;
+            } else {
+                if !inner.cache.contains_key(&idx) {
+                    all_cached = false;
+                }
+                self.ensure_cached(inner, idx)?;
+                let slab = &inner.cache[&idx];
+                let src_off = (lo - s0) * self.plane_elems;
+                dst[dst_off..dst_off + len]
+                    .copy_from_slice(&slab.data[src_off..src_off + len]);
+            }
+            idx += 1;
+        }
+        if all_cached {
+            inner.stats.hits += 1;
+        }
+        Ok(())
+    }
+
+    /// Write planes `[p0, p1)` from `src`. Writes land in the cache as
+    /// dirty slabs (written back on eviction or [`SlabStore::flush`]);
+    /// whole-slab writes skip the read-miss, and slabs larger than the
+    /// budget write through directly.
+    pub fn store_planes(&self, p0: usize, p1: usize, src: &[f32]) -> anyhow::Result<()> {
+        assert!(p0 < p1 && p1 <= self.n_planes, "bad plane range [{p0},{p1})");
+        assert_eq!(src.len(), (p1 - p0) * self.plane_elems, "store src length mismatch");
+        // fail fast instead of accepting dirty slabs a read-only file
+        // could never write back at eviction/flush time
+        anyhow::ensure!(
+            self.writable,
+            "{}: store was opened read-only (write-protected file); writes are not possible",
+            self.path.display()
+        );
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        let mut idx = p0 / self.slab_planes;
+        loop {
+            let (s0, s1) = self.slab_range(idx);
+            if s0 >= p1 {
+                break;
+            }
+            let lo = p0.max(s0);
+            let hi = p1.min(s1);
+            let src_off = (lo - p0) * self.plane_elems;
+            let len = (hi - lo) * self.plane_elems;
+            if self.slab_bytes(idx) > self.budget_bytes {
+                // write-through for stream-only slabs; drop any cached
+                // copy first so it cannot shadow the new bytes
+                if let Some(old) = inner.cache.remove(&idx) {
+                    inner.used_bytes -= (old.data.len() * 4) as u64;
+                }
+                self.write_file(inner, lo, &src[src_off..src_off + len])?;
+            } else {
+                let fresh_full_slab =
+                    lo == s0 && hi == s1 && !inner.cache.contains_key(&idx);
+                if fresh_full_slab {
+                    // full-slab overwrite: no need to read the old bytes
+                    inner.clock += 1;
+                    let clock = inner.clock;
+                    let bytes = self.slab_bytes(idx);
+                    self.evict_to_fit(inner, bytes)?;
+                    inner.cache.insert(
+                        idx,
+                        CachedSlab {
+                            data: src[src_off..src_off + len].to_vec(),
+                            dirty: true,
+                            last_use: clock,
+                        },
+                    );
+                    inner.used_bytes += bytes;
+                } else {
+                    self.ensure_cached(inner, idx)?;
+                    let slab = inner.cache.get_mut(&idx).expect("slab just ensured");
+                    let off = (lo - s0) * self.plane_elems;
+                    slab.data[off..off + len].copy_from_slice(&src[src_off..src_off + len]);
+                    slab.dirty = true;
+                }
+            }
+            idx += 1;
+        }
+        Ok(())
+    }
+
+    /// Write every dirty cached slab back to disk (entries stay cached,
+    /// clean). Call before handing the file to an outside reader.
+    pub fn flush(&self) -> anyhow::Result<()> {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        let dirty: Vec<usize> = inner
+            .cache
+            .iter()
+            .filter(|(_, s)| s.dirty)
+            .map(|(&i, _)| i)
+            .collect();
+        for idx in dirty {
+            let (p0, _) = self.slab_range(idx);
+            let data = std::mem::take(
+                &mut inner.cache.get_mut(&idx).expect("dirty key just listed").data,
+            );
+            self.write_file(inner, p0, &data)?;
+            let slab = inner.cache.get_mut(&idx).expect("dirty key just listed");
+            slab.data = data;
+            slab.dirty = false;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for SlabStore {
+    fn drop(&mut self) {
+        // best-effort writeback so a dropped store never silently loses
+        // dirty slabs; explicit flush() is still the checked path
+        let _ = self.flush();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// typed wrappers
+// ---------------------------------------------------------------------------
+
+/// Write the `io::save_volume`-format sidecar for a raw file of shape
+/// `(nx, ny, nz)` without materializing any data.
+fn write_sidecar(path: &Path, nx: usize, ny: usize, nz: usize) -> anyhow::Result<()> {
+    let meta = Json::obj(vec![
+        ("dtype", Json::str("f32le")),
+        ("nx", Json::num(nx as f64)),
+        ("ny", Json::num(ny as f64)),
+        ("nz", Json::num(nz as f64)),
+        ("order", Json::str("z-slowest (z,y,x)")),
+    ]);
+    fs::write(path.with_extension("json"), meta.pretty())?;
+    Ok(())
+}
+
+/// Read a sidecar's `(nx, ny, nz)`.
+fn read_sidecar(path: &Path) -> anyhow::Result<(usize, usize, usize)> {
+    let text = fs::read_to_string(path.with_extension("json"))?;
+    let meta = Json::parse(&text)?;
+    let dim = |k: &str| {
+        meta.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("{}: sidecar missing '{k}'", path.display()))
+    };
+    Ok((dim("nx")?, dim("ny")?, dim("nz")?))
+}
+
+/// An out-of-core [`Volume`]: raw-f32 file + JSON sidecar (exactly
+/// [`crate::io::save_volume`]'s format), accessed in z-slabs through a
+/// budgeted [`SlabStore`]. Layout is z-slowest, so a z-slab is one
+/// contiguous file range — the same invariant that makes device staging
+/// single-copy makes disk staging single-`read`.
+#[derive(Debug)]
+pub struct OocVolume {
+    store: SlabStore,
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+}
+
+impl OocVolume {
+    /// Create a zero-filled OOC volume (sparse file — no RAM, no writes).
+    pub fn create(
+        path: &Path,
+        nx: usize,
+        ny: usize,
+        nz: usize,
+        slab_nz: usize,
+        budget_bytes: u64,
+    ) -> anyhow::Result<OocVolume> {
+        let store = SlabStore::create(path, nx * ny, nz, slab_nz, budget_bytes)?;
+        write_sidecar(path, nx, ny, nz)?;
+        Ok(OocVolume { store, nx, ny, nz })
+    }
+
+    /// Open an existing raw+sidecar volume (e.g. one written by
+    /// [`crate::io::save_volume`]).
+    pub fn open(path: &Path, slab_nz: usize, budget_bytes: u64) -> anyhow::Result<OocVolume> {
+        let (nx, ny, nz) = read_sidecar(path)?;
+        let store = SlabStore::open(path, nx * ny, nz, slab_nz, budget_bytes)?;
+        Ok(OocVolume { store, nx, ny, nz })
+    }
+
+    /// Spill an in-RAM volume to disk and open it as a store.
+    pub fn from_volume(
+        path: &Path,
+        v: &Volume,
+        slab_nz: usize,
+        budget_bytes: u64,
+    ) -> anyhow::Result<OocVolume> {
+        crate::io::save_volume(path, v)?;
+        Self::open(path, slab_nz, budget_bytes)
+    }
+
+    /// Materialize the whole volume in RAM **through the store cache**
+    /// (dirty slabs are observed without a flush; cached slabs cost no
+    /// disk I/O). This is the executors' materialization path for
+    /// angle-split plans, whose precondition — the volume fits the host
+    /// budget — means repeat calls in an iteration loop are served from
+    /// the cache instead of re-reading the file.
+    pub fn read_volume(&self) -> anyhow::Result<Volume> {
+        let mut v = Volume::zeros(self.nx, self.ny, self.nz);
+        let step = self.store.slab_planes();
+        let mut z0 = 0;
+        while z0 < self.nz {
+            let z1 = (z0 + step).min(self.nz);
+            let plane = self.nx * self.ny;
+            self.load_slab_into(z0, z1, &mut v.data[z0 * plane..z1 * plane])?;
+            z0 = z1;
+        }
+        Ok(v)
+    }
+
+    /// Materialize the whole volume in RAM by flushing and re-reading
+    /// the raw file (the outside-reader view; parity tests). Prefer
+    /// [`OocVolume::read_volume`] on hot paths — it serves from the
+    /// cache and needs no flush.
+    pub fn to_volume(&self) -> anyhow::Result<Volume> {
+        self.store.flush()?;
+        crate::io::load_volume(self.store.path())
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.nx, self.ny, self.nz)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.store.total_bytes()
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.store.budget_bytes()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    pub fn path(&self) -> &Path {
+        self.store.path()
+    }
+
+    pub fn flush(&self) -> anyhow::Result<()> {
+        self.store.flush()
+    }
+
+    /// Copy the z-slab `[z0, z1)` into `dst` (length `(z1−z0)·nx·ny`).
+    pub fn load_slab_into(&self, z0: usize, z1: usize, dst: &mut [f32]) -> anyhow::Result<()> {
+        self.store.load_planes_into(z0, z1, dst)
+    }
+
+    /// Write `src` (a whole number of planes) back at slice offset `z0`.
+    pub fn store_slab(&self, z0: usize, src: &[f32]) -> anyhow::Result<()> {
+        let plane = self.nx * self.ny;
+        assert_eq!(src.len() % plane, 0, "store_slab: partial plane");
+        self.store.store_planes(z0, z0 + src.len() / plane, src)
+    }
+
+    /// Streamed `x ← x + s·other`: read-modify-write one store slab at a
+    /// time, so the update of a bigger-than-budget volume never holds
+    /// more than one slab (plus `other`'s borrow) in RAM. Elementwise
+    /// order matches [`Volume::add_scaled`], so an OOC-held iterate stays
+    /// bit-identical to a RAM-held one.
+    pub fn add_scaled_volume(&self, other: &Volume, s: f32) -> anyhow::Result<()> {
+        assert_eq!((other.nx, other.ny, other.nz), (self.nx, self.ny, self.nz));
+        let plane = self.nx * self.ny;
+        let mut buf = vec![0.0f32; self.store.slab_planes() * plane];
+        let mut z0 = 0;
+        while z0 < self.nz {
+            let z1 = (z0 + self.store.slab_planes()).min(self.nz);
+            let len = (z1 - z0) * plane;
+            self.load_slab_into(z0, z1, &mut buf[..len])?;
+            for (b, o) in buf[..len].iter_mut().zip(other.slab(z0, z1)) {
+                *b += s * o;
+            }
+            self.store.store_planes(z0, z1, &buf[..len])?;
+            z0 = z1;
+        }
+        Ok(())
+    }
+}
+
+/// An out-of-core [`ProjectionSet`]: per-angle planes in the same
+/// raw+sidecar format, with the shape mapped `(nu, nv, n_angles)` →
+/// `(nx, ny, nz)` (angle-slowest storage *is* z-slowest storage, so the
+/// formats coincide byte for byte). Angle chunks are contiguous file
+/// ranges, streamed through the same budgeted [`SlabStore`].
+#[derive(Debug)]
+pub struct OocProjections {
+    store: SlabStore,
+    pub nu: usize,
+    pub nv: usize,
+    pub n_angles: usize,
+}
+
+impl OocProjections {
+    /// Create a zero-filled OOC projection set.
+    pub fn create(
+        path: &Path,
+        nu: usize,
+        nv: usize,
+        n_angles: usize,
+        slab_angles: usize,
+        budget_bytes: u64,
+    ) -> anyhow::Result<OocProjections> {
+        let store = SlabStore::create(path, nu * nv, n_angles, slab_angles, budget_bytes)?;
+        write_sidecar(path, nu, nv, n_angles)?;
+        Ok(OocProjections { store, nu, nv, n_angles })
+    }
+
+    /// Open an existing raw+sidecar projection set.
+    pub fn open(
+        path: &Path,
+        slab_angles: usize,
+        budget_bytes: u64,
+    ) -> anyhow::Result<OocProjections> {
+        let (nu, nv, n_angles) = read_sidecar(path)?;
+        let store = SlabStore::open(path, nu * nv, n_angles, slab_angles, budget_bytes)?;
+        Ok(OocProjections { store, nu, nv, n_angles })
+    }
+
+    /// Spill an in-RAM projection set to disk and open it as a store.
+    pub fn from_projections(
+        path: &Path,
+        p: &ProjectionSet,
+        slab_angles: usize,
+        budget_bytes: u64,
+    ) -> anyhow::Result<OocProjections> {
+        let ooc = Self::create(path, p.nu, p.nv, p.n_angles, slab_angles, budget_bytes)?;
+        ooc.store.store_planes(0, p.n_angles, &p.data)?;
+        ooc.store.flush()?;
+        Ok(ooc)
+    }
+
+    /// Materialize the whole set in RAM (parity tests, small sizes).
+    pub fn to_projections(&self) -> anyhow::Result<ProjectionSet> {
+        self.store.flush()?;
+        let v = crate::io::load_volume(self.store.path())?;
+        Ok(ProjectionSet { nu: v.nx, nv: v.ny, n_angles: v.nz, data: v.data })
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.store.total_bytes()
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.store.budget_bytes()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    pub fn path(&self) -> &Path {
+        self.store.path()
+    }
+
+    pub fn flush(&self) -> anyhow::Result<()> {
+        self.store.flush()
+    }
+
+    /// Copy the angle chunk `[a0, a1)` into `dst` (length `(a1−a0)·nu·nv`).
+    pub fn load_chunk_into(&self, a0: usize, a1: usize, dst: &mut [f32]) -> anyhow::Result<()> {
+        self.store.load_planes_into(a0, a1, dst)
+    }
+
+    /// Write `src` (a whole number of angle planes) back at angle `a0`.
+    pub fn store_chunk(&self, a0: usize, src: &[f32]) -> anyhow::Result<()> {
+        let per = self.nu * self.nv;
+        assert_eq!(src.len() % per, 0, "store_chunk: partial projection");
+        self.store.store_planes(a0, a0 + src.len() / per, src)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phantom;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join("tigre_ooc_tests")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn volume_spill_and_materialize_roundtrip() {
+        let d = tmpdir("roundtrip");
+        let v = phantom::shepp_logan(12);
+        let ooc = OocVolume::from_volume(&d.join("v.raw"), &v, 3, 1 << 20).unwrap();
+        assert_eq!(ooc.dims(), (12, 12, 12));
+        assert_eq!(ooc.to_volume().unwrap(), v);
+        // and the file doubles as a plain io::load_volume volume
+        assert_eq!(crate::io::load_volume(&d.join("v.raw")).unwrap(), v);
+        // cache-served materialization: the second read costs no disk I/O
+        assert_eq!(ooc.read_volume().unwrap(), v);
+        let loads = ooc.stats().loads;
+        assert_eq!(ooc.read_volume().unwrap(), v);
+        assert_eq!(ooc.stats().loads, loads, "repeat read_volume must hit the cache");
+    }
+
+    #[test]
+    fn slab_loads_match_ram_slabs_at_every_alignment() {
+        let d = tmpdir("align");
+        let v = Volume::from_fn(5, 4, 11, |x, y, z| (x + 10 * y + 100 * z) as f32);
+        // slab granularity 3 does not divide 11: ranges cross boundaries
+        let ooc = OocVolume::from_volume(&d.join("v.raw"), &v, 3, 1 << 20).unwrap();
+        let plane = 5 * 4;
+        for z0 in 0..11 {
+            for z1 in z0 + 1..=11 {
+                let mut buf = vec![0.0; (z1 - z0) * plane];
+                ooc.load_slab_into(z0, z1, &mut buf).unwrap();
+                assert_eq!(&buf[..], v.slab(z0, z1), "range [{z0},{z1})");
+            }
+        }
+    }
+
+    #[test]
+    fn budget_bounds_resident_bytes_with_lru_eviction() {
+        let d = tmpdir("lru");
+        let v = Volume::from_fn(4, 4, 12, |x, _, z| (x + z * 4) as f32);
+        let plane_bytes = (4 * 4 * 4) as u64;
+        // budget holds exactly two 2-slice slabs
+        let budget = 4 * plane_bytes;
+        let ooc = OocVolume::from_volume(&d.join("v.raw"), &v, 2, budget).unwrap();
+        let mut buf = vec![0.0; 2 * 16];
+        for z0 in [0usize, 2, 4, 6, 8, 10] {
+            ooc.load_slab_into(z0, z0 + 2, &mut buf).unwrap();
+            assert_eq!(&buf[..], v.slab(z0, z0 + 2));
+            assert!(
+                ooc.store.resident_bytes() <= budget,
+                "resident {} > budget {budget}",
+                ooc.store.resident_bytes()
+            );
+        }
+        let s = ooc.stats();
+        assert!(s.evictions >= 4, "6 slabs through a 2-slab budget: {s:?}");
+        // re-reading the most recent slab is a pure cache hit
+        let loads_before = ooc.stats().loads;
+        ooc.load_slab_into(10, 12, &mut buf).unwrap();
+        assert_eq!(ooc.stats().loads, loads_before, "hot slab must not re-read disk");
+        assert_eq!(ooc.stats().hits, s.hits + 1);
+    }
+
+    #[test]
+    fn dirty_slabs_write_back_on_eviction_and_flush() {
+        let d = tmpdir("dirty");
+        let plane_bytes = (3 * 3 * 4) as u64;
+        let ooc = OocVolume::create(&d.join("v.raw"), 3, 3, 9, 1, 2 * plane_bytes).unwrap();
+        let plane = 9;
+        // write slabs 0..9 (1 slice each): budget of 2 forces evictions,
+        // each of which must persist the dirty slab
+        for z in 0..9usize {
+            let data: Vec<f32> = (0..plane).map(|i| (z * 100 + i) as f32).collect();
+            ooc.store_slab(z, &data).unwrap();
+        }
+        assert!(ooc.stats().evictions > 0);
+        // unflushed tail slabs are still observable through the store...
+        let mut buf = vec![0.0; plane];
+        ooc.load_slab_into(4, 5, &mut buf).unwrap();
+        assert_eq!(buf[0], 400.0);
+        // ...including via the cache-served whole-volume read, which
+        // observes dirty slabs without an explicit flush (evictions may
+        // still write back along the way — that is the LRU's business)
+        let rv = ooc.read_volume().unwrap();
+        for z in 0..9 {
+            assert_eq!(rv.at(0, 0, z), (z * 100) as f32, "read_volume slice {z}");
+        }
+        // ...and a flush makes the raw file complete for outside readers
+        let w = ooc.to_volume().unwrap(); // flushes internally
+        for z in 0..9 {
+            assert_eq!(w.at(0, 0, z), (z * 100) as f32, "slice {z} lost");
+        }
+    }
+
+    #[test]
+    fn oversized_slabs_bypass_the_cache_but_stay_correct() {
+        let d = tmpdir("bypass");
+        let v = Volume::from_fn(4, 4, 8, |x, y, z| (x * y * z) as f32);
+        // slab = 4 slices = 256 B, budget 100 B: every slab is stream-only
+        let ooc = OocVolume::from_volume(&d.join("v.raw"), &v, 4, 100).unwrap();
+        let mut buf = vec![0.0; 4 * 16];
+        ooc.load_slab_into(2, 6, &mut buf).unwrap();
+        assert_eq!(&buf[..], v.slab(2, 6));
+        assert_eq!(ooc.store.resident_bytes(), 0, "bypass must not cache");
+        // write-through path
+        let patch = vec![7.0f32; 16];
+        ooc.store_slab(3, &patch).unwrap();
+        let w = ooc.to_volume().unwrap();
+        assert!(w.slab(3, 4).iter().all(|&x| x == 7.0));
+        assert_eq!(w.slab(2, 3), v.slab(2, 3), "neighbours untouched");
+    }
+
+    #[test]
+    fn add_scaled_volume_matches_ram_add_scaled_bitwise() {
+        let d = tmpdir("axpy");
+        let mut x_ram = phantom::shepp_logan(10);
+        let upd = Volume::from_fn(10, 10, 10, |x, y, z| (x + y + z) as f32 * 0.125);
+        let ooc =
+            OocVolume::from_volume(&d.join("x.raw"), &x_ram, 3, 2 * (10 * 10 * 3 * 4)).unwrap();
+        ooc.add_scaled_volume(&upd, 0.3).unwrap();
+        x_ram.add_scaled(&upd, 0.3);
+        assert_eq!(ooc.to_volume().unwrap().data, x_ram.data, "streamed axpy must be bitwise");
+    }
+
+    #[test]
+    fn open_rejects_size_and_sidecar_mismatches() {
+        let d = tmpdir("badopen");
+        let v = phantom::cube(4, 0.5, 1.0);
+        let p = d.join("v.raw");
+        crate::io::save_volume(&p, &v).unwrap();
+        // truncated raw file
+        let raw = fs::read(&p).unwrap();
+        fs::write(&p, &raw[..raw.len() - 4]).unwrap();
+        assert!(OocVolume::open(&p, 2, 1 << 20).is_err());
+        fs::write(&p, &raw).unwrap();
+        assert!(OocVolume::open(&p, 2, 1 << 20).is_ok());
+        // sidecar with a missing dimension
+        fs::write(p.with_extension("json"), "{\"nx\": 4, \"ny\": 4}").unwrap();
+        let err = OocVolume::open(&p, 2, 1 << 20).unwrap_err();
+        assert!(format!("{err:#}").contains("nz"), "{err:#}");
+        // sidecar shape disagreeing with the raw length
+        fs::write(p.with_extension("json"), "{\"nx\": 4, \"ny\": 4, \"nz\": 8}").unwrap();
+        assert!(OocVolume::open(&p, 2, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn read_only_input_files_stream_but_reject_writes() {
+        // measured projections often live on write-protected media: the
+        // input-streaming use case must work with a read-only file
+        let d = tmpdir("readonly");
+        let v = phantom::shepp_logan(8);
+        let p = d.join("v.raw");
+        crate::io::save_volume(&p, &v).unwrap();
+        let mut perms = fs::metadata(&p).unwrap().permissions();
+        perms.set_readonly(true);
+        fs::set_permissions(&p, perms.clone()).unwrap();
+
+        let ooc = OocVolume::open(&p, 2, 1 << 20).unwrap();
+        let mut buf = vec![0.0; 2 * 64];
+        ooc.load_slab_into(3, 5, &mut buf).unwrap();
+        assert_eq!(&buf[..], v.slab(3, 5));
+        assert_eq!(ooc.read_volume().unwrap(), v);
+        // writes are a typed error, up front (no deferred writeback trap)
+        let err = ooc.store_slab(0, &[1.0; 64]).unwrap_err();
+        assert!(format!("{err:#}").contains("read-only"), "{err:#}");
+
+        perms.set_readonly(false);
+        fs::set_permissions(&p, perms).unwrap();
+    }
+
+    #[test]
+    fn projections_chunk_roundtrip_and_shape_mapping() {
+        let d = tmpdir("proj");
+        let mut p = ProjectionSet::zeros(5, 3, 7);
+        for (i, v) in p.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let ooc = OocProjections::from_projections(&d.join("p.raw"), &p, 2, 1 << 20).unwrap();
+        assert_eq!((ooc.nu, ooc.nv, ooc.n_angles), (5, 3, 7));
+        let mut buf = vec![0.0; 2 * 15];
+        ooc.load_chunk_into(3, 5, &mut buf).unwrap();
+        assert_eq!(&buf[..], p.chunk(3, 5));
+        assert_eq!(ooc.to_projections().unwrap(), p);
+        // reopen through the sidecar (round-trips the shape mapping)
+        drop(ooc);
+        let re = OocProjections::open(&d.join("p.raw"), 3, 1 << 20).unwrap();
+        assert_eq!((re.nu, re.nv, re.n_angles), (5, 3, 7));
+        assert_eq!(re.to_projections().unwrap(), p);
+    }
+
+    #[test]
+    fn concurrent_loads_from_worker_threads_are_consistent() {
+        // the pipelined executor's loader lanes share the store across
+        // threads; every thread must observe exactly the file's bytes
+        let d = tmpdir("threads");
+        let v = Volume::from_fn(6, 6, 12, |x, y, z| (x + 7 * y + 49 * z) as f32);
+        let ooc = OocVolume::from_volume(&d.join("v.raw"), &v, 2, 3 * (6 * 6 * 2 * 4)).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let ooc = &ooc;
+                let v = &v;
+                s.spawn(move || {
+                    let plane = 36;
+                    let mut buf = vec![0.0; 3 * plane];
+                    for i in 0..30 {
+                        let z0 = (t + i) % 9;
+                        let z1 = z0 + 3;
+                        ooc.load_slab_into(z0, z1, &mut buf).unwrap();
+                        assert_eq!(&buf[..], v.slab(z0, z1));
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn create_is_zero_filled_without_writes() {
+        let d = tmpdir("zeros");
+        let ooc = OocVolume::create(&d.join("z.raw"), 4, 4, 6, 2, 1 << 20).unwrap();
+        assert_eq!(ooc.stats().bytes_written, 0, "sparse create writes nothing");
+        let v = ooc.to_volume().unwrap();
+        assert!(v.data.iter().all(|&x| x == 0.0));
+        assert_eq!(v.data.len(), 96);
+    }
+}

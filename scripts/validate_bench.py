@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Validate a tigre bench-trajectory JSON file (schema + non-empty runs).
+
+Shared by every CI validation step (replaces the per-step heredocs):
+
+    validate_bench.py PATH SCHEMA [--require-prefixes a,b,c] [--allow-empty-runs]
+
+Checks
+  * the document parses and its `schema` field equals SCHEMA;
+  * `runs` is a list; unless --allow-empty-runs, it is non-empty and the
+    last run has a non-empty `entries` list (the seed gate for tracked
+    trajectories);
+  * every entry of the last run passes the per-schema numeric checks
+    (kernels: median_s/samples/throughput; coordinator:
+    sequential_median_s/pipelined_median_s/samples/speedup);
+  * when --require-prefixes is given, each comma-separated prefix matches
+    at least one entry name of the last run.
+
+Exit code 0 = valid; 1 = validation failure; 2 = usage error.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    sys.exit(f"validate_bench: {msg}")
+
+
+def check_entry(schema: str, entry: dict) -> None:
+    name = entry.get("name", "<unnamed>")
+    if schema.startswith("tigre-bench-kernels/"):
+        numeric = ("median_s", "throughput")
+        counts = ("samples",)
+    elif schema.startswith("tigre-bench-coordinator/"):
+        numeric = ("sequential_median_s", "pipelined_median_s", "speedup")
+        counts = ("samples",)
+    else:
+        fail(f"unknown schema family '{schema}'")
+    for key in numeric:
+        value = entry.get(key)
+        if not isinstance(value, (int, float)) or value <= 0:
+            fail(f"entry '{name}': {key} must be a positive number, got {value!r}")
+    for key in counts:
+        value = entry.get(key)
+        if not isinstance(value, int) or value < 1:
+            fail(f"entry '{name}': {key} must be an integer >= 1, got {value!r}")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("path", help="trajectory JSON file")
+    parser.add_argument("schema", help="expected schema tag")
+    parser.add_argument(
+        "--require-prefixes",
+        default="",
+        help="comma-separated entry-name prefixes the last run must contain",
+    )
+    parser.add_argument(
+        "--allow-empty-runs",
+        action="store_true",
+        help="accept runs: [] (schema-only check for not-yet-seeded files)",
+    )
+    args = parser.parse_args()
+
+    try:
+        with open(args.path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{args.path}: {e}")
+
+    if doc.get("schema") != args.schema:
+        fail(f"{args.path}: schema {doc.get('schema')!r} != expected {args.schema!r}")
+    runs = doc.get("runs")
+    if not isinstance(runs, list):
+        fail(f"{args.path}: 'runs' must be a list")
+    if not runs:
+        if args.allow_empty_runs:
+            print(f"ok: {args.path} is schema-valid (no measured runs yet)")
+            return
+        fail(
+            f"{args.path}: unseeded trajectory (runs: []) — run the bench commands in "
+            "EXPERIMENTS.md and commit the JSON"
+        )
+
+    last = runs[-1]
+    entries = last.get("entries")
+    if not isinstance(entries, list) or not entries:
+        fail(f"{args.path}: last run '{last.get('label')}' has no entries")
+    for entry in entries:
+        check_entry(args.schema, entry)
+
+    names = [e.get("name", "") for e in entries]
+    for prefix in filter(None, args.require_prefixes.split(",")):
+        if not any(n.startswith(prefix) for n in names):
+            fail(f"{args.path}: last run has no entry with prefix '{prefix}'")
+
+    print(
+        f"ok: {args.path} run '{last.get('label')}' has {len(entries)} valid entries "
+        f"({len(runs)} run(s) total)"
+    )
+
+
+if __name__ == "__main__":
+    main()
