@@ -135,6 +135,8 @@ pub(crate) fn matched_ctx(ctx: &MultiGpu) -> MultiGpu {
     match &mut c.backend {
         crate::coordinator::Backend::Native { weight, .. } => *weight = BackprojWeight::Matched,
         crate::coordinator::Backend::Pjrt { weight, .. } => *weight = BackprojWeight::Matched,
+        #[cfg(test)]
+        crate::coordinator::Backend::PanicInject { .. } => {}
     }
     c
 }

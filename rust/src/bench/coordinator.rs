@@ -31,7 +31,7 @@ use std::time::Duration;
 
 use crate::coordinator::splitter::{plan_backward_ooc, plan_forward_ooc};
 use crate::coordinator::{backward, forward};
-use crate::coordinator::{ExecMode, MultiGpu, ReconSession, SplitConfig};
+use crate::coordinator::{ExecMode, MergeStrategy, MultiGpu, ReconSession, SplitConfig};
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::phantom;
@@ -140,7 +140,51 @@ pub fn run_suite(smoke: bool, threads: usize) -> Vec<CoordBenchEntry> {
             budget,
         ));
     }
+
+    // merge-strategy ablation (PR 6): linear host fold vs reduction tree
+    // per device count, on deterministic DES makespans
+    out.extend(bench_merge(threads));
     out
+}
+
+/// Merge-strategy ablation (PR 6): simulated image-split forward makespan
+/// with the linear host fold vs the pairwise reduction tree, per device
+/// count. The real numeric path is bit-identical on both sides (a tested
+/// invariant), so — as with [`bench_residency`] — each entry reports the
+/// deterministic DES makespans: `sequential_median_s` = linear merge,
+/// `pipelined_median_s` = tree merge, `speedup` = the merge
+/// critical-path win. The geometry is fixed rather than smoke-scaled:
+/// it must be large enough that per-fold bandwidth, not fixed launch and
+/// link latency, dominates, or the log-vs-linear scaling the entries
+/// exist to track would be invisible. `SimOnly` keeps even the fixed
+/// size sub-second.
+fn bench_merge(threads: usize) -> Vec<CoordBenchEntry> {
+    const N: usize = 256;
+    const A: usize = 128;
+    let g = Geometry::cone_beam(N, A);
+    let mem = image_split_mem(&g, &SplitConfig::default());
+    [1usize, 2, 4, 8, 16]
+        .into_iter()
+        .map(|gpus| {
+            let makespan = |tree: bool| -> f64 {
+                let ctx =
+                    MultiGpu::gtx1080ti(gpus).with_device_mem(mem).with_threads(threads);
+                let ctx =
+                    if tree { ctx.with_merge_strategy(MergeStrategy::Tree) } else { ctx };
+                ctx.forward(&g, None, ExecMode::SimOnly)
+                    .expect("bench merge sim")
+                    .1
+                    .makespan_s
+            };
+            CoordBenchEntry {
+                name: format!("merge image-split n={N} a={A} gpus={gpus}"),
+                sequential_median_s: makespan(false),
+                pipelined_median_s: makespan(true),
+                sim_median_s: 0.0,
+                samples: 1,
+            }
+        })
+        .collect()
 }
 
 /// Streamed-vs-in-RAM throughput of the pipelined executor on identical
@@ -479,8 +523,8 @@ mod tests {
         let entries = run_suite(true, 2);
         assert_eq!(
             entries.len(),
-            7,
-            "fp/bp × image-split/angle-split + residency + ooc fp/bp"
+            12,
+            "fp/bp × image-split/angle-split + residency + ooc fp/bp + 5 merge counts"
         );
         for e in &entries {
             assert!(
@@ -499,5 +543,24 @@ mod tests {
         // ooc entries compare streamed vs in-RAM staging on one plan
         assert!(entries.iter().any(|e| e.name.starts_with("ooc fp stream")));
         assert!(entries.iter().any(|e| e.name.starts_with("ooc bp stream")));
+        // merge entries compare deterministic DES makespans of the linear
+        // host fold vs the pairwise tree: the tree must win once the fold
+        // chain is deep (≥8 devices) and the win must widen with scale
+        let m = |gpus: usize| {
+            entries
+                .iter()
+                .find(|e| {
+                    e.name.starts_with("merge") && e.name.ends_with(&format!("gpus={gpus}"))
+                })
+                .unwrap_or_else(|| panic!("missing merge entry for gpus={gpus}"))
+        };
+        assert_eq!(m(1).speedup(), 1.0, "one device has nothing to merge");
+        assert!(m(8).speedup() > 1.0, "tree loses at 8 devices: {}", m(8).speedup());
+        assert!(
+            m(16).speedup() > m(8).speedup(),
+            "log-vs-linear gap must widen: {} vs {}",
+            m(16).speedup(),
+            m(8).speedup()
+        );
     }
 }

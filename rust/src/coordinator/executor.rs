@@ -11,6 +11,7 @@ use crate::volume::{
 };
 
 use super::residency::ResidencyStats;
+use super::splitter::MergeStrategy;
 
 /// Kernel backend for the real-execution path.
 #[derive(Clone, Debug)]
@@ -21,6 +22,12 @@ pub enum Backend {
     /// falls back to native for shapes not in the manifest. `weight`
     /// selects the FDK vs pseudo-matched backprojection artifact.
     Pjrt { artifacts_dir: std::path::PathBuf, weight: BackprojWeight, threads: usize },
+    /// Fault-injection backend for the executor's shutdown tests: every
+    /// kernel launch panics. Lets `coordinator::pipeline` prove that a
+    /// worker panic drains the merge/loader lanes and propagates instead
+    /// of deadlocking the scope.
+    #[cfg(test)]
+    PanicInject { threads: usize },
 }
 
 impl Default for Backend {
@@ -43,8 +50,9 @@ pub enum ExecMode {
     SimOnly,
 }
 
-/// How the **real** numeric path executes the plan (the simulated
-/// timeline is unaffected — it always models the paper's schedule).
+/// How the executor runs the plan. `pipelined`/`workers` steer the
+/// **real** numeric path only; `merge` also steers the simulated
+/// timeline, which models whichever merge strategy will execute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ExecutorConfig {
     /// `true` (default): the pipelined executor — device assignments run
@@ -58,11 +66,18 @@ pub struct ExecutorConfig {
     /// means one per device assignment. Output is bit-identical for every
     /// value — this only throttles concurrency (tests pin it to 1).
     pub workers: usize,
+    /// How image-split forward partials fold into the final projection
+    /// set (linear host fold vs. log-depth pairwise reduction tree).
+    /// Output is bit-identical for both — the tree executes the same
+    /// canonical schedule ([`super::splitter::merge_schedule`]); only
+    /// the merge critical path changes. No-op for angle-split forward
+    /// and for backprojection (disjoint outputs, nothing to fold).
+    pub merge: MergeStrategy,
 }
 
 impl Default for ExecutorConfig {
     fn default() -> Self {
-        Self { pipelined: true, workers: 0 }
+        Self { pipelined: true, workers: 0, merge: MergeStrategy::Linear }
     }
 }
 
@@ -141,6 +156,8 @@ impl MultiGpu {
     pub fn with_threads(mut self, n: usize) -> Self {
         match &mut self.backend {
             Backend::Native { threads, .. } | Backend::Pjrt { threads, .. } => *threads = n,
+            #[cfg(test)]
+            Backend::PanicInject { threads } => *threads = n,
         }
         self
     }
@@ -159,10 +176,25 @@ impl MultiGpu {
         self
     }
 
+    /// Select how image-split forward partials are merged (see
+    /// [`ExecutorConfig::merge`]). Output is bit-identical for every
+    /// strategy; only the merge critical path changes.
+    pub fn with_merge_strategy(mut self, merge: MergeStrategy) -> Self {
+        self.exec.merge = merge;
+        self
+    }
+
+    /// Shorthand for `with_merge_strategy(MergeStrategy::Tree)`.
+    pub fn with_tree_merge(self) -> Self {
+        self.with_merge_strategy(MergeStrategy::Tree)
+    }
+
     /// Total kernel host threads the backend was configured with.
     pub(crate) fn backend_threads(&self) -> usize {
         match &self.backend {
             Backend::Native { threads, .. } | Backend::Pjrt { threads, .. } => *threads,
+            #[cfg(test)]
+            Backend::PanicInject { threads } => *threads,
         }
     }
 
@@ -253,6 +285,8 @@ impl MultiGpu {
             Backend::Pjrt { artifacts_dir, threads, .. } => {
                 crate::runtime::forward_or_native(artifacts_dir, g, vol, *threads)
             }
+            #[cfg(test)]
+            Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
         }
     }
 
@@ -264,6 +298,8 @@ impl MultiGpu {
             Backend::Pjrt { artifacts_dir, weight, threads } => {
                 crate::runtime::backward_or_native(artifacts_dir, g, proj, *weight, *threads)
             }
+            #[cfg(test)]
+            Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
         }
     }
 
@@ -296,6 +332,8 @@ impl MultiGpu {
                 crate::kernels::scratch::recycle_projections(p);
                 crate::kernels::scratch::recycle_volume(owned);
             }
+            #[cfg(test)]
+            Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
         }
     }
 
@@ -322,6 +360,8 @@ impl MultiGpu {
                 crate::kernels::scratch::recycle_volume(v);
                 crate::kernels::scratch::recycle_projections(owned);
             }
+            #[cfg(test)]
+            Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
         }
     }
 }

@@ -10,12 +10,12 @@
 use anyhow::Context;
 
 use crate::geometry::Geometry;
-use crate::simgpu::{Ev, SimNode, SimOom};
+use crate::simgpu::{Category, Ev, SimNode, SimOom};
 use crate::volume::{ProjectionSet, Volume, VolumeInput};
 
 use super::executor::{ExecMode, MultiGpu, OpStats};
 use super::residency::FpResidency;
-use super::splitter::{plan_forward, Plan};
+use super::splitter::{plan_forward, MergeStrategy, Plan};
 
 /// Run the forward projection: returns real projections (in `Full` mode)
 /// and the simulated-schedule statistics.
@@ -43,6 +43,16 @@ pub(crate) fn run_with(
     plan: &Plan,
     res: Option<&FpResidency>,
 ) -> anyhow::Result<(Option<ProjectionSet>, OpStats)> {
+    // Single source of truth for the merge strategy: every executor entry
+    // point (plain, OOC, ReconSession) stamps the plan from the config,
+    // so the simulated timeline always models the strategy the real path
+    // will run. Direct `simulate` callers keep their plan's own setting.
+    let plan = {
+        let mut p = plan.clone();
+        p.merge = ctx.exec.merge;
+        p
+    };
+    let plan = &plan;
     let mut sim = ctx.fresh_sim();
     if let Some(r) = res {
         // buffers still resident from previous calls occupy device RAM
@@ -223,9 +233,17 @@ fn simulate_angle_split(
 /// Image larger than the devices: z-slabs are distributed across devices;
 /// every device projects all angle chunks of each of its slabs in a
 /// staggered order, accumulating per-chunk partial projections on-device
-/// (third buffer) against the host-resident running sum. Slabs cycle
-/// through one staging allocation, so there is nothing for the residency
-/// cache to keep here (see `coordinator::residency`).
+/// (third buffer) against its *own* previous slab's partial — the
+/// per-worker private partials of the pipelined executor (PR 3). Slabs
+/// cycle through one staging allocation, so there is nothing for the
+/// residency cache to keep here (see `coordinator::residency`).
+///
+/// A merge epilogue then folds the per-device partials by the canonical
+/// pairwise schedule, per `plan.merge` (DESIGN.md §Reduction-tree):
+/// `Linear` charges one serial host `+=` pass per fold; `Tree` charges a
+/// peer-to-peer device copy plus an on-device accumulation kernel per
+/// fold, with a round's disjoint pairs overlapping on their own engines
+/// — which is what makes the tree's merge critical path log-depth.
 fn simulate_image_split(
     g: &Geometry,
     plan: &Plan,
@@ -236,8 +254,8 @@ fn simulate_image_split(
     let n_dev = sim.n_devices();
     let chunks = &plan.angle_chunks;
     let stagger = n_chunks.div_ceil(n_dev.max(1));
-    // host-side partial state per chunk: version event + exists flag
-    let mut host_partial: Vec<Option<Ev>> = vec![None; n_chunks];
+    // per-device host-side partial state per chunk: version event
+    let mut host_partial: Vec<Vec<Option<Ev>>> = vec![vec![None; n_chunks]; n_dev];
 
     let max_slabs = plan.splits_per_device();
     let mut slab_alloced = vec![false; n_dev];
@@ -302,7 +320,7 @@ fn simulate_image_split(
                     continue;
                 }
                 let Some((kev, c)) = this_out[d] else { continue };
-                if let Some(host_ev) = host_partial[c] {
+                if let Some(host_ev) = host_partial[d][c] {
                     // 13: copy already-computed partials CPU→GPU
                     let h2d_ev = sim.h2d(d, chunk_bytes(c), plan.pin_image, host_ev);
                     // 15: accumulate (async, after kernel + partials)
@@ -313,11 +331,11 @@ fn simulate_image_split(
                 }
             }
             // 17–19: copy previous chunk's result out (synchronous) —
-            // this publishes the new host partial for that chunk.
+            // this publishes the device's new host partial for that chunk.
             for d in 0..n_dev {
                 if let Some((ev, c)) = prev_out[d] {
                     let out = sim.d2h(d, chunk_bytes(c), false, ev);
-                    host_partial[c] = Some(out);
+                    host_partial[d][c] = Some(out);
                 }
             }
             // 20: Synchronize(Compute)
@@ -332,7 +350,60 @@ fn simulate_image_split(
         for d in 0..n_dev {
             if let Some((ev, c)) = prev_out[d] {
                 let out = sim.d2h(d, chunk_bytes(c), false, ev);
-                host_partial[c] = Some(out);
+                host_partial[d][c] = Some(out);
+            }
+        }
+    }
+
+    // Merge epilogue: fold the per-device partials into the final
+    // projection set by the canonical pairwise schedule. Schedule
+    // indices are positions in the compacted active-device list, exactly
+    // as in the real executor (`pipeline::tree_roles_for`).
+    let active_devs: Vec<usize> =
+        (0..n_dev).filter(|&d| !plan.per_device[d].slabs.is_empty()).collect();
+    let mut done: Vec<Ev> = active_devs
+        .iter()
+        .map(|&d| host_partial[d].iter().flatten().fold(Ev::ZERO, |acc, &e| acc.max(e)))
+        .collect();
+    let proj_bytes: u64 = (0..n_chunks).map(chunk_bytes).sum();
+    match plan.merge {
+        MergeStrategy::Linear => {
+            // n_active − 1 serial host-side `+=` passes over a full
+            // partial each — the host-bound linear critical path
+            let fold_s = sim.cost.host_fold_time_s(proj_bytes);
+            for round in plan.merge_rounds() {
+                for (dst, src) in round {
+                    sim.host_sync(done[dst].max(done[src]));
+                    let ev = sim.host_busy(
+                        fold_s,
+                        Category::OtherMem,
+                        &format!("merge fold {src}->{dst}"),
+                    );
+                    done[dst] = ev;
+                }
+            }
+        }
+        MergeStrategy::Tree => {
+            // log-depth pairwise device→device folds: each pair streams
+            // the source partial over the peer link and accumulates on
+            // the destination; a round's disjoint pairs overlap on their
+            // own DMA/compute engines. Modeling shortcut (DESIGN.md
+            // §Reduction-tree): the fold streams chunk-wise through the
+            // plan's existing projection buffers, so no additional
+            // device memory is charged.
+            let acc_s = sim.cost.accum_kernel_s(proj_bytes);
+            for round in plan.merge_rounds() {
+                for (dst, src) in round {
+                    let (d_dst, d_src) = (active_devs[dst], active_devs[src]);
+                    let ready = done[dst].max(done[src]);
+                    let moved = sim.p2p(d_src, d_dst, proj_bytes, ready);
+                    done[dst] =
+                        sim.kernel(d_dst, acc_s, moved, &format!("merge accum d{d_dst}"));
+                }
+            }
+            // the host collects the merged result from the root
+            if let Some(&root) = done.first() {
+                sim.host_sync(root);
             }
         }
     }
@@ -473,5 +544,48 @@ mod tests {
         let (_, stats) = ctx.forward(&g, None, ExecMode::SimOnly).unwrap();
         let (c, _, _, _) = stats.breakdown.fractions();
         assert!(c > 0.8, "compute fraction at N=2048: {c}");
+    }
+
+    /// The PR-6 performance claim, on the simulated timeline: at ≥ 8
+    /// devices the reduction tree's log-depth merge beats the linear host
+    /// fold, and the win grows with device count (`n−1` serial folds vs.
+    /// `⌈log₂ n⌉` overlapped rounds).
+    #[test]
+    fn tree_merge_shortens_simulated_image_split_makespan_at_scale() {
+        let g = Geometry::cone_beam(256, 128);
+        let mem = crate::coordinator::splitter::image_split_mem(
+            &g,
+            &crate::coordinator::SplitConfig::default(),
+        );
+        let makespan = |gpus: usize, tree: bool| {
+            let ctx = MultiGpu::gtx1080ti(gpus).with_device_mem(mem);
+            let ctx = if tree { ctx.with_tree_merge() } else { ctx };
+            ctx.forward(&g, None, ExecMode::SimOnly).unwrap().1.makespan_s
+        };
+        // a single device has nothing to merge: strategies coincide
+        assert_eq!(makespan(1, false), makespan(1, true));
+        let speedup8 = makespan(8, false) / makespan(8, true);
+        let speedup16 = makespan(16, false) / makespan(16, true);
+        assert!(speedup8 > 1.0, "tree must win at 8 devices: {speedup8}");
+        assert!(
+            speedup16 > speedup8,
+            "log vs linear scaling must widen the win: {speedup16} vs {speedup8}"
+        );
+    }
+
+    /// The merge strategy must not perturb the angle-split timeline —
+    /// there are no cross-device partials to fold there.
+    #[test]
+    fn merge_strategy_does_not_affect_angle_split_sim() {
+        let g = Geometry::cone_beam(128, 64);
+        let linear =
+            MultiGpu::gtx1080ti(2).forward(&g, None, ExecMode::SimOnly).unwrap().1.makespan_s;
+        let tree = MultiGpu::gtx1080ti(2)
+            .with_tree_merge()
+            .forward(&g, None, ExecMode::SimOnly)
+            .unwrap()
+            .1
+            .makespan_s;
+        assert_eq!(linear, tree);
     }
 }

@@ -50,6 +50,13 @@
 //! timeline's disk engine predicting when the streaming hides behind
 //! kernel time. [`ReconSession::new_ooc`](residency::ReconSession::new_ooc)
 //! builds a session in that regime.
+//!
+//! Since PR 6 the image-split forward's cross-device merge is a
+//! [`splitter::MergeStrategy`]: the linear host fold, or a log-depth
+//! pairwise **reduction tree** whose rounds overlap in-flight workers
+//! (real path) / peer-to-peer device links (simulated path). Both
+//! execute the same canonical schedule ([`splitter::merge_schedule`]),
+//! so output stays bit-identical — only the merge critical path changes.
 
 pub mod backward;
 pub mod baseline;
@@ -63,5 +70,6 @@ pub mod splitter;
 pub use executor::{Backend, ExecMode, ExecutorConfig, MultiGpu, OpStats};
 pub use residency::{ReconSession, ResidencyCache, ResidencyStats};
 pub use splitter::{
-    ooc_bp_chunk, plan_backward_ooc, plan_forward_ooc, plan_ooc_pair, Plan, SplitConfig,
+    merge_schedule, ooc_bp_chunk, plan_backward_ooc, plan_forward_ooc, plan_ooc_pair,
+    MergeStrategy, Plan, SplitConfig,
 };

@@ -33,9 +33,30 @@
 //! * within a worker, the merge lane folds partials in launch order
 //!   (slab-major, then chunk) through a FIFO channel;
 //! * across workers, partial results combine in a fixed order: per-device
-//!   partials are reduced on the host in device index order (forward
-//!   image-split), or land in disjoint regions (forward angle-split
-//!   chunks, backward z-slabs) where order cannot matter.
+//!   partials are reduced by the **canonical pairwise schedule**
+//!   ([`merge_schedule`]) — fixed pairings, fixed operand order — for
+//!   *both* merge strategies (forward image-split), or land in disjoint
+//!   regions (forward angle-split chunks, backward z-slabs) where order
+//!   cannot matter.
+//!
+//! ## Reduction-tree merge (PR 6)
+//!
+//! [`MergeStrategy`] selects how image-split forward partials fold:
+//! `Linear` executes the canonical schedule serially on the host after
+//! the workers join; `Tree` executes the same schedule as pairwise
+//! worker folds — in each stride-doubling round, worker `i` receives and
+//! folds worker `i+stride`'s partial over a channel, overlapped with
+//! whatever kernel launches other workers still have in flight. Because
+//! the two strategies perform the identical folds in the identical
+//! operand order, their outputs are bit-identical; the tree only
+//! shortens the merge critical path from `n−1` serial host folds to
+//! `⌈log₂ n⌉` rounds. The overlapped in-worker form requires every
+//! worker to be resident on the pool at once (a blocked `recv` whose
+//! partner is still queued would deadlock — the [`ThreadPool`] rule that
+//! jobs must not block on other jobs of the same pool); with fewer
+//! workers than active devices the tree falls back to the host-side
+//! serial execution of the same schedule, which cannot change a single
+//! bit of output. See DESIGN.md §Reduction-tree.
 //!
 //! The pre-PR3 host-sequential loops are kept below
 //! ([`forward_sequential`], [`backward_sequential`]) behind
@@ -63,7 +84,7 @@ use crate::volume::{
 };
 
 use super::executor::{Backend, MultiGpu};
-use super::splitter::{DeviceAssignment, Plan};
+use super::splitter::{merge_schedule, DeviceAssignment, MergeStrategy, Plan};
 
 /// Staging buffers cycled through each worker's merge lane — the paper's
 /// double buffer (Alg. 1 line 6 / Alg. 2 line 6). The out-of-core
@@ -121,6 +142,104 @@ fn join_all<T>(handles: Vec<crate::util::threadpool::ScopedHandle<'_, T>>) -> Ve
         }
     }
     out
+}
+
+// ---------------------------------------------------------------------------
+// cross-device merge of image-split forward partials
+// ---------------------------------------------------------------------------
+
+/// One worker's part in the overlapped reduction tree: the channels
+/// wiring it to its [`merge_schedule`] partners. A worker first drains
+/// `recvs` in round order (folding each peer partial into its own), then
+/// either forwards the folded partial up the tree (`send`) or — for the
+/// root, index 0 — returns it as the final sum.
+struct TreeRole {
+    /// Peer partials to fold, in schedule-round order (ascending stride).
+    recvs: Vec<mpsc::Receiver<ProjectionSet>>,
+    /// Channel to this worker's consumer; `None` for the root.
+    send: Option<mpsc::Sender<ProjectionSet>>,
+}
+
+/// Wire the canonical schedule's pairings as channels between the `n`
+/// workers.
+fn tree_roles(n: usize) -> Vec<TreeRole> {
+    let mut roles: Vec<TreeRole> =
+        (0..n).map(|_| TreeRole { recvs: Vec::new(), send: None }).collect();
+    for round in merge_schedule(n) {
+        for (dst, src) in round {
+            let (tx, rx) = mpsc::channel();
+            roles[dst].recvs.push(rx);
+            debug_assert!(roles[src].send.is_none(), "schedule: each index is src once");
+            roles[src].send = Some(tx);
+        }
+    }
+    roles
+}
+
+/// Roles for the workers of one image-split forward call, or all-`None`
+/// when the merge runs host-side: the overlapped in-worker tree needs
+/// every worker resident on the pool at once (a blocked `recv` whose
+/// partner is still queued behind it would deadlock the pool — see the
+/// module docs), so with fewer pool workers than active devices the tree
+/// strategy degrades to the host-side serial execution of the *same*
+/// canonical schedule in [`fold_partials_into`] — bit-identical output,
+/// merge no longer overlapped.
+fn tree_roles_for(ctx: &MultiGpu, workers: usize, n_active: usize) -> Vec<Option<TreeRole>> {
+    if ctx.exec.merge == MergeStrategy::Tree && workers >= n_active && n_active > 1 {
+        tree_roles(n_active).into_iter().map(Some).collect()
+    } else {
+        (0..n_active).map(|_| None).collect()
+    }
+}
+
+/// Run one worker's share of the overlapped tree after its own launches
+/// completed: fold each peer partial received in round order, then pass
+/// the result up (or keep it, for the root). Returns the folded partial
+/// (root or role-less worker) plus the consumed peer partials, which the
+/// caller recycles on the host thread — pool-worker arenas are per-call,
+/// so recycling there would leak the allocations' reuse (see
+/// `worker_count`'s arena note).
+fn tree_fold(
+    role: Option<TreeRole>,
+    mut partial: ProjectionSet,
+) -> (Option<ProjectionSet>, Vec<ProjectionSet>) {
+    let Some(role) = role else { return (Some(partial), Vec::new()) };
+    let mut spent = Vec::with_capacity(role.recvs.len());
+    for rx in &role.recvs {
+        let peer = rx.recv().expect("tree merge peer terminated");
+        partial.accumulate(&peer);
+        spent.push(peer);
+    }
+    match role.send {
+        Some(tx) => {
+            // a closed channel means the consumer panicked; its partial is
+            // dropped here and the pool propagates the consumer's panic
+            let _ = tx.send(partial);
+            (None, spent)
+        }
+        None => (Some(partial), spent),
+    }
+}
+
+/// Fold the workers' surviving partials into `out` by the canonical
+/// schedule and recycle them. After an overlapped tree only the root
+/// slot is `Some` (every fold already happened in-worker, so the loop
+/// no-ops); otherwise — `Linear`, or `Tree` degraded by a small worker
+/// pool — this executes the schedule serially, which performs the exact
+/// same `n−1` folds in the exact same operand order. Either way the one
+/// surviving partial is the root, copied into `out`.
+fn fold_partials_into(out: &mut ProjectionSet, mut partials: Vec<Option<ProjectionSet>>) {
+    for round in merge_schedule(partials.len()) {
+        for (dst, src) in round {
+            let Some(src_p) = partials[src].take() else { continue };
+            let dst_p = partials[dst].as_mut().expect("schedule: dst survives its round");
+            dst_p.accumulate(&src_p);
+            scratch::recycle_projections(src_p);
+        }
+    }
+    let root = partials.into_iter().flatten().next().expect("merge root partial");
+    out.data.copy_from_slice(&root.data);
+    scratch::recycle_projections(root);
 }
 
 // ---------------------------------------------------------------------------
@@ -205,8 +324,9 @@ fn forward_pipelined_ram(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan
     } else {
         // Image split: each device projects all chunks of its slabs into a
         // private partial projection set (worker + merge lane); partials
-        // then fold into `out` on this thread in device index order — the
-        // deterministic fixed-order merge.
+        // then fold by the canonical pairwise schedule — in-worker and
+        // overlapped under the tree strategy, serially on this thread
+        // otherwise. Same folds, same operand order ⇒ same bits.
         let active: Vec<&DeviceAssignment> =
             plan.per_device.iter().filter(|d| !d.slabs.is_empty()).collect();
         let workers = worker_count(ctx, active.len());
@@ -214,12 +334,14 @@ fn forward_pipelined_ram(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan
         let per = g.n_det[0] * g.n_det[1];
         let max_stage_len =
             plan.angle_chunks.iter().map(|c| c.len()).max().unwrap_or(0) * per;
+        let roles = tree_roles_for(ctx, workers, active.len());
         let pool = ThreadPool::new(workers);
         pool.scope(|s| {
             let handles: Vec<_> = active
                 .iter()
+                .zip(roles)
                 .enumerate()
-                .map(|(i, dev)| {
+                .map(|(i, (dev, role))| {
                     let dev: &DeviceAssignment = dev;
                     let kt = budgets[i];
                     // take the device partial and staging buffers on this
@@ -231,16 +353,22 @@ fn forward_pipelined_ram(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan
                         scratch::take_projections(g.n_det[0], g.n_det[1], g.n_angles());
                     let stage: Vec<Vec<f32>> =
                         (0..N_STAGE_BUFFERS).map(|_| scratch::take_zeroed(max_stage_len)).collect();
-                    s.spawn(move || forward_device_partial(ctx, g, vol, plan, dev, kt, partial, stage))
+                    s.spawn(move || {
+                        forward_device_partial(ctx, g, vol, plan, dev, kt, partial, stage, role)
+                    })
                 })
                 .collect();
-            for (partial, stage) in join_all(handles) {
-                out.accumulate(&partial);
-                scratch::recycle_projections(partial);
+            let mut folded = Vec::with_capacity(active.len());
+            for (root, spent, stage) in join_all(handles) {
+                folded.push(root);
+                for p in spent {
+                    scratch::recycle_projections(p);
+                }
                 for buf in stage {
                     scratch::recycle(buf);
                 }
             }
+            fold_partials_into(&mut out, folded);
         });
     }
     out
@@ -249,9 +377,12 @@ fn forward_pipelined_ram(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan
 /// One device's forward worker (image split): for each of its slabs, run
 /// every angle-chunk kernel on a zero-copy slab view in the Alg. 1 queue
 /// order, handing each launch's chunk partial to the merge lane while the
-/// next kernel runs. `partial` (zeroed) and the `stage` buffers are taken
-/// from — and returned to — the caller's scratch arena; this returns the
-/// device's accumulated partial projections plus the drained buffers.
+/// next kernel runs; once all launches merged, play this worker's part of
+/// the reduction tree (`role`, a no-op when `None`). `partial` (zeroed)
+/// and the `stage` buffers are taken from — and returned to — the
+/// caller's scratch arena; this returns the worker's surviving folded
+/// partial (`None` when the tree passed it to a peer), the consumed peer
+/// partials for host-side recycling, and the drained staging buffers.
 #[allow(clippy::too_many_arguments)]
 fn forward_device_partial(
     ctx: &MultiGpu,
@@ -262,7 +393,8 @@ fn forward_device_partial(
     kernel_threads: usize,
     mut partial: ProjectionSet,
     stage: Vec<Vec<f32>>,
-) -> (ProjectionSet, Vec<Vec<f32>>) {
+    role: Option<TreeRole>,
+) -> (Option<ProjectionSet>, Vec<ProjectionSet>, Vec<Vec<f32>>) {
     let per = partial.nu * partial.nv;
     let dst_ptr = SendPtr(partial.data.as_mut_ptr());
 
@@ -298,6 +430,8 @@ fn forward_device_partial(
             let owned_slab = match &ctx.backend {
                 Backend::Pjrt { .. } => Some(sub.to_volume()),
                 Backend::Native { .. } => None,
+                #[cfg(test)]
+                Backend::PanicInject { .. } => None,
             };
             for ch in &plan.angle_chunks {
                 let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
@@ -327,11 +461,14 @@ fn forward_device_partial(
         }
         drop(req_tx); // lane drains remaining requests, then exits
     });
+    // own merge lane drained ⇒ `partial` is complete; fold the tree
+    // share while peers may still be launching kernels
+    let (folded, spent) = tree_fold(role, partial);
     let mut stage = Vec::with_capacity(N_STAGE_BUFFERS);
     while let Ok(buf) = ret_rx.try_recv() {
         stage.push(buf);
     }
-    (partial, stage)
+    (folded, spent, stage)
 }
 
 /// Image-split forward projection streaming slabs from an [`OocVolume`]:
@@ -353,12 +490,14 @@ fn forward_pipelined_ooc(
     let per = g.n_det[0] * g.n_det[1];
     let max_stage_len = plan.angle_chunks.iter().map(|c| c.len()).max().unwrap_or(0) * per;
     let plane = g.n_vox[0] * g.n_vox[1];
+    let roles = tree_roles_for(ctx, workers, active.len());
     let pool = ThreadPool::new(workers);
     pool.scope(|s| {
         let handles: Vec<_> = active
             .iter()
+            .zip(roles)
             .enumerate()
-            .map(|(i, dev)| {
+            .map(|(i, (dev, role))| {
                 let dev: &DeviceAssignment = dev;
                 let kt = budgets[i];
                 let partial = scratch::take_projections(g.n_det[0], g.n_det[1], g.n_angles());
@@ -370,18 +509,22 @@ fn forward_pipelined_ooc(
                     (0..N_STAGE_BUFFERS).map(|_| scratch::take_zeroed(max_slab_len)).collect();
                 s.spawn(move || {
                     forward_device_partial_ooc(
-                        ctx, g, store, plan, dev, kt, partial, stage, slab_bufs,
+                        ctx, g, store, plan, dev, kt, partial, stage, slab_bufs, role,
                     )
                 })
             })
             .collect();
-        for (partial, stage, slab_bufs) in join_all(handles) {
-            out.accumulate(&partial);
-            scratch::recycle_projections(partial);
+        let mut folded = Vec::with_capacity(active.len());
+        for (root, spent, stage, slab_bufs) in join_all(handles) {
+            folded.push(root);
+            for p in spent {
+                scratch::recycle_projections(p);
+            }
             for buf in stage.into_iter().chain(slab_bufs) {
                 scratch::recycle(buf);
             }
         }
+        fold_partials_into(&mut out, folded);
     });
     out
 }
@@ -391,7 +534,9 @@ fn forward_pipelined_ooc(
 /// merge lane are identical to [`forward_device_partial`], consuming a
 /// [`VolumeSlabView`] over the staged buffer instead of a borrow of a
 /// resident volume — so the kernels see identical f32 data and the
-/// output is bit-identical to the RAM path on the same plan.
+/// output is bit-identical to the RAM path on the same plan. `role` is
+/// this worker's share of the reduction tree, played after its own merge
+/// lane drains (see [`forward_device_partial`]).
 #[allow(clippy::too_many_arguments)]
 fn forward_device_partial_ooc(
     ctx: &MultiGpu,
@@ -403,7 +548,8 @@ fn forward_device_partial_ooc(
     mut partial: ProjectionSet,
     stage: Vec<Vec<f32>>,
     slab_bufs: Vec<Vec<f32>>,
-) -> (ProjectionSet, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    role: Option<TreeRole>,
+) -> (Option<ProjectionSet>, Vec<ProjectionSet>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
     let per = partial.nu * partial.nv;
     let plane = g.n_vox[0] * g.n_vox[1];
     let dst_ptr = SendPtr(partial.data.as_mut_ptr());
@@ -467,6 +613,8 @@ fn forward_device_partial_ooc(
             let owned_slab = match &ctx.backend {
                 Backend::Pjrt { .. } => Some(sub.to_volume()),
                 Backend::Native { .. } => None,
+                #[cfg(test)]
+                Backend::PanicInject { .. } => None,
             };
             for ch in &plan.angle_chunks {
                 let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
@@ -496,11 +644,12 @@ fn forward_device_partial_ooc(
         drop(req_tx); // merge lane drains remaining requests, then exits
         leftover_slab_bufs = free;
     });
+    let (folded, spent) = tree_fold(role, partial);
     let mut stage = Vec::with_capacity(N_STAGE_BUFFERS);
     while let Ok(buf) = ret_rx.try_recv() {
         stage.push(buf);
     }
-    (partial, stage, leftover_slab_bufs)
+    (folded, spent, stage, leftover_slab_bufs)
 }
 
 // ---------------------------------------------------------------------------
@@ -1145,8 +1294,9 @@ mod tests {
     #[test]
     fn image_split_fp_matches_sequential_baseline_within_tolerance() {
         // The image-split FP merge is reassociated (per-device partials,
-        // then a device-order fold) — deterministic, but not bitwise equal
-        // to the host-sequential order; it must still agree tightly.
+        // then the canonical pairwise fold) — deterministic, but not
+        // bitwise equal to the host-sequential order; it must still
+        // agree tightly.
         let n = 20;
         let n_angles = 12;
         let g = Geometry::cone_beam(n, n_angles);
@@ -1164,6 +1314,152 @@ mod tests {
                 (a - b).abs() <= 1e-5 * (1.0 + a.abs()),
                 "pixel {i}: sequential {a} vs pipelined {b}"
             );
+        }
+    }
+
+    /// The PR-6 bit-exactness matrix: tree merge vs. linear merge over
+    /// FP image-split for 1–16 simulated devices — including 3 and 5,
+    /// the non-power-of-two counts that exercise the bye rounds of the
+    /// canonical schedule. Both the host-serial degraded tree
+    /// (`workers=1 < n_active`) and the overlapped in-worker tree
+    /// (`threads = n_active` so every worker is pool-resident) must
+    /// reproduce the linear fold bit for bit.
+    #[test]
+    fn tree_merge_bit_identical_to_linear_merge_across_device_counts() {
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        for n_gpus in [1usize, 2, 3, 4, 5, 8, 16] {
+            let base = MultiGpu::gtx1080ti(n_gpus).with_device_mem(tiny_mem(&g));
+            let linear =
+                base.clone().forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+            let tree_host = base
+                .clone()
+                .with_tree_merge()
+                .with_workers(1)
+                .forward(&g, Some(&v), ExecMode::Full)
+                .unwrap()
+                .0
+                .unwrap();
+            assert_eq!(
+                linear.data, tree_host.data,
+                "gpus={n_gpus}: host-serial tree fold must match the linear merge"
+            );
+            let tree_overlapped = base
+                .with_tree_merge()
+                .with_threads(n_gpus.max(2))
+                .forward(&g, Some(&v), ExecMode::Full)
+                .unwrap()
+                .0
+                .unwrap();
+            assert_eq!(
+                linear.data, tree_overlapped.data,
+                "gpus={n_gpus}: overlapped in-worker tree must match the linear merge"
+            );
+        }
+    }
+
+    /// The merge strategy only exists for image-split FP; every other
+    /// operator shape writes disjoint outputs, so tree vs. linear must
+    /// be trivially identical there too (guards against the strategy
+    /// leaking into paths that have nothing to fold).
+    #[test]
+    fn merge_strategy_is_a_noop_for_angle_split_and_backprojection() {
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        for n_gpus in [2usize, 5] {
+            // angle-split FP (full image per device)
+            let linear =
+                MultiGpu::gtx1080ti(n_gpus).forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+            let tree = MultiGpu::gtx1080ti(n_gpus)
+                .with_tree_merge()
+                .forward(&g, Some(&v), ExecMode::Full)
+                .unwrap()
+                .0
+                .unwrap();
+            assert_eq!(linear.data, tree.data, "gpus={n_gpus}: angle-split FP");
+            // BP, both split regimes
+            for image_split in [false, true] {
+                let base = MultiGpu::gtx1080ti(n_gpus);
+                let base =
+                    if image_split { base.with_device_mem(tiny_mem(&g)) } else { base };
+                let linear =
+                    base.clone().backward(&g, Some(&p), ExecMode::Full).unwrap().0.unwrap();
+                let tree = base
+                    .with_tree_merge()
+                    .backward(&g, Some(&p), ExecMode::Full)
+                    .unwrap()
+                    .0
+                    .unwrap();
+                assert_eq!(
+                    linear.data, tree.data,
+                    "gpus={n_gpus} image_split={image_split}: BP"
+                );
+            }
+        }
+    }
+
+    /// OOC streaming must stay bit-identical to the RAM path under the
+    /// tree merge too (same plan, same strategy on both sides).
+    #[test]
+    fn ooc_forward_with_tree_merge_bit_identical_to_ram() {
+        use crate::coordinator::splitter::plan_forward_ooc;
+        use crate::volume::{OocVolume, VolumeInput};
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let dir = std::env::temp_dir()
+            .join("tigre_pipe_ooc_tree")
+            .join(format!("{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let budget = g.volume_bytes() / 2;
+        for n_gpus in [2usize, 5] {
+            let ctx = MultiGpu::gtx1080ti(n_gpus).with_tree_merge().with_threads(n_gpus);
+            let plan =
+                plan_forward_ooc(&g, n_gpus, ctx.spec.mem_bytes, &ctx.split, budget).unwrap();
+            let store =
+                OocVolume::from_volume(&dir.join(format!("v{n_gpus}.raw")), &v, 3, budget)
+                    .unwrap();
+            let ram = super::forward_pipelined(&ctx, &g, VolumeInput::Ram(&v), &plan).unwrap();
+            let ooc =
+                super::forward_pipelined(&ctx, &g, VolumeInput::Ooc(&store), &plan).unwrap();
+            assert_eq!(ram.data, ooc.data, "gpus={n_gpus}: OOC tree-merge parity");
+        }
+    }
+
+    /// Satellite: a panicking kernel inside a worker must propagate out
+    /// of the operator call — the merge/loader lanes drain when the
+    /// worker's channel senders drop mid-unwind, the scope joins them,
+    /// and the pool re-raises the payload — instead of deadlocking. Runs
+    /// the FP image-split path (merge lane + tree channels) and the BP
+    /// path (merge lane into the shared output) under both strategies.
+    #[test]
+    fn worker_panic_propagates_without_deadlocking_the_lanes() {
+        use crate::coordinator::executor::Backend;
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        for tree in [false, true] {
+            let ctx = MultiGpu::gtx1080ti(2)
+                .with_device_mem(tiny_mem(&g))
+                .with_backend(Backend::PanicInject { threads: 2 });
+            let ctx = if tree { ctx.with_tree_merge() } else { ctx };
+            let fp = catch_unwind(AssertUnwindSafe(|| {
+                ctx.forward(&g, Some(&v), ExecMode::Full)
+            }));
+            assert!(fp.is_err(), "tree={tree}: injected FP panic must propagate");
+            let bp = catch_unwind(AssertUnwindSafe(|| {
+                ctx.backward(&g, Some(&p), ExecMode::Full)
+            }));
+            assert!(bp.is_err(), "tree={tree}: injected BP panic must propagate");
         }
     }
 }

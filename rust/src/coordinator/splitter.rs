@@ -39,6 +39,62 @@ impl Default for SplitConfig {
     }
 }
 
+/// How the per-device partial projections of an image-split forward
+/// projection are folded into the final projection set (ISSUE 6 /
+/// DESIGN.md §Reduction-tree). Angle-split forward and backprojection
+/// write disjoint output regions, so the strategy is a no-op there.
+///
+/// Both strategies execute the **same canonical pairwise schedule**
+/// ([`merge_schedule`]) — identical fold pairings, identical operand
+/// order — so their outputs are bit-identical; they differ only in
+/// *where/when* the folds run (serial host passes vs. overlapped
+/// pairwise worker folds, and in the simulated timeline host `+=`
+/// passes vs. peer-to-peer device links).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MergeStrategy {
+    /// Serial host-side folds: one `+=` pass per schedule pair, executed
+    /// on the host thread after the workers join. Host-bound: the merge
+    /// critical path grows linearly with the device count.
+    #[default]
+    Linear,
+    /// Log-depth pairwise reduction tree: each round, worker `i` folds
+    /// worker `i + stride`'s partial (overlapped with other workers'
+    /// in-flight kernel launches); the simulated timeline models the
+    /// rounds as peer-to-peer device transfers plus on-device
+    /// accumulation kernels.
+    Tree,
+}
+
+/// The canonical pairwise merge schedule over `n` partials, as rounds of
+/// `(dst, src)` folds meaning `partial[dst] += partial[src]` (in that
+/// operand order). Stride-doubling pairing: round `r` (stride `2^r`)
+/// folds `i + stride` into `i` for every `i` divisible by `2·stride`;
+/// indices with no partner get a bye. Index 0 is always the final root.
+///
+/// Properties (pinned by unit tests below):
+/// * every index except 0 appears as `src` exactly once, so `n−1` folds
+///   total — the same folds a linear accumulation performs;
+/// * pairs within a round are disjoint, so rounds can run in parallel;
+/// * `⌈log₂ n⌉` rounds — the tree's critical path.
+///
+/// **Both** merge strategies execute exactly this schedule (Linear runs
+/// it serially, Tree runs each round's pairs concurrently), which is
+/// what makes tree-vs-linear output bit-identity structural rather than
+/// a floating-point accident.
+pub fn merge_schedule(n: usize) -> Vec<Vec<(usize, usize)>> {
+    let mut rounds = Vec::new();
+    let mut stride = 1;
+    while stride < n {
+        let round: Vec<(usize, usize)> =
+            (0..n).step_by(2 * stride).filter(|i| i + stride < n).map(|i| (i, i + stride)).collect();
+        if !round.is_empty() {
+            rounds.push(round);
+        }
+        stride *= 2;
+    }
+    rounds
+}
+
 /// The work assigned to one device.
 #[derive(Clone, Debug)]
 pub struct DeviceAssignment {
@@ -83,6 +139,11 @@ pub struct Plan {
     /// The projection input streams from an `OocProjections` store
     /// (backprojection chunks).
     pub ooc_proj: bool,
+    /// How image-split forward partials are folded (no-op for every
+    /// other operator shape). `forward::run_with` re-stamps this from
+    /// `ExecutorConfig::merge`, so it only matters for callers driving
+    /// [`crate::coordinator::forward::simulate`] directly.
+    pub merge: MergeStrategy,
 }
 
 impl Plan {
@@ -158,6 +219,22 @@ impl Plan {
             ws += n_active * 2 * self.proj_buffer_bytes;
         }
         ws
+    }
+
+    /// Rounds of the canonical pairwise merge schedule over this plan's
+    /// *active* devices (those that own at least one slab); pair indices
+    /// are positions in the compacted active-device list, matching both
+    /// the pipelined executor's worker indices and the simulated
+    /// timeline's active-device enumeration.
+    pub fn merge_rounds(&self) -> Vec<Vec<(usize, usize)>> {
+        merge_schedule(self.per_device.iter().filter(|d| !d.slabs.is_empty()).count())
+    }
+
+    /// Select the merge strategy (for direct `simulate` callers; the
+    /// executor entry points stamp this from `ExecutorConfig` instead).
+    pub fn with_merge(mut self, merge: MergeStrategy) -> Self {
+        self.merge = merge;
+        self
     }
 
     /// Mark the plan's volume side as out-of-core for the simulated
@@ -408,6 +485,7 @@ fn plan_operator(
         host_budget_bytes: None,
         ooc_volume: false,
         ooc_proj: false,
+        merge: MergeStrategy::Linear,
     })
 }
 
@@ -819,5 +897,61 @@ mod tests {
                 "memory bound violated",
             )
         });
+    }
+
+    #[test]
+    fn merge_schedule_trivial_counts_have_no_rounds() {
+        assert!(merge_schedule(0).is_empty());
+        assert!(merge_schedule(1).is_empty());
+        assert_eq!(merge_schedule(2), vec![vec![(0, 1)]]);
+    }
+
+    #[test]
+    fn merge_schedule_five_devices_pins_the_bye_round() {
+        // n = 5: index 4 has no partner until the stride-4 round.
+        assert_eq!(
+            merge_schedule(5),
+            vec![vec![(0, 1), (2, 3)], vec![(0, 2)], vec![(0, 4)]]
+        );
+    }
+
+    #[test]
+    fn merge_schedule_properties_hold_for_all_small_counts() {
+        for n in 2..=33usize {
+            let rounds = merge_schedule(n);
+            // log-depth critical path
+            let expect_rounds = (usize::BITS - (n - 1).leading_zeros()) as usize;
+            assert_eq!(rounds.len(), expect_rounds, "rounds for n={n}");
+            // every index except 0 consumed as src exactly once → n−1 folds,
+            // the same folds a linear accumulation performs
+            let mut src_seen = vec![0usize; n];
+            let mut folds = 0;
+            for round in &rounds {
+                // in-round pairs are disjoint (parallelizable)
+                let mut in_round = std::collections::HashSet::new();
+                for &(dst, src) in round {
+                    assert!(dst < src && src < n, "ordered pair ({dst},{src}) for n={n}");
+                    assert!(in_round.insert(dst) && in_round.insert(src));
+                    src_seen[src] += 1;
+                    folds += 1;
+                }
+            }
+            assert_eq!(folds, n - 1, "fold count for n={n}");
+            assert_eq!(src_seen[0], 0, "root never consumed");
+            assert!(src_seen[1..].iter().all(|&c| c == 1), "src multiplicity for n={n}");
+        }
+    }
+
+    #[test]
+    fn plan_defaults_to_linear_merge_and_with_merge_overrides() {
+        let g = Geometry::cone_beam(32, 8);
+        let p = plan_forward(&g, 2, 1 << 30, &SplitConfig::default()).unwrap();
+        assert_eq!(p.merge, MergeStrategy::Linear);
+        assert_eq!(MergeStrategy::default(), MergeStrategy::Linear);
+        let p = p.with_merge(MergeStrategy::Tree);
+        assert_eq!(p.merge, MergeStrategy::Tree);
+        // schedule indices cover the active devices of the plan
+        let active = p.per_device.iter().filter(|d| !d.slabs.is_empty()).count();
+        assert_eq!(p.merge_rounds(), merge_schedule(active));
     }
 }

@@ -64,6 +64,17 @@ pub struct CostModel {
     pub disk_write_bps: f64,
     /// Fixed latency per store request (syscall + queue).
     pub disk_latency_s: f64,
+    /// Peer-to-peer device→device bandwidth (bytes/s) over the PCIe
+    /// switch — the links the reduction-tree merge folds partials over.
+    /// Slightly below the pinned H2D rate: a P2P copy crosses the switch
+    /// without staging through host RAM, but pays both endpoints' DMA.
+    pub p2p_bps: f64,
+    /// Fixed latency per peer copy (both endpoints' DMA setup).
+    pub p2p_latency_s: f64,
+    /// Host-side `+=` fold throughput over two f32 streams (bytes of
+    /// partial folded / s) — the linear merge's per-pair cost. Memory-
+    /// bound: read src + read/write dst on one host core.
+    pub host_fold_bps: f64,
 }
 
 impl CostModel {
@@ -89,7 +100,24 @@ impl CostModel {
             disk_read_bps: 2.5e9,
             disk_write_bps: 1.2e9,
             disk_latency_s: 100e-6,
+            // PCIe Gen3 x16 peer copy through the switch; host fold is a
+            // single-core memcpy-class loop over two streams
+            p2p_bps: 11.0e9,
+            p2p_latency_s: 15e-6,
+            host_fold_bps: 6.0e9,
         }
+    }
+
+    /// Time to move `bytes` of partial projections device→device over a
+    /// peer link (reduction-tree merge rounds).
+    pub fn p2p_time_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.p2p_bps + self.p2p_latency_s
+    }
+
+    /// Host time for one linear-merge fold pass (`dst += src`) over
+    /// `bytes` of partial projections.
+    pub fn host_fold_time_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.host_fold_bps
     }
 
     /// Time to read `bytes` from the out-of-core backing store.
@@ -244,6 +272,23 @@ mod tests {
         assert!(c.ooc_read_hidden(slab, kernel), "read {read} vs kernel {kernel}");
         // a microsecond kernel cannot hide a gigabyte read
         assert!(!c.ooc_read_hidden(1 << 30, 1e-6));
+    }
+
+    #[test]
+    fn p2p_between_pageable_and_pinned_and_folds_are_host_bound() {
+        let c = CostModel::gtx1080ti_pcie3();
+        // a peer copy skips the host bounce: faster than pageable, but it
+        // cannot beat a single pinned DMA
+        assert!(c.p2p_bps > c.pcie_pageable_bps);
+        assert!(c.p2p_bps < c.pcie_pinned_bps);
+        let mb = 32u64 << 20;
+        assert!((c.p2p_time_s(mb) - (mb as f64 / 11.0e9 + 15e-6)).abs() < 1e-9);
+        // zero bytes still pay the link latency; a host fold does not
+        assert!((c.p2p_time_s(0) - 15e-6).abs() < 1e-12);
+        assert_eq!(c.host_fold_time_s(0), 0.0);
+        // the tree's win: one p2p hop beats one host fold pass at
+        // detector-partial sizes
+        assert!(c.p2p_time_s(mb) < c.host_fold_time_s(mb));
     }
 
     #[test]

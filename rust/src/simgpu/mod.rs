@@ -284,6 +284,25 @@ impl SimNode {
         Ev(t1)
     }
 
+    /// Peer-to-peer device→device copy of `bytes` from `src` to `dst`
+    /// over the PCIe switch — one hop of the reduction-tree merge. The
+    /// copy occupies `src`'s D2H engine and `dst`'s H2D engine for its
+    /// duration (both endpoints DMA) and is asynchronous to the host
+    /// (cudaMemcpyPeerAsync semantics): pairs on disjoint devices run
+    /// concurrently, which is exactly what makes a merge round log-depth.
+    pub fn p2p(&mut self, src: usize, dst: usize, bytes: u64, after: Ev) -> Ev {
+        debug_assert_ne!(src, dst, "p2p endpoints must differ");
+        let dur = self.cost.p2p_time_s(bytes);
+        let t0 = self.devices[src].engine_free[&Engine::D2H]
+            .max(self.devices[dst].engine_free[&Engine::H2D])
+            .max(after.0);
+        let t1 = t0 + dur;
+        self.devices[src].engine_free.insert(Engine::D2H, t1);
+        self.devices[dst].engine_free.insert(Engine::H2D, t1);
+        self.log(dst, Category::OtherMem, t0, t1, format!("p2p d{src}->d{dst} {bytes}B"));
+        Ev(t1)
+    }
+
     // ---- out-of-core backing store ---------------------------------------
 
     /// Read `bytes` from the backing store after `after`: serializes on
@@ -456,6 +475,28 @@ mod tests {
         let w = sim.disk_write(1 << 30, Ev::ZERO);
         assert!(w.0 >= r2.0);
         assert!(sim.makespan() >= w.0);
+    }
+
+    #[test]
+    fn p2p_occupies_both_endpoints_but_not_the_host() {
+        let mut sim = small_node(4);
+        let bytes = 11u64 << 30; // ≈1 s at 11 GB/s
+        // disjoint pairs overlap — a reduction-tree round is one hop deep
+        let a = sim.p2p(1, 0, bytes, Ev::ZERO);
+        let b = sim.p2p(3, 2, bytes, Ev::ZERO);
+        assert!((a.0 - b.0).abs() < 1e-9, "disjoint pairs run concurrently");
+        assert!(sim.makespan() < 1.5, "round of 2 hops ≈ 1 hop: {}", sim.makespan());
+        // asynchronous to the host
+        assert_eq!(sim.host_time().0, 0.0, "p2p must not block the host");
+        // both endpoints' DMA engines are busy for the copy
+        assert!(sim.engine_time(1, Engine::D2H).0 >= a.0 - 1e-9);
+        assert!(sim.engine_time(0, Engine::H2D).0 >= a.0 - 1e-9);
+        // a second hop into the same destination serializes on its engine
+        let c = sim.p2p(2, 0, bytes, Ev::ZERO);
+        assert!(c.0 > a.0 + 0.9, "shared H2D engine serializes: {} vs {}", c.0, a.0);
+        // and dependencies are honored
+        let d = sim.p2p(3, 1, bytes, c);
+        assert!(d.0 >= c.0 + 0.9);
     }
 
     #[test]

@@ -8,6 +8,9 @@ pub enum Category {
     /// Host memory page-locking and unlocking.
     PinUnpin,
     /// Non-overlapped memory work: allocation, freeing, exposed copies.
+    /// Peer-to-peer merge transfers (`SimNode::p2p`) and host-side merge
+    /// folds also bin here — they are memory movement, not kernel time,
+    /// even when a later accumulate kernel depends on them.
     OtherMem,
 }
 

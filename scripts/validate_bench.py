@@ -13,6 +13,10 @@ Checks
   * every entry of the last run passes the per-schema numeric checks
     (kernels: median_s/samples/throughput; coordinator:
     sequential_median_s/pipelined_median_s/samples/speedup);
+  * coordinator runs only: every `merge ...` ablation entry at >= 8
+    devices (name contains `gpus=K`, K >= 8) must report speedup > 1 —
+    the reduction tree shortening the merge critical path at scale is a
+    tracked acceptance property, not just a data point;
   * when --require-prefixes is given, each comma-separated prefix matches
     at least one entry name of the last run.
 
@@ -46,6 +50,26 @@ def check_entry(schema: str, entry: dict) -> None:
         value = entry.get(key)
         if not isinstance(value, int) or value < 1:
             fail(f"entry '{name}': {key} must be an integer >= 1, got {value!r}")
+    if schema.startswith("tigre-bench-coordinator/") and name.startswith("merge"):
+        check_merge_entry(name, entry)
+
+
+def check_merge_entry(name: str, entry: dict) -> None:
+    """Merge-ablation acceptance: the tree must win at >= 8 devices."""
+    gpus = None
+    for token in name.split():
+        if token.startswith("gpus="):
+            try:
+                gpus = int(token.removeprefix("gpus="))
+            except ValueError:
+                fail(f"entry '{name}': unparseable device count {token!r}")
+    if gpus is None:
+        fail(f"entry '{name}': merge entries must carry a 'gpus=K' token")
+    if gpus >= 8 and entry.get("speedup", 0) <= 1.0:
+        fail(
+            f"entry '{name}': reduction tree must beat the linear fold at "
+            f"{gpus} devices, got speedup {entry.get('speedup')!r}"
+        )
 
 
 def main() -> None:
