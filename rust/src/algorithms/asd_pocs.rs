@@ -4,6 +4,7 @@
 //! minimization, adapting the TV step to the data-update magnitude.
 //! The TV inner loop runs on the multi-GPU halo-split regularizer (§2.3).
 
+use crate::coordinator::checkpoint::{self, CheckpointState};
 use crate::coordinator::regularizer::tv_gradient_descent_split;
 use crate::coordinator::{MultiGpu, ReconSession};
 use crate::geometry::Geometry;
@@ -53,8 +54,18 @@ pub fn asd_pocs(
     let mut sim_time = 0.0;
     let mut peak = 0;
 
-    let one_iter = ReconOpts { iterations: 1, ..opts.common.clone() };
-    for it in 0..opts.common.iterations {
+    // the inner data sweep must not checkpoint: only the outer loop owns
+    // the durable state (x), snapshotted at outer-iteration granularity
+    let one_iter = ReconOpts { iterations: 1, checkpoint: None, ..opts.common.clone() };
+    let (mut ck, resumed) = checkpoint::setup(&opts.common.checkpoint, "asd-pocs")?;
+    let mut start = 0;
+    if let Some(mut st) = resumed {
+        start = st.iteration.min(opts.common.iterations);
+        residuals = st.residuals.clone();
+        scratch::recycle_volume(x.replace(st.volume("x")?));
+    }
+    for it in start..opts.common.iterations {
+        ctx.set_fault_iteration(it);
         // --- data fidelity sweep (OS-SART), warm-started from x ---
         // os_sart starts from zero, so apply it to the residual problem:
         // Δb = b − A x, then x ← x + recon(Δb).
@@ -82,6 +93,16 @@ pub fn asd_pocs(
 
         if opts.common.verbose {
             crate::log_info!("asd-pocs iter {it}: residual {:.4e}", residuals.last().unwrap());
+        }
+        if let Some(ck) = ck.as_mut() {
+            if ck.due(it + 1) {
+                ck.save(&CheckpointState {
+                    iteration: it + 1,
+                    residuals: residuals.clone(),
+                    volumes: vec![("x".into(), x.get().clone())],
+                    ..Default::default()
+                })?;
+            }
         }
     }
     sim_time += sess.sim_time_s;
@@ -121,6 +142,36 @@ mod tests {
         assert!(corr > 0.8, "correlation {corr}");
         // residual decreased
         assert!(r.residuals.last().unwrap() < &(r.residuals[0] * 0.8));
+    }
+
+    #[test]
+    fn fault_asd_pocs_resumes_from_checkpoint_bit_identically() {
+        // only the outer loop checkpoints; the inner OS-SART sweep and the
+        // TV descent replay deterministically from the restored x
+        use crate::coordinator::CheckpointConfig;
+        let n = 14;
+        let g = Geometry::cone_beam(n, 12);
+        let truth = phantom::cube(n, 0.5, 1.0);
+        let ctx = MultiGpu::gtx1080ti(2);
+        let (p, _) = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap();
+        let p = p.unwrap();
+        let dir = std::env::temp_dir()
+            .join("tigre_algo_ckpt")
+            .join(format!("asdpocs_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mk = |iterations, checkpoint| AsdPocsOpts {
+            common: ReconOpts { iterations, checkpoint, ..Default::default() },
+            subset_size: 3,
+            tv_iters: 4,
+            alpha: 0.002,
+            n_in: 5,
+        };
+        let clean = asd_pocs(&ctx, &g, &p, &mk(3, None)).unwrap();
+        let ck = Some(CheckpointConfig::new(&dir, 1));
+        let _partial = asd_pocs(&ctx, &g, &p, &mk(2, ck.clone())).unwrap();
+        let resumed = asd_pocs(&ctx, &g, &p, &mk(3, ck)).unwrap();
+        assert_eq!(resumed.volume.data, clean.volume.data);
+        assert_eq!(resumed.residuals, clean.residuals);
     }
 
     #[test]

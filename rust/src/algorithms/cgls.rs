@@ -5,6 +5,7 @@
 //! CGLS "fundamentally requires a matched backprojection" (paper §3.1),
 //! so the context is forced to pseudo-matched weights.
 
+use crate::coordinator::checkpoint::{self, CheckpointState};
 use crate::coordinator::{MultiGpu, ReconSession};
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
@@ -29,15 +30,31 @@ pub fn cgls(
     let ctx = matched_ctx(ctx);
     let mut sess = ReconSession::new(&ctx, g)?;
 
-    let mut x = Volume::zeros_like(g);
-    // r = b − Ax = b;  p = s = Aᵀr
-    let mut r = TrackedProjections::new(proj.clone());
-    let mut s = sess.backward(&r)?;
-    let mut p = TrackedVolume::new(s.clone());
-    let mut gamma = s.dot(&s);
-
+    let (mut ck, resumed) = checkpoint::setup(&opts.checkpoint, "cgls")?;
     let mut residuals = Vec::with_capacity(opts.iterations);
-    for it in 0..opts.iterations {
+    let mut start = 0;
+    let (mut x, mut r, mut s, mut p, mut gamma);
+    if let Some(mut st) = resumed {
+        // restore the whole CG recurrence: iterate x, direction p,
+        // running residual r and γ = ‖Aᵀr‖². `s` is overwritten before
+        // its first read, so a zero buffer of the right shape serves.
+        start = st.iteration.min(opts.iterations);
+        residuals = st.residuals.clone();
+        x = st.volume("x")?;
+        r = TrackedProjections::new(st.projections("r")?);
+        p = TrackedVolume::new(st.volume("p")?);
+        gamma = st.scalar("gamma")?;
+        s = Volume::zeros_like(g);
+    } else {
+        x = Volume::zeros_like(g);
+        // r = b − Ax = b;  p = s = Aᵀr
+        r = TrackedProjections::new(proj.clone());
+        s = sess.backward(&r)?;
+        p = TrackedVolume::new(s.clone());
+        gamma = s.dot(&s);
+    }
+    for it in start..opts.iterations {
+        ctx.set_fault_iteration(it);
         if gamma <= 0.0 {
             break;
         }
@@ -64,6 +81,17 @@ pub fn cgls(
         // p = s + β p
         for (pv, sv) in p.write().data.iter_mut().zip(&s.data) {
             *pv = sv + beta * *pv;
+        }
+        if let Some(ck) = ck.as_mut() {
+            if ck.due(it + 1) {
+                ck.save(&CheckpointState {
+                    iteration: it + 1,
+                    residuals: residuals.clone(),
+                    scalars: vec![("gamma".into(), gamma)],
+                    volumes: vec![("x".into(), x.clone()), ("p".into(), p.get().clone())],
+                    projections: vec![("r".into(), r.get().clone())],
+                })?;
+            }
         }
     }
     if opts.nonneg {
@@ -141,6 +169,42 @@ mod tests {
         let e_cgls = metrics::rmse(&truth, &r_cgls.volume);
         let e_fdk = metrics::rmse(&truth, &r_fdk.volume);
         assert!(e_cgls < e_fdk, "cgls {e_cgls} vs fdk {e_fdk}");
+    }
+
+    #[test]
+    fn fault_cgls_resumes_from_checkpoint_bit_identically() {
+        // CGLS carries the richest recurrence (x, p, r, γ): the resumed
+        // run must replay it exactly to stay bit-identical.
+        use crate::coordinator::CheckpointConfig;
+        let n = 14;
+        let g = Geometry::cone_beam(n, 12);
+        let truth = phantom::shepp_logan(n);
+        let ctx = MultiGpu::gtx1080ti(2);
+        let (p, _) = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap();
+        let p = p.unwrap();
+        let dir = std::env::temp_dir()
+            .join("tigre_algo_ckpt")
+            .join(format!("cgls_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let clean =
+            cgls(&ctx, &g, &p, &ReconOpts { iterations: 3, ..Default::default() }).unwrap();
+        let ck = Some(CheckpointConfig::new(&dir, 1));
+        let _partial = cgls(
+            &ctx,
+            &g,
+            &p,
+            &ReconOpts { iterations: 2, checkpoint: ck.clone(), ..Default::default() },
+        )
+        .unwrap();
+        let resumed = cgls(
+            &ctx,
+            &g,
+            &p,
+            &ReconOpts { iterations: 3, checkpoint: ck, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(resumed.volume.data, clean.volume.data);
+        assert_eq!(resumed.residuals, clean.residuals);
     }
 
     #[test]

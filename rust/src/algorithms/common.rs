@@ -4,6 +4,7 @@
 //! the cumulative simulated time and peak memory the old `TrackedOps`
 //! tracked, plus the cross-iteration device residency cache.
 
+use crate::coordinator::checkpoint::CheckpointConfig;
 use crate::volume::Volume;
 
 /// Options common to the iterative algorithms.
@@ -16,11 +17,17 @@ pub struct ReconOpts {
     pub nonneg: bool,
     /// Verbose per-iteration logging.
     pub verbose: bool,
+    /// Durable iteration checkpointing (ISSUE 7): when set, the
+    /// algorithm snapshots its recurrence state every
+    /// `checkpoint.every` iterations and *resumes from* any checkpoint
+    /// already present in the directory — the resumed run's final
+    /// iterate is bit-identical to an uninterrupted one.
+    pub checkpoint: Option<CheckpointConfig>,
 }
 
 impl Default for ReconOpts {
     fn default() -> Self {
-        Self { iterations: 10, lambda: 1.0, nonneg: true, verbose: false }
+        Self { iterations: 10, lambda: 1.0, nonneg: true, verbose: false, checkpoint: None }
     }
 }
 

@@ -2,6 +2,7 @@
 //! `min ‖Ax − b‖² + λ·TV(x)` (Beck & Teboulle 2009, as shipped in TIGRE).
 //! The TV prox is solved by the multi-GPU ROF denoiser (§2.3).
 
+use crate::coordinator::checkpoint::{self, CheckpointState};
 use crate::coordinator::regularizer::rof_denoise_split;
 use crate::coordinator::{MultiGpu, ReconSession};
 use crate::geometry::Geometry;
@@ -60,7 +61,19 @@ pub fn fista(
     // simulated time of the TV prox calls (outside the session)
     let mut prox_sim_s = 0.0f64;
 
-    for it in 0..opts.common.iterations {
+    let (mut ck, resumed) = checkpoint::setup(&opts.common.checkpoint, "fista")?;
+    let mut start = 0;
+    if let Some(mut st) = resumed {
+        // restore the momentum recurrence: both iterates and t (an f32
+        // stored as f64 — the widening is exact, so the cast back is too)
+        start = st.iteration.min(opts.common.iterations);
+        residuals = st.residuals.clone();
+        scratch::recycle_volume(std::mem::replace(&mut x, st.volume("x")?));
+        scratch::recycle_volume(y.replace(st.volume("y")?));
+        t = st.scalar("t")? as f32;
+    }
+    for it in start..opts.common.iterations {
+        ctx.set_fault_iteration(it);
         // gradient step on y: y − step·Aᵀ(Ay − b). The session forms the
         // residual against the resident b, returning Aᵀ(b − Ay) — the
         // negated gradient — so the update adds `+step` (IEEE negation is
@@ -93,6 +106,17 @@ pub fn fista(
         t = t_new;
         if opts.common.verbose {
             crate::log_info!("fista iter {it}: residual {:.4e}", residuals.last().unwrap());
+        }
+        if let Some(ck) = ck.as_mut() {
+            if ck.due(it + 1) {
+                ck.save(&CheckpointState {
+                    iteration: it + 1,
+                    residuals: residuals.clone(),
+                    scalars: vec![("t".into(), t as f64)],
+                    volumes: vec![("x".into(), x.clone()), ("y".into(), y.get().clone())],
+                    ..Default::default()
+                })?;
+            }
         }
     }
     sess.recycle_projections(b);
@@ -132,6 +156,34 @@ mod tests {
         let first = r.residuals[0];
         let last = *r.residuals.last().unwrap();
         assert!(last < first * 0.5, "residuals {first} → {last}");
+    }
+
+    #[test]
+    fn fault_fista_resumes_from_checkpoint_bit_identically() {
+        // momentum recurrence (x, y, t) must survive the round trip
+        use crate::coordinator::CheckpointConfig;
+        let n = 14;
+        let g = Geometry::cone_beam(n, 12);
+        let truth = phantom::cube(n, 0.5, 1.0);
+        let ctx = MultiGpu::gtx1080ti(2);
+        let (p, _) = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap();
+        let p = p.unwrap();
+        let dir = std::env::temp_dir()
+            .join("tigre_algo_ckpt")
+            .join(format!("fista_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mk = |iterations, checkpoint| FistaOpts {
+            common: ReconOpts { iterations, checkpoint, ..Default::default() },
+            tv_lambda: 0.01,
+            tv_iters: 4,
+            step: None,
+        };
+        let clean = fista(&ctx, &g, &p, &mk(3, None)).unwrap();
+        let ck = Some(CheckpointConfig::new(&dir, 1));
+        let _partial = fista(&ctx, &g, &p, &mk(2, ck.clone())).unwrap();
+        let resumed = fista(&ctx, &g, &p, &mk(3, ck)).unwrap();
+        assert_eq!(resumed.volume.data, clean.volume.data);
+        assert_eq!(resumed.residuals, clean.residuals);
     }
 
     #[test]

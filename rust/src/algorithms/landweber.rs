@@ -7,6 +7,7 @@
 //! * MLEM: `x ← x ∘ Aᵀ(b ⊘ Ax) ⊘ Aᵀ1` — the multiplicative EM update for
 //!   Poisson data (requires non-negative projections).
 
+use crate::coordinator::checkpoint::{self, CheckpointState};
 use crate::coordinator::{MultiGpu, ReconSession};
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
@@ -58,7 +59,15 @@ pub fn landweber(
     let b = TrackedProjections::new(proj.clone());
     let mut x = TrackedVolume::new(Volume::zeros_like(g));
     let mut residuals = Vec::with_capacity(opts.iterations);
-    for it in 0..opts.iterations {
+    let (mut ck, resumed) = checkpoint::setup(&opts.checkpoint, "landweber")?;
+    let mut start = 0;
+    if let Some(mut st) = resumed {
+        start = st.iteration.min(opts.iterations);
+        residuals = st.residuals.clone();
+        scratch::recycle_volume(x.replace(st.volume("x")?));
+    }
+    for it in start..opts.iterations {
+        ctx.set_fault_iteration(it);
         let ax = sess.forward(&x)?;
         // upd = Aᵀ(b − Ax), with the residual formed on-device against
         // the resident b (see ReconSession::backward_residual)
@@ -72,6 +81,16 @@ pub fn landweber(
         }
         if opts.verbose {
             crate::log_info!("landweber iter {it}: residual {:.4e}", residuals.last().unwrap());
+        }
+        if let Some(ck) = ck.as_mut() {
+            if ck.due(it + 1) {
+                ck.save(&CheckpointState {
+                    iteration: it + 1,
+                    residuals: residuals.clone(),
+                    volumes: vec![("x".into(), x.get().clone())],
+                    ..Default::default()
+                })?;
+            }
         }
     }
     sess.recycle_projections(b);
@@ -117,7 +136,15 @@ pub fn mlem(
         v
     });
     let mut residuals = Vec::with_capacity(opts.iterations);
-    for it in 0..opts.iterations {
+    let (mut ck, resumed) = checkpoint::setup(&opts.checkpoint, "mlem")?;
+    let mut start = 0;
+    if let Some(mut st) = resumed {
+        start = st.iteration.min(opts.iterations);
+        residuals = st.residuals.clone();
+        scratch::recycle_volume(x.replace(st.volume("x")?));
+    }
+    for it in start..opts.iterations {
+        ctx.set_fault_iteration(it);
         // reuse Ax in place as the ratio buffer b ⊘ Ax (the in-place
         // write bumps the epoch, so the session restages it — correctly)
         let mut ratio = sess.forward(&x)?;
@@ -136,6 +163,16 @@ pub fn mlem(
         scratch::recycle_volume(corr);
         if opts.verbose {
             crate::log_info!("mlem iter {it}: residual {:.4e}", residuals.last().unwrap());
+        }
+        if let Some(ck) = ck.as_mut() {
+            if ck.due(it + 1) {
+                ck.save(&CheckpointState {
+                    iteration: it + 1,
+                    residuals: residuals.clone(),
+                    volumes: vec![("x".into(), x.get().clone())],
+                    ..Default::default()
+                })?;
+            }
         }
     }
     scratch::recycle_volume(sens);
@@ -186,6 +223,101 @@ mod tests {
         let (g, _, mut p, ctx) = setup(10, 6);
         p.data[0] = -1.0;
         assert!(mlem(&ctx, &g, &p, &ReconOpts::default()).is_err());
+    }
+
+    // -- fault tolerance & checkpoint/resume (ISSUE 7) --------------------
+
+    fn ckpt_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join("tigre_algo_ckpt")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn fault_landweber_is_bit_identical_under_mid_run_faults() {
+        use crate::coordinator::splitter::{image_split_mem, SplitConfig};
+        use crate::simgpu::fault::{FaultPlan, FaultScope};
+        // image-split regime so every device owns launch units
+        let (g, _, p, _) = setup(14, 12);
+        let mem = image_split_mem(&g, &SplitConfig::default());
+        let opts = ReconOpts { iterations: 3, nonneg: false, ..Default::default() };
+        let clean =
+            landweber(&MultiGpu::gtx1080ti(2).with_device_mem(mem), &g, &p, &opts).unwrap();
+        // a retried transient burst on device 0 plus a permanent loss of
+        // device 1 at iteration 1: the remaining iterations run degraded
+        // on the survivor, and every iterate must stay bit-identical
+        let faulted_ctx = MultiGpu::gtx1080ti(2).with_device_mem(mem).with_fault_plan(
+            FaultPlan::new().transient_launch_at(0, 0, 0, 2).device_loss_at(1, 0, 1),
+        );
+        let faulted = landweber(&faulted_ctx, &g, &p, &opts).unwrap();
+        assert!(
+            faulted_ctx.fault.as_ref().unwrap().is_lost(FaultScope::Real, 1),
+            "the loss site must actually have fired"
+        );
+        assert_eq!(faulted.volume.data, clean.volume.data);
+        assert_eq!(faulted.residuals, clean.residuals);
+    }
+
+    #[test]
+    fn fault_landweber_resumes_from_checkpoint_bit_identically() {
+        use crate::coordinator::CheckpointConfig;
+        let (g, _, p, ctx) = setup(14, 10);
+        let dir = ckpt_dir("landweber");
+        let clean = landweber(
+            &ctx,
+            &g,
+            &p,
+            &ReconOpts { iterations: 3, ..Default::default() },
+        )
+        .unwrap();
+        // the "killed" run: two iterations, checkpointed every iteration
+        let ck = Some(CheckpointConfig::new(&dir, 1));
+        let partial = landweber(
+            &ctx,
+            &g,
+            &p,
+            &ReconOpts { iterations: 2, checkpoint: ck.clone(), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(partial.residuals.len(), 2);
+        // the resumed run restarts from the durable iterate and finishes
+        let resumed = landweber(
+            &ctx,
+            &g,
+            &p,
+            &ReconOpts { iterations: 3, checkpoint: ck, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(resumed.volume.data, clean.volume.data);
+        assert_eq!(resumed.residuals, clean.residuals);
+    }
+
+    #[test]
+    fn fault_mlem_resumes_from_checkpoint_bit_identically() {
+        use crate::coordinator::CheckpointConfig;
+        let (g, _, p, ctx) = setup(14, 10);
+        let dir = ckpt_dir("mlem");
+        let clean =
+            mlem(&ctx, &g, &p, &ReconOpts { iterations: 3, ..Default::default() }).unwrap();
+        let ck = Some(CheckpointConfig::new(&dir, 1));
+        let _partial = mlem(
+            &ctx,
+            &g,
+            &p,
+            &ReconOpts { iterations: 2, checkpoint: ck.clone(), ..Default::default() },
+        )
+        .unwrap();
+        let resumed = mlem(
+            &ctx,
+            &g,
+            &p,
+            &ReconOpts { iterations: 3, checkpoint: ck, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(resumed.volume.data, clean.volume.data);
+        assert_eq!(resumed.residuals, clean.residuals);
     }
 
     #[test]

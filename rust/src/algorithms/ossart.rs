@@ -7,6 +7,7 @@
 //! the volume) and `V_s = 1 / Aᵀ_s·1` (backprojection weights). Subset
 //! size 1 gives SART, the full angle set gives SIRT.
 
+use crate::coordinator::checkpoint::{self, CheckpointState};
 use crate::coordinator::{MultiGpu, ReconSession};
 use crate::geometry::Geometry;
 use crate::kernels::{scratch, BackprojWeight};
@@ -72,7 +73,17 @@ pub fn os_sart(
         subs.push(Subset { sess, idxs: idxs.clone(), w, v });
     }
 
-    for it in 0..opts.iterations {
+    // checkpoints snapshot at outer-sweep granularity; the subset weights
+    // above are recomputed deterministically on resume
+    let (mut ck, resumed) = checkpoint::setup(&opts.checkpoint, "os-sart")?;
+    let mut start = 0;
+    if let Some(mut st) = resumed {
+        start = st.iteration.min(opts.iterations);
+        residuals = st.residuals.clone();
+        scratch::recycle_volume(x.replace(st.volume("x")?));
+    }
+    for it in start..opts.iterations {
+        ctx.set_fault_iteration(it);
         let mut res2 = 0.0f64;
         for sub in &mut subs {
             let b_s = proj.extract_subset(&sub.idxs);
@@ -99,6 +110,16 @@ pub fn os_sart(
         residuals.push(res);
         if opts.verbose {
             crate::log_info!("os-sart iter {it}: residual {res:.4e}");
+        }
+        if let Some(ck) = ck.as_mut() {
+            if ck.due(it + 1) {
+                ck.save(&CheckpointState {
+                    iteration: it + 1,
+                    residuals: residuals.clone(),
+                    volumes: vec![("x".into(), x.get().clone())],
+                    ..Default::default()
+                })?;
+            }
         }
     }
 
@@ -204,9 +225,43 @@ mod tests {
     #[test]
     fn nonneg_constraint_respected() {
         let (g, _, proj, ctx) = setup(12, 10);
-        let opts = ReconOpts { iterations: 3, lambda: 1.2, nonneg: true, verbose: false };
+        let opts = ReconOpts { iterations: 3, lambda: 1.2, nonneg: true, ..Default::default() };
         let r = os_sart(&ctx, &g, &proj, 5, &opts).unwrap();
         assert!(r.volume.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn fault_os_sart_resumes_from_checkpoint_bit_identically() {
+        // the subset weights W/V are recomputed on resume; only x and the
+        // residual history travel through the checkpoint
+        use crate::coordinator::CheckpointConfig;
+        let (g, _, proj, ctx) = setup(14, 12);
+        let dir = std::env::temp_dir()
+            .join("tigre_algo_ckpt")
+            .join(format!("ossart_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let clean =
+            os_sart(&ctx, &g, &proj, 3, &ReconOpts { iterations: 3, ..Default::default() })
+                .unwrap();
+        let ck = Some(CheckpointConfig::new(&dir, 1));
+        let _partial = os_sart(
+            &ctx,
+            &g,
+            &proj,
+            3,
+            &ReconOpts { iterations: 2, checkpoint: ck.clone(), ..Default::default() },
+        )
+        .unwrap();
+        let resumed = os_sart(
+            &ctx,
+            &g,
+            &proj,
+            3,
+            &ReconOpts { iterations: 3, checkpoint: ck, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(resumed.volume.data, clean.volume.data);
+        assert_eq!(resumed.residuals, clean.residuals);
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::coordinator::{ExecMode, MergeStrategy, MultiGpu, ReconSession, SplitC
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::phantom;
+use crate::simgpu::fault::FaultPlan;
 use crate::util::json::Json;
 use crate::util::stats::bench;
 use crate::volume::{
@@ -144,7 +145,52 @@ pub fn run_suite(smoke: bool, threads: usize) -> Vec<CoordBenchEntry> {
     // merge-strategy ablation (PR 6): linear host fold vs reduction tree
     // per device count, on deterministic DES makespans
     out.extend(bench_merge(threads));
+    // fault-tolerance ablation (ISSUE 7): recovery overhead of one
+    // injected transient launch failure, on deterministic DES makespans
+    out.extend(bench_fault(threads));
     out
+}
+
+/// Fault-tolerance ablation (ISSUE 7): simulated image-split forward
+/// makespan with ONE injected transient launch failure at (device 0,
+/// unit 0) vs the fault-free run, per device count. The real numeric
+/// path is bit-identical under faults (a tested invariant), so — as with
+/// [`bench_merge`] — each entry reports the deterministic DES makespans:
+/// `sequential_median_s` = faulted, `pipelined_median_s` = clean, and
+/// `speedup` is the **recovery-overhead factor** (≥1; the tracked gate is
+/// <2×, i.e. a single retried launch must never double the makespan).
+/// A fresh context — hence a fresh fault plan — is built per measurement
+/// because injected sites fire once and then stay consumed.
+fn bench_fault(threads: usize) -> Vec<CoordBenchEntry> {
+    const N: usize = 256;
+    const A: usize = 128;
+    let g = Geometry::cone_beam(N, A);
+    let mem = image_split_mem(&g, &SplitConfig::default());
+    [1usize, 2, 4]
+        .into_iter()
+        .map(|gpus| {
+            let makespan = |faulted: bool| -> f64 {
+                let ctx =
+                    MultiGpu::gtx1080ti(gpus).with_device_mem(mem).with_threads(threads);
+                let ctx = if faulted {
+                    ctx.with_fault_plan(FaultPlan::new().transient_launch(0, 0))
+                } else {
+                    ctx
+                };
+                ctx.forward(&g, None, ExecMode::SimOnly)
+                    .expect("bench fault sim")
+                    .1
+                    .makespan_s
+            };
+            CoordBenchEntry {
+                name: format!("fault fp image-split n={N} a={A} gpus={gpus}"),
+                sequential_median_s: makespan(true),
+                pipelined_median_s: makespan(false),
+                sim_median_s: 0.0,
+                samples: 1,
+            }
+        })
+        .collect()
 }
 
 /// Merge-strategy ablation (PR 6): simulated image-split forward makespan
@@ -523,8 +569,8 @@ mod tests {
         let entries = run_suite(true, 2);
         assert_eq!(
             entries.len(),
-            12,
-            "fp/bp × image-split/angle-split + residency + ooc fp/bp + 5 merge counts"
+            15,
+            "fp/bp × image-split/angle-split + residency + ooc fp/bp + 5 merge counts + 3 fault counts"
         );
         for e in &entries {
             assert!(
@@ -562,5 +608,20 @@ mod tests {
             m(16).speedup(),
             m(8).speedup()
         );
+        // fault entries compare a faulted vs clean DES makespan: one
+        // retried transient must cost something but never double the run
+        for gpus in [1usize, 2, 4] {
+            let f = entries
+                .iter()
+                .find(|e| {
+                    e.name.starts_with("fault") && e.name.ends_with(&format!("gpus={gpus}"))
+                })
+                .unwrap_or_else(|| panic!("missing fault entry for gpus={gpus}"));
+            let overhead = f.speedup();
+            assert!(
+                overhead > 1.0 && overhead < 2.0,
+                "fault gpus={gpus}: recovery overhead {overhead} outside (1, 2)"
+            );
+        }
     }
 }

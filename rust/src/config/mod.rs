@@ -130,6 +130,8 @@ fn reconstruct(rest: &[String]) -> anyhow::Result<()> {
         .opt("artifacts", "use PJRT artifacts from this dir", None)
         .opt("out", "save volume to this .raw path", None)
         .opt("slice", "save central slice PGM to this path", None)
+        .opt("checkpoint", "checkpoint/resume directory (iterative algorithms)", None)
+        .opt("checkpoint-every", "iterations between checkpoints", Some("1"))
         .flag("verbose", "per-iteration logging")
         .flag("help-cmd", "show options");
     let args = cmd.parse(rest)?;
@@ -153,9 +155,18 @@ fn reconstruct(rest: &[String]) -> anyhow::Result<()> {
         fp_stats.splits_per_device
     );
 
+    // a populated checkpoint dir makes this run resume where it stopped
+    let checkpoint = match args.get("checkpoint") {
+        Some(dir) => {
+            let every = args.get_usize("checkpoint-every")?.unwrap();
+            Some(crate::coordinator::CheckpointConfig::new(dir, every))
+        }
+        None => None,
+    };
     let opts = ReconOpts {
         iterations: iters,
         verbose: args.flag("verbose"),
+        checkpoint,
         ..Default::default()
     };
     let algo = args.get("algo").unwrap();

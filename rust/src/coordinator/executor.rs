@@ -4,7 +4,9 @@
 use crate::geometry::Geometry;
 use crate::kernels::{BackprojWeight, Projector};
 use crate::simgpu::timeline::{breakdown, Breakdown};
-use crate::simgpu::{CostModel, GpuSpec, SimNode};
+use crate::simgpu::{CostModel, FaultPlan, FaultScope, GpuSpec, SimNode};
+
+use std::sync::Arc;
 use crate::volume::{
     OocProjections, OocVolume, ProjChunkView, ProjInput, ProjectionSet, Volume, VolumeInput,
     VolumeSlabView,
@@ -124,6 +126,12 @@ pub struct MultiGpu {
     pub backend: Backend,
     /// Real-execution strategy (pipelined vs sequential baseline).
     pub exec: ExecutorConfig,
+    /// Optional deterministic fault schedule (ISSUE 7). Drives both the
+    /// simulated timeline (`FaultScope::Sim`, attached by `fresh_sim`)
+    /// and the real pipelined executor (`FaultScope::Real`: bounded
+    /// retry for transient faults, replanning onto survivors for
+    /// permanent device loss). `None` (default) = fault-free.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl MultiGpu {
@@ -136,6 +144,7 @@ impl MultiGpu {
             split: super::splitter::SplitConfig::default(),
             backend: Backend::default(),
             exec: ExecutorConfig::default(),
+            fault: None,
         }
     }
 
@@ -189,6 +198,25 @@ impl MultiGpu {
         self.with_merge_strategy(MergeStrategy::Tree)
     }
 
+    /// Attach a deterministic fault schedule: subsequent operator calls
+    /// inject its faults into the simulated timeline and the real
+    /// pipelined executor, which recovers per the ISSUE-7 policy
+    /// (bounded retry / replan onto survivors) with bit-identical
+    /// output. The plan is stateful — loss is sticky across calls — so
+    /// build a fresh one per reconstruction scenario.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(Arc::new(plan));
+        self
+    }
+
+    /// Advance the fault plan's iteration gate (called by the iterative
+    /// algorithms at the top of each iteration). No-op without a plan.
+    pub fn set_fault_iteration(&self, it: usize) {
+        if let Some(f) = &self.fault {
+            f.set_iteration(it);
+        }
+    }
+
     /// Total kernel host threads the backend was configured with.
     pub(crate) fn backend_threads(&self) -> usize {
         match &self.backend {
@@ -199,7 +227,12 @@ impl MultiGpu {
     }
 
     pub fn fresh_sim(&self) -> SimNode {
-        SimNode::new(self.n_gpus, self.spec.clone(), self.cost.clone())
+        let mut sim = SimNode::new(self.n_gpus, self.spec.clone(), self.cost.clone());
+        if let Some(f) = &self.fault {
+            f.begin_op(FaultScope::Sim);
+            sim.set_fault_plan(f.clone());
+        }
+        sim
     }
 
     /// Forward projection `Ax` (Algorithm 1).

@@ -57,9 +57,23 @@
 //! (real path) / peer-to-peer device links (simulated path). Both
 //! execute the same canonical schedule ([`splitter::merge_schedule`]),
 //! so output stays bit-identical — only the merge critical path changes.
+//!
+//! Since PR 7 execution is fault-tolerant: a deterministic
+//! [`crate::simgpu::fault::FaultPlan`] injects device loss, transient
+//! launch failures, allocation failures and disk-I/O errors at chosen
+//! (device, unit, iteration) coordinates into both the simulated timeline
+//! (recovery time appears in the makespan) and the real pipelined
+//! executor, which retries transient faults with bounded backoff and
+//! replans a lost device's remaining units onto the survivors
+//! ([`splitter::replan_excluding`]) — FP/BP output stays bit-identical to
+//! the fault-free run because recovery re-executes the *same* unit
+//! partition in the canonical merge order. [`checkpoint`] adds
+//! iteration-granular durable snapshots so a killed reconstruction
+//! resumes from its last checkpoint with a bit-identical final iterate.
 
 pub mod backward;
 pub mod baseline;
+pub mod checkpoint;
 pub mod executor;
 pub mod forward;
 pub mod pipeline;
@@ -67,6 +81,7 @@ pub mod regularizer;
 pub mod residency;
 pub mod splitter;
 
+pub use checkpoint::{CheckpointConfig, CheckpointState, Checkpointer};
 pub use executor::{Backend, ExecMode, ExecutorConfig, MultiGpu, OpStats};
 pub use residency::{ReconSession, ResidencyCache, ResidencyStats};
 pub use splitter::{

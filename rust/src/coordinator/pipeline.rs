@@ -77,6 +77,7 @@ use std::sync::mpsc;
 use crate::geometry::Geometry;
 use crate::geometry::split::{AngleChunk, ZSlab};
 use crate::kernels::scratch;
+use crate::simgpu::fault::{FaultScope, LaunchFault, MAX_LAUNCH_RETRIES};
 use crate::util::threadpool::{SendPtr, ThreadPool};
 use crate::volume::{
     OocProjections, OocVolume, ProjChunkView, ProjInput, ProjectionSet, Volume, VolumeInput,
@@ -84,7 +85,7 @@ use crate::volume::{
 };
 
 use super::executor::{Backend, MultiGpu};
-use super::splitter::{merge_schedule, DeviceAssignment, MergeStrategy, Plan};
+use super::splitter::{merge_schedule, replan_excluding, DeviceAssignment, MergeStrategy, Plan};
 
 /// Staging buffers cycled through each worker's merge lane — the paper's
 /// double buffer (Alg. 1 line 6 / Alg. 2 line 6). The out-of-core
@@ -145,6 +146,224 @@ fn join_all<T>(handles: Vec<crate::util::threadpool::ScopedHandle<'_, T>>) -> Ve
 }
 
 // ---------------------------------------------------------------------------
+// fault injection and unit-level recovery (ISSUE 7)
+// ---------------------------------------------------------------------------
+
+/// Real-path backoff before retry `i` of a transiently-failed launch,
+/// in microseconds (doubling; the real mirror of the simulated
+/// `CostModel::fault_retry_backoff_s`). Tiny so fault tests stay fast —
+/// the *policy* (bounded count, doubling) is what production tuning
+/// would scale up.
+const REAL_RETRY_BACKOFF_US: u64 = 50;
+
+/// Reset the fault plan's real-scope ordinals at an operator entry.
+fn begin_real_op(ctx: &MultiGpu) {
+    if let Some(plan) = &ctx.fault {
+        plan.begin_op(FaultScope::Real);
+    }
+}
+
+/// Pre-launch fault gate for one unit on `dev`: consumes injected
+/// transient failures by sleeping the bounded, doubling backoff and then
+/// letting the retried launch proceed (bit-identity is untouched — the
+/// unit still executes exactly once). Returns `true` when the device is
+/// permanently lost — injected directly, or escalated by a transient
+/// burst exceeding [`MAX_LAUNCH_RETRIES`] — in which case the worker
+/// stops issuing units and the host replans the remainder.
+fn launch_gate(ctx: &MultiGpu, dev: usize) -> bool {
+    let Some(plan) = &ctx.fault else { return false };
+    match plan.launch_fault(FaultScope::Real, dev) {
+        LaunchFault::Ok => false,
+        LaunchFault::Transient(k) if k <= MAX_LAUNCH_RETRIES => {
+            for i in 0..k {
+                std::thread::sleep(std::time::Duration::from_micros(
+                    REAL_RETRY_BACKOFF_US << i,
+                ));
+            }
+            false
+        }
+        LaunchFault::Transient(_) => {
+            plan.mark_lost(FaultScope::Real, dev);
+            true
+        }
+        LaunchFault::Lost => true,
+    }
+}
+
+/// Per-assignment expected launch counts and the loss flags derived from
+/// what the workers actually completed. Returns `None` when every
+/// assignment ran to completion (the fast path — no recovery needed).
+fn loss_flags(
+    ctx: &MultiGpu,
+    active: &[&DeviceAssignment],
+    completed: &[usize],
+    needs: &[usize],
+) -> Option<Vec<bool>> {
+    if completed.iter().zip(needs).all(|(c, n)| c >= n) {
+        return None;
+    }
+    let n = ctx.n_gpus.max(active.iter().map(|d| d.device + 1).max().unwrap_or(0));
+    let mut lost = vec![false; n];
+    for (i, dev) in active.iter().enumerate() {
+        if completed[i] < needs[i] {
+            lost[dev.device] = true;
+        }
+    }
+    Some(lost)
+}
+
+/// The volume input a lost forward assignment recovers from.
+#[derive(Clone, Copy)]
+enum FpSource<'a> {
+    Ram(&'a Volume),
+    Ooc(&'a OocVolume),
+}
+
+/// Continue each lost device's image-split forward assignment from its
+/// first unexecuted unit, folding every launch into that assignment's
+/// own partial **in the original launch order** (slab-major, then
+/// chunk) — the same order the worker's merge lane used. The unit
+/// partition and per-assignment fold order are unchanged, so the
+/// canonical cross-device merge that follows produces bit-identical
+/// output to the fault-free run. `replan_excluding` validates survivors
+/// exist (and pins the ownership policy); the units themselves execute
+/// on the host's kernel threads, which *are* the surviving capacity in
+/// this CPU-backed reproduction.
+fn recover_fp_losses(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    src: FpSource<'_>,
+    plan: &Plan,
+    active: &[&DeviceAssignment],
+    completed: &[usize],
+    folded: &mut [Option<ProjectionSet>],
+) -> anyhow::Result<()> {
+    let n_chunks = plan.angle_chunks.len();
+    let needs: Vec<usize> = active.iter().map(|d| d.slabs.len() * n_chunks).collect();
+    let Some(lost) = loss_flags(ctx, active, completed, &needs) else {
+        return Ok(());
+    };
+    let _owners = replan_excluding(lost.len(), &lost).map_err(|e| anyhow::anyhow!(e))?;
+    let per = g.n_det[0] * g.n_det[1];
+    let plane = g.n_vox[0] * g.n_vox[1];
+    let threads = ctx.backend_threads();
+    let mut slab_buf: Vec<f32> = Vec::new();
+    let mut chunk_buf = scratch::take_zeroed(
+        plan.angle_chunks.iter().map(|c| c.len()).max().unwrap_or(0) * per,
+    );
+    for (i, dev) in active.iter().enumerate() {
+        if completed[i] >= needs[i] {
+            continue;
+        }
+        debug_assert_ne!(_owners[dev.device], dev.device, "lost device needs a new owner");
+        let partial = folded[i]
+            .as_mut()
+            .expect("loss degrades the tree, so every worker returns its partial");
+        for unit in completed[i]..needs[i] {
+            let slab = dev.slabs[unit / n_chunks];
+            let ch = plan.angle_chunks[unit % n_chunks];
+            let gs = g.slab_geometry(slab.z0, slab.z1);
+            let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+            let sub: VolumeSlabView<'_> = match src {
+                FpSource::Ram(v) => v.slab_view(slab.z0, slab.z1),
+                FpSource::Ooc(store) => {
+                    slab_buf.resize(slab.len() * plane, 0.0);
+                    store.load_slab_into(slab.z0, slab.z1, &mut slab_buf)?;
+                    VolumeSlabView {
+                        nx: g.n_vox[0],
+                        ny: g.n_vox[1],
+                        nz: slab.len(),
+                        data: &slab_buf,
+                    }
+                }
+            };
+            chunk_buf.resize(ch.len() * per, 0.0);
+            ctx.kernel_forward_into(&gc, &sub, &mut chunk_buf, threads);
+            let dst = &mut partial.data[ch.a0 * per..ch.a0 * per + chunk_buf.len()];
+            for (o, v) in dst.iter_mut().zip(&chunk_buf) {
+                *o += *v;
+            }
+        }
+    }
+    scratch::recycle(chunk_buf);
+    Ok(())
+}
+
+/// The projection input a lost backprojection assignment recovers from.
+#[derive(Clone, Copy)]
+enum BpSource<'a> {
+    Ram(&'a ProjectionSet),
+    Ooc(&'a OocProjections),
+}
+
+/// Continue each lost device's backprojection assignment from its first
+/// unexecuted unit, accumulating into the shared output exactly as the
+/// worker's merge lane would have (zeroed per-launch buffer, `+=` into
+/// the slab's z-window, launch order preserved) — device z-ranges are
+/// disjoint, so recovered output is bit-identical by the same argument
+/// as the fault-free path.
+fn recover_bp_losses(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    src: BpSource<'_>,
+    plan: &Plan,
+    active: &[&DeviceAssignment],
+    completed: &[usize],
+    out: &mut Volume,
+) -> anyhow::Result<()> {
+    let n_chunks = plan.angle_chunks.len();
+    let needs: Vec<usize> = active.iter().map(|d| d.slabs.len() * n_chunks).collect();
+    let Some(lost) = loss_flags(ctx, active, completed, &needs) else {
+        return Ok(());
+    };
+    replan_excluding(lost.len(), &lost).map_err(|e| anyhow::anyhow!(e))?;
+    let per = g.n_det[0] * g.n_det[1];
+    let plane = g.n_vox[0] * g.n_vox[1];
+    let threads = ctx.backend_threads();
+    let mut chunk_buf: Vec<f32> = Vec::new();
+    let mut acc = scratch::take_zeroed(
+        active
+            .iter()
+            .flat_map(|d| d.slabs.iter())
+            .map(|s| s.len())
+            .max()
+            .unwrap_or(0)
+            * plane,
+    );
+    for (i, dev) in active.iter().enumerate() {
+        for unit in completed[i]..needs[i] {
+            let slab = dev.slabs[unit / n_chunks];
+            let ch = plan.angle_chunks[unit % n_chunks];
+            let gs = g.slab_geometry(slab.z0, slab.z1);
+            let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
+            let view: ProjChunkView<'_> = match src {
+                BpSource::Ram(p) => p.chunk_view(ch.a0, ch.a1),
+                BpSource::Ooc(store) => {
+                    chunk_buf.resize(ch.len() * per, 0.0);
+                    store.load_chunk_into(ch.a0, ch.a1, &mut chunk_buf)?;
+                    ProjChunkView {
+                        nu: g.n_det[0],
+                        nv: g.n_det[1],
+                        n_angles: ch.len(),
+                        data: &chunk_buf,
+                    }
+                }
+            };
+            let slab_len = slab.len() * plane;
+            acc.clear();
+            acc.resize(slab_len, 0.0); // backproject_into accumulates
+            ctx.kernel_backward_into(&gc, &view, &mut acc, threads);
+            let off = slab.z0 * plane;
+            for (o, v) in out.data[off..off + slab_len].iter_mut().zip(&acc) {
+                *o += *v;
+            }
+        }
+    }
+    scratch::recycle(acc);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // cross-device merge of image-split forward partials
 // ---------------------------------------------------------------------------
 
@@ -185,7 +404,16 @@ fn tree_roles(n: usize) -> Vec<TreeRole> {
 /// canonical schedule in [`fold_partials_into`] — bit-identical output,
 /// merge no longer overlapped.
 fn tree_roles_for(ctx: &MultiGpu, workers: usize, n_active: usize) -> Vec<Option<TreeRole>> {
-    if ctx.exec.merge == MergeStrategy::Tree && workers >= n_active && n_active > 1 {
+    // A fault plan that can lose a device also degrades the tree to the
+    // host-side fold: a lost worker can never feed its tree channel, so
+    // an in-worker recv on it would deadlock the scope. Same canonical
+    // schedule either way ⇒ same bits (ISSUE 7).
+    let loss_planned = ctx.fault.as_ref().is_some_and(|f| f.plans_loss());
+    if ctx.exec.merge == MergeStrategy::Tree
+        && workers >= n_active
+        && n_active > 1
+        && !loss_planned
+    {
         tree_roles(n_active).into_iter().map(Some).collect()
     } else {
         (0..n_active).map(|_| None).collect()
@@ -257,9 +485,13 @@ pub fn forward_pipelined(
     vol: VolumeInput<'_>,
     plan: &Plan,
 ) -> anyhow::Result<ProjectionSet> {
+    begin_real_op(ctx);
     match vol {
-        VolumeInput::Ram(v) => Ok(forward_pipelined_ram(ctx, g, v, plan)),
+        VolumeInput::Ram(v) => forward_pipelined_ram(ctx, g, v, plan),
         VolumeInput::Ooc(store) => {
+            if let Some(f) = &ctx.fault {
+                store.set_fault_plan(f.clone());
+            }
             if !plan.image_split {
                 // angle-split precondition: the volume fits the host
                 // budget, so read_volume serves from the store cache on
@@ -267,34 +499,52 @@ pub fn forward_pipelined(
                 let v = store.read_volume()?;
                 let out = forward_pipelined_ram(ctx, g, &v, plan);
                 scratch::recycle_volume(v);
-                Ok(out)
+                out
             } else {
-                Ok(forward_pipelined_ooc(ctx, g, store, plan))
+                forward_pipelined_ooc(ctx, g, store, plan)
             }
         }
     }
 }
 
-fn forward_pipelined_ram(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan) -> ProjectionSet {
+fn forward_pipelined_ram(
+    ctx: &MultiGpu,
+    g: &Geometry,
+    vol: &Volume,
+    plan: &Plan,
+) -> anyhow::Result<ProjectionSet> {
     let mut out = scratch::take_projections(g.n_det[0], g.n_det[1], g.n_angles());
     if !plan.image_split {
         // Angle split: every device holds the full image and owns a
         // disjoint contiguous run of chunks — workers project straight
         // into their windows of `out` (zero staging, nothing to merge).
+        // `jobs` keeps the owning device index so the fault gate knows
+        // which simulated device each launch belongs to (ISSUE 7).
         let shares = plan.chunk_shares(ctx.n_gpus);
-        let n_jobs = shares.iter().filter(|(c0, c1)| c1 > c0).count();
+        let jobs: Vec<(usize, usize, usize)> = shares
+            .iter()
+            .enumerate()
+            .filter(|&(_, &(c0, c1))| c1 > c0)
+            .map(|(d, &(c0, c1))| (d, c0, c1))
+            .collect();
+        let n_jobs = jobs.len();
         let workers = worker_count(ctx, n_jobs);
         let budgets = kernel_thread_budgets(ctx, workers, n_jobs);
         let per = g.n_det[0] * g.n_det[1];
         let out_ptr = SendPtr(out.data.as_mut_ptr());
         let pool = ThreadPool::new(workers);
+        let mut completed: Vec<usize> = Vec::new();
         pool.scope(|s| {
             let mut handles = Vec::with_capacity(n_jobs);
-            for (i, &(c0, c1)) in shares.iter().filter(|(c0, c1)| c1 > c0).enumerate() {
+            for (i, &(gpu, c0, c1)) in jobs.iter().enumerate() {
                 let kt = budgets[i];
                 handles.push(s.spawn(move || {
                     let out_ptr = out_ptr;
+                    let mut done = 0usize;
                     for c in c0..c1 {
+                        if launch_gate(ctx, gpu) {
+                            break; // device lost: host replans the rest
+                        }
                         let ch = plan.angle_chunks[c];
                         let gc = g.angle_chunk_geometry(ch.a0, ch.a1);
                         // SAFETY: chunk runs are disjoint across workers
@@ -316,11 +566,44 @@ fn forward_pipelined_ram(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan
                         } else {
                             ctx.kernel_forward_into(&gc, &vol.as_view(), dst, kt);
                         }
+                        done += 1;
                     }
+                    done
                 }));
             }
-            join_all(handles);
+            completed = join_all(handles);
         });
+        // Unit-level recovery: chunks a lost device never projected are
+        // re-run here, overwriting their (still untouched) disjoint
+        // windows of `out` with the identical kernel on identical input
+        // — each chunk is computed exactly once either way, so the
+        // output is bit-identical to the fault-free run.
+        if completed.iter().zip(&jobs).any(|(&c, &(_, c0, c1))| c < c1 - c0) {
+            let n = ctx.n_gpus.max(jobs.iter().map(|j| j.0 + 1).max().unwrap_or(0));
+            let mut lost = vec![false; n];
+            for (i, &(gpu, c0, c1)) in jobs.iter().enumerate() {
+                if completed[i] < c1 - c0 {
+                    lost[gpu] = true;
+                }
+            }
+            replan_excluding(lost.len(), &lost).map_err(|e| anyhow::anyhow!(e))?;
+            let threads = ctx.backend_threads();
+            for (i, &(_, c0, c1)) in jobs.iter().enumerate() {
+                for c in (c0 + completed[i])..c1 {
+                    let ch = plan.angle_chunks[c];
+                    let gc = g.angle_chunk_geometry(ch.a0, ch.a1);
+                    let dst = &mut out.data[ch.a0 * per..(ch.a0 + ch.len()) * per];
+                    if let Backend::Pjrt { artifacts_dir, .. } = &ctx.backend {
+                        let part =
+                            crate::runtime::forward_or_native(artifacts_dir, &gc, vol, threads);
+                        dst.copy_from_slice(&part.data);
+                        scratch::recycle_projections(part);
+                    } else {
+                        ctx.kernel_forward_into(&gc, &vol.as_view(), dst, threads);
+                    }
+                }
+            }
+        }
     } else {
         // Image split: each device projects all chunks of its slabs into a
         // private partial projection set (worker + merge lane); partials
@@ -336,6 +619,8 @@ fn forward_pipelined_ram(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan
             plan.angle_chunks.iter().map(|c| c.len()).max().unwrap_or(0) * per;
         let roles = tree_roles_for(ctx, workers, active.len());
         let pool = ThreadPool::new(workers);
+        let mut folded = Vec::with_capacity(active.len());
+        let mut completed = Vec::with_capacity(active.len());
         pool.scope(|s| {
             let handles: Vec<_> = active
                 .iter()
@@ -358,9 +643,9 @@ fn forward_pipelined_ram(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan
                     })
                 })
                 .collect();
-            let mut folded = Vec::with_capacity(active.len());
-            for (root, spent, stage) in join_all(handles) {
+            for (root, spent, stage, done) in join_all(handles) {
                 folded.push(root);
+                completed.push(done);
                 for p in spent {
                     scratch::recycle_projections(p);
                 }
@@ -368,10 +653,13 @@ fn forward_pipelined_ram(ctx: &MultiGpu, g: &Geometry, vol: &Volume, plan: &Plan
                     scratch::recycle(buf);
                 }
             }
-            fold_partials_into(&mut out, folded);
         });
+        // finish any lost device's remaining units into its own partial
+        // (launch order preserved) before the canonical cross-device fold
+        recover_fp_losses(ctx, g, FpSource::Ram(vol), plan, &active, &completed, &mut folded)?;
+        fold_partials_into(&mut out, folded);
     }
-    out
+    Ok(out)
 }
 
 /// One device's forward worker (image split): for each of its slabs, run
@@ -394,9 +682,10 @@ fn forward_device_partial(
     mut partial: ProjectionSet,
     stage: Vec<Vec<f32>>,
     role: Option<TreeRole>,
-) -> (Option<ProjectionSet>, Vec<ProjectionSet>, Vec<Vec<f32>>) {
+) -> (Option<ProjectionSet>, Vec<ProjectionSet>, Vec<Vec<f32>>, usize) {
     let per = partial.nu * partial.nv;
     let dst_ptr = SendPtr(partial.data.as_mut_ptr());
+    let mut completed = 0usize;
 
     let (req_tx, req_rx) = mpsc::channel::<(Vec<f32>, usize)>();
     let (ret_tx, ret_rx) = mpsc::channel::<Vec<f32>>();
@@ -421,6 +710,7 @@ fn forward_device_partial(
                 }
             }
         });
+        let mut lost = false;
         for slab in &dev.slabs {
             let gs = g.slab_geometry(slab.z0, slab.z1);
             let sub = vol.slab_view(slab.z0, slab.z1);
@@ -434,6 +724,10 @@ fn forward_device_partial(
                 Backend::PanicInject { .. } => None,
             };
             for ch in &plan.angle_chunks {
+                if launch_gate(ctx, dev.device) {
+                    lost = true; // device lost: host replans the rest
+                    break;
+                }
                 let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
                 let mut buf = ret_rx.recv().expect("merge lane terminated");
                 // resize only: the kernel overwrites every element, so no
@@ -454,21 +748,26 @@ fn forward_device_partial(
                     _ => ctx.kernel_forward_into(&gc, &sub, &mut buf, kernel_threads),
                 }
                 req_tx.send((buf, ch.a0)).expect("merge lane terminated");
+                completed += 1;
             }
             if let Some(ov) = owned_slab {
                 scratch::recycle_volume(ov);
             }
+            if lost {
+                break;
+            }
         }
         drop(req_tx); // lane drains remaining requests, then exits
     });
-    // own merge lane drained ⇒ `partial` is complete; fold the tree
-    // share while peers may still be launching kernels
+    // own merge lane drained ⇒ `partial` is complete (up to `completed`
+    // launches under a loss); fold the tree share while peers may still
+    // be launching kernels
     let (folded, spent) = tree_fold(role, partial);
     let mut stage = Vec::with_capacity(N_STAGE_BUFFERS);
     while let Ok(buf) = ret_rx.try_recv() {
         stage.push(buf);
     }
-    (folded, spent, stage)
+    (folded, spent, stage, completed)
 }
 
 /// Image-split forward projection streaming slabs from an [`OocVolume`]:
@@ -481,7 +780,7 @@ fn forward_pipelined_ooc(
     g: &Geometry,
     store: &OocVolume,
     plan: &Plan,
-) -> ProjectionSet {
+) -> anyhow::Result<ProjectionSet> {
     let mut out = scratch::take_projections(g.n_det[0], g.n_det[1], g.n_angles());
     let active: Vec<&DeviceAssignment> =
         plan.per_device.iter().filter(|d| !d.slabs.is_empty()).collect();
@@ -492,6 +791,8 @@ fn forward_pipelined_ooc(
     let plane = g.n_vox[0] * g.n_vox[1];
     let roles = tree_roles_for(ctx, workers, active.len());
     let pool = ThreadPool::new(workers);
+    let mut folded = Vec::with_capacity(active.len());
+    let mut completed = Vec::with_capacity(active.len());
     pool.scope(|s| {
         let handles: Vec<_> = active
             .iter()
@@ -514,9 +815,9 @@ fn forward_pipelined_ooc(
                 })
             })
             .collect();
-        let mut folded = Vec::with_capacity(active.len());
-        for (root, spent, stage, slab_bufs) in join_all(handles) {
+        for (root, spent, stage, slab_bufs, done) in join_all(handles) {
             folded.push(root);
+            completed.push(done);
             for p in spent {
                 scratch::recycle_projections(p);
             }
@@ -524,9 +825,12 @@ fn forward_pipelined_ooc(
                 scratch::recycle(buf);
             }
         }
-        fold_partials_into(&mut out, folded);
     });
-    out
+    // finish any lost device's remaining units (re-reading its slabs
+    // from the store) before the canonical cross-device fold
+    recover_fp_losses(ctx, g, FpSource::Ooc(store), plan, &active, &completed, &mut folded)?;
+    fold_partials_into(&mut out, folded);
+    Ok(out)
 }
 
 /// One device's OOC forward worker: loader lane streams this device's
@@ -549,10 +853,11 @@ fn forward_device_partial_ooc(
     stage: Vec<Vec<f32>>,
     slab_bufs: Vec<Vec<f32>>,
     role: Option<TreeRole>,
-) -> (Option<ProjectionSet>, Vec<ProjectionSet>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+) -> (Option<ProjectionSet>, Vec<ProjectionSet>, Vec<Vec<f32>>, Vec<Vec<f32>>, usize) {
     let per = partial.nu * partial.nv;
     let plane = g.n_vox[0] * g.n_vox[1];
     let dst_ptr = SendPtr(partial.data.as_mut_ptr());
+    let mut completed = 0usize;
 
     let (req_tx, req_rx) = mpsc::channel::<(Vec<f32>, usize)>();
     let (ret_tx, ret_rx) = mpsc::channel::<Vec<f32>>();
@@ -599,6 +904,7 @@ fn forward_device_partial_ooc(
         if let Some(&s0) = slabs.first() {
             lreq_tx.send((s0, free.pop().expect("slab buffer"))).expect("loader lane open");
         }
+        let mut lost = false;
         for k in 0..slabs.len() {
             // prefetch slab k+1 while slab k computes (double buffer)
             if k + 1 < slabs.len() {
@@ -617,6 +923,10 @@ fn forward_device_partial_ooc(
                 Backend::PanicInject { .. } => None,
             };
             for ch in &plan.angle_chunks {
+                if launch_gate(ctx, dev.device) {
+                    lost = true; // device lost: host replans the rest
+                    break;
+                }
                 let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
                 let mut buf = ret_rx.recv().expect("merge lane terminated");
                 buf.resize(ch.len() * per, 0.0);
@@ -634,14 +944,23 @@ fn forward_device_partial_ooc(
                     _ => ctx.kernel_forward_into(&gc, &sub, &mut buf, kernel_threads),
                 }
                 req_tx.send((buf, ch.a0)).expect("merge lane terminated");
+                completed += 1;
             }
             if let Some(ov) = owned_slab {
                 scratch::recycle_volume(ov);
             }
             free.push(data);
+            if lost {
+                break;
+            }
         }
         drop(lreq_tx); // loader drains and exits
         drop(req_tx); // merge lane drains remaining requests, then exits
+        // after a loss break, reclaim any prefetch still in flight so the
+        // staging buffers return to the arena (no-op on the clean path)
+        for (_, data) in ldone_rx.iter() {
+            free.push(data);
+        }
         leftover_slab_bufs = free;
     });
     let (folded, spent) = tree_fold(role, partial);
@@ -649,7 +968,7 @@ fn forward_device_partial_ooc(
     while let Ok(buf) = ret_rx.try_recv() {
         stage.push(buf);
     }
-    (folded, spent, stage, leftover_slab_bufs)
+    (folded, spent, stage, leftover_slab_bufs, completed)
 }
 
 // ---------------------------------------------------------------------------
@@ -665,9 +984,15 @@ pub fn backward_pipelined(
     proj: ProjInput<'_>,
     plan: &Plan,
 ) -> anyhow::Result<Volume> {
+    begin_real_op(ctx);
     match proj {
-        ProjInput::Ram(p) => Ok(backward_pipelined_ram(ctx, g, p, plan)),
-        ProjInput::Ooc(store) => Ok(backward_pipelined_ooc(ctx, g, store, plan)),
+        ProjInput::Ram(p) => backward_pipelined_ram(ctx, g, p, plan),
+        ProjInput::Ooc(store) => {
+            if let Some(f) = &ctx.fault {
+                store.set_fault_plan(f.clone());
+            }
+            backward_pipelined_ooc(ctx, g, store, plan)
+        }
     }
 }
 
@@ -676,7 +1001,7 @@ fn backward_pipelined_ram(
     g: &Geometry,
     proj: &ProjectionSet,
     plan: &Plan,
-) -> Volume {
+) -> anyhow::Result<Volume> {
     let mut out = scratch::take_volume(g.n_vox[0], g.n_vox[1], g.n_vox[2]);
     let active: Vec<&DeviceAssignment> =
         plan.per_device.iter().filter(|d| !d.slabs.is_empty()).collect();
@@ -685,6 +1010,7 @@ fn backward_pipelined_ram(
     let plane = g.n_vox[0] * g.n_vox[1];
     let out_ptr = SendPtr(out.data.as_mut_ptr());
     let pool = ThreadPool::new(workers);
+    let mut completed = Vec::with_capacity(active.len());
     pool.scope(|s| {
         let handles: Vec<_> = active
             .iter()
@@ -703,13 +1029,17 @@ fn backward_pipelined_ram(
                 })
             })
             .collect();
-        for stage in join_all(handles) {
+        for (stage, done) in join_all(handles) {
+            completed.push(done);
             for buf in stage {
                 scratch::recycle(buf);
             }
         }
     });
-    out
+    // finish any lost device's remaining units into its (disjoint)
+    // z-slabs of the shared output, launch order preserved
+    recover_bp_losses(ctx, g, BpSource::Ram(proj), plan, &active, &completed, &mut out)?;
+    Ok(out)
 }
 
 /// One device's backprojection worker: stream every projection chunk (as
@@ -729,12 +1059,13 @@ fn backward_device_worker(
     plane: usize,
     kernel_threads: usize,
     stage: Vec<Vec<f32>>,
-) -> Vec<Vec<f32>> {
+) -> (Vec<Vec<f32>>, usize) {
     let (req_tx, req_rx) = mpsc::channel::<(Vec<f32>, usize)>();
     let (ret_tx, ret_rx) = mpsc::channel::<Vec<f32>>();
     for buf in stage {
         ret_tx.send(buf).expect("staging channel open");
     }
+    let mut completed = 0usize;
     std::thread::scope(|sc| {
         sc.spawn(move || {
             let out_ptr = out_ptr;
@@ -752,10 +1083,13 @@ fn backward_device_worker(
                 }
             }
         });
-        for slab in &dev.slabs {
+        'slabs: for slab in &dev.slabs {
             let gs = g.slab_geometry(slab.z0, slab.z1);
             let slab_len = slab.len() * plane;
             for ch in &plan.angle_chunks {
+                if launch_gate(ctx, dev.device) {
+                    break 'slabs; // device lost: host replans the rest
+                }
                 let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
                 let view = proj.chunk_view(ch.a0, ch.a1);
                 let mut buf = ret_rx.recv().expect("merge lane terminated");
@@ -763,6 +1097,7 @@ fn backward_device_worker(
                 buf.resize(slab_len, 0.0); // backproject_into accumulates
                 ctx.kernel_backward_into(&gc, &view, &mut buf, kernel_threads);
                 req_tx.send((buf, slab.z0 * plane)).expect("merge lane terminated");
+                completed += 1;
             }
         }
         drop(req_tx);
@@ -771,7 +1106,7 @@ fn backward_device_worker(
     while let Ok(buf) = ret_rx.try_recv() {
         stage.push(buf);
     }
-    stage
+    (stage, completed)
 }
 
 /// Backprojection streaming projection chunks from an
@@ -783,7 +1118,7 @@ fn backward_pipelined_ooc(
     g: &Geometry,
     store: &OocProjections,
     plan: &Plan,
-) -> Volume {
+) -> anyhow::Result<Volume> {
     let mut out = scratch::take_volume(g.n_vox[0], g.n_vox[1], g.n_vox[2]);
     let active: Vec<&DeviceAssignment> =
         plan.per_device.iter().filter(|d| !d.slabs.is_empty()).collect();
@@ -794,6 +1129,7 @@ fn backward_pipelined_ooc(
     let max_chunk_len = plan.angle_chunks.iter().map(|c| c.len()).max().unwrap_or(0) * per;
     let out_ptr = SendPtr(out.data.as_mut_ptr());
     let pool = ThreadPool::new(workers);
+    let mut completed = Vec::with_capacity(active.len());
     pool.scope(|s| {
         let handles: Vec<_> = active
             .iter()
@@ -814,13 +1150,17 @@ fn backward_pipelined_ooc(
                 })
             })
             .collect();
-        for (stage, chunk_bufs) in join_all(handles) {
+        for (stage, chunk_bufs, done) in join_all(handles) {
+            completed.push(done);
             for buf in stage.into_iter().chain(chunk_bufs) {
                 scratch::recycle(buf);
             }
         }
     });
-    out
+    // finish any lost device's remaining units (re-reading its chunks
+    // from the store) into its disjoint z-slabs of the shared output
+    recover_bp_losses(ctx, g, BpSource::Ooc(store), plan, &active, &completed, &mut out)?;
+    Ok(out)
 }
 
 /// One device's OOC backprojection worker: the loader lane streams the
@@ -841,8 +1181,9 @@ fn backward_device_worker_ooc(
     kernel_threads: usize,
     stage: Vec<Vec<f32>>,
     chunk_bufs: Vec<Vec<f32>>,
-) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, usize) {
     let per = g.n_det[0] * g.n_det[1];
+    let mut completed = 0usize;
     let (req_tx, req_rx) = mpsc::channel::<(Vec<f32>, usize)>();
     let (ret_tx, ret_rx) = mpsc::channel::<Vec<f32>>();
     for buf in stage {
@@ -893,6 +1234,9 @@ fn backward_device_worker_ooc(
             lreq_tx.send((c0, free.pop().expect("chunk buffer"))).expect("loader lane open");
         }
         for (k, &(slab, ch)) in launches.iter().enumerate() {
+            if launch_gate(ctx, dev.device) {
+                break; // device lost: host replans the rest
+            }
             if k + 1 < launches.len() {
                 let buf = free.pop().expect("double-buffered chunk staging");
                 lreq_tx.send((launches[k + 1].1, buf)).expect("loader lane open");
@@ -909,17 +1253,23 @@ fn backward_device_worker_ooc(
             buf.resize(slab_len, 0.0); // backproject_into accumulates
             ctx.kernel_backward_into(&gc, &view, &mut buf, kernel_threads);
             req_tx.send((buf, slab.z0 * plane)).expect("merge lane terminated");
+            completed += 1;
             free.push(data);
         }
         drop(lreq_tx);
         drop(req_tx);
+        // after a loss break, reclaim any prefetch still in flight so the
+        // staging buffers return to the arena (no-op on the clean path)
+        for (_, data) in ldone_rx.iter() {
+            free.push(data);
+        }
         leftover_chunk_bufs = free;
     });
     let mut stage = Vec::with_capacity(N_STAGE_BUFFERS);
     while let Ok(buf) = ret_rx.try_recv() {
         stage.push(buf);
     }
-    (stage, leftover_chunk_bufs)
+    (stage, leftover_chunk_bufs, completed)
 }
 
 // ---------------------------------------------------------------------------
@@ -1461,5 +1811,250 @@ mod tests {
             }));
             assert!(bp.is_err(), "tree={tree}: injected BP panic must propagate");
         }
+    }
+
+    // -----------------------------------------------------------------
+    // fault injection & unit-level recovery (ISSUE 7)
+    // -----------------------------------------------------------------
+
+    /// Recovery invariant, transient arm: injected transient launch
+    /// failures retry on the same device after the bounded backoff, so
+    /// every unit still executes exactly once — FP and BP must be
+    /// bit-identical to the fault-free run across device counts, split
+    /// regimes and merge strategies.
+    #[test]
+    fn fault_transient_launches_keep_fp_and_bp_bit_identical() {
+        use crate::simgpu::FaultPlan;
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        for n_gpus in [1usize, 2, 4] {
+            for image_split in [false, true] {
+                for tree in [false, true] {
+                    let base = MultiGpu::gtx1080ti(n_gpus);
+                    let base =
+                        if image_split { base.with_device_mem(tiny_mem(&g)) } else { base };
+                    let base = if tree { base.with_tree_merge() } else { base };
+                    let plan = || {
+                        FaultPlan::new()
+                            .transient_launch(0, 0)
+                            .transient_launch(n_gpus - 1, 1)
+                    };
+                    let tag = format!("gpus={n_gpus} image_split={image_split} tree={tree}");
+                    let clean =
+                        base.clone().forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+                    let got = base
+                        .clone()
+                        .with_fault_plan(plan())
+                        .forward(&g, Some(&v), ExecMode::Full)
+                        .unwrap()
+                        .0
+                        .unwrap();
+                    assert_eq!(clean.data, got.data, "{tag}: FP under transient faults");
+                    let clean =
+                        base.clone().backward(&g, Some(&p), ExecMode::Full).unwrap().0.unwrap();
+                    let got = base
+                        .clone()
+                        .with_fault_plan(plan())
+                        .backward(&g, Some(&p), ExecMode::Full)
+                        .unwrap()
+                        .0
+                        .unwrap();
+                    assert_eq!(clean.data, got.data, "{tag}: BP under transient faults");
+                }
+            }
+        }
+    }
+
+    /// Recovery invariant, loss arm: permanently losing one device
+    /// mid-run reassigns its remaining units to surviving capacity, but
+    /// the unit partition and per-assignment launch/fold order are
+    /// unchanged — so FP and BP stay bit-identical to the fault-free
+    /// run across device counts, split regimes and merge strategies
+    /// (the tree degrades to the host-serial fold of the same canonical
+    /// schedule when a loss is planned).
+    #[test]
+    fn fault_device_loss_replans_and_keeps_output_bit_identical() {
+        use crate::simgpu::{FaultPlan, FaultScope};
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        for n_gpus in [2usize, 3, 4] {
+            for image_split in [false, true] {
+                for tree in [false, true] {
+                    let base = MultiGpu::gtx1080ti(n_gpus);
+                    let base =
+                        if image_split { base.with_device_mem(tiny_mem(&g)) } else { base };
+                    let base = if tree { base.with_tree_merge() } else { base };
+                    let plan = || {
+                        // lose device 0 at its first unit (device 0 has
+                        // work in every split regime), with a transient
+                        // riding along on the last device
+                        FaultPlan::new()
+                            .device_loss(0, 0)
+                            .transient_launch(n_gpus - 1, 0)
+                    };
+                    let tag = format!("gpus={n_gpus} image_split={image_split} tree={tree}");
+                    let clean =
+                        base.clone().forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+                    let faulted = base.clone().with_fault_plan(plan());
+                    let got =
+                        faulted.forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+                    assert!(
+                        faulted.fault.as_ref().unwrap().is_lost(FaultScope::Real, 0),
+                        "{tag}: the loss site must actually fire"
+                    );
+                    assert_eq!(clean.data, got.data, "{tag}: FP under device loss");
+                    let clean =
+                        base.clone().backward(&g, Some(&p), ExecMode::Full).unwrap().0.unwrap();
+                    let got = base
+                        .clone()
+                        .with_fault_plan(plan())
+                        .backward(&g, Some(&p), ExecMode::Full)
+                        .unwrap()
+                        .0
+                        .unwrap();
+                    assert_eq!(clean.data, got.data, "{tag}: BP under device loss");
+                }
+            }
+        }
+    }
+
+    /// A transient burst past [`MAX_LAUNCH_RETRIES`] escalates to a
+    /// permanent loss at runtime — the plan must advertise it
+    /// (`plans_loss`, so the tree degrades instead of deadlocking on
+    /// the lost worker's channel) and the output must still match.
+    #[test]
+    fn fault_escalated_transient_burst_behaves_as_loss() {
+        use crate::simgpu::{FaultKind, FaultPlan, FaultSite, MAX_LAUNCH_RETRIES};
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        for tree in [false, true] {
+            let base = MultiGpu::gtx1080ti(2).with_device_mem(tiny_mem(&g));
+            let base = if tree { base.with_tree_merge() } else { base };
+            let plan = || {
+                FaultPlan::new().with_site(FaultSite {
+                    kind: FaultKind::TransientLaunch,
+                    device: 1,
+                    unit: 0,
+                    iteration: None,
+                    times: MAX_LAUNCH_RETRIES + 1,
+                })
+            };
+            assert!(plan().plans_loss(), "a burst past the retry bound plans a loss");
+            let clean = base.clone().forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+            let got = base
+                .with_fault_plan(plan())
+                .forward(&g, Some(&v), ExecMode::Full)
+                .unwrap()
+                .0
+                .unwrap();
+            assert_eq!(clean.data, got.data, "tree={tree}: FP under escalated burst");
+        }
+    }
+
+    /// Losing every device leaves nothing to replan onto: the operator
+    /// must surface an error instead of hanging or returning a partial
+    /// result.
+    #[test]
+    fn fault_losing_every_device_surfaces_an_error() {
+        use crate::simgpu::FaultPlan;
+        let g = Geometry::cone_beam(16, 10);
+        let v = phantom::shepp_logan(16);
+        for image_split in [false, true] {
+            let base = MultiGpu::gtx1080ti(2);
+            let base = if image_split { base.with_device_mem(tiny_mem(&g)) } else { base };
+            let ctx = base
+                .with_fault_plan(FaultPlan::new().device_loss(0, 0).device_loss(1, 0));
+            assert!(
+                ctx.forward(&g, Some(&v), ExecMode::Full).is_err(),
+                "image_split={image_split}: all devices lost must be an error"
+            );
+        }
+    }
+
+    /// OOC streaming paths recover through the store: a loss mid-stream
+    /// re-reads the lost device's slabs/chunks and the result still
+    /// matches the fault-free run bit for bit.
+    #[test]
+    fn fault_loss_recovery_is_bit_identical_on_the_ooc_paths() {
+        use crate::coordinator::splitter::{plan_backward_ooc, plan_forward_ooc};
+        use crate::simgpu::FaultPlan;
+        use crate::volume::{OocProjections, OocVolume, ProjInput, VolumeInput};
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        let dir = std::env::temp_dir()
+            .join("tigre_pipe_fault_ooc")
+            .join(format!("{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let vbudget = g.volume_bytes() / 2;
+        let pbudget = g.proj_bytes() / 2;
+        for n_gpus in [2usize, 3] {
+            let clean = MultiGpu::gtx1080ti(n_gpus);
+            let faulted = || {
+                MultiGpu::gtx1080ti(n_gpus).with_fault_plan(
+                    FaultPlan::new()
+                        .transient_launch(0, 0)
+                        .device_loss(n_gpus - 1, 0),
+                )
+            };
+            let fplan =
+                plan_forward_ooc(&g, n_gpus, clean.spec.mem_bytes, &clean.split, vbudget)
+                    .unwrap();
+            let store =
+                OocVolume::from_volume(&dir.join(format!("v{n_gpus}.raw")), &v, 3, vbudget)
+                    .unwrap();
+            let want =
+                super::forward_pipelined(&clean, &g, VolumeInput::Ooc(&store), &fplan).unwrap();
+            let got = super::forward_pipelined(&faulted(), &g, VolumeInput::Ooc(&store), &fplan)
+                .unwrap();
+            assert_eq!(want.data, got.data, "gpus={n_gpus}: OOC FP under device loss");
+            let bplan =
+                plan_backward_ooc(&g, n_gpus, clean.spec.mem_bytes, &clean.split, pbudget)
+                    .unwrap();
+            let pstore = OocProjections::from_projections(
+                &dir.join(format!("p{n_gpus}.raw")),
+                &p,
+                2,
+                pbudget,
+            )
+            .unwrap();
+            let want =
+                super::backward_pipelined(&clean, &g, ProjInput::Ooc(&pstore), &bplan).unwrap();
+            let got = super::backward_pipelined(&faulted(), &g, ProjInput::Ooc(&pstore), &bplan)
+                .unwrap();
+            assert_eq!(want.data, got.data, "gpus={n_gpus}: OOC BP under device loss");
+        }
+    }
+
+    /// Sim path: the DES timeline must charge recovery — a lost device's
+    /// kernels redirect to a survivor's compute engine (serializing
+    /// them) plus the one-time replan stall, so the simulated makespan
+    /// strictly exceeds the fault-free schedule's.
+    #[test]
+    fn fault_recovery_time_appears_in_the_simulated_makespan() {
+        use crate::simgpu::FaultPlan;
+        let g = Geometry::cone_beam(20, 12);
+        let clean =
+            MultiGpu::gtx1080ti(2).forward(&g, None, ExecMode::SimOnly).unwrap().1.makespan_s;
+        let lossy = MultiGpu::gtx1080ti(2)
+            .with_fault_plan(FaultPlan::new().device_loss(1, 0))
+            .forward(&g, None, ExecMode::SimOnly)
+            .unwrap()
+            .1
+            .makespan_s;
+        assert!(
+            lossy > clean,
+            "device loss must stretch the simulated makespan (clean {clean}, lossy {lossy})"
+        );
     }
 }

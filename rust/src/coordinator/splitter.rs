@@ -95,6 +95,34 @@ pub fn merge_schedule(n: usize) -> Vec<Vec<(usize, usize)>> {
     rounds
 }
 
+/// Degraded-mode replanning after permanent device loss (ISSUE 7):
+/// given the per-device loss flags, return `owner[d]` — the surviving
+/// device that executes device `d`'s remaining units (identity for
+/// survivors; for a lost device, the cyclic-next survivor after it in
+/// device order). The unit partition itself is **immutable** — only
+/// ownership moves — so the canonical [`merge_schedule`] still folds the
+/// same per-assignment partials in the same order and recovered output
+/// stays bit-identical to the fault-free run. Errors when every device
+/// is lost.
+pub fn replan_excluding(n: usize, lost: &[bool]) -> Result<Vec<usize>, String> {
+    let is_lost = |d: usize| lost.get(d).copied().unwrap_or(false);
+    if (0..n).all(is_lost) {
+        return Err(format!("replan: all {n} devices lost, no survivors"));
+    }
+    Ok((0..n)
+        .map(|d| {
+            if !is_lost(d) {
+                d
+            } else {
+                (1..n)
+                    .map(|k| (d + k) % n)
+                    .find(|&s| !is_lost(s))
+                    .expect("at least one survivor exists")
+            }
+        })
+        .collect())
+}
+
 /// The work assigned to one device.
 #[derive(Clone, Debug)]
 pub struct DeviceAssignment {
@@ -940,6 +968,19 @@ mod tests {
             assert_eq!(src_seen[0], 0, "root never consumed");
             assert!(src_seen[1..].iter().all(|&c| c == 1), "src multiplicity for n={n}");
         }
+    }
+
+    #[test]
+    fn fault_replan_assigns_cyclic_next_survivor() {
+        // survivors map to themselves
+        assert_eq!(replan_excluding(4, &[false; 4]).unwrap(), vec![0, 1, 2, 3]);
+        // lost device 1 → device 2; wrap-around for the last device
+        assert_eq!(replan_excluding(4, &[false, true, false, true]).unwrap(), vec![0, 2, 2, 0]);
+        assert_eq!(replan_excluding(3, &[true, true, false]).unwrap(), vec![2, 2, 2]);
+        // short flag slices read as "not lost"
+        assert_eq!(replan_excluding(3, &[true]).unwrap(), vec![1, 1, 2]);
+        // no survivors is a planning error, not a panic
+        assert!(replan_excluding(2, &[true, true]).is_err());
     }
 
     #[test]

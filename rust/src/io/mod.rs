@@ -7,7 +7,7 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::util::json::Json;
-use crate::volume::Volume;
+use crate::volume::{ProjectionSet, Volume};
 
 /// Write a volume as little-endian raw f32 plus a `.json` sidecar with the
 /// shape, so it can be reloaded or inspected with numpy
@@ -50,6 +50,26 @@ pub fn load_volume(path: &Path) -> anyhow::Result<Volume> {
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
         .collect();
     Ok(Volume { nx, ny, nz, data })
+}
+
+/// Write a projection set in the same raw+sidecar format, mapping the
+/// shape `(nu, nv, n_angles)` → `(nx, ny, nz)` (angle-slowest storage is
+/// z-slowest storage; this is the mapping `volume::outofcore` uses, so
+/// a saved set reopens as an `OocProjections` too).
+pub fn save_projections(path: &Path, p: &ProjectionSet) -> anyhow::Result<()> {
+    let v = Volume {
+        nx: p.nu,
+        ny: p.nv,
+        nz: p.n_angles,
+        data: p.data.clone(),
+    };
+    save_volume(path, &v)
+}
+
+/// Load a raw f32 projection set saved by [`save_projections`].
+pub fn load_projections(path: &Path) -> anyhow::Result<ProjectionSet> {
+    let v = load_volume(path)?;
+    Ok(ProjectionSet { nu: v.nx, nv: v.ny, n_angles: v.nz, data: v.data })
 }
 
 /// Save one axial slice as an 8-bit binary PGM, windowed to [lo, hi]
@@ -183,6 +203,18 @@ mod tests {
         )
         .unwrap();
         assert!(load_volume(&p).is_err());
+    }
+
+    #[test]
+    fn projections_roundtrip() {
+        let d = tmpdir("proj");
+        let mut p = ProjectionSet::zeros(5, 3, 7);
+        for (i, v) in p.data.iter_mut().enumerate() {
+            *v = (i as f32).sin();
+        }
+        let path = d.join("p.raw");
+        save_projections(&path, &p).unwrap();
+        assert_eq!(load_projections(&path).unwrap(), p);
     }
 
     #[test]

@@ -75,6 +75,13 @@ pub struct CostModel {
     /// partial folded / s) — the linear merge's per-pair cost. Memory-
     /// bound: read src + read/write dst on one host core.
     pub host_fold_bps: f64,
+    /// Base backoff before the first retry of a transiently-failed
+    /// launch / alloc / disk request; doubles per consecutive retry
+    /// (bounded by `fault::MAX_LAUNCH_RETRIES`).
+    pub fault_retry_backoff_s: f64,
+    /// Host time to replan a lost device's remaining units across the
+    /// survivors (`splitter::replan_excluding`), charged once per loss.
+    pub fault_replan_s: f64,
 }
 
 impl CostModel {
@@ -105,6 +112,10 @@ impl CostModel {
             p2p_bps: 11.0e9,
             p2p_latency_s: 15e-6,
             host_fold_bps: 6.0e9,
+            // recovery: ~1 ms first backoff (driver error + re-issue),
+            // ~5 ms to rebuild the unit queues after a device drops out
+            fault_retry_backoff_s: 1.0e-3,
+            fault_replan_s: 5.0e-3,
         }
     }
 

@@ -1,0 +1,470 @@
+//! Deterministic fault injection for the executor stack.
+//!
+//! `FaultPlan` is the general facility grown out of PR 6's `cfg(test)`
+//! `Backend::PanicInject`: instead of panicking a whole worker, it
+//! injects *recoverable* faults — transient launch failures, permanent
+//! device loss, allocation failures and OOC disk-I/O errors — at chosen
+//! (device, unit, iteration) coordinates. The same plan drives both the
+//! simulated timeline (recovery time shows up in the DES makespan via
+//! `CostModel::fault_retry_backoff_s` / `fault_replan_s`) and the real
+//! pipelined executor (bounded retry + replanning onto survivors), so a
+//! fault scenario can be modeled and executed from one description.
+//!
+//! Coordinates: a **unit** is the per-device launch ordinal within one
+//! operator call (slab×chunk launches in image split, chunk launches in
+//! angle split), counted independently per scope — the simulated
+//! timeline and the real executor enumerate launches differently, so
+//! each [`FaultScope`] keeps its own ordinal counters and fired flags.
+//! Device loss is sticky: once a device is lost in a scope it stays
+//! lost for every later operator call until the plan is dropped, which
+//! is what lets a mid-iteration loss degrade the remainder of a
+//! multi-iteration reconstruction.
+//!
+//! Every site fires at most once per scope; transient sites carry a
+//! `times` budget (consecutive failures before the retried launch
+//! succeeds). A transient budget above [`MAX_LAUNCH_RETRIES`] escalates
+//! to device loss in the callers — bounded backoff, not infinite retry.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Retry budget for a single launch/IO unit before the fault escalates
+/// from transient to permanent (device loss for launches, a typed
+/// `OocIoError` for disk reads). Shared by the simulated and real paths.
+pub const MAX_LAUNCH_RETRIES: usize = 4;
+
+/// What kind of fault a site injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Launch fails `times` times, then the retried launch succeeds.
+    TransientLaunch,
+    /// The device drops out permanently at this unit; remaining units
+    /// are replanned onto survivors (`splitter::replan_excluding`).
+    DeviceLoss,
+    /// Device allocation fails `times` times before succeeding
+    /// (the recoverable sibling of the typed `SimOom`).
+    AllocFail,
+    /// An OOC disk read/write fails `times` consecutive attempts.
+    DiskIo,
+}
+
+/// One injection site. `unit` is a per-device launch ordinal for
+/// launch/alloc faults and a global disk-op ordinal for `DiskIo`,
+/// counted from the operator entry (`begin_op`).
+#[derive(Clone, Debug)]
+pub struct FaultSite {
+    pub kind: FaultKind,
+    pub device: usize,
+    pub unit: usize,
+    /// Restrict the site to one algorithm iteration (`set_iteration`);
+    /// `None` arms it from the start.
+    pub iteration: Option<usize>,
+    /// Consecutive failures injected when the site fires (min 1).
+    pub times: usize,
+}
+
+/// Which execution path is consuming the plan. `ExecMode::Full` runs
+/// the simulated timeline *and* the real executor over one plan; the
+/// scopes keep independent counters so a site fires once in each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultScope {
+    Sim,
+    Real,
+}
+
+/// Outcome of the pre-launch fault gate for one unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaunchFault {
+    /// No fault: launch proceeds.
+    Ok,
+    /// Launch fails `n` times; retry with doubling backoff, then it
+    /// succeeds (callers escalate to loss when `n > MAX_LAUNCH_RETRIES`).
+    Transient(usize),
+    /// The device is (or just became) permanently lost.
+    Lost,
+}
+
+#[derive(Debug, Default)]
+struct ScopeState {
+    /// Per-device launch ordinal within the current operator call.
+    unit_ord: Vec<usize>,
+    /// Per-device alloc ordinal within the current operator call.
+    alloc_ord: Vec<usize>,
+    /// Disk-op ordinal within the current operator call.
+    disk_ord: usize,
+    /// Per-site consumed flags (sites fire at most once per scope).
+    fired: Vec<bool>,
+    /// Sticky per-device loss flags — persist across operator calls.
+    lost: Vec<bool>,
+}
+
+impl ScopeState {
+    fn ensure(&mut self, dev: usize, n_sites: usize) {
+        if self.unit_ord.len() <= dev {
+            self.unit_ord.resize(dev + 1, 0);
+            self.alloc_ord.resize(dev + 1, 0);
+            self.lost.resize(dev + 1, false);
+        }
+        if self.fired.len() < n_sites {
+            self.fired.resize(n_sites, false);
+        }
+    }
+}
+
+/// A deterministic, seedable fault schedule shared by the simulated
+/// timeline and the real executor. Cheap to clone via `Arc`; all state
+/// is interior-mutable and thread-safe (worker threads consult the
+/// plan concurrently, one device per worker).
+#[derive(Debug)]
+pub struct FaultPlan {
+    sites: Vec<FaultSite>,
+    sim: Mutex<ScopeState>,
+    real: Mutex<ScopeState>,
+    iteration: AtomicUsize,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self {
+            sites: Vec::new(),
+            sim: Mutex::new(ScopeState::default()),
+            real: Mutex::new(ScopeState::default()),
+            iteration: AtomicUsize::new(0),
+        }
+    }
+
+    /// Add an explicit site.
+    pub fn with_site(mut self, site: FaultSite) -> Self {
+        self.sites.push(site);
+        self
+    }
+
+    /// One transient launch failure at (device, unit).
+    pub fn transient_launch(self, device: usize, unit: usize) -> Self {
+        self.with_site(FaultSite {
+            kind: FaultKind::TransientLaunch,
+            device,
+            unit,
+            iteration: None,
+            times: 1,
+        })
+    }
+
+    /// `times` consecutive launch failures at (device, unit, iteration).
+    pub fn transient_launch_at(
+        self,
+        device: usize,
+        unit: usize,
+        iteration: usize,
+        times: usize,
+    ) -> Self {
+        self.with_site(FaultSite {
+            kind: FaultKind::TransientLaunch,
+            device,
+            unit,
+            iteration: Some(iteration),
+            times,
+        })
+    }
+
+    /// Permanent device loss at (device, unit).
+    pub fn device_loss(self, device: usize, unit: usize) -> Self {
+        self.with_site(FaultSite {
+            kind: FaultKind::DeviceLoss,
+            device,
+            unit,
+            iteration: None,
+            times: 1,
+        })
+    }
+
+    /// Permanent device loss at (device, unit, iteration).
+    pub fn device_loss_at(self, device: usize, unit: usize, iteration: usize) -> Self {
+        self.with_site(FaultSite {
+            kind: FaultKind::DeviceLoss,
+            device,
+            unit,
+            iteration: Some(iteration),
+            times: 1,
+        })
+    }
+
+    /// `times` allocation failures at the device's alloc ordinal `unit`.
+    pub fn alloc_fail(self, device: usize, unit: usize, times: usize) -> Self {
+        self.with_site(FaultSite {
+            kind: FaultKind::AllocFail,
+            device,
+            unit,
+            iteration: None,
+            times,
+        })
+    }
+
+    /// `times` consecutive disk-I/O failures at disk-op ordinal `unit`.
+    pub fn disk_io(self, unit: usize, times: usize) -> Self {
+        self.with_site(FaultSite {
+            kind: FaultKind::DiskIo,
+            device: 0,
+            unit,
+            iteration: None,
+            times,
+        })
+    }
+
+    /// Seeded scatter of `count` single-failure transient launch sites
+    /// over `n_devices` devices × `n_units` units (xorshift64 — the
+    /// same seed always produces the same schedule).
+    pub fn scatter_transients(
+        mut self,
+        seed: u64,
+        count: usize,
+        n_devices: usize,
+        n_units: usize,
+    ) -> Self {
+        let mut s = seed.max(1);
+        let mut next = || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s
+        };
+        for _ in 0..count {
+            let device = (next() % n_devices.max(1) as u64) as usize;
+            let unit = (next() % n_units.max(1) as u64) as usize;
+            self.sites.push(FaultSite {
+                kind: FaultKind::TransientLaunch,
+                device,
+                unit,
+                iteration: None,
+                times: 1,
+            });
+        }
+        self
+    }
+
+    pub fn sites(&self) -> &[FaultSite] {
+        &self.sites
+    }
+
+    /// Does the plan schedule any permanent device loss? The real-path
+    /// tree merge degrades to the host-serial fold of the same canonical
+    /// schedule when this is set (a lost worker cannot feed its tree
+    /// channel), which keeps output bit-identical by construction.
+    pub fn plans_loss(&self) -> bool {
+        self.sites.iter().any(|s| {
+            s.kind == FaultKind::DeviceLoss
+                || (s.kind == FaultKind::TransientLaunch && s.times > MAX_LAUNCH_RETRIES)
+        })
+    }
+
+    fn state(&self, scope: FaultScope) -> &Mutex<ScopeState> {
+        match scope {
+            FaultScope::Sim => &self.sim,
+            FaultScope::Real => &self.real,
+        }
+    }
+
+    /// Reset the per-operator ordinals for one scope. Called at every
+    /// operator entry (`fresh_sim` for Sim, the pipelined executor
+    /// entry for Real). Fired flags and loss flags persist.
+    pub fn begin_op(&self, scope: FaultScope) {
+        let mut st = self.state(scope).lock().unwrap();
+        st.unit_ord.iter_mut().for_each(|o| *o = 0);
+        st.alloc_ord.iter_mut().for_each(|o| *o = 0);
+        st.disk_ord = 0;
+    }
+
+    /// Advance the iteration gate for `iteration: Some(i)` sites.
+    pub fn set_iteration(&self, it: usize) {
+        self.iteration.store(it, Ordering::SeqCst);
+    }
+
+    fn iteration_matches(&self, site: &FaultSite) -> bool {
+        match site.iteration {
+            None => true,
+            Some(i) => i == self.iteration.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Fault gate consulted before each launch unit on `dev`. Advances
+    /// the device's unit ordinal and reports what the launch hits.
+    pub fn launch_fault(&self, scope: FaultScope, dev: usize) -> LaunchFault {
+        let mut st = self.state(scope).lock().unwrap();
+        st.ensure(dev, self.sites.len());
+        let ord = st.unit_ord[dev];
+        st.unit_ord[dev] += 1;
+        if st.lost[dev] {
+            return LaunchFault::Lost;
+        }
+        for (i, site) in self.sites.iter().enumerate() {
+            if st.fired[i]
+                || site.device != dev
+                || site.unit != ord
+                || !self.iteration_matches(site)
+            {
+                continue;
+            }
+            match site.kind {
+                FaultKind::TransientLaunch => {
+                    st.fired[i] = true;
+                    return LaunchFault::Transient(site.times.max(1));
+                }
+                FaultKind::DeviceLoss => {
+                    st.fired[i] = true;
+                    st.lost[dev] = true;
+                    return LaunchFault::Lost;
+                }
+                FaultKind::AllocFail | FaultKind::DiskIo => {}
+            }
+        }
+        LaunchFault::Ok
+    }
+
+    /// Number of injected failures for the next allocation on `dev`.
+    pub fn alloc_fault(&self, scope: FaultScope, dev: usize) -> usize {
+        let mut st = self.state(scope).lock().unwrap();
+        st.ensure(dev, self.sites.len());
+        let ord = st.alloc_ord[dev];
+        st.alloc_ord[dev] += 1;
+        for (i, site) in self.sites.iter().enumerate() {
+            if st.fired[i]
+                || site.kind != FaultKind::AllocFail
+                || site.device != dev
+                || site.unit != ord
+                || !self.iteration_matches(site)
+            {
+                continue;
+            }
+            st.fired[i] = true;
+            return site.times.max(1);
+        }
+        0
+    }
+
+    /// Number of injected failures for the next disk operation.
+    pub fn disk_fault(&self, scope: FaultScope) -> usize {
+        let mut st = self.state(scope).lock().unwrap();
+        st.ensure(0, self.sites.len());
+        let ord = st.disk_ord;
+        st.disk_ord += 1;
+        for (i, site) in self.sites.iter().enumerate() {
+            if st.fired[i]
+                || site.kind != FaultKind::DiskIo
+                || site.unit != ord
+                || !self.iteration_matches(site)
+            {
+                continue;
+            }
+            st.fired[i] = true;
+            return site.times.max(1);
+        }
+        0
+    }
+
+    /// Is `dev` permanently lost in `scope`?
+    pub fn is_lost(&self, scope: FaultScope, dev: usize) -> bool {
+        let st = self.state(scope).lock().unwrap();
+        st.lost.get(dev).copied().unwrap_or(false)
+    }
+
+    /// Mark `dev` lost (transient budget exhausted → escalation).
+    pub fn mark_lost(&self, scope: FaultScope, dev: usize) {
+        let mut st = self.state(scope).lock().unwrap();
+        st.ensure(dev, self.sites.len());
+        st.lost[dev] = true;
+    }
+
+    /// Snapshot of the per-device loss flags, sized to `n` devices.
+    pub fn lost_devices(&self, scope: FaultScope, n: usize) -> Vec<bool> {
+        let st = self.state(scope).lock().unwrap();
+        (0..n).map(|d| st.lost.get(d).copied().unwrap_or(false)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_fires_once_at_its_ordinal() {
+        let p = FaultPlan::new().transient_launch(1, 2);
+        p.begin_op(FaultScope::Real);
+        assert_eq!(p.launch_fault(FaultScope::Real, 1), LaunchFault::Ok); // unit 0
+        assert_eq!(p.launch_fault(FaultScope::Real, 0), LaunchFault::Ok); // other dev
+        assert_eq!(p.launch_fault(FaultScope::Real, 1), LaunchFault::Ok); // unit 1
+        assert_eq!(p.launch_fault(FaultScope::Real, 1), LaunchFault::Transient(1));
+        // consumed: re-running the op does not re-fire
+        p.begin_op(FaultScope::Real);
+        for _ in 0..4 {
+            assert_eq!(p.launch_fault(FaultScope::Real, 1), LaunchFault::Ok);
+        }
+    }
+
+    #[test]
+    fn scopes_are_independent() {
+        let p = FaultPlan::new().transient_launch(0, 0);
+        p.begin_op(FaultScope::Sim);
+        p.begin_op(FaultScope::Real);
+        assert_eq!(p.launch_fault(FaultScope::Sim, 0), LaunchFault::Transient(1));
+        // the real scope still sees its own copy of the site
+        assert_eq!(p.launch_fault(FaultScope::Real, 0), LaunchFault::Transient(1));
+    }
+
+    #[test]
+    fn device_loss_is_sticky_across_ops() {
+        let p = FaultPlan::new().device_loss(1, 1);
+        assert!(p.plans_loss());
+        p.begin_op(FaultScope::Real);
+        assert_eq!(p.launch_fault(FaultScope::Real, 1), LaunchFault::Ok);
+        assert_eq!(p.launch_fault(FaultScope::Real, 1), LaunchFault::Lost);
+        assert!(p.is_lost(FaultScope::Real, 1));
+        // next op: lost from unit 0
+        p.begin_op(FaultScope::Real);
+        assert_eq!(p.launch_fault(FaultScope::Real, 1), LaunchFault::Lost);
+        assert_eq!(p.lost_devices(FaultScope::Real, 4), vec![false, true, false, false]);
+        // but not in the sim scope
+        assert!(!p.is_lost(FaultScope::Sim, 1));
+    }
+
+    #[test]
+    fn iteration_gate_arms_only_its_iteration() {
+        let p = FaultPlan::new().transient_launch_at(0, 0, 2, 3);
+        p.set_iteration(0);
+        p.begin_op(FaultScope::Real);
+        assert_eq!(p.launch_fault(FaultScope::Real, 0), LaunchFault::Ok);
+        p.set_iteration(2);
+        p.begin_op(FaultScope::Real);
+        assert_eq!(p.launch_fault(FaultScope::Real, 0), LaunchFault::Transient(3));
+    }
+
+    #[test]
+    fn alloc_and_disk_faults_use_their_own_ordinals() {
+        let p = FaultPlan::new().alloc_fail(0, 1, 2).disk_io(0, 3);
+        p.begin_op(FaultScope::Sim);
+        // launch ordinal does not consume alloc sites
+        assert_eq!(p.launch_fault(FaultScope::Sim, 0), LaunchFault::Ok);
+        assert_eq!(p.alloc_fault(FaultScope::Sim, 0), 0); // alloc ordinal 0
+        assert_eq!(p.alloc_fault(FaultScope::Sim, 0), 2); // alloc ordinal 1
+        assert_eq!(p.alloc_fault(FaultScope::Sim, 0), 0);
+        assert_eq!(p.disk_fault(FaultScope::Sim), 3);
+        assert_eq!(p.disk_fault(FaultScope::Sim), 0);
+    }
+
+    #[test]
+    fn scatter_is_deterministic_per_seed() {
+        let a = FaultPlan::new().scatter_transients(7, 5, 4, 10);
+        let b = FaultPlan::new().scatter_transients(7, 5, 4, 10);
+        let coords = |p: &FaultPlan| {
+            p.sites().iter().map(|s| (s.device, s.unit)).collect::<Vec<_>>()
+        };
+        assert_eq!(coords(&a), coords(&b));
+        assert_eq!(a.sites().len(), 5);
+        assert!(a.sites().iter().all(|s| s.device < 4 && s.unit < 10));
+    }
+}

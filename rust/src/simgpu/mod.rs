@@ -20,13 +20,16 @@
 
 pub mod costmodel;
 pub mod device;
+pub mod fault;
 pub mod timeline;
 
 pub use costmodel::CostModel;
 pub use device::{DeviceMem, GpuSpec};
+pub use fault::{FaultKind, FaultPlan, FaultScope, FaultSite, LaunchFault, MAX_LAUNCH_RETRIES};
 pub use timeline::{Category, TimelineEvent};
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Typed out-of-memory error for the simulated device ledger.
 ///
@@ -87,6 +90,13 @@ pub struct SimNode {
     /// `CostModel::ooc_read_hidden` says so.
     disk_free: f64,
     events: Vec<TimelineEvent>,
+    /// Optional fault schedule (ISSUE 7): transient launch failures add
+    /// retry backoff to the faulted kernel; a permanent device loss
+    /// charges one replan and redirects the device's remaining kernels
+    /// onto the cyclic-next survivor's compute engine.
+    fault: Option<Arc<FaultPlan>>,
+    /// Devices whose loss has already been charged `fault_replan_s`.
+    fault_replanned: Vec<bool>,
 }
 
 #[derive(Debug)]
@@ -108,7 +118,23 @@ impl SimNode {
                 ]),
             })
             .collect();
-        Self { cost, devices, host_free: 0.0, disk_free: 0.0, events: Vec::new() }
+        let n = devices.len();
+        Self {
+            cost,
+            devices,
+            host_free: 0.0,
+            disk_free: 0.0,
+            events: Vec::new(),
+            fault: None,
+            fault_replanned: vec![false; n],
+        }
+    }
+
+    /// Attach a fault schedule; its `Sim` scope drives this node. The
+    /// caller is expected to `begin_op(FaultScope::Sim)` per operator
+    /// (done by `MultiGpu::fresh_sim`).
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.fault = Some(plan);
     }
 
     pub fn n_devices(&self) -> usize {
@@ -165,7 +191,13 @@ impl SimNode {
             label: label.to_string(),
             detail,
         })?;
-        let dur = self.cost.alloc_latency_s;
+        let mut dur = self.cost.alloc_latency_s;
+        if let Some(plan) = &self.fault {
+            let k = plan.alloc_fault(FaultScope::Sim, dev);
+            for i in 0..k.min(MAX_LAUNCH_RETRIES) {
+                dur += self.cost.alloc_latency_s + self.cost.fault_retry_backoff_s * (1u64 << i) as f64;
+            }
+        }
         let t0 = self.host_free;
         let t1 = t0 + dur;
         self.host_free = t1;
@@ -305,12 +337,25 @@ impl SimNode {
 
     // ---- out-of-core backing store ---------------------------------------
 
+    /// Retry time injected into the next disk operation by the fault
+    /// plan (bounded, doubling backoff — the Sim mirror of the real
+    /// loader-lane retry in `volume::outofcore`).
+    fn disk_fault_extra(&mut self) -> f64 {
+        let Some(plan) = &self.fault else { return 0.0 };
+        let k = plan.disk_fault(FaultScope::Sim);
+        let mut extra = 0.0;
+        for i in 0..k.min(MAX_LAUNCH_RETRIES) {
+            extra += self.cost.disk_latency_s + self.cost.fault_retry_backoff_s * (1u64 << i) as f64;
+        }
+        extra
+    }
+
     /// Read `bytes` from the backing store after `after`: serializes on
     /// the single disk, does **not** advance the host clock (loader
     /// threads issue these). Returns the completion event the dependent
     /// H2D copy must wait on.
     pub fn disk_read(&mut self, bytes: u64, after: Ev) -> Ev {
-        let dur = self.cost.disk_read_time_s(bytes);
+        let dur = self.cost.disk_read_time_s(bytes) + self.disk_fault_extra();
         let t0 = self.disk_free.max(after.0);
         let t1 = t0 + dur;
         self.disk_free = t1;
@@ -322,7 +367,7 @@ impl SimNode {
     /// writeback / result spill). Same engine semantics as
     /// [`SimNode::disk_read`].
     pub fn disk_write(&mut self, bytes: u64, after: Ev) -> Ev {
-        let dur = self.cost.disk_write_time_s(bytes);
+        let dur = self.cost.disk_write_time_s(bytes) + self.disk_fault_extra();
         let t0 = self.disk_free.max(after.0);
         let t1 = t0 + dur;
         self.disk_free = t1;
@@ -334,14 +379,54 @@ impl SimNode {
 
     /// Queue a kernel of `dur_s` seconds on the device's compute engine
     /// after `after`. Asynchronous: does not advance the host clock.
+    ///
+    /// With a fault plan attached, a transient launch failure stretches
+    /// the kernel by its retry backoffs, and a permanently lost device's
+    /// kernels run on the cyclic-next survivor's compute engine instead
+    /// (one `fault_replan_s` host charge at the moment of loss). The
+    /// survivor redirect models recovery *time* only — the memory
+    /// ledger keeps the original placement.
     pub fn kernel(&mut self, dev: usize, dur_s: f64, after: Ev, label: &str) -> Ev {
-        let t0 = self.devices[dev].engine_free[&Engine::Compute]
+        let (run_dev, extra) = self.fault_route(dev);
+        let t0 = self.devices[run_dev].engine_free[&Engine::Compute]
             .max(after.0)
             .max(self.host_free); // issue order: host must have reached it
-        let t1 = t0 + dur_s + self.cost.kernel_launch_s;
-        self.devices[dev].engine_free.insert(Engine::Compute, t1);
-        self.log(dev, Category::Compute, t0, t1, label.to_string());
+        let t1 = t0 + dur_s + self.cost.kernel_launch_s + extra;
+        self.devices[run_dev].engine_free.insert(Engine::Compute, t1);
+        self.log(run_dev, Category::Compute, t0, t1, label.to_string());
         Ev(t1)
+    }
+
+    /// Consult the fault plan for the next launch unit on `dev`: returns
+    /// the device the kernel actually runs on and the extra retry time.
+    fn fault_route(&mut self, dev: usize) -> (usize, f64) {
+        let Some(plan) = self.fault.clone() else { return (dev, 0.0) };
+        match plan.launch_fault(FaultScope::Sim, dev) {
+            LaunchFault::Ok => return (dev, 0.0),
+            LaunchFault::Transient(k) if k <= MAX_LAUNCH_RETRIES => {
+                let mut extra = 0.0;
+                for i in 0..k {
+                    extra +=
+                        self.cost.kernel_launch_s + self.cost.fault_retry_backoff_s * (1u64 << i) as f64;
+                }
+                return (dev, extra);
+            }
+            // retry budget exhausted: escalate to permanent loss
+            LaunchFault::Transient(_) => plan.mark_lost(FaultScope::Sim, dev),
+            LaunchFault::Lost => {}
+        }
+        if !self.fault_replanned[dev] {
+            self.fault_replanned[dev] = true;
+            let replan = self.cost.fault_replan_s;
+            self.host_busy(replan, Category::OtherMem, &format!("fault replan d{dev}"));
+        }
+        // cyclic-next survivor — mirrors `splitter::replan_excluding`
+        let lost = plan.lost_devices(FaultScope::Sim, self.devices.len());
+        let survivor = (1..self.devices.len())
+            .map(|k| (dev + k) % self.devices.len())
+            .find(|&s| !lost[s])
+            .unwrap_or(dev); // no survivor: degenerate, keep the engine
+        (survivor, 0.0)
     }
 
     /// Completion time of a device's engine.
@@ -524,6 +609,58 @@ mod tests {
         assert!(sim.host_time().0 < 0.1);
         sim.sync_all();
         assert!(sim.host_time().0 >= 2.0);
+    }
+
+    #[test]
+    fn fault_transient_launch_stretches_the_kernel() {
+        let mut clean = small_node(1);
+        clean.kernel(0, 0.1, Ev::ZERO, "fp");
+        let mut faulted = small_node(1);
+        let plan = Arc::new(FaultPlan::new().transient_launch(0, 0));
+        plan.begin_op(FaultScope::Sim);
+        faulted.set_fault_plan(plan);
+        faulted.kernel(0, 0.1, Ev::ZERO, "fp");
+        let dt = faulted.makespan() - clean.makespan();
+        assert!(
+            dt >= faulted.cost.fault_retry_backoff_s - 1e-12,
+            "retry backoff must appear in the makespan: Δ={dt}"
+        );
+    }
+
+    #[test]
+    fn fault_device_loss_redirects_kernels_and_charges_replan() {
+        let mut clean = small_node(2);
+        for d in 0..2 {
+            clean.kernel(d, 1.0, Ev::ZERO, "fp");
+        }
+        let clean_mk = clean.makespan(); // two devices in parallel ≈ 1 s
+
+        let mut faulted = small_node(2);
+        let plan = Arc::new(FaultPlan::new().device_loss(1, 0));
+        plan.begin_op(FaultScope::Sim);
+        faulted.set_fault_plan(plan.clone());
+        faulted.kernel(0, 1.0, Ev::ZERO, "fp");
+        faulted.kernel(1, 1.0, Ev::ZERO, "fp"); // lost → runs on device 0
+        assert!(plan.is_lost(FaultScope::Sim, 1));
+        let mk = faulted.makespan();
+        assert!(
+            mk > clean_mk + 0.9,
+            "lost device's kernel must serialize on the survivor: {mk} vs {clean_mk}"
+        );
+        // the one-time replan charge landed on the host
+        assert!(faulted.events().iter().any(|e| e.label.contains("fault replan d1")));
+    }
+
+    #[test]
+    fn fault_disk_retry_time_appears_on_the_disk_engine() {
+        let mut clean = small_node(1);
+        clean.disk_read(1 << 20, Ev::ZERO);
+        let mut faulted = small_node(1);
+        let plan = Arc::new(FaultPlan::new().disk_io(0, 2));
+        plan.begin_op(FaultScope::Sim);
+        faulted.set_fault_plan(plan);
+        faulted.disk_read(1 << 20, Ev::ZERO);
+        assert!(faulted.makespan() > clean.makespan());
     }
 
     #[test]

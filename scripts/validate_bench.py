@@ -17,6 +17,11 @@ Checks
     devices (name contains `gpus=K`, K >= 8) must report speedup > 1 —
     the reduction tree shortening the merge critical path at scale is a
     tracked acceptance property, not just a data point;
+  * coordinator runs only: every `fault ...` ablation entry must report
+    1 < speedup < 2 — for these entries `speedup` is the recovery
+    overhead factor (faulted makespan / clean makespan), and a single
+    retried transient launch must cost something yet never double the
+    run (the tracked recovery-overhead acceptance gate);
   * when --require-prefixes is given, each comma-separated prefix matches
     at least one entry name of the last run.
 
@@ -52,19 +57,40 @@ def check_entry(schema: str, entry: dict) -> None:
             fail(f"entry '{name}': {key} must be an integer >= 1, got {value!r}")
     if schema.startswith("tigre-bench-coordinator/") and name.startswith("merge"):
         check_merge_entry(name, entry)
+    if schema.startswith("tigre-bench-coordinator/") and name.startswith("fault"):
+        check_fault_entry(name, entry)
+
+
+def parse_gpus(name: str) -> int:
+    """Extract the device count from a 'gpus=K' token in an entry name."""
+    for token in name.split():
+        if token.startswith("gpus="):
+            try:
+                return int(token.removeprefix("gpus="))
+            except ValueError:
+                fail(f"entry '{name}': unparseable device count {token!r}")
+    fail(f"entry '{name}': ablation entries must carry a 'gpus=K' token")
+
+
+def check_fault_entry(name: str, entry: dict) -> None:
+    """Fault-ablation acceptance: recovery overhead in (1, 2) at any scale.
+
+    For `fault ...` entries `speedup` = faulted / clean makespan. One
+    injected transient must register (> 1) but its bounded retry backoff
+    must never double the run (< 2).
+    """
+    parse_gpus(name)  # names must stay machine-parsable per device count
+    overhead = entry.get("speedup", 0)
+    if not 1.0 < overhead < 2.0:
+        fail(
+            f"entry '{name}': recovery overhead must lie in (1, 2), "
+            f"got {overhead!r}"
+        )
 
 
 def check_merge_entry(name: str, entry: dict) -> None:
     """Merge-ablation acceptance: the tree must win at >= 8 devices."""
-    gpus = None
-    for token in name.split():
-        if token.startswith("gpus="):
-            try:
-                gpus = int(token.removeprefix("gpus="))
-            except ValueError:
-                fail(f"entry '{name}': unparseable device count {token!r}")
-    if gpus is None:
-        fail(f"entry '{name}': merge entries must carry a 'gpus=K' token")
+    gpus = parse_gpus(name)
     if gpus >= 8 and entry.get("speedup", 0) <= 1.0:
         fail(
             f"entry '{name}': reduction tree must beat the linear fold at "
