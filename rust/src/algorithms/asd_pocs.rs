@@ -11,8 +11,9 @@ use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, TrackedVolume, Volume};
 
-use super::common::{ReconOpts, ReconResult};
+use super::common::{DivergenceGuard, ReconOpts, ReconResult};
 use super::ossart::os_sart;
+use crate::coordinator::DegradeEvent;
 
 /// ASD-POCS options.
 #[derive(Clone, Debug)]
@@ -56,7 +57,7 @@ pub fn asd_pocs(
 
     // the inner data sweep must not checkpoint: only the outer loop owns
     // the durable state (x), snapshotted at outer-iteration granularity
-    let one_iter = ReconOpts { iterations: 1, checkpoint: None, ..opts.common.clone() };
+    let mut one_iter = ReconOpts { iterations: 1, checkpoint: None, ..opts.common.clone() };
     let (mut ck, resumed) = checkpoint::setup(&opts.common.checkpoint, "asd-pocs")?;
     let mut start = 0;
     if let Some(mut st) = resumed {
@@ -64,6 +65,9 @@ pub fn asd_pocs(
         residuals = st.residuals.clone();
         scratch::recycle_volume(x.replace(st.volume("x")?));
     }
+    let mut guard = DivergenceGuard::new("asd-pocs", &opts.common);
+    guard.seed(&residuals);
+    let mut alpha_scale: f32 = 1.0;
     for it in start..opts.common.iterations {
         ctx.set_fault_iteration(it);
         // --- data fidelity sweep (OS-SART), warm-started from x ---
@@ -74,6 +78,14 @@ pub fn asd_pocs(
         db.add_scaled(ax.get(), -1.0);
         sess.recycle_projections(ax);
         residuals.push(db.norm2());
+        // residual growth → relax both the data sweep (λ) and the TV
+        // step (α) before this iteration's updates
+        if let Some(f) = guard.check(it, *residuals.last().unwrap())? {
+            one_iter.lambda *= f;
+            alpha_scale *= f;
+            ctx.degrade
+                .record(DegradeEvent::StepBackoff { algorithm: "asd-pocs", iteration: it });
+        }
 
         let r = os_sart(ctx, g, &db, opts.subset_size, &one_iter)?;
         sim_time += r.sim_time_s;
@@ -85,7 +97,8 @@ pub fn asd_pocs(
         }
 
         // --- TV minimization, step adapted to the data update ---
-        let alpha = if dx_norm > 0.0 { opts.alpha } else { opts.alpha * 0.5 };
+        let base_alpha = if dx_norm > 0.0 { opts.alpha } else { opts.alpha * 0.5 };
+        let alpha = alpha_scale * base_alpha;
         let (x_tv, stats) =
             tv_gradient_descent_split(ctx, x.get(), opts.tv_iters, alpha, opts.n_in)?;
         sim_time += stats.makespan_s;
@@ -113,6 +126,7 @@ pub fn asd_pocs(
         residuals,
         sim_time_s: sim_time,
         peak_device_bytes: peak,
+        backoffs: guard.backoffs,
     })
 }
 

@@ -11,8 +11,9 @@ use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{ReconOpts, ReconResult};
+use super::common::{DivergenceGuard, ReconOpts, ReconResult};
 use super::ossart::matched_ctx;
+use crate::coordinator::DegradeEvent;
 
 /// CGLS reconstruction from zero initial guess.
 ///
@@ -53,6 +54,8 @@ pub fn cgls(
         p = TrackedVolume::new(s.clone());
         gamma = s.dot(&s);
     }
+    let mut guard = DivergenceGuard::new("cgls", opts);
+    guard.seed(&residuals);
     for it in start..opts.iterations {
         ctx.set_fault_iteration(it);
         if gamma <= 0.0 {
@@ -70,13 +73,20 @@ pub fn cgls(
         r.write().add_scaled(q.get(), -alpha);
         sess.recycle_projections(q);
         residuals.push(r.get().norm2());
+        // CG has no step size to shrink: residual growth (a broken
+        // recurrence, e.g. accumulated rounding) restarts the direction
+        // (β = 0, i.e. p = steepest descent) instead
+        let restart = guard.check(it, *residuals.last().unwrap())?.is_some();
+        if restart {
+            ctx.degrade.record(DegradeEvent::StepBackoff { algorithm: "cgls", iteration: it });
+        }
         if opts.verbose {
             crate::log_info!("cgls iter {it}: residual {:.4e}", r.get().norm2());
         }
         // s = Aᵀr (previous direction buffer goes back to the arena)
         scratch::recycle_volume(std::mem::replace(&mut s, sess.backward(&r)?));
         let gamma_new = s.dot(&s);
-        let beta = (gamma_new / gamma) as f32;
+        let beta = if restart { 0.0 } else { (gamma_new / gamma) as f32 };
         gamma = gamma_new;
         // p = s + β p
         for (pv, sv) in p.write().data.iter_mut().zip(&s.data) {
@@ -106,6 +116,7 @@ pub fn cgls(
         residuals,
         sim_time_s: sess.sim_time_s,
         peak_device_bytes: sess.peak_device_bytes,
+        backoffs: guard.backoffs,
     })
 }
 

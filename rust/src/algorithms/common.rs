@@ -5,6 +5,7 @@
 //! tracked, plus the cross-iteration device residency cache.
 
 use crate::coordinator::checkpoint::CheckpointConfig;
+use crate::coordinator::{NonFiniteStage, ReconError};
 use crate::volume::Volume;
 
 /// Options common to the iterative algorithms.
@@ -23,11 +24,33 @@ pub struct ReconOpts {
     /// already present in the directory — the resumed run's final
     /// iterate is bit-identical to an uninterrupted one.
     pub checkpoint: Option<CheckpointConfig>,
+    /// Numerical-health guard (ISSUE 8): an iteration whose residual
+    /// exceeds the previous one by more than this factor counts as
+    /// divergence and triggers a step-size backoff. Generous enough
+    /// that normal non-monotone ripples (FISTA momentum, early MLEM)
+    /// never trip it.
+    pub divergence_tolerance: f64,
+    /// Multiplicative step-size scale applied on each divergence
+    /// backoff (each algorithm maps it onto its own step/relaxation
+    /// knob — see `DivergenceGuard`).
+    pub step_backoff: f32,
+    /// Backoff budget: residual growth past this many backoffs fails
+    /// the run with [`ReconError::Diverged`] instead of looping.
+    pub max_step_backoffs: usize,
 }
 
 impl Default for ReconOpts {
     fn default() -> Self {
-        Self { iterations: 10, lambda: 1.0, nonneg: true, verbose: false, checkpoint: None }
+        Self {
+            iterations: 10,
+            lambda: 1.0,
+            nonneg: true,
+            verbose: false,
+            checkpoint: None,
+            divergence_tolerance: 1.25,
+            step_backoff: 0.5,
+            max_step_backoffs: 4,
+        }
     }
 }
 
@@ -42,6 +65,85 @@ pub struct ReconResult {
     pub sim_time_s: f64,
     /// Peak simulated device memory over all calls.
     pub peak_device_bytes: u64,
+    /// Divergence-guard step backoffs taken (ISSUE 8); 0 on a healthy
+    /// run.
+    pub backoffs: usize,
+}
+
+/// Per-iteration numerical-health guard (ISSUE 8), shared by all six
+/// iterative algorithms: watches the residual trace for non-finite
+/// values (typed error, stage [`NonFiniteStage::Residual`]) and for
+/// growth past `opts.divergence_tolerance`. Growth hands the algorithm
+/// its configured step scale (`opts.step_backoff`) to apply to its own
+/// step/relaxation knob; growth persisting past `opts.max_step_backoffs`
+/// fails the run with [`ReconError::Diverged`].
+///
+/// The guard only *reacts* to the residual trace — on a converging run
+/// it never fires and the iterates are untouched, so clean-path outputs
+/// are bit-identical to a guard-free build.
+pub struct DivergenceGuard {
+    algorithm: &'static str,
+    tolerance: f64,
+    step_backoff: f32,
+    max_backoffs: usize,
+    prev: Option<f64>,
+    /// Backoffs taken so far (reported through [`ReconResult::backoffs`]).
+    pub backoffs: usize,
+}
+
+impl DivergenceGuard {
+    pub fn new(algorithm: &'static str, opts: &ReconOpts) -> Self {
+        Self {
+            algorithm,
+            tolerance: opts.divergence_tolerance,
+            step_backoff: opts.step_backoff,
+            max_backoffs: opts.max_step_backoffs,
+            prev: None,
+            backoffs: 0,
+        }
+    }
+
+    /// Seed the previous-residual state from a restored trace. Checkpoint
+    /// resume must call this so the guard compares the first resumed
+    /// iteration against the same predecessor an uninterrupted run would
+    /// have used — otherwise resumed and uninterrupted runs could make
+    /// different backoff decisions and lose bit-identity.
+    pub fn seed(&mut self, residuals: &[f64]) {
+        self.prev = residuals.last().copied();
+    }
+
+    /// Judge iteration `iteration`'s residual. `Ok(None)`: healthy.
+    /// `Ok(Some(f))`: residual grew past tolerance — scale the step by
+    /// `f` before applying this iteration's update. `Err`: non-finite
+    /// residual, or growth with the backoff budget exhausted.
+    pub fn check(
+        &mut self,
+        iteration: usize,
+        residual: f64,
+    ) -> Result<Option<f32>, ReconError> {
+        if !residual.is_finite() {
+            return Err(ReconError::NonFinite {
+                stage: NonFiniteStage::Residual,
+                index: iteration,
+                detail: format!("{}: residual {residual}", self.algorithm),
+            });
+        }
+        let grew = self.prev.is_some_and(|p| residual > p * self.tolerance);
+        self.prev = Some(residual);
+        if !grew {
+            return Ok(None);
+        }
+        if self.backoffs >= self.max_backoffs {
+            return Err(ReconError::Diverged {
+                algorithm: self.algorithm,
+                iteration,
+                residual,
+                backoffs: self.backoffs,
+            });
+        }
+        self.backoffs += 1;
+        Ok(Some(self.step_backoff))
+    }
 }
 
 /// `max(x, eps)` reciprocal used for SART weight volumes.
@@ -99,5 +201,52 @@ mod tests {
         let mut v = vec![2.0, 0.0, -4.0];
         safe_recip(&mut v);
         assert_eq!(v, vec![0.5, 0.0, -0.25]);
+    }
+
+    #[test]
+    fn degrade_divergence_guard_backs_off_then_fails() {
+        let opts = ReconOpts { max_step_backoffs: 2, ..Default::default() };
+        let mut g = DivergenceGuard::new("test", &opts);
+        // decreasing and mildly-noisy traces never fire
+        assert_eq!(g.check(0, 10.0).unwrap(), None);
+        assert_eq!(g.check(1, 9.0).unwrap(), None);
+        assert_eq!(g.check(2, 9.0 * 1.2).unwrap(), None); // within tolerance
+        // two growth events spend the backoff budget...
+        assert_eq!(g.check(3, 100.0).unwrap(), Some(opts.step_backoff));
+        assert_eq!(g.check(4, 1000.0).unwrap(), Some(opts.step_backoff));
+        assert_eq!(g.backoffs, 2);
+        // ...the third is a typed divergence error
+        let err = g.check(5, 10_000.0).unwrap_err();
+        assert!(matches!(
+            err,
+            crate::coordinator::ReconError::Diverged { algorithm: "test", backoffs: 2, .. }
+        ));
+    }
+
+    #[test]
+    fn degrade_divergence_guard_rejects_non_finite_residuals() {
+        let mut g = DivergenceGuard::new("test", &ReconOpts::default());
+        let err = g.check(0, f64::NAN).unwrap_err();
+        assert!(matches!(
+            err,
+            crate::coordinator::ReconError::NonFinite {
+                stage: crate::coordinator::NonFiniteStage::Residual,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn degrade_divergence_guard_seed_matches_uninterrupted_trace() {
+        // resume parity: seeding from a restored trace must reproduce the
+        // uninterrupted guard's decision on the next residual
+        let opts = ReconOpts::default();
+        let mut full = DivergenceGuard::new("test", &opts);
+        full.check(0, 10.0).unwrap();
+        full.check(1, 8.0).unwrap();
+        let full_next = full.check(2, 20.0).unwrap();
+        let mut resumed = DivergenceGuard::new("test", &opts);
+        resumed.seed(&[10.0, 8.0]);
+        assert_eq!(resumed.check(2, 20.0).unwrap(), full_next);
     }
 }

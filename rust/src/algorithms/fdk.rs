@@ -35,6 +35,7 @@ pub fn fdk(
         residuals: vec![],
         sim_time_s: stats.makespan_s,
         peak_device_bytes: stats.peak_device_bytes,
+        backoffs: 0,
     })
 }
 

@@ -9,9 +9,10 @@ use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{ReconOpts, ReconResult};
+use super::common::{DivergenceGuard, ReconOpts, ReconResult};
 use super::landweber::power_iteration_norm;
 use super::ossart::matched_ctx;
+use crate::coordinator::DegradeEvent;
 
 /// FISTA options beyond the common ones.
 #[derive(Clone, Debug)]
@@ -47,7 +48,7 @@ pub fn fista(
     let mut sess = ReconSession::new(&ctx, g)?;
 
     // Estimate the Lipschitz constant L = ‖AᵀA‖ by power iteration.
-    let step = match opts.step {
+    let mut step = match opts.step {
         Some(s) => s,
         None => (1.0 / power_iteration_norm(&mut sess, g, 42)?.max(1e-30)) as f32,
     };
@@ -72,6 +73,8 @@ pub fn fista(
         scratch::recycle_volume(y.replace(st.volume("y")?));
         t = st.scalar("t")? as f32;
     }
+    let mut guard = DivergenceGuard::new("fista", &opts.common);
+    guard.seed(&residuals);
     for it in start..opts.common.iterations {
         ctx.set_fault_iteration(it);
         // gradient step on y: y − step·Aᵀ(Ay − b). The session forms the
@@ -82,6 +85,14 @@ pub fn fista(
         let (neg_grad, res_norm) = sess.backward_residual(&b, &ay)?;
         sess.recycle_projections(ay);
         residuals.push(res_norm); // ‖b − Ay‖₂ = ‖Ay − b‖₂
+        // residual growth → shrink the step and restart the momentum
+        // (adaptive restart) before applying this gradient step
+        if let Some(f) = guard.check(it, res_norm)? {
+            step *= f;
+            t = 1.0;
+            ctx.degrade
+                .record(DegradeEvent::StepBackoff { algorithm: "fista", iteration: it });
+        }
         let mut z = y.get().clone();
         z.add_scaled(&neg_grad, step);
         scratch::recycle_volume(neg_grad);
@@ -127,6 +138,7 @@ pub fn fista(
         residuals,
         sim_time_s: sess.sim_time_s + prox_sim_s,
         peak_device_bytes: sess.peak_device_bytes,
+        backoffs: guard.backoffs,
     })
 }
 

@@ -13,8 +13,9 @@ use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{ReconOpts, ReconResult};
+use super::common::{DivergenceGuard, ReconOpts, ReconResult};
 use super::ossart::matched_ctx;
+use crate::coordinator::DegradeEvent;
 
 /// Estimate `‖AᵀA‖` by power iteration through a session (shared by
 /// Landweber and FISTA). Temporaries go back to the `kernels::scratch`
@@ -52,7 +53,7 @@ pub fn landweber(
 
     // step = λ / ‖AᵀA‖ (power iteration)
     let lmax = power_iteration_norm(&mut sess, g, 17)?;
-    let step = opts.lambda / lmax.max(1e-30) as f32;
+    let mut step = opts.lambda / lmax.max(1e-30) as f32;
 
     // the measured projections are constant across iterations — exactly
     // what the session keeps device-resident from the first iteration on
@@ -66,6 +67,8 @@ pub fn landweber(
         residuals = st.residuals.clone();
         scratch::recycle_volume(x.replace(st.volume("x")?));
     }
+    let mut guard = DivergenceGuard::new("landweber", opts);
+    guard.seed(&residuals);
     for it in start..opts.iterations {
         ctx.set_fault_iteration(it);
         let ax = sess.forward(&x)?;
@@ -74,6 +77,12 @@ pub fn landweber(
         let (upd, res_norm) = sess.backward_residual(&b, &ax)?;
         sess.recycle_projections(ax);
         residuals.push(res_norm);
+        // residual growth → shrink the step before applying this update
+        if let Some(f) = guard.check(it, res_norm)? {
+            step *= f;
+            ctx.degrade
+                .record(DegradeEvent::StepBackoff { algorithm: "landweber", iteration: it });
+        }
         x.write().add_scaled(&upd, step);
         scratch::recycle_volume(upd);
         if opts.nonneg {
@@ -99,6 +108,7 @@ pub fn landweber(
         residuals,
         sim_time_s: sess.sim_time_s,
         peak_device_bytes: sess.peak_device_bytes,
+        backoffs: guard.backoffs,
     })
 }
 
@@ -143,6 +153,11 @@ pub fn mlem(
         residuals = st.residuals.clone();
         scratch::recycle_volume(x.replace(st.volume("x")?));
     }
+    let mut guard = DivergenceGuard::new("mlem", opts);
+    guard.seed(&residuals);
+    // divergence backoff for the multiplicative update: blend the EM
+    // correction toward the identity (damp = 1 is the exact EM step)
+    let mut damp: f32 = 1.0;
     for it in start..opts.iterations {
         ctx.set_fault_iteration(it);
         // reuse Ax in place as the ratio buffer b ⊘ Ax (the in-place
@@ -155,10 +170,21 @@ pub fn mlem(
             *av = if *av > 1e-8 { bv / *av } else { 0.0 };
         }
         residuals.push(res2.sqrt());
+        if let Some(f) = guard.check(it, res2.sqrt())? {
+            damp *= f;
+            ctx.degrade.record(DegradeEvent::StepBackoff { algorithm: "mlem", iteration: it });
+        }
         let corr = sess.backward(&ratio)?;
         sess.recycle_projections(ratio);
-        for ((xv, cv), sv) in x.write().data.iter_mut().zip(&corr.data).zip(&sens.data) {
-            *xv = if *sv > 1e-8 { *xv * cv / sv } else { 0.0 };
+        if damp < 1.0 {
+            for ((xv, cv), sv) in x.write().data.iter_mut().zip(&corr.data).zip(&sens.data) {
+                let em = if *sv > 1e-8 { cv / sv } else { 0.0 };
+                *xv *= (1.0 - damp) + damp * em;
+            }
+        } else {
+            for ((xv, cv), sv) in x.write().data.iter_mut().zip(&corr.data).zip(&sens.data) {
+                *xv = if *sv > 1e-8 { *xv * cv / sv } else { 0.0 };
+            }
         }
         scratch::recycle_volume(corr);
         if opts.verbose {
@@ -181,6 +207,7 @@ pub fn mlem(
         residuals,
         sim_time_s: sess.sim_time_s,
         peak_device_bytes: sess.peak_device_bytes,
+        backoffs: guard.backoffs,
     })
 }
 
@@ -318,6 +345,59 @@ mod tests {
         .unwrap();
         assert_eq!(resumed.volume.data, clean.volume.data);
         assert_eq!(resumed.residuals, clean.residuals);
+    }
+
+    // -- numerical-health guards (ISSUE 8) --------------------------------
+
+    #[test]
+    fn degrade_landweber_backs_off_a_divergent_step_and_recovers() {
+        // λ = 3.5 puts the step past the 2/‖AᵀA‖ stability bound: the
+        // dominant mode amplifies ~2.5× per sweep, the divergence guard
+        // fires, and one halving (λ → 1.75) lands back inside the bound
+        let (g, _, p, ctx) = setup(14, 12);
+        let opts = ReconOpts { iterations: 10, lambda: 3.5, nonneg: false, ..Default::default() };
+        let r = landweber(&ctx, &g, &p, &opts).unwrap();
+        assert!(r.backoffs >= 1, "guard must fire on a divergent step: {:?}", r.residuals);
+        let peak = r.residuals.iter().cloned().fold(f64::MIN, f64::max);
+        let last = *r.residuals.last().unwrap();
+        assert!(
+            last < peak,
+            "after backoff the residual must come back down: {:?}",
+            r.residuals
+        );
+        assert!(r.volume.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn degrade_landweber_exhausted_backoff_budget_is_a_typed_divergence_error() {
+        let (g, _, p, ctx) = setup(14, 12);
+        // no backoff budget: the first detected growth is terminal
+        let opts = ReconOpts {
+            iterations: 10,
+            lambda: 3.5,
+            nonneg: false,
+            max_step_backoffs: 0,
+            ..Default::default()
+        };
+        let err = landweber(&ctx, &g, &p, &opts).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("landweber diverged"), "{msg}");
+        assert!(msg.contains("step-size backoffs"), "{msg}");
+    }
+
+    #[test]
+    fn degrade_guarded_clean_run_is_bit_identical_to_seed_behaviour() {
+        // the guard only reacts: on a converging run it never fires and
+        // the iterates are exactly those of a guard-free configuration
+        // (tolerance effectively disabled)
+        let (g, _, p, ctx) = setup(14, 10);
+        let base = ReconOpts { iterations: 4, lambda: 1.0, ..Default::default() };
+        let loose = ReconOpts { divergence_tolerance: 1e12, ..base.clone() };
+        let a = landweber(&ctx, &g, &p, &base).unwrap();
+        let b = landweber(&ctx, &g, &p, &loose).unwrap();
+        assert_eq!(a.backoffs, 0);
+        assert_eq!(a.volume.data, b.volume.data);
+        assert_eq!(a.residuals, b.residuals);
     }
 
     #[test]

@@ -13,7 +13,8 @@ use crate::geometry::Geometry;
 use crate::kernels::{scratch, BackprojWeight};
 use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{ordered_subsets, safe_recip, ReconOpts, ReconResult};
+use super::common::{ordered_subsets, safe_recip, DivergenceGuard, ReconOpts, ReconResult};
+use crate::coordinator::DegradeEvent;
 
 /// OS-SART with the given subset size.
 ///
@@ -82,6 +83,9 @@ pub fn os_sart(
         residuals = st.residuals.clone();
         scratch::recycle_volume(x.replace(st.volume("x")?));
     }
+    let mut guard = DivergenceGuard::new("os-sart", opts);
+    guard.seed(&residuals);
+    let mut lambda = opts.lambda;
     for it in start..opts.iterations {
         ctx.set_fault_iteration(it);
         let mut res2 = 0.0f64;
@@ -99,7 +103,7 @@ pub fn os_sart(
             sub.sess.recycle_projections(r);
             scratch::recycle_projections(b_s);
             for ((xv, uv), vv) in x.write().data.iter_mut().zip(&upd.data).zip(&sub.v.data) {
-                *xv += opts.lambda * uv * vv;
+                *xv += lambda * uv * vv;
             }
             scratch::recycle_volume(upd);
             if opts.nonneg {
@@ -108,6 +112,12 @@ pub fn os_sart(
         }
         let res = res2.sqrt();
         residuals.push(res);
+        // residual growth → relax λ for the following sweeps
+        if let Some(f) = guard.check(it, res)? {
+            lambda *= f;
+            ctx.degrade
+                .record(DegradeEvent::StepBackoff { algorithm: "os-sart", iteration: it });
+        }
         if opts.verbose {
             crate::log_info!("os-sart iter {it}: residual {res:.4e}");
         }
@@ -127,7 +137,13 @@ pub fn os_sart(
         .iter()
         .fold((0.0, 0), |(t, p), s| (t + s.sess.sim_time_s, p.max(s.sess.peak_device_bytes)));
     scratch::recycle_volume(ones_vol.into_inner());
-    Ok(ReconResult { volume: x.into_inner(), residuals, sim_time_s, peak_device_bytes })
+    Ok(ReconResult {
+        volume: x.into_inner(),
+        residuals,
+        sim_time_s,
+        peak_device_bytes,
+        backoffs: guard.backoffs,
+    })
 }
 
 /// SART: ordered subsets of size 1.
@@ -157,7 +173,8 @@ pub(crate) fn matched_ctx(ctx: &MultiGpu) -> MultiGpu {
         crate::coordinator::Backend::Native { weight, .. } => *weight = BackprojWeight::Matched,
         crate::coordinator::Backend::Pjrt { weight, .. } => *weight = BackprojWeight::Matched,
         #[cfg(test)]
-        crate::coordinator::Backend::PanicInject { .. } => {}
+        crate::coordinator::Backend::PanicInject { .. }
+        | crate::coordinator::Backend::NanInject { .. } => {}
     }
     c
 }

@@ -35,7 +35,7 @@ use crate::coordinator::{ExecMode, MergeStrategy, MultiGpu, ReconSession, SplitC
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::phantom;
-use crate::simgpu::fault::FaultPlan;
+use crate::simgpu::fault::{FaultPlan, MAX_LAUNCH_RETRIES};
 use crate::util::json::Json;
 use crate::util::stats::bench;
 use crate::volume::{
@@ -148,7 +148,57 @@ pub fn run_suite(smoke: bool, threads: usize) -> Vec<CoordBenchEntry> {
     // fault-tolerance ablation (ISSUE 7): recovery overhead of one
     // injected transient launch failure, on deterministic DES makespans
     out.extend(bench_fault(threads));
+    // graceful-degradation ablation (ISSUE 8): replanning overhead of one
+    // injected allocation failure, on deterministic DES makespans
+    out.extend(bench_degrade(threads));
     out
+}
+
+/// Graceful-degradation ablation (ISSUE 8): simulated image-split forward
+/// makespan with ONE injected allocation failure at (device 0, unit 0)
+/// that exhausts the bounded allocation retries — forcing the
+/// memory-pressure ladder to refine the plan and replay — vs the
+/// pressure-free run, per device count. The real numeric path is
+/// bit-identical under pressure replanning (a tested invariant: FP
+/// refinement only re-chunks the angles), so — as with [`bench_fault`] —
+/// each entry reports the deterministic DES makespans:
+/// `sequential_median_s` = degraded, `pipelined_median_s` = clean, and
+/// `speedup` is the **degradation-overhead factor** (≥1; the tracked gate
+/// is <2×, i.e. a survived OOM must never double the makespan). A fresh
+/// context — hence a fresh fault plan — is built per measurement because
+/// injected sites fire once and then stay consumed.
+fn bench_degrade(threads: usize) -> Vec<CoordBenchEntry> {
+    const N: usize = 256;
+    const A: usize = 128;
+    let g = Geometry::cone_beam(N, A);
+    let mem = image_split_mem(&g, &SplitConfig::default());
+    [1usize, 2, 4]
+        .into_iter()
+        .map(|gpus| {
+            let makespan = |degraded: bool| -> f64 {
+                let ctx =
+                    MultiGpu::gtx1080ti(gpus).with_device_mem(mem).with_threads(threads);
+                let ctx = if degraded {
+                    ctx.with_fault_plan(
+                        FaultPlan::new().alloc_fail(0, 0, MAX_LAUNCH_RETRIES + 1),
+                    )
+                } else {
+                    ctx
+                };
+                ctx.forward(&g, None, ExecMode::SimOnly)
+                    .expect("bench degrade sim")
+                    .1
+                    .makespan_s
+            };
+            CoordBenchEntry {
+                name: format!("degrade fp image-split n={N} a={A} gpus={gpus}"),
+                sequential_median_s: makespan(true),
+                pipelined_median_s: makespan(false),
+                sim_median_s: 0.0,
+                samples: 1,
+            }
+        })
+        .collect()
 }
 
 /// Fault-tolerance ablation (ISSUE 7): simulated image-split forward
@@ -569,8 +619,8 @@ mod tests {
         let entries = run_suite(true, 2);
         assert_eq!(
             entries.len(),
-            15,
-            "fp/bp × image-split/angle-split + residency + ooc fp/bp + 5 merge counts + 3 fault counts"
+            18,
+            "fp/bp × image-split/angle-split + residency + ooc fp/bp + 5 merge counts + 3 fault counts + 3 degrade counts"
         );
         for e in &entries {
             assert!(
@@ -621,6 +671,22 @@ mod tests {
             assert!(
                 overhead > 1.0 && overhead < 2.0,
                 "fault gpus={gpus}: recovery overhead {overhead} outside (1, 2)"
+            );
+        }
+        // degrade entries compare a pressure-replanned vs clean DES
+        // makespan: surviving one exhausted allocation must cost the
+        // ladder penalty + the refined plan but never double the run
+        for gpus in [1usize, 2, 4] {
+            let d = entries
+                .iter()
+                .find(|e| {
+                    e.name.starts_with("degrade") && e.name.ends_with(&format!("gpus={gpus}"))
+                })
+                .unwrap_or_else(|| panic!("missing degrade entry for gpus={gpus}"));
+            let overhead = d.speedup();
+            assert!(
+                overhead > 1.0 && overhead < 2.0,
+                "degrade gpus={gpus}: replanning overhead {overhead} outside (1, 2)"
             );
         }
     }

@@ -132,6 +132,8 @@ fn reconstruct(rest: &[String]) -> anyhow::Result<()> {
         .opt("slice", "save central slice PGM to this path", None)
         .opt("checkpoint", "checkpoint/resume directory (iterative algorithms)", None)
         .opt("checkpoint-every", "iterations between checkpoints", Some("1"))
+        .opt("div-tolerance", "residual growth factor counted as divergence", Some("1.25"))
+        .opt("max-backoffs", "step backoffs before a run fails as diverged", Some("4"))
         .flag("verbose", "per-iteration logging")
         .flag("help-cmd", "show options");
     let args = cmd.parse(rest)?;
@@ -167,6 +169,8 @@ fn reconstruct(rest: &[String]) -> anyhow::Result<()> {
         iterations: iters,
         verbose: args.flag("verbose"),
         checkpoint,
+        divergence_tolerance: args.get_f64("div-tolerance")?.unwrap(),
+        max_step_backoffs: args.get_usize("max-backoffs")?.unwrap(),
         ..Default::default()
     };
     let algo = args.get("algo").unwrap();
@@ -207,6 +211,9 @@ fn reconstruct(rest: &[String]) -> anyhow::Result<()> {
     println!("PSNR vs phantom:  {:.2} dB", crate::metrics::psnr(&truth, &result.volume));
     if let Some(res) = result.residuals.last() {
         println!("final residual:   {res:.4e}");
+    }
+    if result.backoffs > 0 {
+        println!("step backoffs:    {} (divergence guard fired)", result.backoffs);
     }
     if let Some(out) = args.get("out") {
         crate::io::save_volume(Path::new(out), &result.volume)?;
@@ -282,6 +289,22 @@ fn print_op(name: &str, stats: &crate::coordinator::OpStats) {
             r.bytes_saved,
             r.transfer_saved_s * 1e3
         );
+    }
+    let d = &stats.degradation;
+    if !d.is_clean() {
+        println!(
+            "  degradation:     {} evict, {} refine, {} spill, {} hang-retry, \
+             {} watchdog-lost, {} slow",
+            d.evictions,
+            d.refinements,
+            d.spills,
+            d.hang_retries,
+            d.watchdog_escalations,
+            d.slow_units
+        );
+        for ev in &d.events {
+            println!("    - {ev}");
+        }
     }
 }
 

@@ -10,12 +10,15 @@
 use anyhow::Context;
 
 use crate::geometry::Geometry;
-use crate::simgpu::{Ev, SimNode, SimOom};
+use crate::simgpu::{Category, Ev, SimNode, SimOom};
 use crate::volume::{ProjInput, ProjectionSet, Volume};
 
+use super::degrade::DegradeEvent;
+use super::error::ReconError;
 use super::executor::{ExecMode, MultiGpu, OpStats};
+use super::forward::MAX_PRESSURE_REFINES;
 use super::residency::BpResidency;
-use super::splitter::{plan_backward, Plan};
+use super::splitter::{plan_backward, refine_for_budget, Plan};
 
 /// Run the backprojection: returns the real volume (in `Full` mode) and
 /// the simulated-schedule statistics.
@@ -41,14 +44,68 @@ pub(crate) fn run_with(
     plan: &Plan,
     res: Option<&BpResidency>,
 ) -> anyhow::Result<(Option<Volume>, OpStats)> {
-    let mut sim = ctx.fresh_sim();
-    if let Some(r) = res {
-        for (d, &bytes) in r.reserve.iter().enumerate() {
-            sim.reserve(d, "resident", bytes)?;
+    // Memory-pressure ladder (ISSUE 8) — see `forward::run_with` for the
+    // protocol. BP refinement doubles the pressured device's slab count:
+    // slabs write disjoint z-ranges and every slab still consumes all
+    // chunks in the same order, so output stays bit-identical. Residency
+    // decisions are indexed by the original plan's slabs, so rung 1
+    // (dropping them) always precedes any refinement.
+    let mut plan = plan.clone();
+    let mut res = res;
+    let mut rungs = 0usize;
+    let mut refines = 0usize;
+    let mut penalty_s = 0.0;
+    let (sim, plan) = loop {
+        let mut sim = ctx.fresh_sim();
+        if penalty_s > 0.0 {
+            sim.host_busy(penalty_s, Category::OtherMem, "pressure replan");
         }
-    }
-    simulate_with(g, plan, &mut sim, res)?;
-    let stats = OpStats::from_sim(&sim, plan);
+        let attempt = (|| -> Result<(), SimOom> {
+            if let Some(r) = res {
+                for (d, &bytes) in r.reserve.iter().enumerate() {
+                    sim.reserve(d, "resident", bytes)?;
+                }
+            }
+            simulate_with(g, &plan, &mut sim, res)
+        })();
+        let oom = match attempt {
+            Ok(()) => break (sim, plan),
+            Err(oom) => oom,
+        };
+        rungs += 1;
+        penalty_s += ctx.cost.pressure_rung_penalty_s();
+        if let Some(r) = res.take() {
+            ctx.degrade.record(DegradeEvent::Evicted {
+                device: oom.device,
+                entries: r.reserve.iter().filter(|&&b| b > 0).count(),
+            });
+            continue;
+        }
+        if refines < MAX_PRESSURE_REFINES {
+            if let Ok((refined, detail)) = refine_for_budget(&plan, g, false, oom.device) {
+                ctx.degrade.record(DegradeEvent::Refined { device: oom.device, detail });
+                plan = refined;
+                refines += 1;
+                continue;
+            }
+        }
+        if !plan.ooc_volume {
+            ctx.degrade.record(DegradeEvent::Spilled {
+                device: oom.device,
+                detail: format!("bp output slabs -> disk after '{}'", oom.label),
+            });
+            plan.ooc_volume = true;
+            continue;
+        }
+        return Err(ReconError::MemoryPressure {
+            device: oom.device,
+            attempts: rungs,
+            detail: oom.detail,
+        }
+        .into());
+    };
+    let plan = &plan;
+    let mut stats = OpStats::from_sim(&sim, plan);
 
     let vol = match mode {
         ExecMode::SimOnly => None,
@@ -57,6 +114,7 @@ pub(crate) fn run_with(
             Some(execute_real(ctx, g, proj, plan)?)
         }
     };
+    stats.degradation = ctx.degrade.drain();
     Ok((vol, stats))
 }
 

@@ -1,0 +1,220 @@
+//! Degradation bookkeeping for the graceful-degradation layer (ISSUE 8).
+//!
+//! Every rung of the memory-pressure ladder (evict → refine → spill),
+//! every watchdog event (hang retry, escalation, slow real unit) and
+//! every numerical-health intervention records itself in a shared
+//! [`DegradeLog`]. The executor drains the log into
+//! [`OpStats::degradation`](super::OpStats) after each operator call, so
+//! tests and the CLI can pin *which* degradation path a run took — the
+//! acceptance criterion for bit-identical completion under pressure.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One recorded degradation step.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DegradeEvent {
+    /// Residency-cache entries were evicted to relieve pressure
+    /// (rung 1 of the ladder).
+    Evicted {
+        /// Device whose allocation failed.
+        device: usize,
+        /// Cache entries dropped.
+        entries: usize,
+    },
+    /// The plan was refined to smaller units (rung 2).
+    Refined {
+        /// Device whose allocation failed.
+        device: usize,
+        /// Human-readable before → after description from the splitter.
+        detail: String,
+    },
+    /// The op fell back to an OOC-spill style replan (rung 3).
+    Spilled {
+        /// Device whose allocation failed.
+        device: usize,
+        /// Host budget / slab description.
+        detail: String,
+    },
+    /// A hung unit was killed at its watchdog deadline and retried.
+    HangRetry {
+        /// Device the unit ran on.
+        device: usize,
+        /// Consecutive hangs observed for this unit.
+        times: usize,
+    },
+    /// Hang retries were exhausted; the device was escalated to lost
+    /// and its units replanned onto survivors (PR-7 machinery).
+    WatchdogEscalated {
+        /// Device marked lost.
+        device: usize,
+    },
+    /// A real unit overran its watchdog deadline but completed (real
+    /// kernels are synchronous and cannot be cancelled — record only).
+    SlowUnit {
+        /// Device the unit ran on.
+        device: usize,
+        /// Wall-clock seconds the unit actually took.
+        elapsed_s: f64,
+        /// The deadline it overran.
+        deadline_s: f64,
+    },
+    /// An iterative algorithm backed its step size off after detecting
+    /// residual growth.
+    StepBackoff {
+        /// Algorithm name.
+        algorithm: &'static str,
+        /// Iteration at which the guard fired.
+        iteration: usize,
+    },
+}
+
+impl std::fmt::Display for DegradeEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DegradeEvent::Evicted { device, entries } => {
+                write!(f, "evict d{device} ({entries} entries)")
+            }
+            DegradeEvent::Refined { device, detail } => write!(f, "refine d{device}: {detail}"),
+            DegradeEvent::Spilled { device, detail } => write!(f, "spill d{device}: {detail}"),
+            DegradeEvent::HangRetry { device, times } => {
+                write!(f, "hang retry d{device} (x{times})")
+            }
+            DegradeEvent::WatchdogEscalated { device } => write!(f, "watchdog lost d{device}"),
+            DegradeEvent::SlowUnit { device, elapsed_s, deadline_s } => {
+                write!(f, "slow unit d{device} ({elapsed_s:.3}s > {deadline_s:.3}s)")
+            }
+            DegradeEvent::StepBackoff { algorithm, iteration } => {
+                write!(f, "{algorithm} step backoff @ it {iteration}")
+            }
+        }
+    }
+}
+
+/// Drained per-op summary of degradation activity, carried on
+/// [`OpStats`](super::OpStats).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DegradeStats {
+    /// Residency evictions forced by memory pressure.
+    pub evictions: usize,
+    /// Plan refinements (rung 2 replans).
+    pub refinements: usize,
+    /// OOC-spill fallbacks (rung 3).
+    pub spills: usize,
+    /// Hung-unit retries.
+    pub hang_retries: usize,
+    /// Watchdog escalations to device loss.
+    pub watchdog_escalations: usize,
+    /// Record-only slow real units.
+    pub slow_units: usize,
+    /// Ordered human-readable event trail.
+    pub events: Vec<String>,
+}
+
+impl DegradeStats {
+    /// True when no degradation path was taken.
+    pub fn is_clean(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Shared, thread-safe degradation recorder. Cloned handles (via `Arc`)
+/// are held by the executor, the pipeline workers and the algorithms;
+/// [`DegradeLog::drain`] moves everything recorded since the last drain
+/// into a [`DegradeStats`].
+#[derive(Debug, Default)]
+pub struct DegradeLog {
+    evictions: AtomicUsize,
+    refinements: AtomicUsize,
+    spills: AtomicUsize,
+    hang_retries: AtomicUsize,
+    watchdog_escalations: AtomicUsize,
+    slow_units: AtomicUsize,
+    events: Mutex<Vec<DegradeEvent>>,
+}
+
+impl DegradeLog {
+    /// Fresh, empty log.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one degradation event (thread-safe).
+    pub fn record(&self, ev: DegradeEvent) {
+        let ctr = match &ev {
+            DegradeEvent::Evicted { .. } => &self.evictions,
+            DegradeEvent::Refined { .. } => &self.refinements,
+            DegradeEvent::Spilled { .. } => &self.spills,
+            DegradeEvent::HangRetry { .. } => &self.hang_retries,
+            DegradeEvent::WatchdogEscalated { .. } => &self.watchdog_escalations,
+            DegradeEvent::SlowUnit { .. } => &self.slow_units,
+            DegradeEvent::StepBackoff { .. } => {
+                self.events.lock().unwrap().push(ev);
+                return;
+            }
+        };
+        ctr.fetch_add(1, Ordering::Relaxed);
+        self.events.lock().unwrap().push(ev);
+    }
+
+    /// Move everything recorded since the last drain into a summary.
+    pub fn drain(&self) -> DegradeStats {
+        let events: Vec<DegradeEvent> = std::mem::take(&mut *self.events.lock().unwrap());
+        DegradeStats {
+            evictions: self.evictions.swap(0, Ordering::Relaxed),
+            refinements: self.refinements.swap(0, Ordering::Relaxed),
+            spills: self.spills.swap(0, Ordering::Relaxed),
+            hang_retries: self.hang_retries.swap(0, Ordering::Relaxed),
+            watchdog_escalations: self.watchdog_escalations.swap(0, Ordering::Relaxed),
+            slow_units: self.slow_units.swap(0, Ordering::Relaxed),
+            events: events.iter().map(|e| e.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_count_and_drain_resets() {
+        let log = DegradeLog::new();
+        log.record(DegradeEvent::Evicted { device: 0, entries: 3 });
+        log.record(DegradeEvent::Refined { device: 0, detail: "fp chunk 9 -> 4".into() });
+        log.record(DegradeEvent::HangRetry { device: 1, times: 2 });
+        let stats = log.drain();
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.refinements, 1);
+        assert_eq!(stats.hang_retries, 1);
+        assert_eq!(stats.events.len(), 3);
+        assert!(stats.events[1].contains("refine d0"), "{:?}", stats.events);
+        assert!(!stats.is_clean());
+        // drained: the next op starts clean
+        let again = log.drain();
+        assert!(again.is_clean());
+        assert_eq!(again, DegradeStats::default());
+    }
+
+    #[test]
+    fn is_shareable_across_threads() {
+        let log = std::sync::Arc::new(DegradeLog::new());
+        let handles: Vec<_> = (0..4)
+            .map(|d| {
+                let log = log.clone();
+                std::thread::spawn(move || {
+                    log.record(DegradeEvent::SlowUnit {
+                        device: d,
+                        elapsed_s: 1.0,
+                        deadline_s: 0.5,
+                    })
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = log.drain();
+        assert_eq!(stats.slow_units, 4);
+        assert_eq!(stats.events.len(), 4);
+    }
+}

@@ -1,0 +1,163 @@
+//! Typed error taxonomy for the reconstruction stack (ISSUE 8).
+//!
+//! Replaces the stringly `anyhow!(...)` paths in the coordinator with
+//! variants callers can match on: planning failures, exhausted device
+//! recovery, memory pressure that survived the full degradation ladder
+//! (evict → refine → spill), and numerical-health violations (non-finite
+//! values at merge boundaries, diverging iterations). Every variant
+//! implements `std::error::Error`, so existing `anyhow::Result` call
+//! sites keep working through `?` — and the structured payload is
+//! matchable wherever the typed error has not yet been erased.
+
+use std::fmt;
+
+/// What the coordinator was doing when a non-finite value was caught.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NonFiniteStage {
+    /// A device's partial projection, scanned before the host fold.
+    MergePartial,
+    /// The folded/merged output, scanned after accumulation.
+    MergedOutput,
+    /// A backprojected volume slab, scanned before it is published.
+    VolumeSlab,
+    /// An iterative algorithm's residual norm.
+    Residual,
+}
+
+impl fmt::Display for NonFiniteStage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            NonFiniteStage::MergePartial => "merge partial",
+            NonFiniteStage::MergedOutput => "merged output",
+            NonFiniteStage::VolumeSlab => "volume slab",
+            NonFiniteStage::Residual => "residual",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Unified reconstruction error taxonomy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReconError {
+    /// The splitter could not produce a feasible plan (infeasible
+    /// geometry/budget combination). Carries the splitter's detail.
+    Plan(String),
+    /// Fault recovery ran out of devices: every device was lost.
+    AllDevicesLost(String),
+    /// Memory pressure persisted through the whole degradation ladder
+    /// (evict → refine → spill) on `device`.
+    MemoryPressure {
+        /// Device whose allocations kept failing.
+        device: usize,
+        /// Ladder rungs attempted before giving up.
+        attempts: usize,
+        /// Last OOM detail from the ledger.
+        detail: String,
+    },
+    /// A NaN/Inf was caught by a numerical-health scan.
+    NonFinite {
+        /// Where in the pipeline the scan fired.
+        stage: NonFiniteStage,
+        /// Element index of the first non-finite value (0 for scalars).
+        index: usize,
+        /// Context label (unit/device/iteration description).
+        detail: String,
+    },
+    /// An iterative algorithm kept diverging after exhausting its
+    /// step-size backoff budget.
+    Diverged {
+        /// Algorithm name (e.g. `landweber`).
+        algorithm: &'static str,
+        /// Iteration at which the guard gave up.
+        iteration: usize,
+        /// Residual norm at that iteration.
+        residual: f64,
+        /// Backoffs applied before giving up.
+        backoffs: usize,
+    },
+}
+
+impl fmt::Display for ReconError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReconError::Plan(d) => write!(f, "planning failed: {d}"),
+            ReconError::AllDevicesLost(d) => {
+                write!(f, "fault recovery exhausted all devices: {d}")
+            }
+            ReconError::MemoryPressure { device, attempts, detail } => write!(
+                f,
+                "memory pressure on device {device} survived {attempts} degradation \
+                 rungs (evict → refine → spill): {detail}"
+            ),
+            ReconError::NonFinite { stage, index, detail } => write!(
+                f,
+                "non-finite value in {stage} at element {index} ({detail})"
+            ),
+            ReconError::Diverged { algorithm, iteration, residual, backoffs } => write!(
+                f,
+                "{algorithm} diverged at iteration {iteration} (residual {residual:.3e}) \
+                 after {backoffs} step-size backoffs"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ReconError {}
+
+impl From<crate::simgpu::SimOom> for ReconError {
+    fn from(oom: crate::simgpu::SimOom) -> Self {
+        ReconError::MemoryPressure { device: oom.device, attempts: 0, detail: oom.detail }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_carry_the_structured_payload() {
+        let e = ReconError::MemoryPressure { device: 2, attempts: 3, detail: "want 4GiB".into() };
+        let s = e.to_string();
+        assert!(s.contains("device 2") && s.contains("3 degradation") && s.contains("4GiB"), "{s}");
+
+        let e = ReconError::NonFinite {
+            stage: NonFiniteStage::MergePartial,
+            index: 17,
+            detail: "fp unit 3 dev 1".into(),
+        };
+        assert!(e.to_string().contains("merge partial"), "{e}");
+        assert!(e.to_string().contains("element 17"), "{e}");
+
+        let e = ReconError::Diverged {
+            algorithm: "cgls",
+            iteration: 5,
+            residual: 1.0e9,
+            backoffs: 4,
+        };
+        assert!(e.to_string().contains("cgls diverged at iteration 5"), "{e}");
+    }
+
+    #[test]
+    fn converts_into_anyhow_through_question_mark() {
+        fn surface() -> anyhow::Result<()> {
+            Err(ReconError::AllDevicesLost("0 of 2 devices remain".into()))?;
+            Ok(())
+        }
+        let as_anyhow = surface().unwrap_err();
+        assert!(format!("{as_anyhow:#}").contains("exhausted all devices"));
+        assert!(format!("{as_anyhow:#}").contains("0 of 2 devices remain"));
+    }
+
+    #[test]
+    fn sim_oom_maps_to_memory_pressure() {
+        let oom = crate::simgpu::SimOom {
+            device: 1,
+            label: "slab".into(),
+            detail: "want 8 GiB, free 1 GiB".into(),
+        };
+        match ReconError::from(oom) {
+            ReconError::MemoryPressure { device: 1, .. } => {}
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+}

@@ -12,6 +12,7 @@ use crate::volume::{
     VolumeSlabView,
 };
 
+use super::degrade::{DegradeLog, DegradeStats};
 use super::residency::ResidencyStats;
 use super::splitter::MergeStrategy;
 
@@ -30,6 +31,13 @@ pub enum Backend {
     /// of deadlocking the scope.
     #[cfg(test)]
     PanicInject { threads: usize },
+    /// Fault-injection backend for the numerical-health guards (ISSUE 8):
+    /// computes with the native kernels, then poisons the first element
+    /// of every output with `NaN`. Lets the pipeline tests prove a
+    /// poisoned partial is caught at the merge boundary before it can
+    /// reach the merged output.
+    #[cfg(test)]
+    NanInject { threads: usize },
 }
 
 impl Default for Backend {
@@ -99,6 +107,10 @@ pub struct OpStats {
     /// Residency-cache accounting for this call (all-zero when the call
     /// ran outside a `ReconSession` or with the cache disabled).
     pub residency: ResidencyStats,
+    /// Degradation activity during this call: pressure-ladder rungs
+    /// taken (evict/refine/spill), watchdog events and step backoffs
+    /// (ISSUE 8). Empty (`is_clean()`) on an unpressured run.
+    pub degradation: DegradeStats,
 }
 
 impl OpStats {
@@ -111,6 +123,7 @@ impl OpStats {
             pinned: plan.pin_image,
             peak_device_bytes: peak,
             residency: ResidencyStats::default(),
+            degradation: DegradeStats::default(),
         }
     }
 }
@@ -132,6 +145,12 @@ pub struct MultiGpu {
     /// retry for transient faults, replanning onto survivors for
     /// permanent device loss). `None` (default) = fault-free.
     pub fault: Option<Arc<FaultPlan>>,
+    /// Shared degradation recorder (ISSUE 8): the pressure ladder, the
+    /// watchdog and the algorithms' step backoffs record here; the
+    /// operator entry points drain it into [`OpStats::degradation`]
+    /// after each call. Shared across clones of this context, so a
+    /// session's forward/backward handles feed one log.
+    pub degrade: Arc<DegradeLog>,
 }
 
 impl MultiGpu {
@@ -145,6 +164,7 @@ impl MultiGpu {
             backend: Backend::default(),
             exec: ExecutorConfig::default(),
             fault: None,
+            degrade: Arc::new(DegradeLog::new()),
         }
     }
 
@@ -166,7 +186,7 @@ impl MultiGpu {
         match &mut self.backend {
             Backend::Native { threads, .. } | Backend::Pjrt { threads, .. } => *threads = n,
             #[cfg(test)]
-            Backend::PanicInject { threads } => *threads = n,
+            Backend::PanicInject { threads } | Backend::NanInject { threads } => *threads = n,
         }
         self
     }
@@ -209,6 +229,14 @@ impl MultiGpu {
         self
     }
 
+    /// Override the hung-unit watchdog deadline factor (deadline =
+    /// predicted unit time × factor; see
+    /// [`CostModel::watchdog_factor`]).
+    pub fn with_watchdog_factor(mut self, factor: f64) -> Self {
+        self.cost.watchdog_factor = factor;
+        self
+    }
+
     /// Advance the fault plan's iteration gate (called by the iterative
     /// algorithms at the top of each iteration). No-op without a plan.
     pub fn set_fault_iteration(&self, it: usize) {
@@ -222,7 +250,7 @@ impl MultiGpu {
         match &self.backend {
             Backend::Native { threads, .. } | Backend::Pjrt { threads, .. } => *threads,
             #[cfg(test)]
-            Backend::PanicInject { threads } => *threads,
+            Backend::PanicInject { threads } | Backend::NanInject { threads } => *threads,
         }
     }
 
@@ -320,6 +348,14 @@ impl MultiGpu {
             }
             #[cfg(test)]
             Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
+            #[cfg(test)]
+            Backend::NanInject { threads } => {
+                let mut p = crate::kernels::forward(g, vol, Projector::Siddon, *threads);
+                if let Some(v) = p.data.first_mut() {
+                    *v = f32::NAN;
+                }
+                p
+            }
         }
     }
 
@@ -333,6 +369,14 @@ impl MultiGpu {
             }
             #[cfg(test)]
             Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
+            #[cfg(test)]
+            Backend::NanInject { threads } => {
+                let mut v = crate::kernels::backward(g, proj, BackprojWeight::Fdk, *threads);
+                if let Some(x) = v.data.first_mut() {
+                    *x = f32::NAN;
+                }
+                v
+            }
         }
     }
 
@@ -367,6 +411,13 @@ impl MultiGpu {
             }
             #[cfg(test)]
             Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
+            #[cfg(test)]
+            Backend::NanInject { .. } => {
+                crate::kernels::forward_into(g, vol, out, Projector::Siddon, threads);
+                if let Some(v) = out.first_mut() {
+                    *v = f32::NAN;
+                }
+            }
         }
     }
 
@@ -395,6 +446,13 @@ impl MultiGpu {
             }
             #[cfg(test)]
             Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
+            #[cfg(test)]
+            Backend::NanInject { .. } => {
+                crate::kernels::backward_into(g, proj, out, BackprojWeight::Fdk, threads);
+                if let Some(v) = out.first_mut() {
+                    *v = f32::NAN;
+                }
+            }
         }
     }
 }

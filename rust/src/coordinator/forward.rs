@@ -13,9 +13,15 @@ use crate::geometry::Geometry;
 use crate::simgpu::{Category, Ev, SimNode, SimOom};
 use crate::volume::{ProjectionSet, Volume, VolumeInput};
 
+use super::degrade::DegradeEvent;
+use super::error::ReconError;
 use super::executor::{ExecMode, MultiGpu, OpStats};
 use super::residency::FpResidency;
-use super::splitter::{plan_forward, MergeStrategy, Plan};
+use super::splitter::{plan_forward, refine_for_budget, MergeStrategy, Plan};
+
+/// Bounded refinement retries on rung 2 of the pressure ladder (each
+/// halves the unit size, so 4 rungs shrink it 16×).
+pub(crate) const MAX_PRESSURE_REFINES: usize = 4;
 
 /// Run the forward projection: returns real projections (in `Full` mode)
 /// and the simulated-schedule statistics.
@@ -47,22 +53,82 @@ pub(crate) fn run_with(
     // point (plain, OOC, ReconSession) stamps the plan from the config,
     // so the simulated timeline always models the strategy the real path
     // will run. Direct `simulate` callers keep their plan's own setting.
-    let plan = {
+    let mut plan = {
         let mut p = plan.clone();
         p.merge = ctx.exec.merge;
         p
     };
-    let plan = &plan;
-    let mut sim = ctx.fresh_sim();
-    if let Some(r) = res {
-        // buffers still resident from previous calls occupy device RAM
-        // before this call does anything (ledger-only, no time)
-        for (d, &bytes) in r.reserve.iter().enumerate() {
-            sim.reserve(d, "resident", bytes)?;
+
+    // Memory-pressure ladder (ISSUE 8): an allocation failure does not
+    // surface — the schedule is retried down the degradation rungs
+    // (evict residency → refine the plan → spill to OOC staging) until
+    // it fits. Bit-identity is structural: FP refinement only re-chunks
+    // the angles (every angle is computed independently), and an
+    // injected `AllocFail` site is consumed by the failed attempt, so
+    // the retry replays a clean schedule. The clean path takes the first
+    // iteration with zero extra cost.
+    let mut res = res;
+    let mut rungs = 0usize;
+    let mut refines = 0usize;
+    let mut penalty_s = 0.0;
+    let (sim, plan) = loop {
+        let mut sim = ctx.fresh_sim();
+        if penalty_s > 0.0 {
+            // the discarded failed attempts' retry backoffs + replans
+            sim.host_busy(penalty_s, Category::OtherMem, "pressure replan");
         }
-    }
-    simulate_with(g, plan, &mut sim, res)?;
-    let stats = OpStats::from_sim(&sim, plan);
+        let attempt = (|| -> Result<(), SimOom> {
+            if let Some(r) = res {
+                // buffers still resident from previous calls occupy
+                // device RAM before this call does anything
+                // (ledger-only, no time)
+                for (d, &bytes) in r.reserve.iter().enumerate() {
+                    sim.reserve(d, "resident", bytes)?;
+                }
+            }
+            simulate_with(g, &plan, &mut sim, res)
+        })();
+        let oom = match attempt {
+            Ok(()) => break (sim, plan),
+            Err(oom) => oom,
+        };
+        rungs += 1;
+        penalty_s += ctx.cost.pressure_rung_penalty_s();
+        // rung 1: sacrifice resident buffers (restaged next call)
+        if let Some(r) = res.take() {
+            ctx.degrade.record(DegradeEvent::Evicted {
+                device: oom.device,
+                entries: r.reserve.iter().filter(|&&b| b > 0).count(),
+            });
+            continue;
+        }
+        // rung 2: refine the plan to smaller units (bounded)
+        if refines < MAX_PRESSURE_REFINES {
+            if let Ok((refined, detail)) = refine_for_budget(&plan, g, true, oom.device) {
+                ctx.degrade.record(DegradeEvent::Refined { device: oom.device, detail });
+                plan = refined;
+                refines += 1;
+                continue;
+            }
+        }
+        // rung 3: spill the staging tier to disk (once)
+        if !plan.ooc_volume {
+            ctx.degrade.record(DegradeEvent::Spilled {
+                device: oom.device,
+                detail: format!("fp staging -> disk after '{}'", oom.label),
+            });
+            plan.ooc_volume = true;
+            continue;
+        }
+        return Err(ReconError::MemoryPressure {
+            device: oom.device,
+            attempts: rungs,
+            detail: oom.detail,
+        }
+        .into());
+    };
+    let plan = &plan;
+    let mut stats = OpStats::from_sim(&sim, plan);
 
     let proj = match mode {
         ExecMode::SimOnly => None,
@@ -71,6 +137,7 @@ pub(crate) fn run_with(
             Some(execute_real(ctx, g, vol, plan)?)
         }
     };
+    stats.degradation = ctx.degrade.drain();
     Ok((proj, stats))
 }
 

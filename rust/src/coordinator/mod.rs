@@ -74,6 +74,8 @@
 pub mod backward;
 pub mod baseline;
 pub mod checkpoint;
+pub mod degrade;
+pub mod error;
 pub mod executor;
 pub mod forward;
 pub mod pipeline;
@@ -82,6 +84,8 @@ pub mod residency;
 pub mod splitter;
 
 pub use checkpoint::{CheckpointConfig, CheckpointState, Checkpointer};
+pub use degrade::{DegradeEvent, DegradeLog, DegradeStats};
+pub use error::{NonFiniteStage, ReconError};
 pub use executor::{Backend, ExecMode, ExecutorConfig, MultiGpu, OpStats};
 pub use residency::{ReconSession, ResidencyCache, ResidencyStats};
 pub use splitter::{

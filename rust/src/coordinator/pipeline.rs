@@ -84,6 +84,8 @@ use crate::volume::{
     VolumeSlabView,
 };
 
+use super::degrade::DegradeEvent;
+use super::error::{NonFiniteStage, ReconError};
 use super::executor::{Backend, MultiGpu};
 use super::splitter::{merge_schedule, replan_excluding, DeviceAssignment, MergeStrategy, Plan};
 
@@ -182,11 +184,80 @@ fn launch_gate(ctx: &MultiGpu, dev: usize) -> bool {
             }
             false
         }
+        // Hung unit (ISSUE 8): the watchdog fires after the unit's
+        // deadline, kills the launch, and retries on the same device with
+        // the same bounded backoff as a transient — the unit still
+        // executes exactly once, so bit-identity is untouched. A hang
+        // persisting past the retry budget escalates to device loss
+        // through the same machinery as a transient burst.
+        LaunchFault::Hung(k) if k <= MAX_LAUNCH_RETRIES => {
+            ctx.degrade.record(DegradeEvent::HangRetry { device: dev, times: k });
+            for i in 0..k {
+                std::thread::sleep(std::time::Duration::from_micros(
+                    REAL_RETRY_BACKOFF_US << i,
+                ));
+            }
+            false
+        }
+        LaunchFault::Hung(_) => {
+            ctx.degrade.record(DegradeEvent::WatchdogEscalated { device: dev });
+            plan.mark_lost(FaultScope::Real, dev);
+            true
+        }
         LaunchFault::Transient(_) => {
             plan.mark_lost(FaultScope::Real, dev);
             true
         }
         LaunchFault::Lost => true,
+    }
+}
+
+/// Numerical-health scan at a merge boundary (ISSUE 8): the first
+/// non-finite element fails the operator with a typed [`ReconError`]
+/// instead of silently folding NaN/Inf into every downstream voxel.
+fn ensure_finite(data: &[f32], stage: NonFiniteStage, what: &str) -> Result<(), ReconError> {
+    match data.iter().enumerate().find(|&(_, v)| !v.is_finite()) {
+        Some((i, v)) => Err(ReconError::NonFinite {
+            stage,
+            index: i,
+            detail: format!("{what}: value {v}"),
+        }),
+        None => Ok(()),
+    }
+}
+
+/// Record-only wall-clock watchdog for real-path units: the deadline is
+/// [`CostModel::watchdog_factor`](crate::simgpu::CostModel) times the
+/// running mean of this worker's earlier unit times. Overruns are
+/// recorded as [`DegradeEvent::SlowUnit`] and never escalated — host
+/// wall-clock on a shared CPU is too noisy to kill a device over;
+/// injected `Hang` faults drive the escalation machinery
+/// deterministically instead (see [`launch_gate`]).
+struct UnitWatch {
+    device: usize,
+    factor: f64,
+    mean_s: f64,
+    n: u32,
+}
+
+impl UnitWatch {
+    fn new(ctx: &MultiGpu, device: usize) -> Self {
+        Self { device, factor: ctx.cost.watchdog_factor, mean_s: 0.0, n: 0 }
+    }
+
+    fn observe(&mut self, ctx: &MultiGpu, elapsed_s: f64) {
+        if self.n > 0 {
+            let deadline_s = self.factor * self.mean_s;
+            if elapsed_s > deadline_s {
+                ctx.degrade.record(DegradeEvent::SlowUnit {
+                    device: self.device,
+                    elapsed_s,
+                    deadline_s,
+                });
+            }
+        }
+        self.n += 1;
+        self.mean_s += (elapsed_s - self.mean_s) / self.n as f64;
     }
 }
 
@@ -243,7 +314,7 @@ fn recover_fp_losses(
     let Some(lost) = loss_flags(ctx, active, completed, &needs) else {
         return Ok(());
     };
-    let _owners = replan_excluding(lost.len(), &lost).map_err(|e| anyhow::anyhow!(e))?;
+    let _owners = replan_excluding(lost.len(), &lost).map_err(ReconError::AllDevicesLost)?;
     let per = g.n_det[0] * g.n_det[1];
     let plane = g.n_vox[0] * g.n_vox[1];
     let threads = ctx.backend_threads();
@@ -316,7 +387,7 @@ fn recover_bp_losses(
     let Some(lost) = loss_flags(ctx, active, completed, &needs) else {
         return Ok(());
     };
-    replan_excluding(lost.len(), &lost).map_err(|e| anyhow::anyhow!(e))?;
+    replan_excluding(lost.len(), &lost).map_err(ReconError::AllDevicesLost)?;
     let per = g.n_det[0] * g.n_det[1];
     let plane = g.n_vox[0] * g.n_vox[1];
     let threads = ctx.backend_threads();
@@ -456,7 +527,25 @@ fn tree_fold(
 /// pool — this executes the schedule serially, which performs the exact
 /// same `n−1` folds in the exact same operand order. Either way the one
 /// surviving partial is the root, copied into `out`.
-fn fold_partials_into(out: &mut ProjectionSet, mut partials: Vec<Option<ProjectionSet>>) {
+///
+/// Merge boundaries are the numerical-health checkpoints (ISSUE 8):
+/// every surviving partial is scanned before it folds, and the merged
+/// root is scanned before it is published — a NaN/Inf produced by any
+/// kernel fails the operator with a typed error naming the stage
+/// instead of contaminating the full projection set.
+fn fold_partials_into(
+    out: &mut ProjectionSet,
+    mut partials: Vec<Option<ProjectionSet>>,
+) -> anyhow::Result<()> {
+    for (i, p) in partials.iter().enumerate() {
+        if let Some(p) = p {
+            ensure_finite(
+                &p.data,
+                NonFiniteStage::MergePartial,
+                &format!("worker {i} partial"),
+            )?;
+        }
+    }
     for round in merge_schedule(partials.len()) {
         for (dst, src) in round {
             let Some(src_p) = partials[src].take() else { continue };
@@ -466,8 +555,10 @@ fn fold_partials_into(out: &mut ProjectionSet, mut partials: Vec<Option<Projecti
         }
     }
     let root = partials.into_iter().flatten().next().expect("merge root partial");
+    ensure_finite(&root.data, NonFiniteStage::MergedOutput, "merged projections")?;
     out.data.copy_from_slice(&root.data);
     scratch::recycle_projections(root);
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -541,10 +632,12 @@ fn forward_pipelined_ram(
                 handles.push(s.spawn(move || {
                     let out_ptr = out_ptr;
                     let mut done = 0usize;
+                    let mut watch = UnitWatch::new(ctx, gpu);
                     for c in c0..c1 {
                         if launch_gate(ctx, gpu) {
                             break; // device lost: host replans the rest
                         }
+                        let t0 = std::time::Instant::now();
                         let ch = plan.angle_chunks[c];
                         let gc = g.angle_chunk_geometry(ch.a0, ch.a1);
                         // SAFETY: chunk runs are disjoint across workers
@@ -566,6 +659,7 @@ fn forward_pipelined_ram(
                         } else {
                             ctx.kernel_forward_into(&gc, &vol.as_view(), dst, kt);
                         }
+                        watch.observe(ctx, t0.elapsed().as_secs_f64());
                         done += 1;
                     }
                     done
@@ -586,7 +680,7 @@ fn forward_pipelined_ram(
                     lost[gpu] = true;
                 }
             }
-            replan_excluding(lost.len(), &lost).map_err(|e| anyhow::anyhow!(e))?;
+            replan_excluding(lost.len(), &lost).map_err(ReconError::AllDevicesLost)?;
             let threads = ctx.backend_threads();
             for (i, &(_, c0, c1)) in jobs.iter().enumerate() {
                 for c in (c0 + completed[i])..c1 {
@@ -604,6 +698,8 @@ fn forward_pipelined_ram(
                 }
             }
         }
+        // angle-split merge boundary: chunks landed directly in `out`
+        ensure_finite(&out.data, NonFiniteStage::MergedOutput, "angle-split projections")?;
     } else {
         // Image split: each device projects all chunks of its slabs into a
         // private partial projection set (worker + merge lane); partials
@@ -657,7 +753,7 @@ fn forward_pipelined_ram(
         // finish any lost device's remaining units into its own partial
         // (launch order preserved) before the canonical cross-device fold
         recover_fp_losses(ctx, g, FpSource::Ram(vol), plan, &active, &completed, &mut folded)?;
-        fold_partials_into(&mut out, folded);
+        fold_partials_into(&mut out, folded)?;
     }
     Ok(out)
 }
@@ -711,6 +807,7 @@ fn forward_device_partial(
             }
         });
         let mut lost = false;
+        let mut watch = UnitWatch::new(ctx, dev.device);
         for slab in &dev.slabs {
             let gs = g.slab_geometry(slab.z0, slab.z1);
             let sub = vol.slab_view(slab.z0, slab.z1);
@@ -721,7 +818,7 @@ fn forward_device_partial(
                 Backend::Pjrt { .. } => Some(sub.to_volume()),
                 Backend::Native { .. } => None,
                 #[cfg(test)]
-                Backend::PanicInject { .. } => None,
+                Backend::PanicInject { .. } | Backend::NanInject { .. } => None,
             };
             for ch in &plan.angle_chunks {
                 if launch_gate(ctx, dev.device) {
@@ -734,6 +831,7 @@ fn forward_device_partial(
                 // zeroing pass is needed between launches (the BP path,
                 // whose kernel accumulates, does need it)
                 buf.resize(ch.len() * per, 0.0);
+                let t0 = std::time::Instant::now();
                 match (&ctx.backend, &owned_slab) {
                     (Backend::Pjrt { artifacts_dir, .. }, Some(ov)) => {
                         let part = crate::runtime::forward_or_native(
@@ -747,6 +845,7 @@ fn forward_device_partial(
                     }
                     _ => ctx.kernel_forward_into(&gc, &sub, &mut buf, kernel_threads),
                 }
+                watch.observe(ctx, t0.elapsed().as_secs_f64());
                 req_tx.send((buf, ch.a0)).expect("merge lane terminated");
                 completed += 1;
             }
@@ -829,7 +928,7 @@ fn forward_pipelined_ooc(
     // finish any lost device's remaining units (re-reading its slabs
     // from the store) before the canonical cross-device fold
     recover_fp_losses(ctx, g, FpSource::Ooc(store), plan, &active, &completed, &mut folded)?;
-    fold_partials_into(&mut out, folded);
+    fold_partials_into(&mut out, folded)?;
     Ok(out)
 }
 
@@ -905,6 +1004,7 @@ fn forward_device_partial_ooc(
             lreq_tx.send((s0, free.pop().expect("slab buffer"))).expect("loader lane open");
         }
         let mut lost = false;
+        let mut watch = UnitWatch::new(ctx, dev.device);
         for k in 0..slabs.len() {
             // prefetch slab k+1 while slab k computes (double buffer)
             if k + 1 < slabs.len() {
@@ -920,7 +1020,7 @@ fn forward_device_partial_ooc(
                 Backend::Pjrt { .. } => Some(sub.to_volume()),
                 Backend::Native { .. } => None,
                 #[cfg(test)]
-                Backend::PanicInject { .. } => None,
+                Backend::PanicInject { .. } | Backend::NanInject { .. } => None,
             };
             for ch in &plan.angle_chunks {
                 if launch_gate(ctx, dev.device) {
@@ -930,6 +1030,7 @@ fn forward_device_partial_ooc(
                 let gc = gs.angle_chunk_geometry(ch.a0, ch.a1);
                 let mut buf = ret_rx.recv().expect("merge lane terminated");
                 buf.resize(ch.len() * per, 0.0);
+                let t0 = std::time::Instant::now();
                 match (&ctx.backend, &owned_slab) {
                     (Backend::Pjrt { artifacts_dir, .. }, Some(ov)) => {
                         let part = crate::runtime::forward_or_native(
@@ -943,6 +1044,7 @@ fn forward_device_partial_ooc(
                     }
                     _ => ctx.kernel_forward_into(&gc, &sub, &mut buf, kernel_threads),
                 }
+                watch.observe(ctx, t0.elapsed().as_secs_f64());
                 req_tx.send((buf, ch.a0)).expect("merge lane terminated");
                 completed += 1;
             }
@@ -1039,6 +1141,8 @@ fn backward_pipelined_ram(
     // finish any lost device's remaining units into its (disjoint)
     // z-slabs of the shared output, launch order preserved
     recover_bp_losses(ctx, g, BpSource::Ram(proj), plan, &active, &completed, &mut out)?;
+    // BP merge boundary: every slab landed in `out`; scan before publishing
+    ensure_finite(&out.data, NonFiniteStage::VolumeSlab, "backprojected volume")?;
     Ok(out)
 }
 
@@ -1083,6 +1187,7 @@ fn backward_device_worker(
                 }
             }
         });
+        let mut watch = UnitWatch::new(ctx, dev.device);
         'slabs: for slab in &dev.slabs {
             let gs = g.slab_geometry(slab.z0, slab.z1);
             let slab_len = slab.len() * plane;
@@ -1095,7 +1200,9 @@ fn backward_device_worker(
                 let mut buf = ret_rx.recv().expect("merge lane terminated");
                 buf.clear();
                 buf.resize(slab_len, 0.0); // backproject_into accumulates
+                let t0 = std::time::Instant::now();
                 ctx.kernel_backward_into(&gc, &view, &mut buf, kernel_threads);
+                watch.observe(ctx, t0.elapsed().as_secs_f64());
                 req_tx.send((buf, slab.z0 * plane)).expect("merge lane terminated");
                 completed += 1;
             }
@@ -1160,6 +1267,8 @@ fn backward_pipelined_ooc(
     // finish any lost device's remaining units (re-reading its chunks
     // from the store) into its disjoint z-slabs of the shared output
     recover_bp_losses(ctx, g, BpSource::Ooc(store), plan, &active, &completed, &mut out)?;
+    // BP merge boundary: every slab landed in `out`; scan before publishing
+    ensure_finite(&out.data, NonFiniteStage::VolumeSlab, "backprojected volume")?;
     Ok(out)
 }
 
@@ -1233,6 +1342,7 @@ fn backward_device_worker_ooc(
         if let Some(&(_, c0)) = launches.first() {
             lreq_tx.send((c0, free.pop().expect("chunk buffer"))).expect("loader lane open");
         }
+        let mut watch = UnitWatch::new(ctx, dev.device);
         for (k, &(slab, ch)) in launches.iter().enumerate() {
             if launch_gate(ctx, dev.device) {
                 break; // device lost: host replans the rest
@@ -1251,7 +1361,9 @@ fn backward_device_worker_ooc(
             let mut buf = ret_rx.recv().expect("merge lane terminated");
             buf.clear();
             buf.resize(slab_len, 0.0); // backproject_into accumulates
+            let t0 = std::time::Instant::now();
             ctx.kernel_backward_into(&gc, &view, &mut buf, kernel_threads);
+            watch.observe(ctx, t0.elapsed().as_secs_f64());
             req_tx.send((buf, slab.z0 * plane)).expect("merge lane terminated");
             completed += 1;
             free.push(data);
@@ -2056,5 +2168,217 @@ mod tests {
             lossy > clean,
             "device loss must stretch the simulated makespan (clean {clean}, lossy {lossy})"
         );
+    }
+
+    // -----------------------------------------------------------------
+    // graceful degradation (ISSUE 8)
+    // -----------------------------------------------------------------
+
+    /// Tentpole acceptance matrix: a hard allocation failure injected at
+    /// every (device, unit) coordinate — across 1–4 devices, both split
+    /// regimes and both merge strategies — must complete through the
+    /// memory-pressure ladder **bit-identically** to the clean run, with
+    /// the taken rung recorded in `OpStats::degradation`. Bit-identity
+    /// is structural: FP refinement only re-chunks angles (each angle is
+    /// independent), BP refinement only re-slabs z (disjoint output),
+    /// and neither changes any per-voxel accumulation order.
+    #[test]
+    fn degrade_alloc_fail_matrix_replans_bit_identically() {
+        use crate::simgpu::{FaultPlan, MAX_LAUNCH_RETRIES};
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        for n_gpus in [1usize, 2, 4] {
+            for image_split in [false, true] {
+                for tree in [false, true] {
+                    let base = MultiGpu::gtx1080ti(n_gpus);
+                    let base =
+                        if image_split { base.with_device_mem(tiny_mem(&g)) } else { base };
+                    let base = if tree { base.with_tree_merge() } else { base };
+                    let clean_fp =
+                        base.clone().forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+                    let clean_bp =
+                        base.clone().backward(&g, Some(&p), ExecMode::Full).unwrap().0.unwrap();
+                    // units 0 and 1 are the projection double buffers —
+                    // allocated on every device in every regime, so the
+                    // site always fires
+                    for device in 0..n_gpus {
+                        for unit in [0usize, 1] {
+                            let tag = format!(
+                                "gpus={n_gpus} image_split={image_split} tree={tree} \
+                                 d{device} u{unit}"
+                            );
+                            let hard_fail = || {
+                                FaultPlan::new().alloc_fail(
+                                    device,
+                                    unit,
+                                    MAX_LAUNCH_RETRIES + 1,
+                                )
+                            };
+                            let (got, stats) = base
+                                .clone()
+                                .with_fault_plan(hard_fail())
+                                .forward(&g, Some(&v), ExecMode::Full)
+                                .unwrap();
+                            assert_eq!(
+                                clean_fp.data,
+                                got.unwrap().data,
+                                "{tag}: FP must be bit-identical on the refined plan"
+                            );
+                            let d = &stats.degradation;
+                            assert!(
+                                d.evictions + d.refinements + d.spills >= 1,
+                                "{tag}: FP ladder rung must be recorded: {d:?}"
+                            );
+                            let (got, stats) = base
+                                .clone()
+                                .with_fault_plan(hard_fail())
+                                .backward(&g, Some(&p), ExecMode::Full)
+                                .unwrap();
+                            assert_eq!(
+                                clean_bp.data,
+                                got.unwrap().data,
+                                "{tag}: BP must be bit-identical on the refined plan"
+                            );
+                            let d = &stats.degradation;
+                            assert!(
+                                d.evictions + d.refinements + d.spills >= 1,
+                                "{tag}: BP ladder rung must be recorded: {d:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Watchdog, bounded arm: a unit that hangs and is killed at its
+    /// deadline retries on the same device (PR-7 transient machinery
+    /// with the `Hang` site) — output bit-identical, retries recorded.
+    #[test]
+    fn degrade_hang_retries_keep_output_bit_identical() {
+        use crate::simgpu::FaultPlan;
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        for image_split in [false, true] {
+            let base = MultiGpu::gtx1080ti(2);
+            let base = if image_split { base.with_device_mem(tiny_mem(&g)) } else { base };
+            let tag = format!("image_split={image_split}");
+            let clean = base.clone().forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+            let (got, stats) = base
+                .clone()
+                .with_fault_plan(FaultPlan::new().hang(0, 0, 2))
+                .forward(&g, Some(&v), ExecMode::Full)
+                .unwrap();
+            assert_eq!(clean.data, got.unwrap().data, "{tag}: FP under hung-unit retries");
+            assert!(
+                stats.degradation.hang_retries >= 1,
+                "{tag}: hang retry must be recorded: {:?}",
+                stats.degradation
+            );
+            let clean = base.clone().backward(&g, Some(&p), ExecMode::Full).unwrap().0.unwrap();
+            let (got, stats) = base
+                .clone()
+                .with_fault_plan(FaultPlan::new().hang(1, 0, 1))
+                .backward(&g, Some(&p), ExecMode::Full)
+                .unwrap();
+            assert_eq!(clean.data, got.unwrap().data, "{tag}: BP under hung-unit retries");
+            assert!(
+                stats.degradation.hang_retries >= 1,
+                "{tag}: hang retry must be recorded: {:?}",
+                stats.degradation
+            );
+        }
+    }
+
+    /// Watchdog, escalation arm: a unit that keeps hanging past
+    /// [`MAX_LAUNCH_RETRIES`] escalates through the PR-7 device-loss
+    /// machinery — the device is marked lost, its units replan onto
+    /// survivors, and the output stays bit-identical (the plan
+    /// advertises the loss, so the tree merge degrades safely).
+    #[test]
+    fn degrade_watchdog_escalates_hang_to_device_loss_bit_identically() {
+        use crate::simgpu::{FaultPlan, FaultScope, MAX_LAUNCH_RETRIES};
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        for tree in [false, true] {
+            let base = MultiGpu::gtx1080ti(2).with_device_mem(tiny_mem(&g));
+            let base = if tree { base.with_tree_merge() } else { base };
+            let plan = || FaultPlan::new().hang(1, 0, MAX_LAUNCH_RETRIES + 1);
+            assert!(plan().plans_loss(), "an unbounded hang plans a loss");
+            let clean = base.clone().forward(&g, Some(&v), ExecMode::Full).unwrap().0.unwrap();
+            let faulted = base.clone().with_fault_plan(plan());
+            let (got, stats) = faulted.forward(&g, Some(&v), ExecMode::Full).unwrap();
+            assert!(
+                faulted.fault.as_ref().unwrap().is_lost(FaultScope::Real, 1),
+                "tree={tree}: the watchdog must actually escalate to a loss"
+            );
+            assert_eq!(
+                clean.data,
+                got.unwrap().data,
+                "tree={tree}: FP under watchdog escalation"
+            );
+            assert!(
+                stats.degradation.watchdog_escalations >= 1,
+                "tree={tree}: escalation must be recorded: {:?}",
+                stats.degradation
+            );
+        }
+    }
+
+    /// Numerical health: a kernel that emits NaN must be caught at the
+    /// first merge boundary it crosses and surfaced as a typed
+    /// `ReconError::NonFinite` — never folded silently into the output.
+    #[test]
+    fn degrade_nan_injection_is_caught_at_merge_boundaries() {
+        use crate::coordinator::executor::Backend;
+        let n = 20;
+        let n_angles = 12;
+        let g = Geometry::cone_beam(n, n_angles);
+        let v = phantom::shepp_logan(n);
+        let p = crate::kernels::forward(&g, &v, crate::kernels::Projector::Siddon, 2);
+        // image-split FP: the poisoned device partial is caught before
+        // the host fold (merge-partial scan)
+        let ctx = MultiGpu::gtx1080ti(2)
+            .with_device_mem(tiny_mem(&g))
+            .with_backend(Backend::NanInject { threads: 2 });
+        let err = ctx.forward(&g, Some(&v), ExecMode::Full).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-finite"), "{msg}");
+        assert!(msg.contains("merge partial") || msg.contains("merged"), "{msg}");
+        // angle-split FP: caught on the merged output scan
+        let ctx = MultiGpu::gtx1080ti(2).with_backend(Backend::NanInject { threads: 2 });
+        let err = ctx.forward(&g, Some(&v), ExecMode::Full).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-finite") && msg.contains("merged output"), "{msg}");
+        // BP: caught on the volume-slab scan before the slab publishes
+        let err = ctx.backward(&g, Some(&p), ExecMode::Full).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-finite") && msg.contains("volume slab"), "{msg}");
+    }
+
+    /// The clean path pays nothing for the ladder: with no fault plan
+    /// attached the first simulation attempt succeeds, no penalty time is
+    /// charged, and `OpStats::degradation` reports clean.
+    #[test]
+    fn degrade_clean_path_records_nothing_and_costs_nothing() {
+        let g = Geometry::cone_beam(64, 32);
+        let ctx = MultiGpu::gtx1080ti(2);
+        let (_, fp) = ctx.forward(&g, None, ExecMode::SimOnly).unwrap();
+        let (_, bp) = ctx.backward(&g, None, ExecMode::SimOnly).unwrap();
+        assert!(fp.degradation.is_clean(), "{:?}", fp.degradation);
+        assert!(bp.degradation.is_clean(), "{:?}", bp.degradation);
+        assert!(!fp
+            .degradation
+            .events
+            .iter()
+            .any(|e| e.contains("pressure replan")));
     }
 }

@@ -152,6 +152,7 @@ where
         pinned: true,
         peak_device_bytes: (0..sim.n_devices()).map(|d| sim.device_mem(d).peak()).max().unwrap_or(0),
         residency: Default::default(),
+        degradation: Default::default(),
     };
     Ok((current, stats))
 }

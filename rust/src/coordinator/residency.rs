@@ -287,6 +287,22 @@ impl ResidencyCache {
         }
     }
 
+    /// Memory-pressure eviction (ISSUE 8, rung 1 of the degradation
+    /// ladder): drop **every** entry on device `dev`, returning how many
+    /// were evicted. Unlike the budget-driven LRU this is caller-forced —
+    /// an allocation failed, so resident bytes must make way for the
+    /// operator's working set. Evictions are counted in the stats like
+    /// LRU ones; correctness is unaffected (the next staging simply
+    /// misses and re-transfers).
+    pub fn evict_device(&mut self, dev: usize) -> usize {
+        let dc = &mut self.per_device[dev];
+        let n = dc.entries.len();
+        dc.entries.clear();
+        dc.used = 0;
+        self.stats.evictions += n as u64;
+        n
+    }
+
     fn insert(&mut self, dev: usize, key: EntryKey, src: SourceTag, bytes: u64) {
         let clock = self.clock;
         let dc = &mut self.per_device[dev];
@@ -617,6 +633,15 @@ impl ReconSession {
             );
             self.last_fp_output = Some(out.id());
         }
+        // a pressure-ladder retry ran without the precomputed residency
+        // decisions: the device buffers those decisions assumed resident
+        // were sacrificed, so drop them from the cache too (next call
+        // restages — a miss, never a wrong answer)
+        if stats.degradation.evictions > 0 {
+            for d in 0..self.ctx.n_gpus {
+                self.cache.evict_device(d);
+            }
+        }
         // delta taken after publishing, so evictions the publication
         // causes are attributed to this call instead of vanishing into
         // the next call's baseline snapshot
@@ -693,6 +718,11 @@ impl ReconSession {
             &self.bp_plan,
             res.as_ref(),
         )?;
+        if stats.degradation.evictions > 0 {
+            for d in 0..self.ctx.n_gpus {
+                self.cache.evict_device(d);
+            }
+        }
         stats.residency = self.cache.stats().delta_since(&before);
         self.account(stats);
         Ok(v.expect("Full mode returns the volume"))
@@ -774,6 +804,22 @@ mod tests {
         assert!(!c.stage(0, OpKind::Bp, u(3), tag(4, 0), 1000));
         assert!(!c.contains(0, OpKind::Bp, u(3), tag(4, 0)));
         assert_eq!(c.resident_bytes(0), 200, "oversized unit must not evict anything");
+    }
+
+    #[test]
+    fn cache_pressure_evict_clears_one_device() {
+        let mut c = ResidencyCache::new(2, 1 << 20);
+        let u = |i: usize| UnitKey::Chunk { a0: i, a1: i + 1 };
+        c.publish(0, OpKind::Bp, u(0), tag(1, 0), 64);
+        c.publish(0, OpKind::Bp, u(1), tag(1, 0), 64);
+        c.publish(1, OpKind::Bp, u(0), tag(1, 0), 64);
+        assert_eq!(c.evict_device(0), 2);
+        assert_eq!(c.resident_bytes(0), 0);
+        assert!(!c.contains(0, OpKind::Bp, u(0), tag(1, 0)));
+        assert!(c.contains(1, OpKind::Bp, u(0), tag(1, 0)), "other devices untouched");
+        assert_eq!(c.stats().evictions, 2);
+        // idempotent on an empty device
+        assert_eq!(c.evict_device(0), 0);
     }
 
     #[test]

@@ -663,6 +663,79 @@ pub fn plan_ooc_pair(
     Ok((fp, bp))
 }
 
+// ---------------------------------------------------------------------------
+// memory-pressure refinement (ISSUE 8): rung 2 of the degradation ladder
+// ---------------------------------------------------------------------------
+
+/// Refine a plan to smaller units after an allocation failure on
+/// `device` (rung 2 of the pressure ladder, after residency eviction
+/// and before OOC spill). Returns the refined plan plus a
+/// human-readable before → after description for the degradation log.
+///
+/// The refinement axis is chosen so the output stays **bit-identical**
+/// to the original plan (DESIGN.md §Graceful-degradation):
+///
+/// * **Forward**: halve the angle-chunk size (shrinks the projection
+///   buffers). Every angle is computed independently and lands in its
+///   own detector region, so chunk boundaries cannot change any
+///   per-angle value — for the angle-split shape this also redistributes
+///   chunk shares across devices, which is equally harmless because no
+///   accumulation crosses angles. Slab refinement is **not** used for
+///   FP: splitting a slab regroups the per-ray z-summation and changes
+///   the floating-point result.
+/// * **Backward**: double the affected device's slab count (shrinks its
+///   largest allocation). Slabs write disjoint z-ranges and every slab
+///   still consumes all projection chunks in the same order, so the
+///   per-voxel accumulation sequence is untouched. Chunk refinement is
+///   **not** used for BP: it would regroup the per-voxel chunk
+///   accumulation.
+///
+/// Errs when the axis is exhausted (chunks of 1 angle / slabs of 1
+/// slice) — the ladder then falls through to the spill rung.
+pub fn refine_for_budget(
+    plan: &Plan,
+    g: &Geometry,
+    is_forward: bool,
+    device: usize,
+) -> Result<(Plan, String), String> {
+    let mut refined = plan.clone();
+    if is_forward {
+        let max_chunk = plan.angle_chunks.iter().map(|c| c.len()).max().unwrap_or(0);
+        if max_chunk <= 1 {
+            return Err(format!(
+                "fp plan cannot refine below 1-angle chunks (device {device})"
+            ));
+        }
+        let new_chunk = max_chunk.div_ceil(2);
+        refined.angle_chunks = crate::geometry::split::split_chunks(g.n_angles(), new_chunk)
+            .into_iter()
+            .map(|(a0, a1)| AngleChunk { a0, a1 })
+            .collect();
+        refined.proj_buffer_bytes = new_chunk as u64 * g.single_proj_bytes();
+        Ok((refined, format!("fp chunk {max_chunk} -> {new_chunk} angles")))
+    } else {
+        let Some(d) = plan.per_device.iter().find(|d| d.device == device) else {
+            return Err(format!("bp plan has no device {device}"));
+        };
+        let span = d.z_range.len();
+        let before = d.slabs.len();
+        if span == 0 || before >= span {
+            return Err(format!(
+                "bp plan cannot refine device {device} below 1-slice slabs"
+            ));
+        }
+        let after = (before * 2).min(span);
+        let counts: Vec<usize> =
+            plan.per_device.iter().map(|a| if a.device == device { after } else { a.slabs.len().max(1) }).collect();
+        resplit_slabs(&mut refined, g, |dev| counts[dev]);
+        refined.image_split =
+            refined.per_device.iter().any(|a| a.slabs.len() > 1) || refined.image_split;
+        refined.pin_image =
+            should_pin_image(refined.image_split, refined.per_device.len());
+        Ok((refined, format!("bp d{device} slabs {before} -> {after}")))
+    }
+}
+
 /// Paper §4 size-limit formulas for an `N³` volume / `N²` detector / `N`
 /// angles problem on a device with `mem` bytes:
 ///
@@ -981,6 +1054,66 @@ mod tests {
         assert_eq!(replan_excluding(3, &[true]).unwrap(), vec![1, 1, 2]);
         // no survivors is a planning error, not a panic
         assert!(replan_excluding(2, &[true, true]).is_err());
+    }
+
+    #[test]
+    fn degrade_refine_fp_halves_angle_chunks_and_keeps_validity() {
+        let g = fig7_geometry(64);
+        let cfg = SplitConfig::default();
+        let p = plan_forward(&g, 2, 11 * GIB, &cfg).unwrap();
+        let before = p.angle_chunks.iter().map(|c| c.len()).max().unwrap();
+        let (r, detail) = refine_for_budget(&p, &g, true, 0).unwrap();
+        let after = r.angle_chunks.iter().map(|c| c.len()).max().unwrap();
+        assert!(after < before, "chunks must shrink: {before} -> {after}");
+        assert_eq!(r.proj_buffer_bytes, after as u64 * g.single_proj_bytes());
+        assert!(detail.contains("fp chunk"), "{detail}");
+        // the slab partition is untouched (FP slab refinement would
+        // regroup the per-ray z-sum and break bit-identity)
+        for (a, b) in p.per_device.iter().zip(&r.per_device) {
+            assert_eq!(a.slabs, b.slabs);
+        }
+        r.validate(&g, 11 * GIB, &cfg).unwrap();
+        // repeated refinement bottoms out at 1-angle chunks with an error
+        let mut cur = r;
+        for _ in 0..16 {
+            match refine_for_budget(&cur, &g, true, 0) {
+                Ok((next, _)) => cur = next,
+                Err(e) => {
+                    assert!(e.contains("cannot refine"), "{e}");
+                    assert!(cur.angle_chunks.iter().all(|c| c.len() == 1));
+                    return;
+                }
+            }
+        }
+        panic!("fp refinement never bottomed out");
+    }
+
+    #[test]
+    fn degrade_refine_bp_doubles_the_affected_device_slabs_only() {
+        let g = fig7_geometry(64);
+        let cfg = SplitConfig::default();
+        let p = plan_backward(&g, 2, 11 * GIB, &cfg).unwrap();
+        let (r, detail) = refine_for_budget(&p, &g, false, 1).unwrap();
+        assert!(detail.contains("bp d1"), "{detail}");
+        assert_eq!(r.per_device[0].slabs.len(), p.per_device[0].slabs.len());
+        assert_eq!(r.per_device[1].slabs.len(), 2 * p.per_device[1].slabs.len());
+        // angle chunks untouched (BP chunk refinement would regroup the
+        // per-voxel accumulation and break bit-identity)
+        assert_eq!(r.angle_chunks.len(), p.angle_chunks.len());
+        assert!(r.image_split, "more than one slab per device is the split regime");
+        r.validate(&g, 11 * GIB, &cfg).unwrap();
+        // bottoms out at single-slice slabs
+        let mut cur = r;
+        loop {
+            match refine_for_budget(&cur, &g, false, 1) {
+                Ok((next, _)) => cur = next,
+                Err(e) => {
+                    assert!(e.contains("cannot refine"), "{e}");
+                    assert!(cur.per_device[1].slabs.iter().all(|s| s.len() == 1));
+                    break;
+                }
+            }
+        }
     }
 
     #[test]

@@ -82,6 +82,14 @@ pub struct CostModel {
     /// Host time to replan a lost device's remaining units across the
     /// survivors (`splitter::replan_excluding`), charged once per loss.
     pub fault_replan_s: f64,
+    /// Hung-unit watchdog deadline as a multiple of the predicted unit
+    /// time: a launch that has not completed after
+    /// `predicted × watchdog_factor` seconds is declared hung, cancelled
+    /// and retried (escalating to device loss past
+    /// `fault::MAX_LAUNCH_RETRIES`). Each simulated hang therefore
+    /// charges the full deadline — the device sat on the stuck kernel
+    /// until the watchdog fired (ISSUE 8).
+    pub watchdog_factor: f64,
 }
 
 impl CostModel {
@@ -116,7 +124,29 @@ impl CostModel {
             // ~5 ms to rebuild the unit queues after a device drops out
             fault_retry_backoff_s: 1.0e-3,
             fault_replan_s: 5.0e-3,
+            // generous 8× deadline: slab kernels vary ~1.3× with cone
+            // overreach, so 8× never false-positives on a healthy unit
+            // while still bounding a stuck launch to one order of
+            // magnitude of its predicted time
+            watchdog_factor: 8.0,
         }
+    }
+
+    /// Watchdog deadline for a unit predicted to take `predicted_s`.
+    pub fn watchdog_deadline_s(&self, predicted_s: f64) -> f64 {
+        predicted_s * self.watchdog_factor
+    }
+
+    /// Host seconds one rung of the memory-pressure ladder costs: the
+    /// exhausted bounded allocation retries (the failed attempt's sim is
+    /// discarded, so its backoff time is re-charged on the successful
+    /// retry) plus one replan. Keeps the degraded makespan honest
+    /// without double-running the failed schedule.
+    pub fn pressure_rung_penalty_s(&self) -> f64 {
+        let backoffs: f64 = (0..crate::simgpu::fault::MAX_LAUNCH_RETRIES)
+            .map(|i| self.alloc_latency_s + self.fault_retry_backoff_s * (1u64 << i) as f64)
+            .sum();
+        self.fault_replan_s + backoffs
     }
 
     /// Time to move `bytes` of partial projections device→device over a
@@ -300,6 +330,15 @@ mod tests {
         // the tree's win: one p2p hop beats one host fold pass at
         // detector-partial sizes
         assert!(c.p2p_time_s(mb) < c.host_fold_time_s(mb));
+    }
+
+    #[test]
+    fn watchdog_deadline_scales_predicted_time() {
+        let c = CostModel::gtx1080ti_pcie3();
+        let t = c.fp_slab_kernel_s(256, 256, 9, 256, 256, 64, 256);
+        assert!((c.watchdog_deadline_s(t) - t * c.watchdog_factor).abs() < 1e-12);
+        // the deadline must clear the slab-fraction overreach band (1.3×)
+        assert!(c.watchdog_factor > 2.0);
     }
 
     #[test]

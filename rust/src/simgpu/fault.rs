@@ -42,10 +42,19 @@ pub enum FaultKind {
     /// are replanned onto survivors (`splitter::replan_excluding`).
     DeviceLoss,
     /// Device allocation fails `times` times before succeeding
-    /// (the recoverable sibling of the typed `SimOom`).
+    /// (the recoverable sibling of the typed `SimOom`). A budget above
+    /// [`MAX_LAUNCH_RETRIES`] is a *hard* allocation failure: the
+    /// simulated node surfaces `SimOom` and the operator entry runs the
+    /// memory-pressure ladder (evict → refine → spill, ISSUE 8).
     AllocFail,
     /// An OOC disk read/write fails `times` consecutive attempts.
     DiskIo,
+    /// The launch hangs: the unit misses its watchdog deadline
+    /// (predicted kernel time × `CostModel::watchdog_factor`) `times`
+    /// consecutive attempts before the retried launch completes. Past
+    /// [`MAX_LAUNCH_RETRIES`] the watchdog escalates the hang to device
+    /// loss, exactly like a transient burst (ISSUE 8).
+    Hang,
 }
 
 /// One injection site. `unit` is a per-device launch ordinal for
@@ -80,6 +89,10 @@ pub enum LaunchFault {
     /// Launch fails `n` times; retry with doubling backoff, then it
     /// succeeds (callers escalate to loss when `n > MAX_LAUNCH_RETRIES`).
     Transient(usize),
+    /// Launch hangs `n` times: each attempt runs until the watchdog
+    /// deadline fires, is cancelled and retried (callers escalate to
+    /// loss when `n > MAX_LAUNCH_RETRIES`).
+    Hung(usize),
     /// The device is (or just became) permanently lost.
     Lost,
 }
@@ -206,6 +219,18 @@ impl FaultPlan {
         })
     }
 
+    /// `times` consecutive hangs (watchdog-deadline misses) at the
+    /// launch ordinal `unit` of `device`.
+    pub fn hang(self, device: usize, unit: usize, times: usize) -> Self {
+        self.with_site(FaultSite {
+            kind: FaultKind::Hang,
+            device,
+            unit,
+            iteration: None,
+            times,
+        })
+    }
+
     /// `times` consecutive disk-I/O failures at disk-op ordinal `unit`.
     pub fn disk_io(self, unit: usize, times: usize) -> Self {
         self.with_site(FaultSite {
@@ -260,6 +285,7 @@ impl FaultPlan {
         self.sites.iter().any(|s| {
             s.kind == FaultKind::DeviceLoss
                 || (s.kind == FaultKind::TransientLaunch && s.times > MAX_LAUNCH_RETRIES)
+                || (s.kind == FaultKind::Hang && s.times > MAX_LAUNCH_RETRIES)
         })
     }
 
@@ -319,6 +345,10 @@ impl FaultPlan {
                     st.fired[i] = true;
                     st.lost[dev] = true;
                     return LaunchFault::Lost;
+                }
+                FaultKind::Hang => {
+                    st.fired[i] = true;
+                    return LaunchFault::Hung(site.times.max(1));
                 }
                 FaultKind::AllocFail | FaultKind::DiskIo => {}
             }
@@ -454,6 +484,34 @@ mod tests {
         assert_eq!(p.alloc_fault(FaultScope::Sim, 0), 0);
         assert_eq!(p.disk_fault(FaultScope::Sim), 3);
         assert_eq!(p.disk_fault(FaultScope::Sim), 0);
+    }
+
+    #[test]
+    fn hang_fires_once_at_its_launch_ordinal() {
+        let p = FaultPlan::new().hang(0, 1, 2);
+        assert!(!p.plans_loss(), "a recoverable hang plans no loss");
+        p.begin_op(FaultScope::Real);
+        assert_eq!(p.launch_fault(FaultScope::Real, 0), LaunchFault::Ok); // unit 0
+        assert_eq!(p.launch_fault(FaultScope::Real, 0), LaunchFault::Hung(2));
+        // consumed: the retried launch (a fresh ordinal next op) is clean
+        p.begin_op(FaultScope::Real);
+        for _ in 0..3 {
+            assert_eq!(p.launch_fault(FaultScope::Real, 0), LaunchFault::Ok);
+        }
+    }
+
+    #[test]
+    fn hang_past_retry_budget_plans_a_loss() {
+        // the tree merge keys off plans_loss() to degrade safely — an
+        // escalating hang must advertise itself the same way a
+        // transient burst does
+        let p = FaultPlan::new().hang(1, 0, MAX_LAUNCH_RETRIES + 1);
+        assert!(p.plans_loss());
+        p.begin_op(FaultScope::Real);
+        assert_eq!(
+            p.launch_fault(FaultScope::Real, 1),
+            LaunchFault::Hung(MAX_LAUNCH_RETRIES + 1)
+        );
     }
 
     #[test]

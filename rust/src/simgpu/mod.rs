@@ -194,7 +194,32 @@ impl SimNode {
         let mut dur = self.cost.alloc_latency_s;
         if let Some(plan) = &self.fault {
             let k = plan.alloc_fault(FaultScope::Sim, dev);
-            for i in 0..k.min(MAX_LAUNCH_RETRIES) {
+            if k > MAX_LAUNCH_RETRIES {
+                // Hard injected allocation failure: every bounded retry
+                // failed too. Undo the ledger charge (nothing was ever
+                // allocated), charge the host for the exhausted retries,
+                // and surface the typed OOM — the operator entry answers
+                // with the memory-pressure ladder (evict → refine →
+                // spill, ISSUE 8). The site is consumed, so the ladder's
+                // retried op allocates cleanly.
+                self.devices[dev].mem.free(label);
+                let t0 = self.host_free;
+                let mut t1 = t0;
+                for i in 0..MAX_LAUNCH_RETRIES {
+                    t1 += self.cost.alloc_latency_s
+                        + self.cost.fault_retry_backoff_s * (1u64 << i) as f64;
+                }
+                self.host_free = t1;
+                self.log(dev, Category::OtherMem, t0, t1, format!("alloc fail {label}"));
+                return Err(SimOom {
+                    device: dev,
+                    label: label.to_string(),
+                    detail: format!(
+                        "injected allocation failure ({k} attempts > retry budget {MAX_LAUNCH_RETRIES})"
+                    ),
+                });
+            }
+            for i in 0..k {
                 dur += self.cost.alloc_latency_s + self.cost.fault_retry_backoff_s * (1u64 << i) as f64;
             }
         }
@@ -387,7 +412,7 @@ impl SimNode {
     /// survivor redirect models recovery *time* only — the memory
     /// ledger keeps the original placement.
     pub fn kernel(&mut self, dev: usize, dur_s: f64, after: Ev, label: &str) -> Ev {
-        let (run_dev, extra) = self.fault_route(dev);
+        let (run_dev, extra) = self.fault_route(dev, dur_s);
         let t0 = self.devices[run_dev].engine_free[&Engine::Compute]
             .max(after.0)
             .max(self.host_free); // issue order: host must have reached it
@@ -399,7 +424,10 @@ impl SimNode {
 
     /// Consult the fault plan for the next launch unit on `dev`: returns
     /// the device the kernel actually runs on and the extra retry time.
-    fn fault_route(&mut self, dev: usize) -> (usize, f64) {
+    /// `dur_s` is the unit's predicted kernel time — a hung launch
+    /// occupies the engine until the watchdog deadline
+    /// (`predicted × watchdog_factor`) before it is killed and retried.
+    fn fault_route(&mut self, dev: usize, dur_s: f64) -> (usize, f64) {
         let Some(plan) = self.fault.clone() else { return (dev, 0.0) };
         match plan.launch_fault(FaultScope::Sim, dev) {
             LaunchFault::Ok => return (dev, 0.0),
@@ -411,8 +439,21 @@ impl SimNode {
                 }
                 return (dev, extra);
             }
+            LaunchFault::Hung(k) if k <= MAX_LAUNCH_RETRIES => {
+                // Each hang wastes a full watchdog deadline of engine
+                // time before the unit is killed and relaunched.
+                let mut extra = 0.0;
+                for i in 0..k {
+                    extra += self.cost.watchdog_deadline_s(dur_s)
+                        + self.cost.kernel_launch_s
+                        + self.cost.fault_retry_backoff_s * (1u64 << i) as f64;
+                }
+                return (dev, extra);
+            }
             // retry budget exhausted: escalate to permanent loss
-            LaunchFault::Transient(_) => plan.mark_lost(FaultScope::Sim, dev),
+            LaunchFault::Transient(_) | LaunchFault::Hung(_) => {
+                plan.mark_lost(FaultScope::Sim, dev)
+            }
             LaunchFault::Lost => {}
         }
         if !self.fault_replanned[dev] {
@@ -649,6 +690,52 @@ mod tests {
         );
         // the one-time replan charge landed on the host
         assert!(faulted.events().iter().any(|e| e.label.contains("fault replan d1")));
+    }
+
+    #[test]
+    fn fault_hang_stretches_kernel_by_watchdog_deadline() {
+        let mut clean = small_node(1);
+        clean.kernel(0, 0.1, Ev::ZERO, "fp");
+        let mut faulted = small_node(1);
+        let plan = Arc::new(FaultPlan::new().hang(0, 0, 1));
+        plan.begin_op(FaultScope::Sim);
+        faulted.set_fault_plan(plan);
+        faulted.kernel(0, 0.1, Ev::ZERO, "fp");
+        let dt = faulted.makespan() - clean.makespan();
+        let deadline = faulted.cost.watchdog_deadline_s(0.1);
+        assert!(
+            dt >= deadline - 1e-12,
+            "a hang must waste a full watchdog deadline: Δ={dt} < {deadline}"
+        );
+    }
+
+    #[test]
+    fn fault_escalated_hang_redirects_to_a_survivor() {
+        let mut faulted = small_node(2);
+        let plan = Arc::new(FaultPlan::new().hang(1, 0, MAX_LAUNCH_RETRIES + 1));
+        plan.begin_op(FaultScope::Sim);
+        faulted.set_fault_plan(plan.clone());
+        faulted.kernel(0, 1.0, Ev::ZERO, "fp");
+        faulted.kernel(1, 1.0, Ev::ZERO, "fp"); // hangs past budget → lost
+        assert!(plan.is_lost(FaultScope::Sim, 1));
+        assert!(faulted.events().iter().any(|e| e.label.contains("fault replan d1")));
+    }
+
+    #[test]
+    fn fault_injected_alloc_failure_past_budget_is_a_typed_oom() {
+        let mut sim = small_node(1);
+        let plan = Arc::new(FaultPlan::new().alloc_fail(0, 0, MAX_LAUNCH_RETRIES + 1));
+        plan.begin_op(FaultScope::Sim);
+        sim.set_fault_plan(plan);
+        let err = sim.alloc(0, "img", 1 << 20).unwrap_err();
+        assert_eq!(err.device, 0);
+        assert!(err.detail.contains("injected"), "{err}");
+        // the ledger was rolled back and the exhausted retries cost time
+        assert_eq!(sim.device_mem(0).used(), 0);
+        assert!(sim.host_time().0 > 0.0);
+        // the site is consumed: a ladder retry allocates cleanly
+        sim.alloc(0, "img", 1 << 20).unwrap();
+        assert_eq!(sim.device_mem(0).used(), 1 << 20);
     }
 
     #[test]

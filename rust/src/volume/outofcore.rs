@@ -41,22 +41,24 @@ use crate::simgpu::fault::{FaultPlan, FaultScope, MAX_LAUNCH_RETRIES};
 use crate::util::json::Json;
 use crate::volume::{ProjectionSet, Volume};
 
-/// Bounded retry budget for disk reads, shared with the launch-retry
-/// budget so "how many times do we re-try a flaky unit" is one number
-/// across the whole fault-tolerance layer (ISSUE 7).
+/// Bounded retry budget for disk reads and writebacks, shared with the
+/// launch-retry budget so "how many times do we re-try a flaky unit" is
+/// one number across the whole fault-tolerance layer (ISSUE 7).
 pub const MAX_DISK_ATTEMPTS: usize = MAX_LAUNCH_RETRIES;
 
-/// Base backoff between disk-read retries; doubles per attempt. Short:
-/// this covers transient EINTR-class hiccups and injected test faults,
-/// not spun-down media.
+/// Base backoff between disk retries; doubles per attempt. Short: this
+/// covers transient EINTR-class hiccups and injected test faults, not
+/// spun-down media.
 const DISK_RETRY_BACKOFF_US: u64 = 50;
 
-/// A disk read that kept failing past [`MAX_DISK_ATTEMPTS`]. Typed (not
-/// a bare `anyhow!` string) so the recovery layer and the tests can tell
-/// an exhausted retry budget from shape/usage errors.
+/// A disk read or writeback that kept failing past
+/// [`MAX_DISK_ATTEMPTS`]. Typed (not a bare `anyhow!` string) so the
+/// recovery layer and the tests can tell an exhausted retry budget from
+/// shape/usage errors; `op` is `"read"` or `"write"`.
 #[derive(Debug)]
 pub struct OocIoError {
     pub path: PathBuf,
+    pub op: &'static str,
     pub attempts: usize,
     pub source: std::io::Error,
 }
@@ -65,8 +67,9 @@ impl fmt::Display for OocIoError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "{}: disk read failed after {} attempts",
+            "{}: disk {} failed after {} attempts",
             self.path.display(),
+            self.op,
             self.attempts
         )
     }
@@ -324,6 +327,7 @@ impl SlabStore {
         inner.io_buf = bytes;
         Err(OocIoError {
             path: self.path.clone(),
+            op: "read",
             attempts: MAX_DISK_ATTEMPTS,
             source: last_err.expect("at least one attempt ran"),
         }
@@ -342,13 +346,51 @@ impl SlabStore {
         for v in src {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
-        inner.file.seek(SeekFrom::Start(off))?;
-        inner.file.write_all(&bytes)?;
-        let n = bytes.len() as u64;
+        // same bounded-backoff discipline as `read_file`: a transient
+        // write hiccup must not lose a dirty slab mid-eviction (ISSUE 8)
+        let mut injected = inner
+            .fault
+            .as_ref()
+            .map_or(0, |f| f.disk_fault(FaultScope::Real));
+        let mut last_err: Option<std::io::Error> = None;
+        for attempt in 1..=MAX_DISK_ATTEMPTS {
+            if attempt > 1 {
+                std::thread::sleep(std::time::Duration::from_micros(
+                    DISK_RETRY_BACKOFF_US << (attempt - 2),
+                ));
+            }
+            if injected > 0 {
+                injected -= 1;
+                last_err = Some(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "injected disk fault",
+                ));
+                continue;
+            }
+            // seek inside the loop: a short write can move the cursor
+            let res = inner
+                .file
+                .seek(SeekFrom::Start(off))
+                .and_then(|_| inner.file.write_all(&bytes));
+            match res {
+                Ok(()) => {
+                    let n = bytes.len() as u64;
+                    inner.io_buf = bytes;
+                    inner.stats.writebacks += 1;
+                    inner.stats.bytes_written += n;
+                    return Ok(());
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
         inner.io_buf = bytes;
-        inner.stats.writebacks += 1;
-        inner.stats.bytes_written += n;
-        Ok(())
+        Err(OocIoError {
+            path: self.path.clone(),
+            op: "write",
+            attempts: MAX_DISK_ATTEMPTS,
+            source: last_err.expect("at least one attempt ran"),
+        }
+        .into())
     }
 
     // ---- cache machinery ------------------------------------------------
@@ -362,11 +404,18 @@ impl SlabStore {
             };
             let slab = inner.cache.remove(&lru).expect("LRU key just found");
             inner.used_bytes -= (slab.data.len() * 4) as u64;
-            inner.stats.evictions += 1;
             if slab.dirty {
                 let (p0, _) = self.slab_range(lru);
-                self.write_file(inner, p0, &slab.data)?;
+                if let Err(e) = self.write_file(inner, p0, &slab.data) {
+                    // writeback failed past the retry budget: reinsert
+                    // the dirty slab so its bytes are not lost — the
+                    // caller sees the typed error, the cache stays whole
+                    inner.used_bytes += (slab.data.len() * 4) as u64;
+                    inner.cache.insert(lru, slab);
+                    return Err(e);
+                }
             }
+            inner.stats.evictions += 1;
         }
         Ok(())
     }
@@ -514,9 +563,12 @@ impl SlabStore {
             let data = std::mem::take(
                 &mut inner.cache.get_mut(&idx).expect("dirty key just listed").data,
             );
-            self.write_file(inner, p0, &data)?;
+            let res = self.write_file(inner, p0, &data);
+            // restore the slab's bytes before surfacing any error, so a
+            // failed writeback never leaves an empty-but-dirty slab
             let slab = inner.cache.get_mut(&idx).expect("dirty key just listed");
             slab.data = data;
+            res?;
             slab.dirty = false;
         }
         if wrote {
@@ -1108,6 +1160,44 @@ mod tests {
         let err = ooc.load_slab_into(6, 8, &mut buf).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("disk read failed after"), "{msg}");
+    }
+
+    #[test]
+    fn degrade_disk_writeback_retries_then_succeeds() {
+        // dirty-slab writeback survives transient write failures: the
+        // flush write fails MAX−1 times, then the real write lands
+        let d = tmpdir("degrade_wb_ok");
+        let ooc = OocVolume::create(&d.join("v.raw"), 4, 4, 4, 2, 1 << 20).unwrap();
+        let data: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        ooc.store_slab(0, &data).unwrap(); // dirty in cache, no disk op yet
+        let plan = Arc::new(FaultPlan::new().disk_io(0, MAX_DISK_ATTEMPTS - 1));
+        plan.begin_op(FaultScope::Real);
+        ooc.set_fault_plan(plan);
+        ooc.flush().unwrap();
+        // the retried write persisted the true bytes
+        let v = crate::io::load_volume(&d.join("v.raw")).unwrap();
+        assert_eq!(&v.data[..32], &data[..], "retried writeback must persist true bytes");
+    }
+
+    #[test]
+    fn degrade_disk_write_failure_past_retry_budget_is_a_typed_error() {
+        let d = tmpdir("degrade_wb_exhausted");
+        let ooc = OocVolume::create(&d.join("v.raw"), 4, 4, 4, 2, 1 << 20).unwrap();
+        let data = vec![3.0f32; 32];
+        ooc.store_slab(0, &data).unwrap();
+        // enough injected failures to eat the whole retry budget
+        let plan = Arc::new(FaultPlan::new().disk_io(0, MAX_DISK_ATTEMPTS));
+        plan.begin_op(FaultScope::Real);
+        ooc.set_fault_plan(plan);
+        let err = ooc.flush().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("disk write failed after"), "{msg}");
+        assert!(msg.contains("injected disk fault"), "{msg}");
+        // the store survives: the slab is still dirty and a later
+        // (un-injected) flush persists it
+        ooc.flush().unwrap();
+        let v = crate::io::load_volume(&d.join("v.raw")).unwrap();
+        assert_eq!(&v.data[..32], &data[..]);
     }
 
     #[test]

@@ -22,6 +22,12 @@ Checks
     overhead factor (faulted makespan / clean makespan), and a single
     retried transient launch must cost something yet never double the
     run (the tracked recovery-overhead acceptance gate);
+  * coordinator runs only: every `degrade ...` ablation entry must
+    report 1 < speedup < 2 — for these entries `speedup` is the
+    degradation overhead factor (pressure-replanned makespan / clean
+    makespan), and surviving one exhausted allocation via the pressure
+    ladder (evict -> refine -> spill) must cost something yet never
+    double the run (the tracked graceful-degradation acceptance gate);
   * when --require-prefixes is given, each comma-separated prefix matches
     at least one entry name of the last run.
 
@@ -59,6 +65,8 @@ def check_entry(schema: str, entry: dict) -> None:
         check_merge_entry(name, entry)
     if schema.startswith("tigre-bench-coordinator/") and name.startswith("fault"):
         check_fault_entry(name, entry)
+    if schema.startswith("tigre-bench-coordinator/") and name.startswith("degrade"):
+        check_degrade_entry(name, entry)
 
 
 def parse_gpus(name: str) -> int:
@@ -84,6 +92,23 @@ def check_fault_entry(name: str, entry: dict) -> None:
     if not 1.0 < overhead < 2.0:
         fail(
             f"entry '{name}': recovery overhead must lie in (1, 2), "
+            f"got {overhead!r}"
+        )
+
+
+def check_degrade_entry(name: str, entry: dict) -> None:
+    """Degradation-ablation acceptance: replanning overhead in (1, 2).
+
+    For `degrade ...` entries `speedup` = pressure-replanned / clean
+    makespan. One exhausted allocation must register (> 1) — the ladder
+    charges the discarded attempt's retry backoffs plus a replan — but
+    completing on the refined plan must never double the run (< 2).
+    """
+    parse_gpus(name)  # names must stay machine-parsable per device count
+    overhead = entry.get("speedup", 0)
+    if not 1.0 < overhead < 2.0:
+        fail(
+            f"entry '{name}': degradation overhead must lie in (1, 2), "
             f"got {overhead!r}"
         )
 
