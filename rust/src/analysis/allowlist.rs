@@ -1,0 +1,194 @@
+//! Checked-in waiver file for `tigre-lint` (`lint-allow.toml` at the
+//! repo root).
+//!
+//! The format is a deliberately tiny TOML subset — parsed by hand so the
+//! checker stays dependency-free:
+//!
+//! ```text
+//! # comment
+//! [lint-id]
+//! allow = "<path-substring> | <matcher>"
+//! ```
+//!
+//! `<path-substring>` is matched against the normalized (forward-slash)
+//! file path. `<matcher>` is one of:
+//!
+//! * `*` (or an omitted ` | <matcher>` part) — every diagnostic of that
+//!   lint in matching files,
+//! * `fn <name>` — diagnostics whose enclosing named function is `<name>`
+//!   (how merge sites are blessed for the accumulation lint),
+//! * anything else — a substring of the offending source line (typically
+//!   an `.expect("…")` message, which pins the waiver to the exact
+//!   protocol the comment above the entry justifies).
+//!
+//! Policy (DESIGN.md §Static-analysis): every entry carries a `#` comment
+//! explaining *why* the invariant does not apply; the typed-errors lint
+//! must keep an **empty** section.
+
+/// How one waiver entry matches a diagnostic within a file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Matcher {
+    /// Every diagnostic of the lint in matching files.
+    Any,
+    /// Diagnostics inside the named function.
+    Fn(String),
+    /// Diagnostics whose source line contains the substring.
+    Line(String),
+}
+
+/// One parsed `allow = "path | matcher"` entry.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub lint: String,
+    pub path_sub: String,
+    pub matcher: Matcher,
+}
+
+/// The parsed waiver file.
+#[derive(Clone, Debug, Default)]
+pub struct Allowlist {
+    entries: Vec<Entry>,
+}
+
+impl Allowlist {
+    /// No waivers (what the golden-fixture tests check against).
+    pub fn empty() -> Allowlist {
+        Allowlist::default()
+    }
+
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    /// Parse the waiver format; errors carry the 1-based line number.
+    pub fn parse(text: &str) -> Result<Allowlist, String> {
+        let mut entries = Vec::new();
+        let mut section: Option<String> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = Some(name.trim().to_string());
+                continue;
+            }
+            let Some(value) = line
+                .strip_prefix("allow")
+                .map(str::trim_start)
+                .and_then(|l| l.strip_prefix('='))
+            else {
+                return Err(format!("line {}: expected `[section]` or `allow = \"…\"`", i + 1));
+            };
+            let value = value.trim();
+            let Some(value) = value
+                .strip_prefix('"')
+                .and_then(|v| v.strip_suffix('"'))
+            else {
+                return Err(format!("line {}: allow value must be double-quoted", i + 1));
+            };
+            let Some(lint) = section.clone() else {
+                return Err(format!("line {}: `allow` before any [lint] section", i + 1));
+            };
+            let (path_sub, matcher) = match value.split_once('|') {
+                None => (value.trim().to_string(), Matcher::Any),
+                Some((p, m)) => {
+                    let m = m.trim();
+                    let matcher = if m == "*" || m.is_empty() {
+                        Matcher::Any
+                    } else if let Some(f) = m.strip_prefix("fn ") {
+                        Matcher::Fn(f.trim().to_string())
+                    } else {
+                        Matcher::Line(m.to_string())
+                    };
+                    (p.trim().to_string(), matcher)
+                }
+            };
+            if path_sub.is_empty() {
+                return Err(format!("line {}: empty path pattern", i + 1));
+            }
+            entries.push(Entry { lint, path_sub, matcher });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    /// Load from disk; a missing file is an empty allowlist, a malformed
+    /// one is an error (waivers must never be silently dropped).
+    pub fn load(path: &std::path::Path) -> Result<Allowlist, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Allowlist::parse(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Allowlist::empty()),
+            Err(e) => Err(format!("{}: {e}", path.display())),
+        }
+    }
+
+    /// Is a diagnostic of `lint` at `path`/`line_text` (inside
+    /// `enclosing_fn`) waived?
+    pub fn allows(
+        &self,
+        lint: &str,
+        path: &str,
+        line_text: &str,
+        enclosing_fn: Option<&str>,
+    ) -> bool {
+        self.entries.iter().any(|e| {
+            e.lint == lint
+                && path.contains(e.path_sub.as_str())
+                && match &e.matcher {
+                    Matcher::Any => true,
+                    Matcher::Fn(name) => enclosing_fn == Some(name.as_str()),
+                    Matcher::Line(sub) => line_text.contains(sub.as_str()),
+                }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_allowlist_parses_sections_and_matchers() {
+        let text = r#"
+# top comment
+[no-panic-paths]
+# lane protocol
+allow = "coordinator/pipeline.rs | merge lane terminated"
+allow = "coordinator/pipeline.rs | fn recover_fp_losses"
+[no-bare-print]
+allow = "util/log.rs | *"
+allow = "config/mod.rs"
+"#;
+        let a = Allowlist::parse(text).unwrap();
+        assert_eq!(a.entries().len(), 4);
+        assert!(a.allows(
+            "no-panic-paths",
+            "rust/src/coordinator/pipeline.rs",
+            r#"let b = rx.recv().expect("merge lane terminated");"#,
+            Some("worker"),
+        ));
+        assert!(a.allows(
+            "no-panic-paths",
+            "rust/src/coordinator/pipeline.rs",
+            "*o += *v;",
+            Some("recover_fp_losses"),
+        ));
+        assert!(!a.allows(
+            "no-panic-paths",
+            "rust/src/coordinator/splitter.rs",
+            r#"x.expect("merge lane terminated")"#,
+            None,
+        ));
+        assert!(a.allows("no-bare-print", "rust/src/util/log.rs", "eprintln!(..)", None));
+        assert!(a.allows("no-bare-print", "rust/src/config/mod.rs", "println!(..)", None));
+        assert!(!a.allows("typed-errors", "rust/src/config/mod.rs", "anyhow!(..)", None));
+    }
+
+    #[test]
+    fn lint_allowlist_rejects_malformed_lines() {
+        assert!(Allowlist::parse("allow = \"x\"").is_err(), "entry before section");
+        assert!(Allowlist::parse("[a]\nallow = unquoted").is_err());
+        assert!(Allowlist::parse("[a]\nnonsense line").is_err());
+        assert!(Allowlist::parse("[a]\nallow = \"\"").is_err(), "empty path");
+    }
+}

@@ -1,0 +1,480 @@
+//! The repo-specific lint catalog enforced by `tigre-lint`.
+//!
+//! Each lint is a machine-checked invariant the paper's splitting
+//! strategy rests on (DESIGN.md §Static-analysis has the full catalog
+//! and the waiver policy):
+//!
+//! 1.  `no-panic-paths` — no `unwrap`/`expect`/`panic!`/`todo!` in
+//!     non-test coordinator/pipeline/out-of-core code. Failures must
+//!     travel the typed `ReconError` path; the only waivable exception
+//!     is the pipeline's lane protocol, where a closed channel proves a
+//!     peer already panicked and unwinding into the scope join *is* the
+//!     designed abort path.
+//! 2.  `safety-comment` — every `unsafe` token is preceded by a
+//!     `// SAFETY:` comment block stating the actual argument.
+//! 3.  `typed-errors` — no `anyhow!`/`bail!`/`ensure!`/`.context()`
+//!     stringly errors inside `coordinator/`; construct `ReconError`.
+//!     The allowlist section for this lint must stay empty.
+//! 4.  `no-wallclock` — no `Instant`/`SystemTime` in `simgpu/` or
+//!     `coordinator/splitter.rs`: the DES and the planner must be
+//!     deterministic functions of their inputs.
+//! 5.  `deterministic-maps` — no `HashMap`/`HashSet` in schedule- or
+//!     plan-producing modules (iteration order would leak
+//!     nondeterminism into fold order); use `BTreeMap`/vectors.
+//! 6.  `blessed-accumulation` — element-wise float accumulation
+//!     (`+=` through a deref or index) in `coordinator/` only inside
+//!     allowlisted merge sites, so every fold provably runs the one
+//!     canonical `merge_schedule`.
+//! 7.  `backend-match` — every `match` directly on a `Backend` value is
+//!     exhaustive without a `_` arm and carries the `cfg(test)`
+//!     injection arms (`PanicInject`/`NanInject`). Tuple matches that
+//!     pair the backend with other state dispatch through the
+//!     executor's own `Backend` match and are out of scope.
+//! 8.  `no-bare-print` — no `println!`/`eprintln!` outside
+//!     `main.rs`/`bench/`/`bin/`; library code reports through
+//!     `util::log` or return values.
+
+use super::scan::{FileModel, TokKind};
+use super::Diagnostic;
+
+/// Static description of one lint.
+pub struct LintInfo {
+    pub id: &'static str,
+    /// Whether a violation fails the run without `--deny-all`.
+    pub deny_by_default: bool,
+    pub summary: &'static str,
+}
+
+/// The catalog, in check order.
+pub const LINTS: &[LintInfo] = &[
+    LintInfo {
+        id: "no-panic-paths",
+        deny_by_default: true,
+        summary: "no unwrap/expect/panic!/todo! in non-test coordinator/outofcore code",
+    },
+    LintInfo {
+        id: "safety-comment",
+        deny_by_default: true,
+        summary: "every `unsafe` is preceded by a // SAFETY: comment",
+    },
+    LintInfo {
+        id: "typed-errors",
+        deny_by_default: true,
+        summary: "coordinator failures construct ReconError, not anyhow!/bail!/ensure!/context",
+    },
+    LintInfo {
+        id: "no-wallclock",
+        deny_by_default: true,
+        summary: "no Instant/SystemTime in simgpu/ or the splitter (DES determinism)",
+    },
+    LintInfo {
+        id: "deterministic-maps",
+        deny_by_default: true,
+        summary: "no HashMap/HashSet in schedule/plan-producing modules",
+    },
+    LintInfo {
+        id: "blessed-accumulation",
+        deny_by_default: true,
+        summary: "buffer `+=` accumulation in coordinator/ only inside blessed merge sites",
+    },
+    LintInfo {
+        id: "backend-match",
+        deny_by_default: true,
+        summary: "matches on Backend are exhaustive and carry the cfg(test) arms",
+    },
+    LintInfo {
+        id: "no-bare-print",
+        deny_by_default: false,
+        summary: "no bare println!/eprintln! outside main.rs/bench/bin",
+    },
+];
+
+pub fn lint_info(id: &str) -> Option<&'static LintInfo> {
+    LINTS.iter().find(|l| l.id == id)
+}
+
+// ---------------------------------------------------------------------------
+// path scoping
+// ---------------------------------------------------------------------------
+
+fn in_coordinator(path: &str) -> bool {
+    path.contains("coordinator/")
+}
+
+fn is_outofcore(path: &str) -> bool {
+    path.ends_with("volume/outofcore.rs")
+}
+
+fn is_splitter(path: &str) -> bool {
+    path.ends_with("coordinator/splitter.rs")
+}
+
+fn in_simgpu(path: &str) -> bool {
+    path.contains("simgpu/")
+}
+
+/// Modules whose data structures feed schedules or plans (lint 5).
+fn in_deterministic_scope(path: &str) -> bool {
+    is_splitter(path)
+        || in_simgpu(path)
+        || path.ends_with("geometry/split.rs")
+        || path.ends_with("coordinator/forward.rs")
+        || path.ends_with("coordinator/backward.rs")
+}
+
+/// Entry points that own stdout/stderr (lint 8 exemptions).
+fn print_exempt(path: &str) -> bool {
+    path.ends_with("src/main.rs") || path.contains("/bench/") || path.contains("/bin/")
+}
+
+// ---------------------------------------------------------------------------
+// the passes
+// ---------------------------------------------------------------------------
+
+/// Run every lint over one scanned file, appending raw (pre-allowlist)
+/// diagnostics.
+pub fn run_all(m: &FileModel, out: &mut Vec<Diagnostic>) {
+    no_panic_paths(m, out);
+    safety_comment(m, out);
+    typed_errors(m, out);
+    no_wallclock(m, out);
+    deterministic_maps(m, out);
+    blessed_accumulation(m, out);
+    backend_match(m, out);
+    no_bare_print(m, out);
+}
+
+fn push(m: &FileModel, out: &mut Vec<Diagnostic>, lint: &'static str, i: usize, msg: String) {
+    let t = &m.toks[i];
+    out.push(Diagnostic {
+        lint,
+        deny: lint_info(lint).map_or(true, |l| l.deny_by_default),
+        path: m.path.clone(),
+        line: t.line,
+        col: t.col,
+        message: msg,
+        snippet: m.line_text(t.line).trim().to_string(),
+        enclosing_fn: m.enclosing_fn[i].clone(),
+    });
+}
+
+/// Is token `i` a method call named `name` (`.name(`)?
+fn is_method_call(m: &FileModel, i: usize, name: &str) -> bool {
+    m.toks[i].kind == TokKind::Ident
+        && m.toks[i].text == name
+        && i > 0
+        && m.toks[i - 1].text == "."
+        && m.toks.get(i + 1).is_some_and(|t| t.text == "(")
+}
+
+/// Is token `i` a macro invocation named `name` (`name!`)?
+fn is_macro_call(m: &FileModel, i: usize, name: &str) -> bool {
+    m.toks[i].kind == TokKind::Ident
+        && m.toks[i].text == name
+        && m.toks.get(i + 1).is_some_and(|t| t.text == "!")
+}
+
+fn no_panic_paths(m: &FileModel, out: &mut Vec<Diagnostic>) {
+    if !in_coordinator(&m.path) && !is_outofcore(&m.path) {
+        return;
+    }
+    for i in 0..m.toks.len() {
+        if m.in_test[i] {
+            continue;
+        }
+        for name in ["unwrap", "expect"] {
+            if is_method_call(m, i, name) {
+                push(
+                    m,
+                    out,
+                    "no-panic-paths",
+                    i,
+                    format!(".{name}() on a recoverable path — return a typed error instead"),
+                );
+            }
+        }
+        for name in ["panic", "todo"] {
+            if is_macro_call(m, i, name) {
+                push(
+                    m,
+                    out,
+                    "no-panic-paths",
+                    i,
+                    format!("{name}! on a recoverable path — return a typed error instead"),
+                );
+            }
+        }
+    }
+}
+
+fn safety_comment(m: &FileModel, out: &mut Vec<Diagnostic>) {
+    for i in 0..m.toks.len() {
+        let t = &m.toks[i];
+        if t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        // Walk upward from the line above the `unsafe`: skip statement
+        // continuation lines (a multi-line `let dst = \n unsafe {` split),
+        // then require the contiguous comment block to say SAFETY:.
+        let mut line = t.line.saturating_sub(1);
+        let mut continuations = 0usize;
+        let mut justified = false;
+        while line >= 1 {
+            let text = m.line_text(line).trim().to_string();
+            if text.starts_with("//") {
+                // scan the whole contiguous comment block
+                let mut l = line;
+                while l >= 1 {
+                    let c = m.line_text(l).trim();
+                    if !c.starts_with("//") {
+                        break;
+                    }
+                    if c.contains("SAFETY:") {
+                        justified = true;
+                    }
+                    l -= 1;
+                }
+                break;
+            }
+            // allow a few continuation lines of the same statement
+            let ends_stmt = text.ends_with(';')
+                || text.ends_with('{')
+                || text.ends_with('}')
+                || text.is_empty();
+            if ends_stmt || continuations >= 3 {
+                break;
+            }
+            continuations += 1;
+            line -= 1;
+        }
+        if !justified {
+            push(
+                m,
+                out,
+                "safety-comment",
+                i,
+                "`unsafe` without a preceding // SAFETY: comment".to_string(),
+            );
+        }
+    }
+}
+
+fn typed_errors(m: &FileModel, out: &mut Vec<Diagnostic>) {
+    if !in_coordinator(&m.path) {
+        return;
+    }
+    for i in 0..m.toks.len() {
+        if m.in_test[i] {
+            continue;
+        }
+        for name in ["anyhow", "bail", "ensure"] {
+            if is_macro_call(m, i, name) {
+                push(
+                    m,
+                    out,
+                    "typed-errors",
+                    i,
+                    format!("{name}! builds a stringly error — construct a ReconError variant"),
+                );
+            }
+        }
+        for name in ["context", "with_context"] {
+            if is_method_call(m, i, name) {
+                push(
+                    m,
+                    out,
+                    "typed-errors",
+                    i,
+                    format!(".{name}() wraps a stringly error — construct a ReconError variant"),
+                );
+            }
+        }
+    }
+}
+
+fn no_wallclock(m: &FileModel, out: &mut Vec<Diagnostic>) {
+    if !in_simgpu(&m.path) && !is_splitter(&m.path) {
+        return;
+    }
+    for i in 0..m.toks.len() {
+        if m.in_test[i] {
+            continue;
+        }
+        let t = &m.toks[i];
+        if t.kind == TokKind::Ident && (t.text == "Instant" || t.text == "SystemTime") {
+            push(
+                m,
+                out,
+                "no-wallclock",
+                i,
+                format!("{} read in deterministic code — the DES/planner must not see wall-clock", t.text),
+            );
+        }
+    }
+}
+
+fn deterministic_maps(m: &FileModel, out: &mut Vec<Diagnostic>) {
+    if !in_deterministic_scope(&m.path) {
+        return;
+    }
+    for i in 0..m.toks.len() {
+        if m.in_test[i] {
+            continue;
+        }
+        let t = &m.toks[i];
+        if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            push(
+                m,
+                out,
+                "deterministic-maps",
+                i,
+                format!("{} in a schedule/plan-producing module — use BTreeMap or a vector", t.text),
+            );
+        }
+    }
+}
+
+fn blessed_accumulation(m: &FileModel, out: &mut Vec<Diagnostic>) {
+    if !in_coordinator(&m.path) {
+        return;
+    }
+    for i in 0..m.toks.len() {
+        if m.in_test[i] || m.toks[i].text != "+=" {
+            continue;
+        }
+        // Scan the place expression back to the statement boundary: a
+        // deref (`*dst += …`) or index (`buf[i] += …`) marks element-wise
+        // accumulation into a shared buffer; scalar counters are fine.
+        let mut is_buffer = false;
+        let mut k = i;
+        while k > 0 {
+            k -= 1;
+            match m.toks[k].text.as_str() {
+                ";" | "{" | "}" | "=>" => break,
+                "*" | "[" => {
+                    is_buffer = true;
+                }
+                _ => {}
+            }
+        }
+        if is_buffer {
+            push(
+                m,
+                out,
+                "blessed-accumulation",
+                i,
+                "buffer accumulation outside a blessed merge site — every fold must run \
+                 the canonical merge_schedule"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+fn backend_match(m: &FileModel, out: &mut Vec<Diagnostic>) {
+    for i in 0..m.toks.len() {
+        let t = &m.toks[i];
+        if m.in_test[i] || t.kind != TokKind::Ident || t.text != "match" {
+            continue;
+        }
+        // scrutinee: tokens up to the body `{` at bracket/paren depth 0
+        let (mut dp, mut dk) = (0i32, 0i32);
+        let mut body_open = None;
+        let mut mentions_backend = false;
+        for (j, s) in m.toks.iter().enumerate().skip(i + 1) {
+            match s.text.as_str() {
+                "(" => dp += 1,
+                ")" => dp -= 1,
+                "[" => dk += 1,
+                "]" => dk -= 1,
+                "{" if dp == 0 && dk == 0 => {
+                    body_open = Some(j);
+                    break;
+                }
+                _ => {}
+            }
+            if s.kind == TokKind::Ident && (s.text == "backend" || s.text == "Backend") {
+                mentions_backend = true;
+            }
+        }
+        let Some(open) = body_open else { continue };
+        // tuple scrutinees pair the backend with other state and dispatch
+        // through the executor's own Backend match — out of scope
+        if !mentions_backend || m.toks.get(i + 1).is_some_and(|t| t.text == "(") {
+            continue;
+        }
+        // walk the body: find the matching close, bare `_ =>` arms, and
+        // the injection-variant idents
+        let mut db = 0i32;
+        let mut has_wildcard = false;
+        let mut has_panic_inject = false;
+        let mut has_nan_inject = false;
+        let mut close = m.toks.len();
+        for j in open..m.toks.len() {
+            let s = &m.toks[j];
+            match s.text.as_str() {
+                "{" => db += 1,
+                "}" => {
+                    db -= 1;
+                    if db == 0 {
+                        close = j;
+                        break;
+                    }
+                }
+                "_" if db == 1
+                    && m.toks.get(j + 1).is_some_and(|t| t.text == "=>")
+                    && matches!(m.toks[j - 1].text.as_str(), "{" | "," | "}") =>
+                {
+                    has_wildcard = true;
+                }
+                "PanicInject" => has_panic_inject = true,
+                "NanInject" => has_nan_inject = true,
+                _ => {}
+            }
+        }
+        let _ = close;
+        if has_wildcard {
+            push(
+                m,
+                out,
+                "backend-match",
+                i,
+                "`_` arm in a match on Backend — a new backend variant would silently \
+                 fall through; name every variant"
+                    .to_string(),
+            );
+        } else if !has_panic_inject || !has_nan_inject {
+            push(
+                m,
+                out,
+                "backend-match",
+                i,
+                "match on Backend is missing the cfg(test) injection arms \
+                 (PanicInject/NanInject)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+fn no_bare_print(m: &FileModel, out: &mut Vec<Diagnostic>) {
+    if print_exempt(&m.path) {
+        return;
+    }
+    for i in 0..m.toks.len() {
+        if m.in_test[i] {
+            continue;
+        }
+        for name in ["println", "eprintln"] {
+            if is_macro_call(m, i, name) {
+                push(
+                    m,
+                    out,
+                    "no-bare-print",
+                    i,
+                    format!("bare {name}! in library code — report through util::log or a return value"),
+                );
+            }
+        }
+    }
+}

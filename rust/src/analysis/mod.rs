@@ -1,0 +1,202 @@
+//! `tigre-lint`: dependency-free static analysis for the repo's own
+//! invariants.
+//!
+//! The coordinator's correctness story (bit-identical folds across device
+//! counts, typed error taxonomy, deterministic DES planning) rests on
+//! conventions no compiler checks. This module is the checker: a
+//! hand-rolled lexer ([`scan`]), a tiny waiver-file parser
+//! ([`allowlist`]), and eight lint passes ([`lints`]) that walk
+//! `rust/src/**` without executing or compiling anything — essential
+//! while the build container lacks a toolchain (ROADMAP "toolchain
+//! debt").
+//!
+//! Entry points: [`check_source`] for one in-memory file (what the golden
+//! fixtures use) and [`check_tree`] for a directory walk (what the
+//! `tigre-lint` binary and CI use). Diagnostics are rendered as
+//! `path:line:col` text or machine-readable JSON.
+
+pub mod allowlist;
+pub mod lints;
+pub mod scan;
+
+pub use allowlist::Allowlist;
+pub use lints::{lint_info, LintInfo, LINTS};
+
+use crate::util::json::Json;
+use scan::FileModel;
+
+/// One lint finding, post-allowlist.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Lint id from the catalog (`lints::LINTS`).
+    pub lint: &'static str,
+    /// Fails the run even without `--deny-all`.
+    pub deny: bool,
+    /// Normalized (forward-slash) path as scanned.
+    pub path: String,
+    /// 1-based.
+    pub line: usize,
+    /// 1-based.
+    pub col: usize,
+    pub message: String,
+    /// Trimmed source line the finding sits on.
+    pub snippet: String,
+    /// Nearest enclosing named `fn`, if any (drives `fn` waivers).
+    pub enclosing_fn: Option<String>,
+}
+
+/// Lint one file's source text under `pretend_path` (paths select lint
+/// scopes, so fixtures pass coordinator-shaped paths for files that live
+/// elsewhere). Returns diagnostics surviving the allowlist, in source
+/// order.
+pub fn check_source(pretend_path: &str, src: &str, allow: &Allowlist) -> Vec<Diagnostic> {
+    let model = FileModel::build(pretend_path, src);
+    let mut raw = Vec::new();
+    lints::run_all(&model, &mut raw);
+    raw.sort_by_key(|d| (d.line, d.col));
+    raw.retain(|d| {
+        !allow.allows(d.lint, &d.path, d.snippet.as_str(), d.enclosing_fn.as_deref())
+    });
+    raw
+}
+
+/// Recursively collect `.rs` files under `root` in deterministic
+/// (sorted-path) order. Fixture trees are excluded so the checker never
+/// trips over its own seeded violations.
+pub fn collect_rs_files(root: &std::path::Path) -> std::io::Result<Vec<std::path::PathBuf>> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> = std::fs::read_dir(&dir)?
+            .collect::<std::io::Result<Vec<_>>>()?
+            .into_iter()
+            .map(|e| e.path())
+            .collect();
+        entries.sort();
+        for path in entries {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if path.is_dir() {
+                if name == "lint_fixtures" || name == "target" || name.starts_with('.') {
+                    continue;
+                }
+                stack.push(path);
+            } else if name.ends_with(".rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Lint every `.rs` file under `root`. IO errors abort (exit 2 in the
+/// binary): an unreadable tree must not pass as clean.
+pub fn check_tree(root: &std::path::Path, allow: &Allowlist) -> std::io::Result<Vec<Diagnostic>> {
+    let mut out = Vec::new();
+    for path in collect_rs_files(root)? {
+        let src = std::fs::read_to_string(&path)?;
+        let shown = path.to_string_lossy().replace('\\', "/");
+        out.extend(check_source(&shown, &src, allow));
+    }
+    Ok(out)
+}
+
+/// `path:line:col: [severity/lint] message` lines plus a summary tail.
+pub fn render_text(diags: &[Diagnostic], deny_all: bool) -> String {
+    let mut s = String::new();
+    for d in diags {
+        let sev = if d.deny || deny_all { "deny" } else { "warn" };
+        s.push_str(&format!(
+            "{}:{}:{}: [{sev}/{}] {}\n    {}\n",
+            d.path, d.line, d.col, d.lint, d.message, d.snippet
+        ));
+    }
+    let fatal = diags.iter().filter(|d| d.deny || deny_all).count();
+    s.push_str(&format!(
+        "tigre-lint: {} diagnostic(s), {} fatal\n",
+        diags.len(),
+        fatal
+    ));
+    s
+}
+
+/// Machine-readable report: `{"diagnostics": [...], "fatal": n}`.
+pub fn render_json(diags: &[Diagnostic], deny_all: bool) -> String {
+    let items = diags
+        .iter()
+        .map(|d| {
+            Json::obj(vec![
+                ("lint", Json::str(d.lint)),
+                ("severity", Json::str(if d.deny || deny_all { "deny" } else { "warn" })),
+                ("path", Json::str(d.path.as_str())),
+                ("line", Json::num(d.line as f64)),
+                ("col", Json::num(d.col as f64)),
+                ("message", Json::str(d.message.as_str())),
+                ("snippet", Json::str(d.snippet.as_str())),
+                (
+                    "enclosing_fn",
+                    match &d.enclosing_fn {
+                        Some(f) => Json::str(f.as_str()),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+        })
+        .collect();
+    let fatal = diags.iter().filter(|d| d.deny || deny_all).count();
+    Json::obj(vec![
+        ("diagnostics", Json::arr(items)),
+        ("total", Json::num(diags.len() as f64)),
+        ("fatal", Json::num(fatal as f64)),
+    ])
+    .pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_check_source_orders_and_filters_by_allowlist() {
+        let src = r#"
+fn merge(dst: &mut [f32], src: &[f32]) {
+    for (o, s) in dst.iter_mut().zip(src) {
+        *o += *s;
+    }
+}
+fn grab(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+"#;
+        let path = "rust/src/coordinator/fake.rs";
+        let none = Allowlist::empty();
+        let diags = check_source(path, src, &none);
+        assert_eq!(diags.len(), 2);
+        assert_eq!(diags[0].lint, "blessed-accumulation");
+        assert_eq!(diags[0].enclosing_fn.as_deref(), Some("merge"));
+        assert_eq!(diags[1].lint, "no-panic-paths");
+
+        let allow = Allowlist::parse(
+            "[blessed-accumulation]\nallow = \"coordinator/fake.rs | fn merge\"\n",
+        )
+        .unwrap();
+        let diags = check_source(path, src, &allow);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].lint, "no-panic-paths");
+    }
+
+    #[test]
+    fn lint_render_json_is_parseable_and_counts_fatal() {
+        let src = "fn f() { println!(\"hi\"); }\n";
+        let diags = check_source("rust/src/metrics/fake.rs", src, &Allowlist::empty());
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].lint, "no-bare-print");
+        assert!(!diags[0].deny, "no-bare-print warns by default");
+
+        let report = Json::parse(&render_json(&diags, false)).unwrap();
+        assert_eq!(report.get("total").unwrap().as_u64(), Some(1));
+        assert_eq!(report.get("fatal").unwrap().as_u64(), Some(0));
+        let report = Json::parse(&render_json(&diags, true)).unwrap();
+        assert_eq!(report.get("fatal").unwrap().as_u64(), Some(1));
+    }
+}

@@ -1,0 +1,523 @@
+//! Minimal Rust lexer/scanner backing `tigre-lint` (see [`crate::analysis`]).
+//!
+//! Deliberately *not* a parser: just enough token structure to drive the
+//! repo's lint catalog without any dependency — the checker must be able
+//! to run on a tree that does not compile yet (ROADMAP "toolchain debt").
+//! It provides:
+//!
+//! * comment/string/char-literal stripping with line/column positions,
+//! * `#[cfg(test)]` region marking that understands items (`mod tests`),
+//!   enum variants (`PanicInject,`) and match arms
+//!   (`Backend::PanicInject { .. } | ... => body,`),
+//! * an enclosing-`fn`-name per token (nearest *named* `fn`; closures
+//!   attribute to the function that contains them), which is what the
+//!   allowlist's `fn <name>` matcher keys on.
+
+/// Token class. Comments are stripped during lexing — the `// SAFETY:`
+/// lint inspects raw source lines instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Literal,
+    Lifetime,
+}
+
+/// One lexed token with its 1-based source position.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub text: String,
+    pub kind: TokKind,
+    pub line: u32,
+    pub col: u32,
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Lexer {
+    fn new(src: &str) -> Self {
+        Lexer { chars: src.chars().collect(), i: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    /// Consume a `"`-delimited string body (opening quote already eaten).
+    fn string_body(&mut self) {
+        while let Some(c) = self.bump() {
+            match c {
+                '\\' => {
+                    self.bump();
+                }
+                '"' => return,
+                _ => {}
+            }
+        }
+    }
+
+    /// Consume a raw string `r"…"` / `r#"…"#` (the `r` already eaten,
+    /// `self.i` at the first `#` or `"`).
+    fn raw_string_body(&mut self) {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        if self.peek(0) != Some('"') {
+            return; // not actually a raw string; nothing sensible to do
+        }
+        self.bump();
+        loop {
+            match self.bump() {
+                None => return,
+                Some('"') => {
+                    let mut k = 0usize;
+                    while k < hashes && self.peek(0) == Some('#') {
+                        self.bump();
+                        k += 1;
+                    }
+                    if k == hashes {
+                        return;
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into code tokens. Comments, whitespace and string/char
+/// contents are dropped; multi-char operators the lints care about
+/// (`=>`, `+=`, `::`, `->`) are joined into single tokens.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let mut lx = Lexer::new(src);
+    let mut toks: Vec<Tok> = Vec::new();
+    while let Some(c) = lx.peek(0) {
+        let (line, col) = (lx.line, lx.col);
+        if c.is_whitespace() {
+            lx.bump();
+            continue;
+        }
+        // comments
+        if c == '/' && lx.peek(1) == Some('/') {
+            while let Some(c) = lx.peek(0) {
+                if c == '\n' {
+                    break;
+                }
+                lx.bump();
+            }
+            continue;
+        }
+        if c == '/' && lx.peek(1) == Some('*') {
+            lx.bump();
+            lx.bump();
+            let mut depth = 1usize;
+            while depth > 0 {
+                match (lx.peek(0), lx.peek(1)) {
+                    (Some('/'), Some('*')) => {
+                        lx.bump();
+                        lx.bump();
+                        depth += 1;
+                    }
+                    (Some('*'), Some('/')) => {
+                        lx.bump();
+                        lx.bump();
+                        depth -= 1;
+                    }
+                    (Some(_), _) => {
+                        lx.bump();
+                    }
+                    (None, _) => break,
+                }
+            }
+            continue;
+        }
+        // strings (plain, byte, raw)
+        if c == '"' {
+            lx.bump();
+            lx.string_body();
+            toks.push(Tok { text: String::new(), kind: TokKind::Literal, line, col });
+            continue;
+        }
+        if c == 'r' && matches!(lx.peek(1), Some('"') | Some('#')) {
+            lx.bump();
+            lx.raw_string_body();
+            toks.push(Tok { text: String::new(), kind: TokKind::Literal, line, col });
+            continue;
+        }
+        if c == 'b' && lx.peek(1) == Some('"') {
+            lx.bump();
+            lx.bump();
+            lx.string_body();
+            toks.push(Tok { text: String::new(), kind: TokKind::Literal, line, col });
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let one = lx.peek(1);
+            let two = lx.peek(2);
+            let is_lifetime =
+                one.is_some_and(|c1| is_ident_start(c1)) && two != Some('\'');
+            lx.bump();
+            if is_lifetime {
+                let mut text = String::from("'");
+                while let Some(c1) = lx.peek(0) {
+                    if is_ident_continue(c1) {
+                        text.push(c1);
+                        lx.bump();
+                    } else {
+                        break;
+                    }
+                }
+                toks.push(Tok { text, kind: TokKind::Lifetime, line, col });
+            } else {
+                // char literal: consume through the closing quote
+                while let Some(c1) = lx.bump() {
+                    match c1 {
+                        '\\' => {
+                            lx.bump();
+                        }
+                        '\'' => break,
+                        _ => {}
+                    }
+                }
+                toks.push(Tok { text: String::new(), kind: TokKind::Literal, line, col });
+            }
+            continue;
+        }
+        // identifiers / keywords
+        if is_ident_start(c) {
+            let mut text = String::new();
+            while let Some(c1) = lx.peek(0) {
+                if is_ident_continue(c1) {
+                    text.push(c1);
+                    lx.bump();
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok { text, kind: TokKind::Ident, line, col });
+            continue;
+        }
+        // numbers (coarse: exponents lex as trailing tokens, which the
+        // lints never look at)
+        if c.is_ascii_digit() {
+            let mut text = String::new();
+            while let Some(c1) = lx.peek(0) {
+                if c1.is_alphanumeric() || c1 == '_' || c1 == '.' {
+                    // `0..n` range: don't swallow the second dot
+                    if c1 == '.' && lx.peek(1) == Some('.') {
+                        break;
+                    }
+                    text.push(c1);
+                    lx.bump();
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok { text, kind: TokKind::Literal, line, col });
+            continue;
+        }
+        // punctuation, joining the operators the lints match on
+        lx.bump();
+        let joined = match (c, lx.peek(0)) {
+            ('=', Some('>')) => Some("=>"),
+            ('+', Some('=')) => Some("+="),
+            (':', Some(':')) => Some("::"),
+            ('-', Some('>')) => Some("->"),
+            _ => None,
+        };
+        let text = if let Some(j) = joined {
+            lx.bump();
+            j.to_string()
+        } else {
+            c.to_string()
+        };
+        toks.push(Tok { text, kind: TokKind::Punct, line, col });
+    }
+    toks
+}
+
+/// True when `toks[i..]` starts the exact attribute `#[cfg(test)]`.
+/// Deliberately strict: `#[cfg(not(test))]`, `#[cfg(any(test, …))]` and
+/// `#[cfg_attr(test, …)]` are *not* test regions.
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    const PAT: [&str; 7] = ["#", "[", "cfg", "(", "test", ")", "]"];
+    toks.len() >= i + PAT.len() && PAT.iter().enumerate().all(|(k, p)| toks[i + k].text == *p)
+}
+
+/// Consume one item/variant/arm starting at `start`; returns the
+/// exclusive end index. An item ends at `;`/`,` at relative depth zero,
+/// or after a balanced `{…}` block — unless the block is a pattern
+/// fragment continued by `|` or `=>` (match arms), in which case the
+/// scan continues through the arm body.
+fn consume_item(toks: &[Tok], start: usize) -> usize {
+    let (mut dp, mut db, mut dk) = (0i32, 0i32, 0i32);
+    let mut k = start;
+    while k < toks.len() {
+        match toks[k].text.as_str() {
+            "(" => dp += 1,
+            ")" => dp -= 1,
+            "[" => dk += 1,
+            "]" => dk -= 1,
+            "{" => db += 1,
+            "}" => {
+                db -= 1;
+                if db < 0 {
+                    return k; // closing an enclosing scope: stop before it
+                }
+                if dp <= 0 && dk <= 0 && db == 0 {
+                    let continues = toks
+                        .get(k + 1)
+                        .is_some_and(|t| t.text == "|" || t.text == "=>");
+                    if !continues {
+                        return k + 1;
+                    }
+                }
+            }
+            ";" | "," if dp == 0 && db == 0 && dk == 0 => return k + 1,
+            _ => {}
+        }
+        k += 1;
+    }
+    toks.len()
+}
+
+/// Per-token `#[cfg(test)]` membership (see module docs for the region
+/// shapes understood).
+pub fn mark_cfg_test(toks: &[Tok]) -> Vec<bool> {
+    let mut test = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !is_cfg_test_attr(toks, i) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 7; // past `#[cfg(test)]`
+        // skip any further stacked attributes
+        while j < toks.len()
+            && toks[j].text == "#"
+            && toks.get(j + 1).is_some_and(|t| t.text == "[")
+        {
+            let mut d = 0i32;
+            let mut k = j + 1;
+            while k < toks.len() {
+                match toks[k].text.as_str() {
+                    "[" => d += 1,
+                    "]" => {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            j = k + 1;
+        }
+        let end = consume_item(toks, j);
+        for t in test.iter_mut().take(end.min(toks.len())).skip(i) {
+            *t = true;
+        }
+        i = end.max(i + 1);
+    }
+    test
+}
+
+/// Per-token enclosing named-`fn` name (closures attribute to the
+/// containing function).
+pub fn enclosing_fns(toks: &[Tok]) -> Vec<Option<String>> {
+    let mut out: Vec<Option<String>> = vec![None; toks.len()];
+    let mut stack: Vec<(String, i32)> = Vec::new();
+    let mut depth = 0i32;
+    let mut pending: Option<String> = None;
+    for (i, t) in toks.iter().enumerate() {
+        out[i] = stack.last().map(|(n, _)| n.clone());
+        match t.text.as_str() {
+            "fn" if t.kind == TokKind::Ident => {
+                if let Some(next) = toks.get(i + 1) {
+                    if next.kind == TokKind::Ident {
+                        pending = Some(next.text.clone());
+                    }
+                }
+            }
+            "{" => {
+                depth += 1;
+                if let Some(name) = pending.take() {
+                    stack.push((name, depth));
+                }
+            }
+            "}" => {
+                if stack.last().is_some_and(|&(_, d)| d == depth) {
+                    stack.pop();
+                }
+                depth -= 1;
+            }
+            ";" => pending = None, // trait method declarations without a body
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Everything the lint passes need about one source file.
+pub struct FileModel {
+    /// Normalized (forward-slash) path the file was checked under.
+    pub path: String,
+    /// Raw source lines, for snippets and comment-block scans.
+    pub lines: Vec<String>,
+    /// Code tokens (comments/whitespace stripped).
+    pub toks: Vec<Tok>,
+    /// Per-token: inside a `#[cfg(test)]` region.
+    pub in_test: Vec<bool>,
+    /// Per-token: nearest enclosing named `fn`.
+    pub enclosing_fn: Vec<Option<String>>,
+}
+
+impl FileModel {
+    pub fn build(path: &str, src: &str) -> FileModel {
+        let toks = lex(src);
+        let in_test = mark_cfg_test(&toks);
+        let enclosing_fn = enclosing_fns(&toks);
+        FileModel {
+            path: path.replace('\\', "/"),
+            lines: src.lines().map(str::to_string).collect(),
+            toks,
+            in_test,
+            enclosing_fn,
+        }
+    }
+
+    /// 1-based line text (empty for out-of-range).
+    pub fn line_text(&self, line: u32) -> &str {
+        self.lines
+            .get(line as usize - 1)
+            .map(String::as_str)
+            .unwrap_or("")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_scanner_strips_comments_and_strings() {
+        let src = r#"
+            // unwrap in a comment
+            /* panic! in /* a nested */ block */
+            let s = "unwrap() inside a string";
+            let c = '"';
+            let l: &'static str = s;
+            x.unwrap();
+        "#;
+        let toks = lex(src);
+        let unwraps: Vec<_> = toks.iter().filter(|t| t.text == "unwrap").collect();
+        assert_eq!(unwraps.len(), 1, "only the code token survives");
+        assert!(toks.iter().any(|t| t.text == "'static" && t.kind == TokKind::Lifetime));
+    }
+
+    #[test]
+    fn lint_scanner_joins_compound_operators() {
+        let toks = lex("a += 1; m::f(); p -> q; x => y");
+        let puncts: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(puncts.contains(&"+="));
+        assert!(puncts.contains(&"::"));
+        assert!(puncts.contains(&"->"));
+        assert!(puncts.contains(&"=>"));
+    }
+
+    #[test]
+    fn lint_cfg_test_marks_mod_variant_and_arm() {
+        let src = r#"
+            enum Backend {
+                Native,
+                #[cfg(test)]
+                PanicInject { threads: usize },
+            }
+            fn dispatch(b: &Backend) {
+                match b {
+                    Backend::Native => {}
+                    #[cfg(test)]
+                    Backend::PanicInject { .. } => panic!("injected"),
+                }
+            }
+            #[cfg(test)]
+            mod tests {
+                fn helper() { x.unwrap(); }
+            }
+        "#;
+        let toks = lex(src);
+        let test = mark_cfg_test(&toks);
+        let tok_test = |needle: &str| {
+            toks.iter()
+                .zip(&test)
+                .filter(|(t, _)| t.text == needle)
+                .map(|(_, &m)| m)
+                .collect::<Vec<bool>>()
+        };
+        // the arm body's panic! and the variant are test-marked
+        assert_eq!(tok_test("panic"), vec![true]);
+        assert_eq!(tok_test("unwrap"), vec![true]);
+        assert!(tok_test("PanicInject").iter().all(|&m| m));
+        // the non-test arm is not
+        assert_eq!(tok_test("dispatch"), vec![false]);
+        assert!(!tok_test("Native")[1], "match arm Native is not test code");
+    }
+
+    #[test]
+    fn lint_cfg_not_test_is_not_a_test_region() {
+        let toks = lex("#[cfg(not(test))] fn real() { x.unwrap(); }");
+        let test = mark_cfg_test(&toks);
+        assert!(test.iter().all(|&m| !m));
+    }
+
+    #[test]
+    fn lint_enclosing_fn_attributes_closures_to_the_named_fn() {
+        let src = r#"
+            fn outer(xs: &[f32]) {
+                let worker = move || {
+                    for x in xs { *acc += *x; }
+                };
+            }
+            fn other() {}
+        "#;
+        let toks = lex(src);
+        let fns = enclosing_fns(&toks);
+        let idx = toks.iter().position(|t| t.text == "+=").unwrap();
+        assert_eq!(fns[idx].as_deref(), Some("outer"));
+        let idx = toks.iter().position(|t| t.text == "other").unwrap();
+        assert_eq!(fns[idx], None, "the fn name itself belongs to the outer scope");
+    }
+}

@@ -1,0 +1,103 @@
+//! `tigre-lint` — walk `rust/src/**` and enforce the repo's own
+//! determinism/safety/error-taxonomy invariants without compiling
+//! anything. See DESIGN.md §Static-analysis for the lint catalog and the
+//! waiver policy.
+//!
+//! ```text
+//! tigre-lint [--deny-all] [--json] [--allowlist FILE] [ROOT]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 fatal diagnostics, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use tigre::analysis::{self, Allowlist};
+
+struct Args {
+    deny_all: bool,
+    json: bool,
+    allowlist: Option<PathBuf>,
+    root: Option<PathBuf>,
+}
+
+const USAGE: &str = "usage: tigre-lint [--deny-all] [--json] [--allowlist FILE] [ROOT]";
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args { deny_all: false, json: false, allowlist: None, root: None };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--deny-all" => args.deny_all = true,
+            "--json" => args.json = true,
+            "--allowlist" => {
+                let p = it.next().ok_or("--allowlist needs a file argument")?;
+                args.allowlist = Some(PathBuf::from(p));
+            }
+            "--help" | "-h" => return Err(USAGE.to_string()),
+            _ if a.starts_with('-') => return Err(format!("unknown flag '{a}'\n{USAGE}")),
+            _ => {
+                if args.root.is_some() {
+                    return Err(format!("more than one ROOT argument\n{USAGE}"));
+                }
+                args.root = Some(PathBuf::from(a));
+            }
+        }
+    }
+    Ok(args)
+}
+
+/// First existing default: the crate source tree, from either the repo
+/// root or `rust/` as the working directory.
+fn default_root() -> Result<PathBuf, String> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    Err("no ROOT given and neither rust/src nor src exists here".to_string())
+}
+
+/// The checked-in waiver file, from either working directory.
+fn default_allowlist() -> PathBuf {
+    for cand in ["lint-allow.toml", "../lint-allow.toml"] {
+        let p = PathBuf::from(cand);
+        if p.is_file() {
+            return p;
+        }
+    }
+    PathBuf::from("lint-allow.toml")
+}
+
+fn run() -> Result<ExitCode, String> {
+    let args = parse_args()?;
+    let root = match args.root {
+        Some(r) => r,
+        None => default_root()?,
+    };
+    let allow_path = args.allowlist.unwrap_or_else(default_allowlist);
+    let allow = Allowlist::load(&allow_path)?;
+
+    let diags = analysis::check_tree(&root, &allow)
+        .map_err(|e| format!("walking {}: {e}", root.display()))?;
+
+    if args.json {
+        println!("{}", analysis::render_json(&diags, args.deny_all));
+    } else {
+        print!("{}", analysis::render_text(&diags, args.deny_all));
+    }
+
+    let fatal = diags.iter().any(|d| d.deny || args.deny_all);
+    Ok(if fatal { ExitCode::from(1) } else { ExitCode::SUCCESS })
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("tigre-lint: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -7,8 +7,6 @@
 //! update kernels run (paper Fig. 5): the chunk copy for launch `k+1`
 //! overlaps the kernel for launch `k` because the kernel is queued first.
 
-use anyhow::Context;
-
 use crate::geometry::Geometry;
 use crate::simgpu::{Category, Ev, SimNode, SimOom};
 use crate::volume::{ProjInput, ProjectionSet, Volume};
@@ -29,7 +27,7 @@ pub fn run(
     mode: ExecMode,
 ) -> anyhow::Result<(Option<Volume>, OpStats)> {
     let plan = plan_backward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
-        .map_err(|e| anyhow::anyhow!("backward plan: {e}"))?;
+        .map_err(|e| ReconError::Plan(format!("backward plan: {e}")))?;
     run_with(ctx, g, proj.map(ProjInput::Ram), mode, &plan, None)
 }
 
@@ -110,7 +108,8 @@ pub(crate) fn run_with(
     let vol = match mode {
         ExecMode::SimOnly => None,
         ExecMode::Full => {
-            let proj = proj.context("Full mode requires projection data")?;
+            let proj = proj
+                .ok_or_else(|| ReconError::Input("Full mode requires projection data".into()))?;
             Some(execute_real(ctx, g, proj, plan)?)
         }
     };

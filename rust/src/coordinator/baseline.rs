@@ -11,6 +11,7 @@
 use crate::geometry::Geometry;
 use crate::simgpu::{Ev, SimNode};
 
+use super::error::ReconError;
 use super::executor::{MultiGpu, OpStats};
 use super::splitter::{plan_backward, plan_forward, Plan};
 
@@ -19,7 +20,7 @@ use super::splitter::{plan_backward, plan_forward, Plan};
 /// copy-out, then host-side accumulation, each step waiting for the last.
 pub fn naive_forward(ctx: &MultiGpu, g: &Geometry) -> anyhow::Result<OpStats> {
     let mut plan = plan_forward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
-        .map_err(|e| anyhow::anyhow!("naive forward plan: {e}"))?;
+        .map_err(|e| ReconError::Plan(format!("naive forward plan: {e}")))?;
     plan.pin_image = false; // the naive strategy never pins
     let mut sim = ctx.fresh_sim();
     simulate_forward(g, &plan, &mut sim, &ctx.cost)?;
@@ -29,7 +30,7 @@ pub fn naive_forward(ctx: &MultiGpu, g: &Geometry) -> anyhow::Result<OpStats> {
 /// Naive backprojection: serialized chunk copies and kernels, no overlap.
 pub fn naive_backward(ctx: &MultiGpu, g: &Geometry) -> anyhow::Result<OpStats> {
     let mut plan = plan_backward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
-        .map_err(|e| anyhow::anyhow!("naive backward plan: {e}"))?;
+        .map_err(|e| ReconError::Plan(format!("naive backward plan: {e}")))?;
     plan.pin_image = false;
     let mut sim = ctx.fresh_sim();
     simulate_backward(g, &plan, &mut sim, &ctx.cost)?;

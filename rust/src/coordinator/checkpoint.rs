@@ -40,6 +40,7 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
+use super::error::ReconError;
 use crate::util::json::Json;
 use crate::volume::outofcore::write_json_atomic;
 use crate::volume::{ProjectionSet, Volume};
@@ -84,7 +85,7 @@ impl CheckpointState {
             .volumes
             .iter()
             .position(|(n, _)| n == name)
-            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing volume '{name}'"))?;
+            .ok_or_else(|| ReconError::Checkpoint(format!("missing volume '{name}'")))?;
         Ok(self.volumes.swap_remove(i).1)
     }
 
@@ -94,7 +95,7 @@ impl CheckpointState {
             .projections
             .iter()
             .position(|(n, _)| n == name)
-            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing projections '{name}'"))?;
+            .ok_or_else(|| ReconError::Checkpoint(format!("missing projections '{name}'")))?;
         Ok(self.projections.swap_remove(i).1)
     }
 
@@ -104,7 +105,7 @@ impl CheckpointState {
             .iter()
             .find(|(n, _)| n == name)
             .map(|&(_, v)| v)
-            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing scalar '{name}'"))
+            .ok_or_else(|| ReconError::Checkpoint(format!("missing scalar '{name}'")).into())
     }
 }
 
@@ -233,19 +234,21 @@ fn read_manifest(dir: &Path) -> anyhow::Result<Option<Json>> {
 pub fn resume(cfg: &CheckpointConfig, algorithm: &str) -> anyhow::Result<Option<CheckpointState>> {
     let Some(m) = read_manifest(&cfg.dir)? else { return Ok(None) };
     let found = m.get("algorithm").and_then(Json::as_str).unwrap_or("");
-    anyhow::ensure!(
-        found == algorithm,
-        "{}: checkpoint belongs to '{found}', not '{algorithm}'",
-        cfg.dir.display()
-    );
+    if found != algorithm {
+        return Err(ReconError::Checkpoint(format!(
+            "{}: checkpoint belongs to '{found}', not '{algorithm}'",
+            cfg.dir.display()
+        ))
+        .into());
+    }
     let epoch = m
         .get("epoch")
         .and_then(Json::as_u64)
-        .ok_or_else(|| anyhow::anyhow!("checkpoint manifest missing 'epoch'"))?;
+        .ok_or_else(|| ReconError::Checkpoint("manifest missing 'epoch'".into()))?;
     let iteration = m
         .get("iteration")
         .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow::anyhow!("checkpoint manifest missing 'iteration'"))?;
+        .ok_or_else(|| ReconError::Checkpoint("manifest missing 'iteration'".into()))?;
     let residuals = m
         .get("residuals")
         .and_then(Json::as_arr)

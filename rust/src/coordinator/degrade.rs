@@ -149,17 +149,20 @@ impl DegradeLog {
             DegradeEvent::WatchdogEscalated { .. } => &self.watchdog_escalations,
             DegradeEvent::SlowUnit { .. } => &self.slow_units,
             DegradeEvent::StepBackoff { .. } => {
-                self.events.lock().unwrap().push(ev);
+                // a poisoned lock only means another worker panicked while
+                // logging; the event list itself is always consistent
+                self.events.lock().unwrap_or_else(|e| e.into_inner()).push(ev);
                 return;
             }
         };
         ctr.fetch_add(1, Ordering::Relaxed);
-        self.events.lock().unwrap().push(ev);
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).push(ev);
     }
 
     /// Move everything recorded since the last drain into a summary.
     pub fn drain(&self) -> DegradeStats {
-        let events: Vec<DegradeEvent> = std::mem::take(&mut *self.events.lock().unwrap());
+        let events: Vec<DegradeEvent> =
+            std::mem::take(&mut *self.events.lock().unwrap_or_else(|e| e.into_inner()));
         DegradeStats {
             evictions: self.evictions.swap(0, Ordering::Relaxed),
             refinements: self.refinements.swap(0, Ordering::Relaxed),

@@ -63,6 +63,12 @@ pub enum ReconError {
         /// Context label (unit/device/iteration description).
         detail: String,
     },
+    /// A checkpoint on disk is unusable: missing manifest fields, a
+    /// truncated buffer, or a manifest written by a different algorithm.
+    Checkpoint(String),
+    /// A caller handed the coordinator unusable input (e.g. a plan mode
+    /// that requires resident data received a streamed store).
+    Input(String),
     /// An iterative algorithm kept diverging after exhausting its
     /// step-size backoff budget.
     Diverged {
@@ -93,6 +99,8 @@ impl fmt::Display for ReconError {
                 f,
                 "non-finite value in {stage} at element {index} ({detail})"
             ),
+            ReconError::Checkpoint(d) => write!(f, "checkpoint invalid: {d}"),
+            ReconError::Input(d) => write!(f, "invalid input: {d}"),
             ReconError::Diverged { algorithm, iteration, residual, backoffs } => write!(
                 f,
                 "{algorithm} diverged at iteration {iteration} (residual {residual:.3e}) \
@@ -135,6 +143,13 @@ mod tests {
             backoffs: 4,
         };
         assert!(e.to_string().contains("cgls diverged at iteration 5"), "{e}");
+
+        let e = ReconError::Checkpoint("manifest missing 'epoch'".into());
+        assert!(e.to_string().contains("checkpoint invalid"), "{e}");
+        assert!(e.to_string().contains("missing 'epoch'"), "{e}");
+
+        let e = ReconError::Input("Full mode requires the volume data".into());
+        assert!(e.to_string().contains("invalid input"), "{e}");
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::volume::{
 };
 
 use super::degrade::{DegradeLog, DegradeStats};
+use super::error::ReconError;
 use super::residency::ResidencyStats;
 use super::splitter::MergeStrategy;
 
@@ -308,7 +309,7 @@ impl MultiGpu {
             &self.split,
             vol.budget_bytes(),
         )
-        .map_err(|e| anyhow::anyhow!("forward ooc plan: {e}"))?;
+        .map_err(|e| ReconError::Plan(format!("forward ooc plan: {e}")))?;
         super::forward::run_with(self, g, Some(VolumeInput::Ooc(vol)), mode, &plan, None)
     }
 
@@ -327,7 +328,7 @@ impl MultiGpu {
             &self.split,
             proj.budget_bytes(),
         )
-        .map_err(|e| anyhow::anyhow!("backward ooc plan: {e}"))?;
+        .map_err(|e| ReconError::Plan(format!("backward ooc plan: {e}")))?;
         super::backward::run_with(self, g, Some(ProjInput::Ooc(proj)), mode, &plan, None)
     }
 

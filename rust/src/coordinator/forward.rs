@@ -7,8 +7,6 @@
 //! ordering — kernel before copies — is the paper's core trick for hiding
 //! transfer time without pinned output buffers.
 
-use anyhow::Context;
-
 use crate::geometry::Geometry;
 use crate::simgpu::{Category, Ev, SimNode, SimOom};
 use crate::volume::{ProjectionSet, Volume, VolumeInput};
@@ -32,7 +30,7 @@ pub fn run(
     mode: ExecMode,
 ) -> anyhow::Result<(Option<ProjectionSet>, OpStats)> {
     let plan = plan_forward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
-        .map_err(|e| anyhow::anyhow!("forward plan: {e}"))?;
+        .map_err(|e| ReconError::Plan(format!("forward plan: {e}")))?;
     run_with(ctx, g, vol.map(VolumeInput::Ram), mode, &plan, None)
 }
 
@@ -133,7 +131,8 @@ pub(crate) fn run_with(
     let proj = match mode {
         ExecMode::SimOnly => None,
         ExecMode::Full => {
-            let vol = vol.context("Full mode requires the volume data")?;
+            let vol = vol
+                .ok_or_else(|| ReconError::Input("Full mode requires the volume data".into()))?;
             Some(execute_real(ctx, g, vol, plan)?)
         }
     };

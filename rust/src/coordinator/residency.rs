@@ -56,12 +56,18 @@
 //!   compete for device RAM, which the per-session budget approximates
 //!   only if the caller sizes budgets accordingly.
 
+// The residency cache is keyed for O(1) hit checks; the one iteration
+// (LRU min_by_key) breaks ties by a unique monotone clock, so map order
+// never reaches a schedule (see rust/clippy.toml).
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 
 use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::volume::{ProjInput, TrackedProjections, TrackedVolume, Volume};
 
+use super::error::ReconError;
 use super::executor::{ExecMode, MultiGpu, OpStats};
 use super::splitter::{plan_backward, plan_forward, plan_ooc_pair, Plan};
 
@@ -229,8 +235,9 @@ impl ResidencyCache {
                 return true;
             }
             // stale epoch: the device copy is outdated — drop it
-            let stale = dc.entries.remove(&key).expect("entry just found");
-            dc.used -= stale.bytes;
+            let stale_bytes = e.bytes;
+            dc.entries.remove(&key);
+            dc.used -= stale_bytes;
         }
         self.stats.misses += 1;
         self.insert(dev, key, src, bytes);
@@ -281,8 +288,9 @@ impl ResidencyCache {
             let dead: Vec<EntryKey> =
                 dc.entries.keys().filter(|k| k.2 == id).copied().collect();
             for k in dead {
-                let e = dc.entries.remove(&k).expect("key just listed");
-                dc.used -= e.bytes;
+                if let Some(e) = dc.entries.remove(&k) {
+                    dc.used -= e.bytes;
+                }
             }
         }
     }
@@ -313,7 +321,7 @@ impl ResidencyCache {
             let Some((&lru, _)) = dc.entries.iter().min_by_key(|(_, e)| e.last_use) else {
                 break;
             };
-            let e = dc.entries.remove(&lru).expect("LRU key just found");
+            let Some(e) = dc.entries.remove(&lru) else { break };
             dc.used -= e.bytes;
             self.stats.evictions += 1;
         }
@@ -539,9 +547,9 @@ impl ReconSession {
     /// operators' transient working sets.
     pub fn new(ctx: &MultiGpu, g: &Geometry) -> anyhow::Result<Self> {
         let fp_plan = plan_forward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
-            .map_err(|e| anyhow::anyhow!("session forward plan: {e}"))?;
+            .map_err(|e| ReconError::Plan(format!("session forward plan: {e}")))?;
         let bp_plan = plan_backward(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split)
-            .map_err(|e| anyhow::anyhow!("session backward plan: {e}"))?;
+            .map_err(|e| ReconError::Plan(format!("session backward plan: {e}")))?;
         Ok(Self::with_plans(ctx, g, fp_plan, bp_plan))
     }
 
@@ -560,7 +568,7 @@ impl ReconSession {
     pub fn new_ooc(ctx: &MultiGpu, g: &Geometry, host_budget: u64) -> anyhow::Result<Self> {
         let (fp_plan, bp_plan) =
             plan_ooc_pair(g, ctx.n_gpus, ctx.spec.mem_bytes, &ctx.split, host_budget)
-                .map_err(|e| anyhow::anyhow!("session ooc plans: {e}"))?;
+                .map_err(|e| ReconError::Plan(format!("session ooc plans: {e}")))?;
         Ok(Self::with_plans(ctx, g, fp_plan, bp_plan))
     }
 
@@ -620,7 +628,10 @@ impl ReconSession {
             &self.fp_plan,
             res.as_ref(),
         )?;
-        let out = TrackedProjections::new(p.expect("Full mode returns projections"));
+        let p = p.ok_or_else(|| {
+            ReconError::Input("Full mode did not return projections".into())
+        })?;
+        let out = TrackedProjections::new(p);
         if self.enabled && self.fp_plan.full_image_per_device {
             let src = SourceTag { id: out.id(), epoch: out.epoch() };
             publish_fp_outputs(
@@ -672,19 +683,24 @@ impl ReconSession {
         b: &TrackedProjections,
         ax: &TrackedProjections,
     ) -> anyhow::Result<(Volume, f64)> {
-        anyhow::ensure!(
-            !b.is_ooc() && !ax.is_ooc(),
-            "backward_residual requires RAM-backed projections (the residual is formed \
-             host-side); stream OOC inputs through backward() instead"
-        );
+        if b.is_ooc() || ax.is_ooc() {
+            return Err(ReconError::Input(
+                "backward_residual requires RAM-backed projections (the residual is formed \
+                 host-side); stream OOC inputs through backward() instead"
+                    .into(),
+            )
+            .into());
+        }
         let bp = b.get();
         let ap = ax.get();
-        anyhow::ensure!(
-            bp.data.len() == ap.data.len(),
-            "backward_residual: b has {} samples but ax has {}",
-            bp.data.len(),
-            ap.data.len()
-        );
+        if bp.data.len() != ap.data.len() {
+            return Err(ReconError::Input(format!(
+                "backward_residual: b has {} samples but ax has {}",
+                bp.data.len(),
+                ap.data.len()
+            ))
+            .into());
+        }
         let mut r = scratch::take_projections(bp.nu, bp.nv, bp.n_angles);
         for ((rv, bv), av) in r.data.iter_mut().zip(&bp.data).zip(&ap.data) {
             *rv = bv - av;
@@ -725,7 +741,7 @@ impl ReconSession {
         }
         stats.residency = self.cache.stats().delta_since(&before);
         self.account(stats);
-        Ok(v.expect("Full mode returns the volume"))
+        v.ok_or_else(|| ReconError::Input("Full mode did not return the volume".into()).into())
     }
 
     /// Recycle a tracked projection buffer through the `kernels::scratch`

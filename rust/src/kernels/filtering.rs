@@ -124,6 +124,10 @@ pub fn fdk_filter(g: &Geometry, proj: &mut ProjectionSet, window: Window, thread
             for v in line.iter_mut() {
                 *v = (0.0, 0.0);
             }
+            // SAFETY: parallel_for hands each task a disjoint range of
+            // detector rows; base = (a*nv+iv)*nu stays inside
+            // proj.data.len() = n_angles*nv*nu, and this task is the only
+            // reader/writer of its rows.
             unsafe {
                 for iu in 0..nu {
                     let x = *ptr.0.add(base + iu) * cosw[iv * nu + iu];
@@ -136,6 +140,8 @@ pub fn fdk_filter(g: &Geometry, proj: &mut ProjectionSet, window: Window, thread
                 v.1 *= spec[k];
             }
             ifft(&mut line);
+            // SAFETY: same disjoint-row bounds as the read above — this
+            // write-back touches only this task's rows.
             unsafe {
                 for iu in 0..nu {
                     *ptr.0.add(base + iu) = line[iu].0 as f32 * scale;

@@ -67,6 +67,10 @@ pub fn project_into(g: &Geometry, vol: &VolumeSlabView<'_>, out: &mut [f32], thr
                     row0[2] + fu * us[2],
                 ];
                 let val = sample_ray(&frame.src, &pix, &lo, &hi, g, &sampler, step);
+                // SAFETY: parallel_for hands each task a disjoint range of
+                // detector rows, so index (a*nv+iv)*nu+iu is written by
+                // exactly one task; out.len() == n_angles*nv*nu (asserted
+                // above) bounds it.
                 unsafe {
                     *ptr.0.add((a * nv + iv) * nu + iu) = val;
                 }

@@ -131,6 +131,8 @@ pub fn thread_stats() -> (u64, u64) {
 }
 
 #[cfg(test)]
+// test-only HashSet tracking live buffer pointers; never shipped
+#[allow(clippy::disallowed_types)]
 mod tests {
     use super::*;
 

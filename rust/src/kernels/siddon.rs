@@ -75,7 +75,9 @@ pub fn project_into(g: &Geometry, vol: &VolumeSlabView<'_>, out: &mut [f32], thr
                     row0[2] + fu * us[2],
                 ];
                 let val = raytrace(&frame.src, &pix, &lo, &hi, &dv, &n, data);
-                // rows are disjoint per task: no data race
+                // SAFETY: parallel_for hands each task a disjoint range of
+                // detector rows, so index (a*nv+iv)*nu+iu is written by
+                // exactly one task; out.len() == n_angles*nv*nu bounds it.
                 unsafe {
                     *ptr.0.add((a * nv + iv) * nu + iu) = val;
                 }

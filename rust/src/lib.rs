@@ -21,7 +21,11 @@
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+#![warn(unreachable_pub, unused_qualifications)]
+
 pub mod util;
+
+pub mod analysis;
 
 pub mod geometry;
 pub mod volume;

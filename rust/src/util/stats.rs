@@ -4,6 +4,10 @@
 //! statistics; [`bench`] runs a closure with warmup and a time budget and
 //! returns the samples. All benches under `rust/benches/` use this.
 
+// The whole point of this module is measuring wall-clock time; nothing
+// here feeds the DES or the planner (see rust/clippy.toml).
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 /// A set of numeric observations (seconds, bytes, ratios, ...).

@@ -57,7 +57,13 @@ where
 /// the safety contract lives in one place.
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr(pub *mut f32);
+// SAFETY: the pointee is a caller-owned buffer that outlives the scoped
+// tasks the pointer is handed to, and every dereference site writes a
+// region disjoint from all concurrently running tasks (asserted by the
+// SAFETY comment at each `unsafe` dereference).
 unsafe impl Send for SendPtr {}
+// SAFETY: shared references to the wrapper only copy the raw pointer;
+// all writes through it go through the disjoint-region contract above.
 unsafe impl Sync for SendPtr {}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;

@@ -30,6 +30,11 @@
 //! store or borrowing host-resident arrays; `coordinator::pipeline`'s
 //! parity tests pin that.
 
+// The slab cache is keyed for O(1) lookups; every iteration that could
+// leak map order (flush writeback, LRU scan) sorts or tie-breaks on a
+// unique clock first (see rust/clippy.toml).
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 use std::fmt;
 use std::fs;
@@ -329,7 +334,9 @@ impl SlabStore {
             path: self.path.clone(),
             op: "read",
             attempts: MAX_DISK_ATTEMPTS,
-            source: last_err.expect("at least one attempt ran"),
+            source: last_err.unwrap_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::Other, "no attempt recorded")
+            }),
         }
         .into())
     }
@@ -388,7 +395,9 @@ impl SlabStore {
             path: self.path.clone(),
             op: "write",
             attempts: MAX_DISK_ATTEMPTS,
-            source: last_err.expect("at least one attempt ran"),
+            source: last_err.unwrap_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::Other, "no attempt recorded")
+            }),
         }
         .into())
     }
@@ -402,7 +411,7 @@ impl SlabStore {
             let Some((&lru, _)) = inner.cache.iter().min_by_key(|(_, s)| s.last_use) else {
                 break;
             };
-            let slab = inner.cache.remove(&lru).expect("LRU key just found");
+            let Some(slab) = inner.cache.remove(&lru) else { break };
             inner.used_bytes -= (slab.data.len() * 4) as u64;
             if slab.dirty {
                 let (p0, _) = self.slab_range(lru);
@@ -535,7 +544,18 @@ impl SlabStore {
                     inner.used_bytes += bytes;
                 } else {
                     self.ensure_cached(inner, idx)?;
-                    let slab = inner.cache.get_mut(&idx).expect("slab just ensured");
+                    let Some(slab) = inner.cache.get_mut(&idx) else {
+                        return Err(OocIoError {
+                            path: self.path.clone(),
+                            op: "write",
+                            attempts: 0,
+                            source: std::io::Error::new(
+                                std::io::ErrorKind::Other,
+                                "slab vanished from the cache after ensure_cached",
+                            ),
+                        }
+                        .into());
+                    };
                     let off = (lo - s0) * self.plane_elems;
                     slab.data[off..off + len].copy_from_slice(&src[src_off..src_off + len]);
                     slab.dirty = true;
@@ -551,25 +571,30 @@ impl SlabStore {
     pub fn flush(&self) -> anyhow::Result<()> {
         let mut guard = self.lock();
         let inner = &mut *guard;
-        let dirty: Vec<usize> = inner
+        let mut dirty: Vec<usize> = inner
             .cache
             .iter()
             .filter(|(_, s)| s.dirty)
             .map(|(&i, _)| i)
             .collect();
+        // ascending slab order: writeback sequence (and therefore the
+        // fault-injection schedule) must not depend on HashMap iteration
+        dirty.sort_unstable();
         let wrote = !dirty.is_empty();
         for idx in dirty {
             let (p0, _) = self.slab_range(idx);
-            let data = std::mem::take(
-                &mut inner.cache.get_mut(&idx).expect("dirty key just listed").data,
-            );
+            let Some(slab) = inner.cache.get_mut(&idx) else { continue };
+            let data = std::mem::take(&mut slab.data);
             let res = self.write_file(inner, p0, &data);
             // restore the slab's bytes before surfacing any error, so a
             // failed writeback never leaves an empty-but-dirty slab
-            let slab = inner.cache.get_mut(&idx).expect("dirty key just listed");
-            slab.data = data;
-            res?;
-            slab.dirty = false;
+            if let Some(slab) = inner.cache.get_mut(&idx) {
+                slab.data = data;
+                res?;
+                slab.dirty = false;
+            } else {
+                res?;
+            }
         }
         if wrote {
             // flush() is the durability point checkpoints and hand-offs

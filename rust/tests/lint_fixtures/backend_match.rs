@@ -1,0 +1,30 @@
+// Seeded violation for the `backend-match` lint: checked under the
+// pretend path rust/src/algorithms/fixture.rs. Never compiled.
+
+pub enum Backend {
+    Native,
+    Pjrt,
+}
+
+pub fn wildcard_arm(backend: &Backend) -> u32 {
+    match backend {
+        Backend::Native => 1,
+        _ => 0,
+    }
+}
+
+pub fn missing_injection_arms(backend: &Backend) -> u32 {
+    match backend {
+        Backend::Native => 1,
+        Backend::Pjrt => 2,
+    }
+}
+
+pub fn tuple_scrutinee_is_exempt(backend: &Backend, flag: bool) -> u32 {
+    // dispatches through the executor's own Backend match downstream:
+    // must NOT be reported
+    match (backend, flag) {
+        (Backend::Native, true) => 1,
+        _ => 0,
+    }
+}

@@ -1,0 +1,26 @@
+// Seeded violation for the `blessed-accumulation` lint: checked under
+// the pretend path rust/src/coordinator/fixture.rs (and NOT allowlisted
+// as a merge site). Never compiled.
+
+pub fn rogue_fold(dst: &mut [f32], src: &[f32]) {
+    for (o, s) in dst.iter_mut().zip(src) {
+        *o += *s;
+    }
+}
+
+pub fn rogue_indexed(dst: &mut [f32], src: &[f32]) {
+    for i in 0..dst.len() {
+        dst[i] += src[i];
+    }
+}
+
+pub fn scalar_counters_are_fine(events: &[u32]) -> (u64, u64) {
+    let mut total = 0u64;
+    let mut weighted = 0u64;
+    for &e in events {
+        // scalar accumulation: must NOT be reported
+        total += 1;
+        weighted += e as u64;
+    }
+    (total, weighted)
+}

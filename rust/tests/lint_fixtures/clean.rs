@@ -1,0 +1,20 @@
+// Control fixture: trips NOTHING even under the strictest pretend path
+// (rust/src/coordinator/fixture.rs). Never compiled.
+
+pub fn typed(v: Option<u32>) -> Result<u32, String> {
+    v.ok_or_else(|| "missing value".to_string())
+}
+
+pub fn safe_view(p: *mut f32, n: usize) -> &'static mut [f32] {
+    // SAFETY: fixture-only illustration of a justified block; the caller
+    // guarantees the pointer is valid for n elements and exclusively owned.
+    unsafe { std::slice::from_raw_parts_mut(p, n) }
+}
+
+pub fn count(events: &[u32]) -> u64 {
+    let mut n = 0u64;
+    for _ in events {
+        n += 1;
+    }
+    n
+}

@@ -1,0 +1,16 @@
+// Seeded violation for the `deterministic-maps` lint: checked under the
+// pretend path rust/src/geometry/split.rs. Never compiled.
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+pub fn plan(units: &[usize]) -> HashMap<usize, usize> {
+    let mut seen = HashSet::new();
+    let mut out = HashMap::new();
+    for (i, &u) in units.iter().enumerate() {
+        if seen.insert(u) {
+            out.insert(u, i);
+        }
+    }
+    out
+}

@@ -1,0 +1,7 @@
+// Seeded violation for the `no-bare-print` lint: checked under the
+// pretend path rust/src/metrics/fixture.rs. Never compiled.
+
+pub fn chatty(x: f32) {
+    println!("progress: {x}");
+    eprintln!("warning: {x}");
+}

@@ -1,0 +1,26 @@
+// Seeded violation for the `no-panic-paths` lint: checked under the
+// pretend path rust/src/coordinator/fixture.rs. Never compiled.
+
+pub fn grab(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn tagged(v: Option<u32>) -> u32 {
+    v.expect("fixture message")
+}
+
+pub fn boom() {
+    panic!("fixture panic");
+}
+
+pub fn later() {
+    todo!()
+}
+
+#[cfg(test)]
+mod tests {
+    // test code is exempt: this unwrap must NOT be reported
+    pub fn fine(v: Option<u32>) -> u32 {
+        v.unwrap()
+    }
+}

@@ -1,0 +1,14 @@
+// Seeded violation for the `no-wallclock` lint: checked under the
+// pretend path rust/src/simgpu/fixture.rs. Never compiled.
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn epoch_secs() -> u64 {
+    use std::time::SystemTime;
+    match SystemTime::now().duration_since(SystemTime::UNIX_EPOCH) {
+        Ok(d) => d.as_secs(),
+        Err(_) => 0,
+    }
+}

@@ -1,0 +1,24 @@
+// Seeded violation for the `safety-comment` lint: checked under the
+// pretend path rust/src/kernels/fixture.rs. Never compiled.
+
+pub fn write_raw(p: *mut f32) {
+    unsafe {
+        *p = 1.0;
+    }
+}
+
+pub fn justified(p: *mut f32) {
+    // SAFETY: the caller hands a valid, exclusively owned pointer —
+    // this block must NOT be reported.
+    unsafe {
+        *p = 2.0;
+    }
+}
+
+pub fn justified_split_statement(p: *mut f32, n: usize) -> &'static mut [f32] {
+    // SAFETY: comment separated from the unsafe token by a statement
+    // continuation line — also must NOT be reported.
+    let view =
+        unsafe { std::slice::from_raw_parts_mut(p, n) };
+    view
+}

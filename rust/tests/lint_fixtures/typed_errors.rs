@@ -1,0 +1,19 @@
+// Seeded violation for the `typed-errors` lint: checked under the
+// pretend path rust/src/coordinator/fixture.rs. Never compiled.
+
+pub fn stringly() -> anyhow::Result<()> {
+    Err(anyhow::anyhow!("fixture stringly error"))
+}
+
+pub fn bailing(x: u32) -> anyhow::Result<u32> {
+    anyhow::ensure!(x > 0, "fixture ensure");
+    if x > 10 {
+        anyhow::bail!("fixture bail");
+    }
+    Ok(x)
+}
+
+pub fn wrapped(v: Option<u32>) -> anyhow::Result<u32> {
+    use anyhow::Context;
+    v.context("fixture context")
+}

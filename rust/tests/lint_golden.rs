@@ -1,0 +1,168 @@
+//! Golden-fixture tests for `tigre-lint` (ISSUE 9).
+//!
+//! Each fixture under `tests/lint_fixtures/` seeds violations of exactly
+//! one lint; the test asserts every diagnostic the checker emits for it
+//! carries that lint id (cross-firing into another lint is a bug in the
+//! fixture or the pass). The fixtures are never compiled — they are
+//! checked as text under a *pretend* path, because paths select lint
+//! scopes. `lint_repo_tree_is_clean` is the acceptance criterion the CI
+//! lane enforces: the real tree, under the checked-in allowlist, has
+//! zero diagnostics.
+
+use std::path::Path;
+
+use tigre::analysis::{self, Allowlist, Diagnostic};
+
+fn check(pretend_path: &str, src: &str) -> Vec<Diagnostic> {
+    analysis::check_source(pretend_path, src, &Allowlist::empty())
+}
+
+/// The fixture must trip at least once, and ONLY its intended lint.
+fn assert_only(lint: &str, pretend_path: &str, src: &str) {
+    let diags = check(pretend_path, src);
+    assert!(!diags.is_empty(), "{lint}: fixture tripped nothing");
+    for d in &diags {
+        assert_eq!(
+            d.lint, lint,
+            "fixture for {lint} also tripped {} at {}:{} ({})",
+            d.lint, d.path, d.line, d.snippet
+        );
+    }
+}
+
+#[test]
+fn lint_fixture_no_panic_paths() {
+    let src = include_str!("lint_fixtures/no_panic_paths.rs");
+    let diags = check("rust/src/coordinator/fixture.rs", src);
+    assert_only("no-panic-paths", "rust/src/coordinator/fixture.rs", src);
+    // one each for unwrap / expect / panic! / todo!; the cfg(test) unwrap
+    // is exempt
+    assert_eq!(diags.len(), 4, "{}", analysis::render_text(&diags, false));
+}
+
+#[test]
+fn lint_fixture_no_panic_paths_is_scoped_to_coordinator_and_ooc() {
+    let src = include_str!("lint_fixtures/no_panic_paths.rs");
+    assert!(
+        check("rust/src/metrics/fixture.rs", src).is_empty(),
+        "unwraps outside coordinator/outofcore scope must not be reported"
+    );
+    assert!(!check("rust/src/volume/outofcore.rs", src).is_empty());
+}
+
+#[test]
+fn lint_fixture_safety_comment() {
+    let src = include_str!("lint_fixtures/safety_comment.rs");
+    let diags = check("rust/src/kernels/fixture.rs", src);
+    assert_only("safety-comment", "rust/src/kernels/fixture.rs", src);
+    // only the uncommented block: the justified and split-statement
+    // blocks pass
+    assert_eq!(diags.len(), 1, "{}", analysis::render_text(&diags, false));
+    assert!(diags[0].snippet.contains("unsafe"));
+}
+
+#[test]
+fn lint_fixture_typed_errors() {
+    let src = include_str!("lint_fixtures/typed_errors.rs");
+    assert_only("typed-errors", "rust/src/coordinator/fixture.rs", src);
+    // anyhow! + ensure! + bail! + .context()
+    assert_eq!(check("rust/src/coordinator/fixture.rs", src).len(), 4);
+    assert!(
+        check("rust/src/algorithms/fixture.rs", src).is_empty(),
+        "typed-errors is scoped to coordinator/"
+    );
+}
+
+#[test]
+fn lint_fixture_no_wallclock() {
+    let src = include_str!("lint_fixtures/no_wallclock.rs");
+    assert_only("no-wallclock", "rust/src/simgpu/fixture.rs", src);
+    assert_only("no-wallclock", "rust/src/coordinator/splitter.rs", src);
+    assert!(
+        check("rust/src/bench/fixture.rs", src).is_empty(),
+        "wall-clock reads outside the DES/planner are fine"
+    );
+}
+
+#[test]
+fn lint_fixture_deterministic_maps() {
+    let src = include_str!("lint_fixtures/deterministic_maps.rs");
+    assert_only("deterministic-maps", "rust/src/geometry/split.rs", src);
+    assert!(
+        check("rust/src/volume/mod.rs", src).is_empty(),
+        "hash maps outside schedule-producing modules are fine"
+    );
+}
+
+#[test]
+fn lint_fixture_blessed_accumulation() {
+    let src = include_str!("lint_fixtures/blessed_accumulation.rs");
+    let path = "rust/src/coordinator/fixture.rs";
+    let diags = check(path, src);
+    assert_only("blessed-accumulation", path, src);
+    // the deref fold and the indexed fold; scalar counters pass
+    assert_eq!(diags.len(), 2, "{}", analysis::render_text(&diags, false));
+
+    // blessing the function by name waives it
+    let allow = Allowlist::parse(
+        "[blessed-accumulation]\nallow = \"coordinator/fixture.rs | fn rogue_fold\"\n",
+    )
+    .unwrap();
+    let left = analysis::check_source(path, src, &allow);
+    assert_eq!(left.len(), 1);
+    assert_eq!(left[0].enclosing_fn.as_deref(), Some("rogue_indexed"));
+}
+
+#[test]
+fn lint_fixture_backend_match() {
+    let src = include_str!("lint_fixtures/backend_match.rs");
+    let diags = check("rust/src/algorithms/fixture.rs", src);
+    assert_only("backend-match", "rust/src/algorithms/fixture.rs", src);
+    // the wildcard arm + the missing injection arms; the tuple match is
+    // exempt
+    assert_eq!(diags.len(), 2, "{}", analysis::render_text(&diags, false));
+}
+
+#[test]
+fn lint_fixture_no_bare_print() {
+    let src = include_str!("lint_fixtures/no_bare_print.rs");
+    let diags = check("rust/src/metrics/fixture.rs", src);
+    assert_only("no-bare-print", "rust/src/metrics/fixture.rs", src);
+    assert_eq!(diags.len(), 2);
+    assert!(diags.iter().all(|d| !d.deny), "no-bare-print warns by default");
+    assert!(
+        check("rust/src/main.rs", src).is_empty(),
+        "main.rs owns stdout/stderr"
+    );
+    assert!(check("rust/src/bench/report.rs", src).is_empty());
+}
+
+#[test]
+fn lint_fixture_clean_file_trips_nothing() {
+    let src = include_str!("lint_fixtures/clean.rs");
+    let diags = check("rust/src/coordinator/fixture.rs", src);
+    assert!(diags.is_empty(), "{}", analysis::render_text(&diags, true));
+}
+
+/// The acceptance criterion: `tigre-lint --deny-all` exits 0 on the repo
+/// tree. Runs the same walk + the checked-in allowlist the binary uses.
+#[test]
+fn lint_repo_tree_is_clean() {
+    let src_root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let allow_path = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../lint-allow.toml"));
+    let allow = Allowlist::load(allow_path).expect("checked-in allowlist parses");
+    assert!(
+        !allow.entries().is_empty(),
+        "the checked-in allowlist should have loaded waiver entries"
+    );
+    assert!(
+        !allow.entries().iter().any(|e| e.lint == "typed-errors"),
+        "the typed-errors allowlist section must stay empty (ISSUE 9)"
+    );
+    let diags = analysis::check_tree(src_root, &allow).expect("tree walk");
+    assert!(
+        diags.is_empty(),
+        "tigre-lint --deny-all would fail:\n{}",
+        analysis::render_text(&diags, true)
+    );
+}
