@@ -11,13 +11,14 @@ use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, TrackedVolume, Volume};
 
-use super::common::{DivergenceGuard, ReconOpts, ReconResult};
+use super::common::{projector_ctx, DivergenceGuard, ReconOpts, ReconResult};
 use super::ossart::os_sart;
 use crate::coordinator::DegradeEvent;
 
 /// ASD-POCS options.
 #[derive(Clone, Debug)]
 pub struct AsdPocsOpts {
+    /// Options shared by every iterative algorithm.
     pub common: ReconOpts,
     /// OS-SART subset size for the data sweep.
     pub subset_size: usize,
@@ -49,7 +50,10 @@ pub fn asd_pocs(
     opts: &AsdPocsOpts,
 ) -> anyhow::Result<ReconResult> {
     // one session carries the outer residual forwards across iterations
-    let mut sess = ReconSession::new(ctx, g)?;
+    // (the projector override also reaches the inner OS-SART sweep,
+    // which clones `opts.common` — including `projector` — below)
+    let ctx = projector_ctx(ctx, &opts.common);
+    let mut sess = ReconSession::new(&ctx, g)?;
     let mut x = TrackedVolume::new(Volume::zeros_like(g));
     let mut residuals = Vec::with_capacity(opts.common.iterations);
     let mut sim_time = 0.0;
@@ -87,7 +91,7 @@ pub fn asd_pocs(
                 .record(DegradeEvent::StepBackoff { algorithm: "asd-pocs", iteration: it });
         }
 
-        let r = os_sart(ctx, g, &db, opts.subset_size, &one_iter)?;
+        let r = os_sart(&ctx, g, &db, opts.subset_size, &one_iter)?;
         sim_time += r.sim_time_s;
         peak = peak.max(r.peak_device_bytes);
         let dx_norm = r.volume.norm2();
@@ -100,7 +104,7 @@ pub fn asd_pocs(
         let base_alpha = if dx_norm > 0.0 { opts.alpha } else { opts.alpha * 0.5 };
         let alpha = alpha_scale * base_alpha;
         let (x_tv, stats) =
-            tv_gradient_descent_split(ctx, x.get(), opts.tv_iters, alpha, opts.n_in)?;
+            tv_gradient_descent_split(&ctx, x.get(), opts.tv_iters, alpha, opts.n_in)?;
         sim_time += stats.makespan_s;
         scratch::recycle_volume(x.replace(x_tv));
 

@@ -11,7 +11,7 @@ use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{DivergenceGuard, ReconOpts, ReconResult};
+use super::common::{projector_ctx, DivergenceGuard, ReconOpts, ReconResult};
 use super::ossart::matched_ctx;
 use crate::coordinator::DegradeEvent;
 
@@ -28,7 +28,7 @@ pub fn cgls(
     proj: &ProjectionSet,
     opts: &ReconOpts,
 ) -> anyhow::Result<ReconResult> {
-    let ctx = matched_ctx(ctx);
+    let ctx = matched_ctx(&projector_ctx(ctx, opts));
     let mut sess = ReconSession::new(&ctx, g)?;
 
     let (mut ck, resumed) = checkpoint::setup(&opts.checkpoint, "cgls")?;

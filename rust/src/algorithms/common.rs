@@ -5,12 +5,13 @@
 //! tracked, plus the cross-iteration device residency cache.
 
 use crate::coordinator::checkpoint::CheckpointConfig;
-use crate::coordinator::{NonFiniteStage, ReconError};
+use crate::coordinator::{MultiGpu, NonFiniteStage, ProjectorChoice, ReconError};
 use crate::volume::Volume;
 
 /// Options common to the iterative algorithms.
 #[derive(Clone, Debug)]
 pub struct ReconOpts {
+    /// Number of outer iterations.
     pub iterations: usize,
     /// Relaxation / step parameter (λ for SART-family, unused by CGLS).
     pub lambda: f32,
@@ -37,6 +38,12 @@ pub struct ReconOpts {
     /// Backoff budget: residual growth past this many backoffs fails
     /// the run with [`ReconError::Diverged`] instead of looping.
     pub max_step_backoffs: usize,
+    /// Override the context's projector family for this reconstruction
+    /// (ISSUE 10): `Some(ProjectorChoice::Sparse)` swaps in the
+    /// precomputed CSR system-matrix backend, whose per-unit shards are
+    /// built on the first iteration and reused from the shard cache by
+    /// every later one. `None` (default) keeps the context's backend.
+    pub projector: Option<ProjectorChoice>,
 }
 
 impl Default for ReconOpts {
@@ -50,7 +57,21 @@ impl Default for ReconOpts {
             divergence_tolerance: 1.25,
             step_backoff: 0.5,
             max_step_backoffs: 4,
+            projector: None,
         }
+    }
+}
+
+/// Resolve the context an algorithm should run against: the caller's
+/// context as-is, or a clone rebuilt around the projector family
+/// `opts.projector` selects. Every iterative algorithm entry point
+/// funnels through this, which is what makes
+/// `ReconOpts { projector: Some(ProjectorChoice::Sparse), .. }` and the
+/// CLI `--projector sparse` flag equivalent.
+pub(crate) fn projector_ctx(ctx: &MultiGpu, opts: &ReconOpts) -> MultiGpu {
+    match opts.projector {
+        Some(p) => ctx.clone().with_projector(p),
+        None => ctx.clone(),
     }
 }
 
@@ -58,6 +79,7 @@ impl Default for ReconOpts {
 /// simulated wall-clock the multi-GPU node would have spent.
 #[derive(Clone, Debug)]
 pub struct ReconResult {
+    /// The reconstructed volume.
     pub volume: Volume,
     /// ‖b − Ax‖₂ after each iteration (when the algorithm computes it).
     pub residuals: Vec<f64>,
@@ -92,6 +114,7 @@ pub struct DivergenceGuard {
 }
 
 impl DivergenceGuard {
+    /// Fresh guard configured from `opts`, labelled with the algorithm name.
     pub fn new(algorithm: &'static str, opts: &ReconOpts) -> Self {
         Self {
             algorithm,

@@ -9,7 +9,7 @@ use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{DivergenceGuard, ReconOpts, ReconResult};
+use super::common::{projector_ctx, DivergenceGuard, ReconOpts, ReconResult};
 use super::landweber::power_iteration_norm;
 use super::ossart::matched_ctx;
 use crate::coordinator::DegradeEvent;
@@ -17,6 +17,7 @@ use crate::coordinator::DegradeEvent;
 /// FISTA options beyond the common ones.
 #[derive(Clone, Debug)]
 pub struct FistaOpts {
+    /// Options shared by every iterative algorithm.
     pub common: ReconOpts,
     /// TV weight λ.
     pub tv_lambda: f32,
@@ -44,7 +45,7 @@ pub fn fista(
     proj: &ProjectionSet,
     opts: &FistaOpts,
 ) -> anyhow::Result<ReconResult> {
-    let ctx = matched_ctx(ctx);
+    let ctx = matched_ctx(&projector_ctx(ctx, &opts.common));
     let mut sess = ReconSession::new(&ctx, g)?;
 
     // Estimate the Lipschitz constant L = ‖AᵀA‖ by power iteration.

@@ -13,7 +13,7 @@ use crate::geometry::Geometry;
 use crate::kernels::scratch;
 use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{DivergenceGuard, ReconOpts, ReconResult};
+use super::common::{projector_ctx, DivergenceGuard, ReconOpts, ReconResult};
 use super::ossart::matched_ctx;
 use crate::coordinator::DegradeEvent;
 
@@ -48,7 +48,7 @@ pub fn landweber(
     proj: &ProjectionSet,
     opts: &ReconOpts,
 ) -> anyhow::Result<ReconResult> {
-    let ctx = matched_ctx(ctx);
+    let ctx = matched_ctx(&projector_ctx(ctx, opts));
     let mut sess = ReconSession::new(&ctx, g)?;
 
     // step = λ / ‖AᵀA‖ (power iteration)
@@ -123,7 +123,7 @@ pub fn mlem(
         proj.data.iter().all(|&v| v >= 0.0),
         "MLEM requires non-negative projections"
     );
-    let ctx = matched_ctx(ctx);
+    let ctx = matched_ctx(&projector_ctx(ctx, opts));
     let mut sess = ReconSession::new(&ctx, g)?;
 
     // sensitivity image Aᵀ1

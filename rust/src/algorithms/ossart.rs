@@ -13,7 +13,9 @@ use crate::geometry::Geometry;
 use crate::kernels::{scratch, BackprojWeight};
 use crate::volume::{ProjectionSet, TrackedProjections, TrackedVolume, Volume};
 
-use super::common::{ordered_subsets, safe_recip, DivergenceGuard, ReconOpts, ReconResult};
+use super::common::{
+    ordered_subsets, projector_ctx, safe_recip, DivergenceGuard, ReconOpts, ReconResult,
+};
 use crate::coordinator::DegradeEvent;
 
 /// OS-SART with the given subset size.
@@ -30,8 +32,9 @@ pub fn os_sart(
     opts: &ReconOpts,
 ) -> anyhow::Result<ReconResult> {
     // SART-family updates need the pseudo-matched backprojector: FDK
-    // distance weights would bias the row/column normalization.
-    let ctx = matched_ctx(ctx);
+    // distance weights would bias the row/column normalization. The
+    // opts-level projector override (if any) is applied first.
+    let ctx = matched_ctx(&projector_ctx(ctx, opts));
     let subsets = ordered_subsets(g.n_angles(), subset_size);
 
     // Per-subset geometries and weights.
@@ -172,6 +175,8 @@ pub(crate) fn matched_ctx(ctx: &MultiGpu) -> MultiGpu {
     match &mut c.backend {
         crate::coordinator::Backend::Native { weight, .. } => *weight = BackprojWeight::Matched,
         crate::coordinator::Backend::Pjrt { weight, .. } => *weight = BackprojWeight::Matched,
+        // the sparse backprojector is SpMVᵀ — already the matched adjoint
+        crate::coordinator::Backend::Sparse { .. } => {}
         #[cfg(test)]
         crate::coordinator::Backend::PanicInject { .. }
         | crate::coordinator::Backend::NanInject { .. } => {}

@@ -39,8 +39,11 @@ pub enum Matcher {
 /// One parsed `allow = "path | matcher"` entry.
 #[derive(Clone, Debug)]
 pub struct Entry {
+    /// Lint id the waiver applies to (the `[section]` header).
     pub lint: String,
+    /// Substring matched against the normalized file path.
     pub path_sub: String,
+    /// How diagnostics within matching files are selected.
     pub matcher: Matcher,
 }
 
@@ -56,6 +59,7 @@ impl Allowlist {
         Allowlist::default()
     }
 
+    /// All parsed waiver entries, in file order.
     pub fn entries(&self) -> &[Entry] {
         &self.entries
     }

@@ -39,9 +39,11 @@ use super::Diagnostic;
 
 /// Static description of one lint.
 pub struct LintInfo {
+    /// Stable lint id (doubles as the allowlist section name).
     pub id: &'static str,
     /// Whether a violation fails the run without `--deny-all`.
     pub deny_by_default: bool,
+    /// One-line description shown by `tigre-lint --list`.
     pub summary: &'static str,
 }
 
@@ -89,6 +91,7 @@ pub const LINTS: &[LintInfo] = &[
     },
 ];
 
+/// Look up a lint's catalog entry by id.
 pub fn lint_info(id: &str) -> Option<&'static LintInfo> {
     LINTS.iter().find(|l| l.id == id)
 }

@@ -38,6 +38,7 @@ pub struct Diagnostic {
     pub line: usize,
     /// 1-based.
     pub col: usize,
+    /// Human-readable description of the finding.
     pub message: String,
     /// Trimmed source line the finding sits on.
     pub snippet: String,

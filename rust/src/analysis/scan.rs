@@ -17,18 +17,26 @@
 /// lint inspects raw source lines instead.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TokKind {
+    /// Identifiers and keywords.
     Ident,
+    /// Operators and delimiters (multi-char runs joined, e.g. `=>`).
     Punct,
+    /// String, char and numeric literals.
     Literal,
+    /// `'a`-style lifetimes (disambiguated from char literals).
     Lifetime,
 }
 
 /// One lexed token with its 1-based source position.
 #[derive(Clone, Debug)]
 pub struct Tok {
+    /// Token text as it appears in the source.
     pub text: String,
+    /// Token class.
     pub kind: TokKind,
+    /// 1-based source line.
     pub line: u32,
+    /// 1-based source column.
     pub col: u32,
 }
 
@@ -402,6 +410,7 @@ pub struct FileModel {
 }
 
 impl FileModel {
+    /// Lex `src` and derive all per-token metadata under `path`.
     pub fn build(path: &str, src: &str) -> FileModel {
         let toks = lex(src);
         let in_test = mark_cfg_test(&toks);

@@ -59,7 +59,9 @@ pub use crate::coordinator::splitter::image_split_mem;
 pub struct CoordBenchEntry {
     /// Workload id, e.g. `fp image-split n=48 a=24 gpus=2`.
     pub name: String,
+    /// Sim-subtracted median of the sequential baseline executor, seconds.
     pub sequential_median_s: f64,
+    /// Sim-subtracted median of the pipelined executor, seconds.
     pub pipelined_median_s: f64,
     /// Median of the `SimOnly` call for this workload (already removed
     /// from the two executor medians above).
@@ -151,7 +153,63 @@ pub fn run_suite(smoke: bool, threads: usize) -> Vec<CoordBenchEntry> {
     // graceful-degradation ablation (ISSUE 8): replanning overhead of one
     // injected allocation failure, on deterministic DES makespans
     out.extend(bench_degrade(threads));
+    // sparse-projector ablation (ISSUE 10): ray-driven vs precomputed CSR
+    // over an iterative sweep, on deterministic DES makespans
+    out.extend(bench_sparse(threads));
     out
+}
+
+/// Sparse-projector ablation (ISSUE 10): a K-iteration forward sweep with
+/// the ray-driven kernel vs the precomputed CSR SpMV backend, per device
+/// count, on deterministic DES makespans. The sparse side's FIRST call
+/// charges the one-time matrix build (`CostModel::sparse_setup_s` folded
+/// into each unit's kernel time) and every later call replays the warm
+/// SpMV — `SparseShardCache::sim_op_warm` keys warmth on the (operator,
+/// plan) pair, exactly like the real backend's shard reuse — so the entry
+/// captures the amortization the backend exists for:
+/// `sequential_median_s` = K ray-driven sweeps, `pipelined_median_s` =
+/// one cold + K−1 warm sparse sweeps, and `speedup > 1` means the build
+/// paid for itself within K iterations. The model's kernel-time crossover
+/// is ≈7–8 iterations ([`crate::simgpu::CostModel::sparse_crossover_iters`]),
+/// so K=20 clears it ~2.5× even where transfers eat part of the per-
+/// iteration saving. Makespans are deterministic, so each side is
+/// simulated once (cold + warm for sparse) and scaled — not looped. The
+/// geometry is fixed large (as in [`bench_merge`]) so kernels, not fixed
+/// launch/copy latencies, dominate the critical path; `SimOnly` keeps it
+/// sub-second.
+fn bench_sparse(threads: usize) -> Vec<CoordBenchEntry> {
+    const N: usize = 512;
+    const A: usize = 256;
+    const ITERS: usize = 20;
+    let g = Geometry::cone_beam(N, A);
+    let mem = image_split_mem(&g, &SplitConfig::default());
+    [1usize, 2, 4]
+        .into_iter()
+        .map(|gpus| {
+            let makespan = |ctx: &MultiGpu| -> f64 {
+                ctx.forward(&g, None, ExecMode::SimOnly)
+                    .expect("bench sparse sim")
+                    .1
+                    .makespan_s
+            };
+            let ray = MultiGpu::gtx1080ti(gpus).with_device_mem(mem).with_threads(threads);
+            // `with_sparse_backend` resets the thread budget, so apply it
+            // before `with_threads`
+            let sparse = MultiGpu::gtx1080ti(gpus)
+                .with_device_mem(mem)
+                .with_sparse_backend()
+                .with_threads(threads);
+            let cold = makespan(&sparse); // charges every shard build once
+            let warm = makespan(&sparse); // pure SpMV replay
+            CoordBenchEntry {
+                name: format!("sparse fp image-split n={N} a={A} gpus={gpus} iters={ITERS}"),
+                sequential_median_s: ITERS as f64 * makespan(&ray),
+                pipelined_median_s: cold + (ITERS - 1) as f64 * warm,
+                sim_median_s: 0.0,
+                samples: 1,
+            }
+        })
+        .collect()
 }
 
 /// Graceful-degradation ablation (ISSUE 8): simulated image-split forward
@@ -619,8 +677,8 @@ mod tests {
         let entries = run_suite(true, 2);
         assert_eq!(
             entries.len(),
-            18,
-            "fp/bp × image-split/angle-split + residency + ooc fp/bp + 5 merge counts + 3 fault counts + 3 degrade counts"
+            21,
+            "fp/bp × image-split/angle-split + residency + ooc fp/bp + 5 merge counts + 3 fault counts + 3 degrade counts + 3 sparse counts"
         );
         for e in &entries {
             assert!(
@@ -687,6 +745,22 @@ mod tests {
             assert!(
                 overhead > 1.0 && overhead < 2.0,
                 "degrade gpus={gpus}: replanning overhead {overhead} outside (1, 2)"
+            );
+        }
+        // sparse entries compare K ray-driven sweeps vs one cold + K−1
+        // warm sparse sweeps: past the model's ≈7–8-iteration crossover
+        // the CSR build must have amortized at every device count
+        for gpus in [1usize, 2, 4] {
+            let s = entries
+                .iter()
+                .find(|e| {
+                    e.name.starts_with("sparse") && e.name.contains(&format!("gpus={gpus} "))
+                })
+                .unwrap_or_else(|| panic!("missing sparse entry for gpus={gpus}"));
+            assert!(
+                s.speedup() > 1.0,
+                "sparse gpus={gpus}: build not amortized over the sweep, speedup {}",
+                s.speedup()
             );
         }
     }

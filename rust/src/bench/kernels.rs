@@ -27,8 +27,11 @@ pub const SCHEMA: &str = "tigre-bench-kernels/v1";
 pub struct KernelBenchEntry {
     /// Workload id, e.g. `fp_siddon n=64 a=16`.
     pub name: String,
+    /// Median wall-clock per call, seconds.
     pub median_s: f64,
+    /// Fastest observed call, seconds.
     pub min_s: f64,
+    /// Number of timed calls behind the medians.
     pub samples: usize,
     /// Units of work per call (rays, voxel-updates, pixels).
     pub work_per_call: f64,
@@ -37,6 +40,7 @@ pub struct KernelBenchEntry {
 }
 
 impl KernelBenchEntry {
+    /// Work units per second at the median (infinite for a 0 s median).
     pub fn throughput(&self) -> f64 {
         if self.median_s > 0.0 {
             self.work_per_call / self.median_s

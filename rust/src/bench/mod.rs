@@ -53,8 +53,11 @@ pub fn append_trajectory_run(
 /// (`kernel_hotpath`, `coordinator`): `--smoke`, `--json <path>`,
 /// `--label <name>`; libtest-style `--bench`/`--test` are ignored.
 pub struct BenchArgs {
+    /// Reduced sizes/iterations for CI (`--smoke`).
     pub smoke: bool,
+    /// Where to append the JSON trajectory (`--json <path>`).
     pub json_path: Option<std::path::PathBuf>,
+    /// Run label recorded in the trajectory (`--label <name>`).
     pub label: String,
 }
 
@@ -99,21 +102,33 @@ pub fn parse_bench_args() -> BenchArgs {
 /// The paper's Fig. 7–9 size grid (`N³` voxels, `N²` detector pixels,
 /// `N` angles). 3072 included: SimOnly needs no host data.
 pub const FIG7_SIZES: &[usize] = &[128, 256, 512, 1024, 1536, 2048, 2560, 3072];
+/// The Fig. 9 (time-breakdown) size grid.
 pub const FIG9_SIZES: &[usize] = &[256, 512, 1024, 2048, 3072];
+/// Device counts swept by the figures (the paper's 4-GPU workstation).
 pub const GPU_COUNTS: &[usize] = &[1, 2, 3, 4];
 
 /// One cell of the Fig. 7 sweep.
 #[derive(Clone, Debug)]
 pub struct SweepCell {
+    /// Cubic problem size `N`.
     pub n: usize,
+    /// Device count.
     pub gpus: usize,
+    /// Simulated forward-projection makespan, seconds.
     pub fp_s: f64,
+    /// Simulated backprojection makespan, seconds.
     pub bp_s: f64,
+    /// FP time binned by category (Fig. 9 stacking).
     pub fp_breakdown: Breakdown,
+    /// BP time binned by category (Fig. 9 stacking).
     pub bp_breakdown: Breakdown,
+    /// Image partitions per device the FP plan chose.
     pub fp_splits: usize,
+    /// Image partitions per device the BP plan chose.
     pub bp_splits: usize,
+    /// Whether the FP plan page-locked host image memory.
     pub fp_pinned: bool,
+    /// Whether the BP plan page-locked host image memory.
     pub bp_pinned: bool,
 }
 

@@ -8,7 +8,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::algorithms::{self, ReconOpts};
-use crate::coordinator::{Backend, ExecMode, MultiGpu};
+use crate::coordinator::{Backend, ExecMode, MultiGpu, ProjectorChoice};
 use crate::geometry::Geometry;
 use crate::kernels::filtering::Window;
 use crate::phantom;
@@ -29,6 +29,12 @@ fn ctx_from(args: &crate::util::cli::Args) -> anyhow::Result<MultiGpu> {
             weight: crate::kernels::BackprojWeight::Fdk,
             threads: crate::kernels::kernel_threads(),
         });
+    }
+    // --projector overrides whatever backend the flags above selected
+    // (siddon/joseph force the native ray-driven kernels; sparse swaps in
+    // the precomputed CSR system-matrix backend)
+    if let Some(p) = args.get("projector") {
+        ctx = ctx.with_projector(ProjectorChoice::parse(p)?);
     }
     Ok(ctx)
 }
@@ -132,6 +138,7 @@ fn reconstruct(rest: &[String]) -> anyhow::Result<()> {
         .opt("gpus", "number of simulated GPUs", Some("2"))
         .opt("device-mem", "per-device memory (e.g. 256MiB)", None)
         .opt("artifacts", "use PJRT artifacts from this dir", None)
+        .opt("projector", "siddon|joseph|sparse", None)
         .opt("out", "save volume to this .raw path", None)
         .opt("slice", "save central slice PGM to this path", None)
         .opt("checkpoint", "checkpoint/resume directory (iterative algorithms)", None)
@@ -175,6 +182,7 @@ fn reconstruct(rest: &[String]) -> anyhow::Result<()> {
         checkpoint,
         divergence_tolerance: args.get_f64("div-tolerance")?.unwrap(),
         max_step_backoffs: args.get_usize("max-backoffs")?.unwrap(),
+        projector: args.get("projector").map(ProjectorChoice::parse).transpose()?,
         ..Default::default()
     };
     let algo = args.get("algo").unwrap();
@@ -237,6 +245,7 @@ fn project(rest: &[String]) -> anyhow::Result<()> {
         .opt("gpus", "number of simulated GPUs", Some("2"))
         .opt("device-mem", "per-device memory", None)
         .opt("artifacts", "use PJRT artifacts from this dir", None)
+        .opt("projector", "siddon|joseph|sparse", None)
         .flag("sim-only", "skip real compute (arbitrary N)")
         .flag("help-cmd", "show options");
     let args = cmd.parse(rest)?;
@@ -254,6 +263,29 @@ fn project(rest: &[String]) -> anyhow::Result<()> {
         let (_, bp) = ctx.backward(&g, None, ExecMode::SimOnly)?;
         print_op("forward", &fp);
         print_op("backward", &bp);
+        if matches!(ctx.backend, Backend::Sparse { .. }) {
+            // Crossover prediction (ISSUE 10): the first SimOnly pass
+            // above charged the CSR builds (cold shards); a second pass
+            // is warm, and a ray-driven clone gives the baseline.
+            let (_, fp_warm) = ctx.forward(&g, None, ExecMode::SimOnly)?;
+            let (_, bp_warm) = ctx.backward(&g, None, ExecMode::SimOnly)?;
+            let ray_ctx = ctx.clone().with_projector(ProjectorChoice::Siddon);
+            let (_, ray_fp) = ray_ctx.forward(&g, None, ExecMode::SimOnly)?;
+            let (_, ray_bp) = ray_ctx.backward(&g, None, ExecMode::SimOnly)?;
+            let ray = ray_fp.makespan_s + ray_bp.makespan_s;
+            let warm = fp_warm.makespan_s + bp_warm.makespan_s;
+            let setup = (fp.makespan_s + bp.makespan_s - warm).max(0.0);
+            match ctx.cost.sparse_crossover_iters(ray, warm, setup) {
+                Some(k) => println!(
+                    "sparse crossover:  ~{k:.1} iterations \
+                     (ray {ray:.4}s/iter vs sparse {warm:.4}s/iter + {setup:.4}s setup)"
+                ),
+                None => println!(
+                    "sparse crossover:  never (sparse iteration {warm:.4}s \
+                     not faster than ray-driven {ray:.4}s)"
+                ),
+            }
+        }
     } else {
         let truth = phantom::shepp_logan(n);
         let t0 = std::time::Instant::now();

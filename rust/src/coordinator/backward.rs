@@ -14,9 +14,9 @@ use crate::volume::{ProjInput, ProjectionSet, Volume};
 use super::degrade::DegradeEvent;
 use super::error::ReconError;
 use super::executor::{ExecMode, MultiGpu, OpStats};
-use super::forward::MAX_PRESSURE_REFINES;
-use super::residency::BpResidency;
-use super::splitter::{plan_backward, refine_for_budget, Plan};
+use super::forward::{stamp_projector, MAX_PRESSURE_REFINES};
+use super::residency::{BpResidency, OpKind};
+use super::splitter::{plan_backward, refine_for_budget, Plan, PlanProjector};
 
 /// Run the backprojection: returns the real volume (in `Full` mode) and
 /// the simulated-schedule statistics.
@@ -48,7 +48,11 @@ pub(crate) fn run_with(
     // chunks in the same order, so output stays bit-identical. Residency
     // decisions are indexed by the original plan's slabs, so rung 1
     // (dropping them) always precedes any refinement.
+    // Stamp the projector family from the backend (see
+    // `forward::stamp_projector`) so the simulated timeline costs
+    // SpMVᵀ + cold-shard builds when the sparse backend is active.
     let mut plan = plan.clone();
+    stamp_projector(ctx, g, &mut plan, OpKind::Bp);
     let mut res = res;
     let mut rungs = 0usize;
     let mut refines = 0usize;
@@ -115,6 +119,38 @@ pub(crate) fn run_with(
     };
     stats.degradation = ctx.degrade.drain();
     Ok((vol, stats))
+}
+
+/// Per-unit BP kernel time under the plan's projector family: ray-driven
+/// units cost `bp_kernel_s`; sparse units cost an SpMVᵀ over the shard's
+/// estimated nnz plus the one-time CSR build when the shard cache is
+/// cold (each (slab, chunk) unit runs exactly once per operator call, so
+/// each shard's build is charged exactly once).
+fn bp_unit_kernel_s(
+    sim: &SimNode,
+    g: &Geometry,
+    plan: &Plan,
+    chunk_len: usize,
+    nz_slab: usize,
+) -> f64 {
+    match plan.projector {
+        PlanProjector::Ray => {
+            sim.cost.bp_kernel_s(g.n_vox[0], g.n_vox[1], nz_slab, chunk_len)
+        }
+        PlanProjector::Sparse { warm } => {
+            let nnz = sim.cost.sparse_nnz_estimate(
+                g.n_det[0],
+                g.n_det[1],
+                chunk_len,
+                g.n_vox[0],
+                g.n_vox[1],
+                nz_slab,
+                g.n_vox[2],
+            );
+            let setup = if warm { 0.0 } else { sim.cost.sparse_setup_s(nnz) };
+            setup + sim.cost.spmvt_s(nnz)
+        }
+    }
 }
 
 /// Replay Algorithm 2 on the discrete-event node.
@@ -218,7 +254,7 @@ pub(crate) fn simulate_with(
                 }
                 let slab = plan.per_device[d].slabs[s];
                 let sub = res.map_or(0.0, |r| r.stage[d][s][c].subtract_s);
-                let t = sim.cost.bp_kernel_s(g.n_vox[0], g.n_vox[1], slab.len(), ch.len()) + sub;
+                let t = bp_unit_kernel_s(sim, g, plan, ch.len(), slab.len()) + sub;
                 let dep =
                     copy_ev[d].unwrap_or(Ev::ZERO).max(prev_kernel[d].unwrap_or(Ev::ZERO));
                 let ev = sim.kernel(d, t, dep, &format!("bp d{d} s{s} c{c}"));

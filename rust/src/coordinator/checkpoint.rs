@@ -56,6 +56,7 @@ pub struct CheckpointConfig {
 }
 
 impl CheckpointConfig {
+    /// Checkpoint into `dir` every `every` iterations (`every` clamped to ≥ 1).
     pub fn new(dir: impl Into<PathBuf>, every: usize) -> Self {
         Self { dir: dir.into(), every: every.max(1) }
     }

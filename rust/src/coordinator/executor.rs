@@ -26,6 +26,25 @@ pub enum Backend {
     /// falls back to native for shapes not in the manifest. `weight`
     /// selects the FDK vs pseudo-matched backprojection artifact.
     Pjrt { artifacts_dir: std::path::PathBuf, weight: BackprojWeight, threads: usize },
+    /// Precomputed sparse system-matrix backend (ISSUE 10, after
+    /// Marchesini et al. 2020): each slab×chunk unit's Siddon traversal
+    /// is run **once** and stored as a CSR shard in the shared
+    /// [`SparseShardCache`](super::residency::SparseShardCache); forward
+    /// projection becomes SpMV (bit-
+    /// identical to the Siddon kernel) and backprojection the matched
+    /// adjoint SpMVᵀ. Iterations after the first skip the rebuild — the
+    /// cache is keyed on each unit's sub-geometry fingerprint, which the
+    /// `(geometry, plan)` pair fully determines — so repeated-iteration
+    /// workloads amortize the one-time build
+    /// ([`CostModel::sparse_crossover_iters`] predicts when).
+    Sparse {
+        /// Host kernel-thread budget, split across device workers like
+        /// the other backends.
+        threads: usize,
+        /// Shared shard store; cloning the context shares the cache so a
+        /// session's forward/backward handles reuse one set of shards.
+        cache: Arc<super::residency::SparseShardCache>,
+    },
     /// Fault-injection backend for the executor's shutdown tests: every
     /// kernel launch panics. Lets `coordinator::pipeline` prove that a
     /// worker panic drains the merge/loader lanes and propagates instead
@@ -47,6 +66,35 @@ impl Default for Backend {
             projector: Projector::Siddon,
             weight: BackprojWeight::Fdk,
             threads: crate::kernels::kernel_threads(),
+        }
+    }
+}
+
+/// User-facing projector selection (the `--projector` CLI flag and
+/// `algorithms::ReconOpts::projector`): which operator family executes
+/// `Ax`/`Aᵀy`. `Siddon`/`Joseph` are the ray-driven native kernels;
+/// `Sparse` is the precomputed system-matrix backend
+/// ([`Backend::Sparse`]), which pays a one-time build per slab×chunk
+/// unit and then runs SpMV/SpMVᵀ every iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectorChoice {
+    /// Ray-driven Siddon (exact intersection lengths) — the default.
+    Siddon,
+    /// Ray-driven Joseph (bilinear interpolation along the main axis).
+    Joseph,
+    /// Precomputed CSR system matrix: SpMV forward (bit-identical to
+    /// Siddon), matched-adjoint SpMVᵀ backward.
+    Sparse,
+}
+
+impl ProjectorChoice {
+    /// Parse a CLI spelling (`siddon`|`joseph`|`sparse`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "siddon" => Ok(Self::Siddon),
+            "joseph" => Ok(Self::Joseph),
+            "sparse" => Ok(Self::Sparse),
+            other => anyhow::bail!("unknown projector '{other}' (siddon|joseph|sparse)"),
         }
     }
 }
@@ -115,6 +163,7 @@ pub struct OpStats {
 }
 
 impl OpStats {
+    /// Extract stats from a finished simulated schedule and its plan.
     pub fn from_sim(sim: &SimNode, plan: &super::splitter::Plan) -> Self {
         let peak = (0..sim.n_devices()).map(|d| sim.device_mem(d).peak()).max().unwrap_or(0);
         OpStats {
@@ -131,12 +180,33 @@ impl OpStats {
 
 /// A multi-GPU execution context: the paper's "single node with any
 /// number of GPUs with arbitrarily small memories".
+///
+/// # Examples
+///
+/// ```
+/// use tigre::coordinator::{ExecMode, MultiGpu};
+/// use tigre::geometry::Geometry;
+///
+/// // Plan a forward projection on a simulated 2-GPU node: no kernels
+/// // run and no projection data is produced, only the schedule and
+/// // its predicted stats.
+/// let g = Geometry::cone_beam(64, 16);
+/// let ctx = MultiGpu::gtx1080ti(2);
+/// let (proj, stats) = ctx.forward(&g, None, ExecMode::SimOnly).unwrap();
+/// assert!(proj.is_none());
+/// assert!(stats.makespan_s > 0.0);
+/// ```
 #[derive(Clone, Debug)]
 pub struct MultiGpu {
+    /// Number of devices in the node.
     pub n_gpus: usize,
+    /// Per-device hardware description (memory capacity, name).
     pub spec: GpuSpec,
+    /// Timing constants the DES planner charges operations against.
     pub cost: CostModel,
+    /// Splitting policy knobs (halo depth, pinning threshold, …).
     pub split: super::splitter::SplitConfig,
+    /// Kernel backend executing FP/BP chunks (ray-traced or sparse).
     pub backend: Backend,
     /// Real-execution strategy (pipelined vs sequential baseline).
     pub exec: ExecutorConfig,
@@ -176,6 +246,7 @@ impl MultiGpu {
         self
     }
 
+    /// Replace the kernel backend (builder-style).
     pub fn with_backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
         self
@@ -185,11 +256,75 @@ impl MultiGpu {
     /// benchmarking; see also the `TIGRE_THREADS` env var).
     pub fn with_threads(mut self, n: usize) -> Self {
         match &mut self.backend {
-            Backend::Native { threads, .. } | Backend::Pjrt { threads, .. } => *threads = n,
+            Backend::Native { threads, .. }
+            | Backend::Pjrt { threads, .. }
+            | Backend::Sparse { threads, .. } => *threads = n,
             #[cfg(test)]
             Backend::PanicInject { threads } | Backend::NanInject { threads } => *threads = n,
         }
         self
+    }
+
+    /// Select the projector family by name (the `ReconOpts::projector` /
+    /// `--projector` plumbing): `Siddon`/`Joseph` select the ray-driven
+    /// native kernels, `Sparse` swaps in the precomputed system-matrix
+    /// backend with a fresh shard cache.
+    pub fn with_projector(mut self, choice: ProjectorChoice) -> Self {
+        match choice {
+            ProjectorChoice::Siddon | ProjectorChoice::Joseph => {
+                let p = if choice == ProjectorChoice::Siddon {
+                    Projector::Siddon
+                } else {
+                    Projector::Joseph
+                };
+                match &mut self.backend {
+                    Backend::Native { projector, .. } => *projector = p,
+                    // Non-native backends keep their own projector story
+                    // (PJRT artifacts bake it in; the injection backends
+                    // exist to fail, not to project).
+                    Backend::Pjrt { .. } | Backend::Sparse { .. } => {
+                        self.backend = Backend::Native {
+                            projector: p,
+                            weight: BackprojWeight::Fdk,
+                            threads: crate::kernels::kernel_threads(),
+                        }
+                    }
+                    #[cfg(test)]
+                    Backend::PanicInject { .. } | Backend::NanInject { .. } => {}
+                }
+                self
+            }
+            // Idempotent on an already-sparse backend: keep the existing
+            // shard cache so nested entry points (e.g. ASD-POCS's inner
+            // OS-SART sweep) reuse the shards the outer loop built
+            // instead of resetting the cache every sweep.
+            ProjectorChoice::Sparse => match &self.backend {
+                Backend::Sparse { .. } => self,
+                _ => self.with_sparse_backend(),
+            },
+        }
+    }
+
+    /// Swap in the precomputed sparse system-matrix backend (see
+    /// [`Backend::Sparse`]) with a fresh shared shard cache.
+    pub fn with_sparse_backend(mut self) -> Self {
+        self.backend = Backend::Sparse {
+            threads: crate::kernels::kernel_threads(),
+            cache: Arc::new(super::residency::SparseShardCache::new()),
+        };
+        self
+    }
+
+    /// Shard-cache counters when the sparse backend is active (`None`
+    /// otherwise). Tests assert "zero rebuilds on iteration 2+" through
+    /// this.
+    pub fn sparse_shard_stats(&self) -> Option<super::residency::SparseShardStats> {
+        match &self.backend {
+            Backend::Sparse { cache, .. } => Some(cache.stats()),
+            Backend::Native { .. } | Backend::Pjrt { .. } => None,
+            #[cfg(test)]
+            Backend::PanicInject { .. } | Backend::NanInject { .. } => None,
+        }
     }
 
     /// Run the real path through the pre-PR3 host-sequential loops —
@@ -249,12 +384,16 @@ impl MultiGpu {
     /// Total kernel host threads the backend was configured with.
     pub(crate) fn backend_threads(&self) -> usize {
         match &self.backend {
-            Backend::Native { threads, .. } | Backend::Pjrt { threads, .. } => *threads,
+            Backend::Native { threads, .. }
+            | Backend::Pjrt { threads, .. }
+            | Backend::Sparse { threads, .. } => *threads,
             #[cfg(test)]
             Backend::PanicInject { threads } | Backend::NanInject { threads } => *threads,
         }
     }
 
+    /// New simulated node with this context's spec, cost model and (if
+    /// configured) fault plan attached.
     pub fn fresh_sim(&self) -> SimNode {
         let mut sim = SimNode::new(self.n_gpus, self.spec.clone(), self.cost.clone());
         if let Some(f) = &self.fault {
@@ -347,6 +486,16 @@ impl MultiGpu {
             Backend::Pjrt { artifacts_dir, threads, .. } => {
                 crate::runtime::forward_or_native(artifacts_dir, g, vol, *threads)
             }
+            Backend::Sparse { threads, cache } => {
+                let shard = cache.get_or_build(g, *threads);
+                let mut p = crate::kernels::scratch::take_projections(
+                    g.n_det[0],
+                    g.n_det[1],
+                    g.n_angles(),
+                );
+                shard.project_into(&vol.as_view(), &mut p.data, *threads);
+                p
+            }
             #[cfg(test)]
             Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
             #[cfg(test)]
@@ -367,6 +516,16 @@ impl MultiGpu {
             }
             Backend::Pjrt { artifacts_dir, weight, threads } => {
                 crate::runtime::backward_or_native(artifacts_dir, g, proj, *weight, *threads)
+            }
+            Backend::Sparse { threads, cache } => {
+                let shard = cache.get_or_build(g, *threads);
+                let mut v = crate::kernels::scratch::take_volume(
+                    g.n_vox[0],
+                    g.n_vox[1],
+                    g.n_vox[2],
+                );
+                shard.backproject_into(&proj.as_view(), &mut v.data, *threads);
+                v
             }
             #[cfg(test)]
             Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
@@ -410,6 +569,9 @@ impl MultiGpu {
                 crate::kernels::scratch::recycle_projections(p);
                 crate::kernels::scratch::recycle_volume(owned);
             }
+            Backend::Sparse { cache, .. } => {
+                cache.get_or_build(g, threads).project_into(vol, out, threads)
+            }
             #[cfg(test)]
             Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),
             #[cfg(test)]
@@ -444,6 +606,9 @@ impl MultiGpu {
                 }
                 crate::kernels::scratch::recycle_volume(v);
                 crate::kernels::scratch::recycle_projections(owned);
+            }
+            Backend::Sparse { cache, .. } => {
+                cache.get_or_build(g, threads).backproject_into(proj, out, threads)
             }
             #[cfg(test)]
             Backend::PanicInject { .. } => panic!("injected kernel panic (test)"),

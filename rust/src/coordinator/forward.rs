@@ -13,13 +13,93 @@ use crate::volume::{ProjectionSet, Volume, VolumeInput};
 
 use super::degrade::DegradeEvent;
 use super::error::ReconError;
-use super::executor::{ExecMode, MultiGpu, OpStats};
-use super::residency::FpResidency;
-use super::splitter::{plan_forward, refine_for_budget, MergeStrategy, Plan};
+use super::executor::{Backend, ExecMode, MultiGpu, OpStats};
+use super::residency::{FpResidency, OpKind};
+use super::splitter::{plan_forward, refine_for_budget, MergeStrategy, Plan, PlanProjector};
 
 /// Bounded refinement retries on rung 2 of the pressure ladder (each
 /// halves the unit size, so 4 rungs shrink it 16×).
 pub(crate) const MAX_PRESSURE_REFINES: usize = 4;
+
+/// Key identifying the *set* of CSR shards one operator plan touches —
+/// the geometry fingerprint folded with every slab boundary and angle-
+/// chunk boundary the plan emits. The
+/// [`SparseShardCache`](super::residency::SparseShardCache) uses it to
+/// decide, per (op, plan), whether the simulated timeline should charge
+/// shard build time (first iteration) or skip it (2nd+ — the shards are
+/// host-resident). Individual shards are keyed on their own sub-geometry
+/// fingerprint; this key is deliberately coarser, covering the whole
+/// plan in one tag.
+pub(crate) fn sparse_plan_key(g: &Geometry, plan: &Plan) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = crate::kernels::sparse::geometry_fingerprint(g);
+    let mut mix = |h: &mut u64, v: u64| {
+        *h ^= v;
+        *h = h.wrapping_mul(PRIME);
+    };
+    for d in &plan.per_device {
+        for s in &d.slabs {
+            mix(&mut h, s.z0 as u64);
+            mix(&mut h, s.z1 as u64);
+        }
+    }
+    for c in &plan.angle_chunks {
+        mix(&mut h, c.a0 as u64);
+        mix(&mut h, c.a1 as u64);
+    }
+    h
+}
+
+/// Stamp the plan's projector family from the active backend, mirroring
+/// the `plan.merge` stamp: a [`Backend::Sparse`] context marks the plan
+/// `Sparse`, with `warm` resolved against the backend's shard cache for
+/// this (op, plan) pair — the first simulated call charges CSR build
+/// time, subsequent ones do not (the residency claim of ISSUE 10).
+pub(crate) fn stamp_projector(ctx: &MultiGpu, g: &Geometry, plan: &mut Plan, op: OpKind) {
+    if let Backend::Sparse { cache, .. } = &ctx.backend {
+        plan.projector =
+            PlanProjector::Sparse { warm: cache.sim_op_warm(op, sparse_plan_key(g, plan)) };
+    }
+}
+
+/// Per-unit FP kernel time under the plan's projector family: ray-driven
+/// units cost `fp_slab_kernel_s`; sparse units cost an SpMV over the
+/// shard's estimated nnz, plus the one-time CSR build when the shard
+/// cache is cold. Each (slab, chunk) unit appears exactly once in an
+/// operator schedule, so charging the build on the unit's own kernel
+/// launch charges each shard exactly once.
+fn fp_unit_kernel_s(
+    sim: &SimNode,
+    g: &Geometry,
+    plan: &Plan,
+    chunk_len: usize,
+    nz_slab: usize,
+) -> f64 {
+    match plan.projector {
+        PlanProjector::Ray => sim.cost.fp_slab_kernel_s(
+            g.n_det[0],
+            g.n_det[1],
+            chunk_len,
+            g.n_vox[0],
+            g.n_vox[1],
+            nz_slab,
+            g.n_vox[2],
+        ),
+        PlanProjector::Sparse { warm } => {
+            let nnz = sim.cost.sparse_nnz_estimate(
+                g.n_det[0],
+                g.n_det[1],
+                chunk_len,
+                g.n_vox[0],
+                g.n_vox[1],
+                nz_slab,
+                g.n_vox[2],
+            );
+            let setup = if warm { 0.0 } else { sim.cost.sparse_setup_s(nnz) };
+            setup + sim.cost.spmv_s(nnz)
+        }
+    }
+}
 
 /// Run the forward projection: returns real projections (in `Full` mode)
 /// and the simulated-schedule statistics.
@@ -54,6 +134,7 @@ pub(crate) fn run_with(
     let mut plan = {
         let mut p = plan.clone();
         p.merge = ctx.exec.merge;
+        stamp_projector(ctx, g, &mut p, OpKind::Fp);
         p
     };
 
@@ -258,15 +339,7 @@ fn simulate_angle_split(
                 continue;
             }
             let c = c0 + j;
-            let t = sim.cost.fp_slab_kernel_s(
-                g.n_det[0],
-                g.n_det[1],
-                chunks[c].len(),
-                g.n_vox[0],
-                g.n_vox[1],
-                g.n_vox[2],
-                g.n_vox[2],
-            );
+            let t = fp_unit_kernel_s(sim, g, plan, chunks[c].len(), g.n_vox[2]);
             let ev = sim.kernel(d, t, img_ready[d], &format!("fp d{d} c{c}"));
             this_kernel[d] = Some((ev, c));
         }
@@ -366,15 +439,7 @@ fn simulate_image_split(
                 }
                 let c = (j + d * stagger) % n_chunks;
                 let slab = plan.per_device[d].slabs[s];
-                let t = sim.cost.fp_slab_kernel_s(
-                    g.n_det[0],
-                    g.n_det[1],
-                    chunks[c].len(),
-                    g.n_vox[0],
-                    g.n_vox[1],
-                    slab.len(),
-                    g.n_vox[2],
-                );
+                let t = fp_unit_kernel_s(sim, g, plan, chunks[c].len(), slab.len());
                 let kev = sim.kernel(d, t, slab_ready[d], &format!("fp d{d} s{s} c{c}"));
                 this_out[d] = Some((kev, c));
             }

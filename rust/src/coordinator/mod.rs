@@ -70,6 +70,16 @@
 //! partition in the canonical merge order. [`checkpoint`] adds
 //! iteration-granular durable snapshots so a killed reconstruction
 //! resumes from its last checkpoint with a bit-identical final iterate.
+//!
+//! Since PR 10 a precomputed **sparse CSR system matrix** is a third
+//! kernel backend ([`executor::Backend::Sparse`]): each slab×chunk
+//! unit's Siddon traversal runs once and is cached as a CSR shard
+//! ([`residency::SparseShardCache`]), after which forward projection is
+//! SpMV (bit-identical to the ray-driven Siddon kernel) and
+//! backprojection the matched adjoint SpMVᵀ — repeated-iteration
+//! workloads amortize the one-time build, with
+//! [`crate::simgpu::CostModel::sparse_crossover_iters`] predicting the
+//! break-even iteration count on the simulated timeline.
 
 pub mod backward;
 pub mod baseline;
@@ -86,9 +96,11 @@ pub mod splitter;
 pub use checkpoint::{CheckpointConfig, CheckpointState, Checkpointer};
 pub use degrade::{DegradeEvent, DegradeLog, DegradeStats};
 pub use error::{NonFiniteStage, ReconError};
-pub use executor::{Backend, ExecMode, ExecutorConfig, MultiGpu, OpStats};
-pub use residency::{ReconSession, ResidencyCache, ResidencyStats};
+pub use executor::{Backend, ExecMode, ExecutorConfig, MultiGpu, OpStats, ProjectorChoice};
+pub use residency::{
+    ReconSession, ResidencyCache, ResidencyStats, SparseShardCache, SparseShardStats,
+};
 pub use splitter::{
     merge_schedule, ooc_bp_chunk, plan_backward_ooc, plan_forward_ooc, plan_ooc_pair,
-    MergeStrategy, Plan, SplitConfig,
+    MergeStrategy, Plan, PlanProjector, SplitConfig,
 };

@@ -821,7 +821,7 @@ fn forward_device_partial(
             // letting the view path copy it per chunk launch.
             let owned_slab = match &ctx.backend {
                 Backend::Pjrt { .. } => Some(sub.to_volume()),
-                Backend::Native { .. } => None,
+                Backend::Native { .. } | Backend::Sparse { .. } => None,
                 #[cfg(test)]
                 Backend::PanicInject { .. } | Backend::NanInject { .. } => None,
             };
@@ -1023,7 +1023,7 @@ fn forward_device_partial_ooc(
                 VolumeSlabView { nx: g.n_vox[0], ny: g.n_vox[1], nz: slab.len(), data: &data };
             let owned_slab = match &ctx.backend {
                 Backend::Pjrt { .. } => Some(sub.to_volume()),
-                Backend::Native { .. } => None,
+                Backend::Native { .. } | Backend::Sparse { .. } => None,
                 #[cfg(test)]
                 Backend::PanicInject { .. } | Backend::NanInject { .. } => None,
             };

@@ -27,9 +27,13 @@ pub const DEFAULT_N_IN: usize = 60;
 /// `[z0 − lo_halo, z1 + hi_halo)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct HaloSlab {
+    /// First owned (core) slice, inclusive.
     pub core_z0: usize,
+    /// One past the last owned slice, exclusive.
     pub core_z1: usize,
+    /// First slice including the low-side halo, inclusive.
     pub ext_z0: usize,
+    /// One past the last slice including the high-side halo, exclusive.
     pub ext_z1: usize,
 }
 
@@ -81,6 +85,7 @@ pub fn rof_denoise_split(
 /// Info handed to the per-slab kernel for global-norm approximation.
 #[derive(Clone, Copy, Debug)]
 pub struct GlobalInfo {
+    /// Voxel count of the full (unsplit) volume.
     pub total_voxels: u64,
 }
 

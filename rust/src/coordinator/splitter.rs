@@ -17,9 +17,11 @@ use crate::geometry::split::{split_even, AngleChunk, ZSlab};
 use crate::geometry::Geometry;
 use crate::util::units::F32_BYTES;
 
-/// Angle-chunk / block constants (paper footnotes 1 & 2).
+/// Projections computed per FP kernel launch (paper footnote 1).
 pub const FP_CHUNK_ANGLES: usize = 9;
+/// Projections consumed per BP kernel launch (paper footnote 2).
 pub const BP_CHUNK_ANGLES: usize = 32;
+/// Axial slices each BP thread updates (paper footnote 2).
 pub const BP_NZ_PER_THREAD: usize = 8;
 
 /// Splitting configuration.
@@ -125,9 +127,34 @@ pub fn replan_excluding(n: usize, lost: &[bool]) -> Result<Vec<usize>, String> {
         .collect())
 }
 
+/// Which projector family a plan's simulated timeline should cost:
+/// ray-driven kernels (Siddon/Joseph) or the precomputed sparse CSR
+/// system matrix (ISSUE 10 / DESIGN.md §Sparse-projector). Stamped by
+/// `forward::run_with` / `backward::run_with` from the executor's
+/// [`Backend`](crate::coordinator::executor::Backend), mirroring the
+/// [`Plan::merge`] stamping pattern, so direct `simulate` callers can
+/// also select it by hand.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlanProjector {
+    /// Ray-driven FP/BP kernels; per-unit time comes from
+    /// `CostModel::fp_slab_kernel_s` / `bp_kernel_s`.
+    #[default]
+    Ray,
+    /// Precomputed CSR shards; per-unit time is `spmv_s` / `spmvt_s`
+    /// over the shard's estimated nnz, plus `sparse_setup_s` when the
+    /// shard is cold (not yet in the
+    /// [`SparseShardCache`](crate::coordinator::residency::SparseShardCache)).
+    Sparse {
+        /// True when every shard this plan touches is already resident,
+        /// so the timeline charges no build time (2nd+ iterations).
+        warm: bool,
+    },
+}
+
 /// The work assigned to one device.
 #[derive(Clone, Debug)]
 pub struct DeviceAssignment {
+    /// Device index the assignment belongs to.
     pub device: usize,
     /// The z-range of the whole volume owned by this device.
     pub z_range: ZSlab,
@@ -138,6 +165,7 @@ pub struct DeviceAssignment {
 /// A complete partition plan for one operator call.
 #[derive(Clone, Debug)]
 pub struct Plan {
+    /// One assignment per participating device.
     pub per_device: Vec<DeviceAssignment>,
     /// Angle chunks processed per kernel launch.
     pub angle_chunks: Vec<AngleChunk>,
@@ -174,6 +202,12 @@ pub struct Plan {
     /// `ExecutorConfig::merge`, so it only matters for callers driving
     /// [`crate::coordinator::forward::simulate`] directly.
     pub merge: MergeStrategy,
+    /// Projector family the simulated timeline costs (ray-driven vs
+    /// sparse CSR). Like [`Plan::merge`], the executor entry points
+    /// re-stamp this from the active
+    /// [`Backend`](crate::coordinator::executor::Backend); it only
+    /// matters for callers driving `simulate` directly.
+    pub projector: PlanProjector,
 }
 
 impl Plan {
@@ -264,6 +298,14 @@ impl Plan {
     /// executor entry points stamp this from `ExecutorConfig` instead).
     pub fn with_merge(mut self, merge: MergeStrategy) -> Self {
         self.merge = merge;
+        self
+    }
+
+    /// Select the projector family the simulated timeline costs (for
+    /// direct `simulate` callers; the executor entry points stamp this
+    /// from the active `Backend` instead).
+    pub fn with_plan_projector(mut self, projector: PlanProjector) -> Self {
+        self.projector = projector;
         self
     }
 
@@ -518,6 +560,7 @@ fn plan_operator(
         ooc_volume: false,
         ooc_proj: false,
         merge: MergeStrategy::Linear,
+        projector: PlanProjector::Ray,
     })
 }
 
@@ -753,10 +796,12 @@ pub fn max_n_forward(mem: u64) -> u64 {
     ((mem as f64 / ((1 + FP_CHUNK_ANGLES) as f64 * F32_BYTES as f64)).sqrt()) as u64
 }
 
+/// Largest cubic `N` a BP launch fits in `mem` bytes (see above).
 pub fn max_n_backward(mem: u64) -> u64 {
     ((mem as f64 / ((BP_NZ_PER_THREAD + BP_CHUNK_ANGLES) as f64 * F32_BYTES as f64)).sqrt()) as u64
 }
 
+/// Largest cubic `N` under the relaxed double-buffered bound (see above).
 pub fn max_n_relaxed(mem: u64) -> u64 {
     ((mem as f64 / (4.0 * F32_BYTES as f64)).sqrt()) as u64
 }

@@ -8,15 +8,19 @@
 /// for exactly this reason (single contiguous H2D/D2H copies).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ZSlab {
+    /// First slice (inclusive).
     pub z0: usize,
+    /// One past the last slice (exclusive).
     pub z1: usize,
 }
 
 impl ZSlab {
+    /// Number of slices in the slab.
     pub fn len(&self) -> usize {
         self.z1 - self.z0
     }
 
+    /// True when the slab covers no slices.
     pub fn is_empty(&self) -> bool {
         self.z0 >= self.z1
     }
@@ -25,15 +29,19 @@ impl ZSlab {
 /// A contiguous run of projection angles `[a0, a1)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AngleChunk {
+    /// First angle index (inclusive).
     pub a0: usize,
+    /// One past the last angle index (exclusive).
     pub a1: usize,
 }
 
 impl AngleChunk {
+    /// Number of angles in the chunk.
     pub fn len(&self) -> usize {
         self.a1 - self.a0
     }
 
+    /// True when the chunk covers no angles.
     pub fn is_empty(&self) -> bool {
         self.a0 >= self.a1
     }

@@ -13,6 +13,9 @@
 //!    traversal), TIGRE's default `Ax`.
 //!  * [`joseph`] — interpolated (sampled trilinear) projector, TIGRE's
 //!    alternative `Ax` ("included for completeness", paper §3.1).
+//!  * [`sparse`] — precomputed CSR system matrix per slab×chunk unit:
+//!    forward is an SpMV bit-identical to [`siddon`], backward is the
+//!    exactly matched adjoint SpMVᵀ (Marchesini et al. 2020 style).
 //!  * [`voxel_backproj`] — voxel-driven backprojector with FDK or
 //!    pseudo-matched weights, TIGRE's `Aᵀb`.
 //!  * [`tv`] — total-variation regularizers (gradient-descent and ROF).
@@ -26,6 +29,7 @@ pub mod filtering;
 pub mod joseph;
 pub mod scratch;
 pub mod siddon;
+pub mod sparse;
 pub mod tv;
 pub mod voxel_backproj;
 

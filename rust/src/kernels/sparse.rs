@@ -1,0 +1,651 @@
+//! Precomputed sparse system-matrix projector (CSR SpMV / CSC SpMVᵀ).
+//!
+//! Marchesini et al. 2020 (*Sparse Matrix-Based HPC Tomography*) and
+//! tomoCAM both observe that on repeated-iteration workloads it pays to
+//! run the ray tracer **once**, store every (ray, voxel, intersection
+//! length) triple as a sparse matrix `A`, and turn every subsequent
+//! forward projection into `A·x` and every backprojection into `Aᵀ·y`.
+//! The one-time build costs roughly one traversal plus assembly; each
+//! later iteration replaces per-ray f64 setup + traversal with a
+//! streaming, memory-bound SpMV.
+//!
+//! The matrix here is **slab-local**: one [`SparseSystemMatrix`] covers
+//! exactly one splitter-emitted slab×angle-chunk unit (the `Geometry`
+//! handed to the kernel *is* that unit's sub-geometry), so the
+//! coordinator, residency cache, OOC store, merge schedules and
+//! fault/degradation machinery all apply unchanged — the shard is just a
+//! different way to execute the same unit.
+//!
+//! ## Bit-parity with the Siddon kernel
+//!
+//! [`SparseSystemMatrix::build`] records, per detector row, the exact
+//! `(voxel, (t_end − t) as f32)` sequence the Siddon traversal visits,
+//! plus the per-ray scale `len as f32` applied at the end.
+//! [`SparseSystemMatrix::project_into`] then replays that sequence:
+//! `acc += w·x[col]` in stored order, then `acc * scale` — the same f32
+//! operations in the same order as [`crate::kernels::siddon::raytrace`],
+//! so sparse forward projection is **bit-identical** to the Siddon
+//! kernel for every geometry, split and thread count (pinned by
+//! `sparse_fp_bit_identical_to_siddon` below and the coordinator-level
+//! parity suite in `tests/sparse_parity.rs`).
+//!
+//! ## Determinism of the transpose
+//!
+//! [`SparseSystemMatrix::backproject_into`] is the *matched adjoint*
+//! `Aᵀ`: the CSC transpose stores, per voxel, its incident rays in
+//! ascending global row order, and each output voxel is accumulated by
+//! exactly one task (columns are partitioned across threads, rows of a
+//! chunk are folded in ascending order). The accumulation order per
+//! voxel is therefore a pure function of the shard — independent of
+//! thread count and worker scheduling — which is what makes the SpMVᵀ
+//! site blessable for tigre-lint's float-accumulation lint.
+
+use std::sync::Mutex;
+
+use crate::geometry::{DetFrame, Geometry};
+use crate::util::threadpool::{parallel_for, SendPtr};
+use crate::volume::{ProjChunkView, VolumeSlabView};
+
+/// A slab-local CSR system matrix: rows are detector pixels of one
+/// slab×chunk unit (layout `(a·nv + iv)·nu + iu`, identical to
+/// [`crate::kernels::siddon::project_into`]), columns are the unit's
+/// voxels in linear `(z·ny + y)·nx + x` order.
+///
+/// Forward projection is a CSR SpMV ([`Self::project_into`]); matched
+/// backprojection is a CSC SpMVᵀ over the precomputed transpose
+/// ([`Self::backproject_into`]). Build once per `(geometry, plan)` unit
+/// via [`Self::build`], then reuse across iterations — the coordinator
+/// caches shards in `coordinator::residency::SparseShardCache`.
+///
+/// # Examples
+///
+/// ```
+/// use tigre::geometry::Geometry;
+/// use tigre::kernels::sparse::SparseSystemMatrix;
+/// use tigre::kernels::{self, Projector};
+/// use tigre::phantom;
+///
+/// let g = Geometry::cone_beam(16, 4);
+/// let v = phantom::shepp_logan(16);
+/// let m = SparseSystemMatrix::build(&g, 2);
+///
+/// // SpMV forward projection is bit-identical to the Siddon kernel.
+/// let mut spmv = vec![0.0f32; m.n_rows()];
+/// m.project_into(&v.as_view(), &mut spmv, 2);
+/// let ray = kernels::forward(&g, &v, Projector::Siddon, 2);
+/// assert_eq!(spmv, ray.data);
+/// ```
+#[derive(Clone)]
+pub struct SparseSystemMatrix {
+    n_rows: usize,
+    n_cols: usize,
+    /// CSR row boundaries: row `r`'s entries are `row_ptr[r]..row_ptr[r+1]`.
+    row_ptr: Vec<usize>,
+    /// Column (voxel) index per entry, in Siddon traversal order.
+    col_idx: Vec<u32>,
+    /// Per-entry weight `(t_end − t) as f32`, in Siddon traversal order.
+    vals: Vec<f32>,
+    /// Per-row final scale `len as f32` (the ray length); applied after
+    /// the entry fold, exactly as `siddon::raytrace` scales its `acc`.
+    row_scale: Vec<f32>,
+    /// CSC column boundaries for the transpose.
+    col_ptr: Vec<usize>,
+    /// Row index per transpose entry, ascending within each column.
+    t_row: Vec<u32>,
+    /// Pre-scaled transpose weight `w · row_scale[row]`.
+    t_val: Vec<f32>,
+}
+
+/// One ray's sparse footprint while building: entry list + final scale.
+struct RowBuild {
+    cols: Vec<u32>,
+    vals: Vec<f32>,
+    scale: f32,
+}
+
+impl SparseSystemMatrix {
+    /// Trace every ray of `g` once (the same per-angle [`DetFrame`]
+    /// addressing and Amanatides–Woo walk as the Siddon kernel) and
+    /// assemble the CSR matrix plus its CSC transpose.
+    ///
+    /// The build is deterministic for any `threads` value: rows are
+    /// traced in fixed-size index blocks whose contents do not depend on
+    /// which worker claims them, and the blocks are reassembled in row
+    /// order before the matrix is finalized.
+    pub fn build(g: &Geometry, threads: usize) -> Self {
+        let nu = g.n_det[0];
+        let nv = g.n_det[1];
+        let n_angles = g.n_angles();
+        let n_rows = nu * nv * n_angles;
+        let n_cols = g.n_vox[0] * g.n_vox[1] * g.n_vox[2];
+
+        let frames: Vec<DetFrame> = (0..n_angles).map(|a| g.det_frame(a)).collect();
+        let (lo, hi) = g.volume_bbox();
+        let dv = g.d_vox;
+        let n = g.n_vox;
+
+        // Trace detector rows in blocks; each block's rows are fully
+        // determined by its index range, so collecting the blocks and
+        // sorting by start row reproduces the serial result for any
+        // thread count / work-stealing order.
+        let det_rows = n_angles * nv;
+        let blocks: Mutex<Vec<(usize, Vec<RowBuild>)>> = Mutex::new(Vec::new());
+        parallel_for(det_rows, threads, 8, |r0, r1| {
+            let mut local: Vec<RowBuild> = Vec::with_capacity((r1 - r0) * nu);
+            for row in r0..r1 {
+                let a = row / nv;
+                let iv = row % nv;
+                let frame = &frames[a];
+                let row0 = frame.row_origin(iv);
+                let us = frame.u_step;
+                for iu in 0..nu {
+                    let fu = iu as f64;
+                    let pix = [
+                        row0[0] + fu * us[0],
+                        row0[1] + fu * us[1],
+                        row0[2] + fu * us[2],
+                    ];
+                    local.push(trace_row(&frame.src, &pix, &lo, &hi, &dv, &n));
+                }
+            }
+            blocks
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push((r0, local));
+        });
+        let mut blocks = blocks.into_inner().unwrap_or_else(|p| p.into_inner());
+        blocks.sort_unstable_by_key(|(r0, _)| *r0);
+
+        let mut row_ptr = Vec::with_capacity(n_rows + 1);
+        let mut row_scale = Vec::with_capacity(n_rows);
+        let nnz: usize = blocks
+            .iter()
+            .flat_map(|(_, rows)| rows.iter())
+            .map(|r| r.cols.len())
+            .sum();
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        row_ptr.push(0usize);
+        for (_, rows) in &blocks {
+            for r in rows {
+                col_idx.extend_from_slice(&r.cols);
+                vals.extend_from_slice(&r.vals);
+                row_ptr.push(col_idx.len());
+                row_scale.push(r.scale);
+            }
+        }
+        debug_assert_eq!(row_scale.len(), n_rows);
+
+        // CSC transpose by counting sort: scanning the CSR rows in
+        // ascending order fills each column's entry list in ascending
+        // row order — the property the adjoint's determinism argument
+        // rests on.
+        let mut col_count = vec![0usize; n_cols + 1];
+        for &c in &col_idx {
+            col_count[c as usize + 1] += 1;
+        }
+        for c in 0..n_cols {
+            col_count[c + 1] += col_count[c];
+        }
+        let col_ptr = col_count.clone();
+        let mut cursor = col_count;
+        let mut t_row = vec![0u32; nnz];
+        let mut t_val = vec![0.0f32; nnz];
+        for r in 0..n_rows {
+            let scale = row_scale[r];
+            for e in row_ptr[r]..row_ptr[r + 1] {
+                let c = col_idx[e] as usize;
+                let slot = cursor[c];
+                cursor[c] += 1;
+                t_row[slot] = r as u32;
+                t_val[slot] = vals[e] * scale;
+            }
+        }
+
+        Self {
+            n_rows,
+            n_cols,
+            row_ptr,
+            col_idx,
+            vals,
+            row_scale,
+            col_ptr,
+            t_row,
+            t_val,
+        }
+    }
+
+    /// Number of matrix rows (detector pixels of the unit).
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Number of matrix columns (voxels of the unit).
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Approximate heap footprint of the shard (CSR + CSC sides), used
+    /// for the shard cache's byte budget.
+    pub fn bytes(&self) -> u64 {
+        let nnz = self.nnz() as u64;
+        // CSR: col_idx(u32) + vals(f32); CSC: t_row(u32) + t_val(f32);
+        // pointers: row_ptr + col_ptr (usize) + row_scale (f32).
+        nnz * 16
+            + (self.row_ptr.len() + self.col_ptr.len()) as u64 * 8
+            + self.row_scale.len() as u64 * 4
+    }
+
+    /// Forward projection `out = A·x` (every element overwritten), the
+    /// SpMV replacement for [`crate::kernels::siddon::project_into`].
+    ///
+    /// `vol` must match the geometry the matrix was built from; `out`
+    /// has the standard `(a·nv + iv)·nu + iu` projection layout. Output
+    /// is bit-identical to the Siddon kernel for any `threads`.
+    pub fn project_into(&self, vol: &VolumeSlabView<'_>, out: &mut [f32], threads: usize) {
+        assert_eq!(vol.data.len(), self.n_cols, "volume does not match matrix");
+        assert_eq!(out.len(), self.n_rows, "output length mismatch");
+        let x = vol.data;
+        let ptr = SendPtr(out.as_mut_ptr());
+        parallel_for(self.n_rows, threads, 64, |r0, r1| {
+            let ptr = ptr; // copy the Send wrapper into the closure
+            for r in r0..r1 {
+                let mut acc = 0.0f32;
+                for e in self.row_ptr[r]..self.row_ptr[r + 1] {
+                    // SAFETY: e < nnz by the row_ptr invariant and every
+                    // stored column index is < n_cols == x.len() (written
+                    // by trace_row from in-bounds voxel walks).
+                    acc += unsafe {
+                        *self.vals.get_unchecked(e)
+                            * *x.get_unchecked(*self.col_idx.get_unchecked(e) as usize)
+                    };
+                }
+                // SAFETY: parallel_for hands each task a disjoint row
+                // range and r < n_rows == out.len().
+                unsafe {
+                    *ptr.0.add(r) = acc * *self.row_scale.get_unchecked(r);
+                }
+            }
+        });
+    }
+
+    /// Matched backprojection `out += Aᵀ·y`, the SpMVᵀ replacement for
+    /// the voxel-driven backprojector when the sparse backend is active.
+    ///
+    /// Accumulates into `out` (the executor's per-device volume buffer),
+    /// one voxel per column. Each voxel's incident rays are folded in
+    /// ascending global row order regardless of `threads`, so the result
+    /// is deterministic for any thread count.
+    pub fn backproject_into(&self, proj: &ProjChunkView<'_>, out: &mut [f32], threads: usize) {
+        assert_eq!(proj.data.len(), self.n_rows, "projections do not match matrix");
+        assert_eq!(out.len(), self.n_cols, "output length mismatch");
+        let y = proj.data;
+        let ptr = SendPtr(out.as_mut_ptr());
+        parallel_for(self.n_cols, threads, 256, |c0, c1| {
+            let ptr = ptr; // copy the Send wrapper into the closure
+            for c in c0..c1 {
+                let mut acc = 0.0f32;
+                for e in self.col_ptr[c]..self.col_ptr[c + 1] {
+                    // SAFETY: e < nnz by the col_ptr invariant and every
+                    // stored row index is < n_rows == y.len().
+                    acc += unsafe {
+                        *self.t_val.get_unchecked(e)
+                            * *y.get_unchecked(*self.t_row.get_unchecked(e) as usize)
+                    };
+                }
+                // SAFETY: parallel_for hands each task a disjoint column
+                // range and c < n_cols == out.len(); the read-modify-write
+                // races with no other task by that disjointness.
+                unsafe {
+                    *ptr.0.add(c) += acc;
+                }
+            }
+        });
+    }
+}
+
+impl std::fmt::Debug for SparseSystemMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SparseSystemMatrix")
+            .field("n_rows", &self.n_rows)
+            .field("n_cols", &self.n_cols)
+            .field("nnz", &self.nnz())
+            .finish()
+    }
+}
+
+/// Trace one ray and record its sparse footprint: the same clip / entry
+/// voxel / incremental-`t` walk as [`crate::kernels::siddon::raytrace`],
+/// but pushing `(voxel, (t_end − t) as f32)` instead of accumulating.
+/// The stored sequence replayed by [`SparseSystemMatrix::project_into`]
+/// reproduces `raytrace`'s f32 operations exactly.
+#[allow(clippy::too_many_arguments)]
+fn trace_row(
+    src: &[f64; 3],
+    dst: &[f64; 3],
+    lo: &[f64; 3],
+    hi: &[f64; 3],
+    dvox: &[f64; 3],
+    n: &[usize; 3],
+) -> RowBuild {
+    let empty = RowBuild {
+        cols: Vec::new(),
+        vals: Vec::new(),
+        // A missed ray contributes `0.0` in siddon; 0 entries × any
+        // scale reproduces that.
+        scale: 0.0,
+    };
+    let dir = [dst[0] - src[0], dst[1] - src[1], dst[2] - src[2]];
+    let len = (dir[0] * dir[0] + dir[1] * dir[1] + dir[2] * dir[2]).sqrt();
+    if len == 0.0 {
+        return empty;
+    }
+
+    let mut tmin = 0.0f64;
+    let mut tmax = 1.0f64;
+    for k in 0..3 {
+        if dir[k].abs() < 1e-12 {
+            if src[k] < lo[k] || src[k] > hi[k] {
+                return empty;
+            }
+        } else {
+            let inv = 1.0 / dir[k];
+            let t0 = (lo[k] - src[k]) * inv;
+            let t1 = (hi[k] - src[k]) * inv;
+            let (t0, t1) = if t0 <= t1 { (t0, t1) } else { (t1, t0) };
+            tmin = tmin.max(t0);
+            tmax = tmax.min(t1);
+        }
+    }
+    if tmin >= tmax {
+        return empty;
+    }
+
+    let eps = 1e-9;
+    let entry = [
+        src[0] + (tmin + eps) * dir[0],
+        src[1] + (tmin + eps) * dir[1],
+        src[2] + (tmin + eps) * dir[2],
+    ];
+    let mut ix = [0isize; 3];
+    for k in 0..3 {
+        let f = ((entry[k] - lo[k]) / dvox[k]).floor();
+        ix[k] = (f as isize).clamp(0, n[k] as isize - 1);
+    }
+
+    let mut t_next = [f64::INFINITY; 3];
+    let mut dt = [f64::INFINITY; 3];
+    let mut step = [0isize; 3];
+    for k in 0..3 {
+        if dir[k] > 1e-12 {
+            step[k] = 1;
+            let boundary = lo[k] + (ix[k] + 1) as f64 * dvox[k];
+            t_next[k] = (boundary - src[k]) / dir[k];
+            dt[k] = dvox[k] / dir[k];
+        } else if dir[k] < -1e-12 {
+            step[k] = -1;
+            let boundary = lo[k] + ix[k] as f64 * dvox[k];
+            t_next[k] = (boundary - src[k]) / dir[k];
+            dt[k] = -dvox[k] / dir[k];
+        }
+    }
+
+    let nx = n[0] as isize;
+    let ny = n[1] as isize;
+    let bound = [nx, ny, n[2] as isize];
+    let stride = [1isize, nx, nx * ny];
+    let istep = [
+        step[0] * stride[0],
+        step[1] * stride[1],
+        step[2] * stride[2],
+    ];
+    let mut idx = (ix[2] * ny + ix[1]) * nx + ix[0];
+
+    let mut t = tmin;
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    loop {
+        let (axis, tn) = {
+            let mut axis = 0;
+            let mut tn = t_next[0];
+            if t_next[1] < tn {
+                axis = 1;
+                tn = t_next[1];
+            }
+            if t_next[2] < tn {
+                axis = 2;
+                tn = t_next[2];
+            }
+            (axis, tn)
+        };
+        let t_end = tn.min(tmax);
+        if t_end > t {
+            cols.push(idx as u32);
+            vals.push((t_end - t) as f32);
+            t = t_end;
+        }
+        if tn >= tmax {
+            break;
+        }
+        ix[axis] += step[axis];
+        if ix[axis] < 0 || ix[axis] >= bound[axis] {
+            break;
+        }
+        idx += istep[axis];
+        t_next[axis] += dt[axis];
+    }
+    RowBuild {
+        cols,
+        vals,
+        scale: len as f32,
+    }
+}
+
+/// Stable 64-bit fingerprint of a geometry (FNV-1a over its dimensions
+/// and the exact bit patterns of every f64 field, including the angle
+/// list). Two geometries fingerprint equal iff the Siddon traversal —
+/// and therefore the built shard — is identical, which is what makes
+/// this the shard-cache key: each splitter-emitted slab×chunk unit's
+/// sub-geometry is fully determined by the `(geometry, plan)` pair.
+pub fn geometry_fingerprint(g: &Geometry) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    mix(g.dsd.to_bits());
+    mix(g.dso.to_bits());
+    for v in g.n_vox {
+        mix(v as u64);
+    }
+    for v in g.d_vox {
+        mix(v.to_bits());
+    }
+    for v in g.offset_origin {
+        mix(v.to_bits());
+    }
+    for v in g.n_det {
+        mix(v as u64);
+    }
+    for v in g.d_det {
+        mix(v.to_bits());
+    }
+    for v in g.offset_det {
+        mix(v.to_bits());
+    }
+    mix(g.angles.len() as u64);
+    for a in &g.angles {
+        mix(a.to_bits());
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{self, siddon, Projector};
+    use crate::phantom;
+
+    #[test]
+    fn sparse_fp_bit_identical_to_siddon() {
+        // The core parity claim: SpMV replays the Siddon traversal's f32
+        // operations exactly, so the projections match bit for bit.
+        let n = 20;
+        let g = Geometry::cone_beam(n, 6);
+        let v = phantom::shepp_logan(n);
+        let m = SparseSystemMatrix::build(&g, 2);
+        let mut spmv = vec![0.0f32; m.n_rows()];
+        m.project_into(&v.as_view(), &mut spmv, 2);
+        let ray = kernels::forward(&g, &v, Projector::Siddon, 2);
+        assert_eq!(spmv, ray.data);
+    }
+
+    #[test]
+    fn sparse_fp_bit_identical_on_slab_and_chunk_geometries() {
+        // Shards cover splitter-emitted slab×chunk sub-geometries; the
+        // parity must hold there too (that is what the executor runs).
+        let n = 18;
+        let g = Geometry::cone_beam(n, 8);
+        let v = phantom::shepp_logan(n);
+        let gs = g.slab_geometry(5, 13).angle_chunk_geometry(2, 6);
+        let view = v.slab_view(5, 13);
+        let m = SparseSystemMatrix::build(&gs, 3);
+        let mut spmv = vec![0.0f32; m.n_rows()];
+        m.project_into(&view, &mut spmv, 3);
+        let mut ray = vec![0.0f32; spmv.len()];
+        siddon::project_into(&gs, &view, &mut ray, 3);
+        assert_eq!(spmv, ray);
+    }
+
+    #[test]
+    fn build_is_thread_count_invariant() {
+        let g = Geometry::cone_beam(14, 5);
+        let a = SparseSystemMatrix::build(&g, 1);
+        let b = SparseSystemMatrix::build(&g, 4);
+        assert_eq!(a.row_ptr, b.row_ptr);
+        assert_eq!(a.col_idx, b.col_idx);
+        assert_eq!(a.vals, b.vals);
+        assert_eq!(a.row_scale, b.row_scale);
+        assert_eq!(a.t_row, b.t_row);
+        assert_eq!(a.t_val, b.t_val);
+    }
+
+    #[test]
+    fn apply_is_thread_count_invariant() {
+        let n = 16;
+        let g = Geometry::cone_beam(n, 5);
+        let v = phantom::shepp_logan(n);
+        let m = SparseSystemMatrix::build(&g, 2);
+        let mut p1 = vec![0.0f32; m.n_rows()];
+        let mut p4 = vec![0.0f32; m.n_rows()];
+        m.project_into(&v.as_view(), &mut p1, 1);
+        m.project_into(&v.as_view(), &mut p4, 4);
+        assert_eq!(p1, p4);
+
+        let proj = ProjChunkView {
+            nu: g.n_det[0],
+            nv: g.n_det[1],
+            n_angles: g.n_angles(),
+            data: &p1,
+        };
+        let mut b1 = vec![0.0f32; m.n_cols()];
+        let mut b4 = vec![0.0f32; m.n_cols()];
+        m.backproject_into(&proj, &mut b1, 1);
+        m.backproject_into(&proj, &mut b4, 4);
+        assert_eq!(b1, b4);
+    }
+
+    #[test]
+    fn transpose_rows_ascend_within_each_column() {
+        let g = Geometry::cone_beam(12, 4);
+        let m = SparseSystemMatrix::build(&g, 2);
+        for c in 0..m.n_cols() {
+            let rows = &m.t_row[m.col_ptr[c]..m.col_ptr[c + 1]];
+            assert!(rows.windows(2).all(|w| w[0] < w[1]), "column {c} not sorted");
+        }
+    }
+
+    #[test]
+    fn backprojection_is_the_adjoint() {
+        // ⟨A·x, y⟩ == ⟨x, Aᵀ·y⟩ up to f32 rounding: the defining property
+        // of the matched pair the iterative algorithms need.
+        let n = 14;
+        let g = Geometry::cone_beam(n, 6);
+        let x = phantom::shepp_logan(n);
+        let m = SparseSystemMatrix::build(&g, 2);
+        let mut ax = vec![0.0f32; m.n_rows()];
+        m.project_into(&x.as_view(), &mut ax, 2);
+        // A deterministic, non-trivial y.
+        let y: Vec<f32> = (0..m.n_rows())
+            .map(|i| ((i % 17) as f32 - 8.0) / 17.0)
+            .collect();
+        let proj = ProjChunkView {
+            nu: g.n_det[0],
+            nv: g.n_det[1],
+            n_angles: g.n_angles(),
+            data: &y,
+        };
+        let mut aty = vec![0.0f32; m.n_cols()];
+        m.backproject_into(&proj, &mut aty, 2);
+        let lhs: f64 = ax.iter().zip(&y).map(|(a, b)| *a as f64 * *b as f64).sum();
+        let rhs: f64 = aty
+            .iter()
+            .zip(&x.data)
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum();
+        let denom = lhs.abs().max(rhs.abs()).max(1e-12);
+        assert!(
+            ((lhs - rhs) / denom).abs() < 1e-4,
+            "adjoint identity violated: {lhs} vs {rhs}"
+        );
+    }
+
+    #[test]
+    fn backprojection_accumulates_into_out() {
+        let g = Geometry::cone_beam(10, 3);
+        let m = SparseSystemMatrix::build(&g, 1);
+        let y = vec![1.0f32; m.n_rows()];
+        let proj = ProjChunkView {
+            nu: g.n_det[0],
+            nv: g.n_det[1],
+            n_angles: g.n_angles(),
+            data: &y,
+        };
+        let mut once = vec![0.0f32; m.n_cols()];
+        m.backproject_into(&proj, &mut once, 1);
+        let mut twice = vec![0.0f32; m.n_cols()];
+        m.backproject_into(&proj, &mut twice, 1);
+        m.backproject_into(&proj, &mut twice, 1);
+        for (o, t) in once.iter().zip(&twice) {
+            assert_eq!(*t, o + o, "backproject_into must accumulate");
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_slabs_and_chunks() {
+        let g = Geometry::cone_beam(16, 8);
+        let a = geometry_fingerprint(&g.slab_geometry(0, 8));
+        let b = geometry_fingerprint(&g.slab_geometry(8, 16));
+        let c = geometry_fingerprint(&g.slab_geometry(0, 8).angle_chunk_geometry(0, 4));
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, geometry_fingerprint(&g.slab_geometry(0, 8)));
+    }
+
+    #[test]
+    fn bytes_reflects_nnz() {
+        let g = Geometry::cone_beam(12, 4);
+        let m = SparseSystemMatrix::build(&g, 1);
+        assert!(m.nnz() > 0);
+        assert!(m.bytes() >= m.nnz() as u64 * 16);
+    }
+}

@@ -22,6 +22,7 @@
 //! paper-vs-measured record.
 
 #![warn(unreachable_pub, unused_qualifications)]
+#![warn(missing_docs)]
 
 pub mod util;
 

@@ -15,6 +15,7 @@ use crate::volume::Volume;
 /// An ellipsoid: centre, semi-axes, in-plane rotation, additive density.
 #[derive(Clone, Copy, Debug)]
 pub struct Ellipsoid {
+    /// Centre in normalized [-1, 1] coordinates.
     pub center: [f64; 3],
     /// Semi-axes (a, b, c) in normalized [-1, 1] coordinates.
     pub axes: [f64; 3],

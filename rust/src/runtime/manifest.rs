@@ -23,6 +23,7 @@ use crate::util::json::Json;
 /// Operator an artifact implements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ArtifactOp {
+    /// Forward projection (volume → projections).
     Forward,
     /// FDK-weighted backprojection.
     Backward,
@@ -33,20 +34,30 @@ pub enum ArtifactOp {
 /// One AOT-compiled module.
 #[derive(Clone, Debug)]
 pub struct ManifestEntry {
+    /// Artifact name (informational, e.g. `fp_n32_a8`).
     pub name: String,
+    /// Which operator the module implements.
     pub op: ArtifactOp,
+    /// Volume size in x.
     pub nx: usize,
+    /// Volume size in y.
     pub ny: usize,
+    /// Volume size in z.
     pub nz: usize,
+    /// Detector columns.
     pub nu: usize,
+    /// Detector rows.
     pub nv: usize,
+    /// Number of projection angles.
     pub angles: usize,
+    /// Path to the HLO text file, resolved against the manifest dir.
     pub file: PathBuf,
 }
 
 /// The parsed manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// All artifacts the manifest declares.
     pub entries: Vec<ManifestEntry>,
 }
 
@@ -62,6 +73,7 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Parse manifest JSON; `dir` anchors the per-entry file paths.
     pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
         let v = Json::parse(text)?;
         let version = v.get("version").and_then(Json::as_u64).unwrap_or(0);

@@ -30,6 +30,7 @@ pub mod pjrt {
     use crate::volume::{ProjectionSet, Volume};
     use std::path::Path;
 
+    /// Always `Ok(None)` ("no artifact") in featureless builds.
     pub fn try_forward(
         _dir: &Path,
         _g: &Geometry,
@@ -38,6 +39,7 @@ pub mod pjrt {
         Ok(None)
     }
 
+    /// Always `Ok(None)` ("no artifact") in featureless builds.
     pub fn try_backward(
         _dir: &Path,
         _g: &Geometry,

@@ -51,8 +51,9 @@ pub struct CostModel {
     pub accum_bps: f64,
     /// Kernel launch overhead.
     pub kernel_launch_s: f64,
-    /// cudaMalloc/cudaFree latency.
+    /// cudaMalloc latency per call.
     pub alloc_latency_s: f64,
+    /// cudaFree latency per call.
     pub free_latency_s: f64,
     /// Per-device property check (cudaGetDeviceProperties etc.), charged
     /// once per operator call.
@@ -82,6 +83,22 @@ pub struct CostModel {
     /// Host time to replan a lost device's remaining units across the
     /// survivors (`splitter::replan_excluding`), charged once per loss.
     pub fault_replan_s: f64,
+    /// Sparse system-matrix build throughput (stored non-zeros / s):
+    /// the one-time Siddon traversal **plus** CSR push and CSC
+    /// transpose assembly per entry — several times slower per
+    /// intersection than the pure ray-driven kernel, which is exactly
+    /// the setup cost the SpMV iterations amortize (ISSUE 10,
+    /// Marchesini et al. 2020).
+    pub sparse_build_nnz_per_s: f64,
+    /// CSR SpMV throughput (non-zeros / s) for the sparse forward
+    /// projection. Streaming and memory-bound — no per-ray f64 setup,
+    /// no traversal branching — so substantially faster per
+    /// intersection than `fp_steps_per_s`.
+    pub spmv_nnz_per_s: f64,
+    /// CSC SpMVᵀ throughput (non-zeros / s) for the sparse matched
+    /// backprojection; slightly below the SpMV rate (the transpose
+    /// gathers along the less cache-friendly axis).
+    pub spmvt_nnz_per_s: f64,
     /// Hung-unit watchdog deadline as a multiple of the predicted unit
     /// time: a launch that has not completed after
     /// `predicted × watchdog_factor` seconds is declared hung, cancelled
@@ -124,6 +141,17 @@ impl CostModel {
             // ~5 ms to rebuild the unit queues after a device drops out
             fault_retry_backoff_s: 1.0e-3,
             fault_replan_s: 5.0e-3,
+            // sparse backend (ISSUE 10): the build walks the same rays
+            // as the FP kernel but pays vector pushes + a counting-sort
+            // transpose per entry (~5× the traversal's per-step cost);
+            // the SpMV replays entries at streaming rates — ~3× the
+            // ray-driven per-intersection throughput for CSR, a bit
+            // less for the transpose gather. These give a crossover of
+            // ≈7–8 iterations (`sparse_crossover_iters`), comfortably
+            // inside a 15-iteration CGLS run.
+            sparse_build_nnz_per_s: 8.0e9,
+            spmv_nnz_per_s: 1.2e11,
+            spmvt_nnz_per_s: 1.0e11,
             // generous 8× deadline: slab kernels vary ~1.3× with cone
             // overreach, so 8× never false-positives on a healthy unit
             // while still bounding a stuck launch to one order of
@@ -233,6 +261,73 @@ impl CostModel {
         (nx * ny * nz_slab) as f64 * angles as f64 / self.bp_updates_per_s
     }
 
+    /// Estimated stored non-zeros of one slab×chunk unit's sparse
+    /// shard: the same effective ray count × chord arithmetic as
+    /// [`CostModel::fp_slab_kernel_s`] (each ray-voxel step of the
+    /// traversal stores exactly one matrix entry).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sparse_nnz_estimate(
+        &self,
+        nu: usize,
+        nv: usize,
+        angles: usize,
+        nx: usize,
+        ny: usize,
+        nz_slab: usize,
+        nz_full: usize,
+    ) -> f64 {
+        let frac = ((nz_slab as f64 / nz_full as f64) * 1.3).min(1.0);
+        let rays = (nu * nv * angles) as f64 * frac;
+        rays * 0.7 * (nx + ny) as f64
+    }
+
+    /// One-time build (traversal + CSR/CSC assembly) time for a shard
+    /// of `nnz` stored entries.
+    pub fn sparse_setup_s(&self, nnz: f64) -> f64 {
+        nnz / self.sparse_build_nnz_per_s
+    }
+
+    /// SpMV forward-projection kernel time for a shard of `nnz` entries.
+    pub fn spmv_s(&self, nnz: f64) -> f64 {
+        nnz / self.spmv_nnz_per_s
+    }
+
+    /// SpMVᵀ matched-backprojection kernel time for a shard of `nnz`
+    /// entries.
+    pub fn spmvt_s(&self, nnz: f64) -> f64 {
+        nnz / self.spmvt_nnz_per_s
+    }
+
+    /// Iteration count past which the sparse backend's one-time
+    /// `setup_s` has amortized against its per-iteration saving:
+    /// `setup / (ray_iter − sparse_iter)`. `None` when the sparse
+    /// iteration is not cheaper (the matrix never pays off). SimOnly
+    /// surfaces this so users can pick a projector per workload
+    /// (`tigre project --sim-only --projector sparse`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use tigre::simgpu::CostModel;
+    ///
+    /// let cost = CostModel::gtx1080ti_pcie3();
+    /// // A 3 s build that saves 0.5 s per iteration pays off after
+    /// // 6 iterations; a slower-than-ray SpMV never does.
+    /// assert_eq!(cost.sparse_crossover_iters(1.0, 0.5, 3.0), Some(6.0));
+    /// assert_eq!(cost.sparse_crossover_iters(1.0, 1.5, 3.0), None);
+    /// ```
+    pub fn sparse_crossover_iters(
+        &self,
+        ray_iter_s: f64,
+        sparse_iter_s: f64,
+        setup_s: f64,
+    ) -> Option<f64> {
+        if sparse_iter_s >= ray_iter_s {
+            return None;
+        }
+        Some(setup_s / (ray_iter_s - sparse_iter_s))
+    }
+
     /// Accumulation kernel time for `bytes` of partial projections.
     pub fn accum_kernel_s(&self, bytes: u64) -> f64 {
         bytes as f64 / self.accum_bps
@@ -339,6 +434,36 @@ mod tests {
         assert!((c.watchdog_deadline_s(t) - t * c.watchdog_factor).abs() < 1e-12);
         // the deadline must clear the slab-fraction overreach band (1.3×)
         assert!(c.watchdog_factor > 2.0);
+    }
+
+    #[test]
+    fn sparse_crossover_in_single_digit_iterations() {
+        // ISSUE 10 calibration: SpMV beats the ray-driven kernel per
+        // iteration, the build costs a handful of FPs, and the
+        // crossover lands inside a typical 15-iteration CGLS run.
+        let c = CostModel::gtx1080ti_pcie3();
+        let nnz = c.sparse_nnz_estimate(512, 512, 512, 512, 512, 512, 512);
+        let ray = c.fp_slab_kernel_s(512, 512, 512, 512, 512, 512, 512);
+        let spmv = c.spmv_s(nnz);
+        let setup = c.sparse_setup_s(nnz);
+        assert!(spmv < ray, "SpMV {spmv} must beat ray-driven {ray}");
+        assert!(setup > ray, "the build must cost more than one FP");
+        let k = c.sparse_crossover_iters(ray, spmv, setup).unwrap();
+        assert!((3.0..12.0).contains(&k), "crossover {k} iterations");
+        // a sparse iteration that is *slower* never pays off
+        assert!(c.sparse_crossover_iters(1.0, 1.0, 5.0).is_none());
+        assert!(c.sparse_crossover_iters(1.0, 2.0, 5.0).is_none());
+    }
+
+    #[test]
+    fn sparse_nnz_tracks_fp_work_estimate() {
+        // One stored entry per ray-voxel step: nnz / fp throughput must
+        // reproduce the ray-driven kernel-time estimate exactly.
+        let c = CostModel::gtx1080ti_pcie3();
+        let nnz = c.sparse_nnz_estimate(256, 256, 9, 256, 256, 64, 256);
+        let fp = c.fp_slab_kernel_s(256, 256, 9, 256, 256, 64, 256);
+        assert!((nnz / c.fp_steps_per_s - fp).abs() < 1e-12);
+        assert!(c.spmvt_s(nnz) > c.spmv_s(nnz), "transpose gather is slower");
     }
 
     #[test]

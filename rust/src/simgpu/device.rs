@@ -7,6 +7,7 @@ use crate::util::units::{fmt_bytes, GIB};
 /// Static description of a simulated GPU.
 #[derive(Clone, Debug)]
 pub struct GpuSpec {
+    /// Human-readable device name (reports and traces).
     pub name: String,
     /// Device RAM capacity in bytes.
     pub mem_bytes: u64,
@@ -35,14 +36,17 @@ pub struct DeviceMem {
 }
 
 impl DeviceMem {
+    /// Empty ledger for a device of the given spec.
     pub fn new(spec: GpuSpec) -> Self {
         Self { spec, allocs: BTreeMap::new(), used: 0, peak: 0 }
     }
 
+    /// Device RAM capacity in bytes.
     pub fn capacity(&self) -> u64 {
         self.spec.mem_bytes
     }
 
+    /// Bytes currently allocated.
     pub fn used(&self) -> u64 {
         self.used
     }
@@ -53,6 +57,7 @@ impl DeviceMem {
         self.peak
     }
 
+    /// Bytes still available (capacity − used).
     pub fn free_bytes(&self) -> u64 {
         self.capacity() - self.used
     }
@@ -83,6 +88,7 @@ impl DeviceMem {
         }
     }
 
+    /// Size of the named allocation, if it exists.
     pub fn get(&self, label: &str) -> Option<u64> {
         self.allocs.get(label).copied()
     }

@@ -62,8 +62,11 @@ pub enum FaultKind {
 /// counted from the operator entry (`begin_op`).
 #[derive(Clone, Debug)]
 pub struct FaultSite {
+    /// What kind of failure to inject.
     pub kind: FaultKind,
+    /// Device index the site targets.
     pub device: usize,
+    /// Launch/alloc/disk ordinal at which the site fires.
     pub unit: usize,
     /// Restrict the site to one algorithm iteration (`set_iteration`);
     /// `None` arms it from the start.
@@ -77,7 +80,9 @@ pub struct FaultSite {
 /// scopes keep independent counters so a site fires once in each.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultScope {
+    /// The discrete-event simulated timeline.
     Sim,
+    /// The real host executor.
     Real,
 }
 
@@ -143,6 +148,7 @@ impl Default for FaultPlan {
 }
 
 impl FaultPlan {
+    /// Empty schedule (no faults).
     pub fn new() -> Self {
         Self {
             sites: Vec::new(),
@@ -273,6 +279,7 @@ impl FaultPlan {
         self
     }
 
+    /// All scheduled injection sites.
     pub fn sites(&self) -> &[FaultSite] {
         &self.sites
     }

@@ -61,8 +61,10 @@ impl std::error::Error for SimOom {}
 pub struct Ev(pub f64);
 
 impl Ev {
+    /// The start of virtual time — "no dependency".
     pub const ZERO: Ev = Ev(0.0);
 
+    /// Later of the two events (join of dependencies).
     pub fn max(self, other: Ev) -> Ev {
         Ev(self.0.max(other.0))
     }
@@ -71,14 +73,18 @@ impl Ev {
 /// Which engine of a device an operation occupies.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Engine {
+    /// Kernel execution engine (one compute queue per device).
     Compute,
+    /// Host→device DMA engine.
     H2D,
+    /// Device→host DMA engine.
     D2H,
 }
 
 /// The simulated node: host + `n` devices + virtual clocks.
 #[derive(Debug)]
 pub struct SimNode {
+    /// Calibrated latency/bandwidth constants driving all charges.
     pub cost: CostModel,
     devices: Vec<DeviceState>,
     /// Host thread availability time.
@@ -137,10 +143,12 @@ impl SimNode {
         self.fault = Some(plan);
     }
 
+    /// Number of simulated devices in the node.
     pub fn n_devices(&self) -> usize {
         self.devices.len()
     }
 
+    /// Memory ledger of device `dev`.
     pub fn device_mem(&self, dev: usize) -> &DeviceMem {
         &self.devices[dev].mem
     }

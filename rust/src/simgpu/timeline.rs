@@ -19,13 +19,18 @@ pub enum Category {
 pub struct TimelineEvent {
     /// Device index, or `None` for host-only operations (pin/unpin …).
     pub device: Option<usize>,
+    /// Which Fig.-9 bin the operation belongs to.
     pub category: Category,
+    /// Start time in simulated seconds.
     pub t_start: f64,
+    /// End time in simulated seconds.
     pub t_end: f64,
+    /// Human-readable label (kernel/copy name) for traces.
     pub label: String,
 }
 
 impl TimelineEvent {
+    /// Event length in simulated seconds.
     pub fn duration(&self) -> f64 {
         self.t_end - self.t_start
     }
@@ -42,17 +47,23 @@ impl TimelineEvent {
 /// happen concurrently"; only *exposed* memory time counts as memory.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Breakdown {
+    /// Seconds with at least one compute engine busy.
     pub compute: f64,
+    /// Exposed (non-overlapped) pin/unpin seconds.
     pub pin: f64,
+    /// Exposed memory-operation seconds.
     pub othermem: f64,
+    /// Seconds with nothing happening.
     pub idle: f64,
 }
 
 impl Breakdown {
+    /// Sum of all four bins — the makespan.
     pub fn total(&self) -> f64 {
         self.compute + self.pin + self.othermem + self.idle
     }
 
+    /// `(compute, pin, othermem, idle)` as fractions of the makespan.
     pub fn fractions(&self) -> (f64, f64, f64, f64) {
         let t = self.total().max(1e-300);
         (self.compute / t, self.pin / t, self.othermem / t, self.idle / t)

@@ -9,9 +9,13 @@ use std::collections::BTreeMap;
 /// Declared option (always `--name <value>` unless `is_flag`).
 #[derive(Clone, Debug)]
 pub struct OptSpec {
+    /// Option name without the leading `--`.
     pub name: &'static str,
+    /// One-line description shown in `--help` output.
     pub help: &'static str,
+    /// Value used when the option is not given (valued options only).
     pub default: Option<String>,
+    /// True for boolean `--flag` options that take no value.
     pub is_flag: bool,
 }
 
@@ -25,10 +29,12 @@ pub struct Args {
 }
 
 impl Args {
+    /// Raw string value of `--name` (default applied), if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name` parsed as an integer; `Err` on a malformed value.
     pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
         match self.get(name) {
             None => Ok(None),
@@ -38,6 +44,7 @@ impl Args {
         }
     }
 
+    /// Value of `--name` parsed as a float; `Err` on a malformed value.
     pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
         match self.get(name) {
             None => Ok(None),
@@ -63,6 +70,7 @@ impl Args {
         }
     }
 
+    /// True when the boolean `--name` flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -70,16 +78,21 @@ impl Args {
 
 /// A subcommand with declared options.
 pub struct Command {
+    /// Subcommand name as typed on the command line.
     pub name: &'static str,
+    /// One-line description shown in usage output.
     pub about: &'static str,
+    /// Declared options, in declaration order.
     pub opts: Vec<OptSpec>,
 }
 
 impl Command {
+    /// New subcommand with no options declared yet.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Self { name, about, opts: Vec::new() }
     }
 
+    /// Declare a valued option `--name <v>` (builder style).
     pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&str>) -> Self {
         self.opts.push(OptSpec {
             name,
@@ -90,6 +103,7 @@ impl Command {
         self
     }
 
+    /// Declare a boolean flag `--name` (builder style).
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, default: None, is_flag: true });
         self
@@ -129,6 +143,7 @@ impl Command {
         Ok(args)
     }
 
+    /// Render the usage/help text for this subcommand.
     pub fn usage(&self) -> String {
         let mut s = format!("usage: tigre {} [options]\n  {}\noptions:\n", self.name, self.about);
         for o in &self.opts {

@@ -12,18 +12,26 @@ use std::fmt;
 /// deterministic, which keeps golden-file tests stable.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// The `null` literal.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (integers included — JSON has one numeric type).
     Num(f64),
+    /// A string, unescaped.
     Str(String),
+    /// An ordered array of values.
     Arr(Vec<Json>),
+    /// An object; keys sorted for deterministic emission.
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset for diagnostics.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset into the source text where parsing failed.
     pub offset: usize,
+    /// Human-readable description of what was expected.
     pub msg: String,
 }
 
@@ -38,24 +46,29 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ---- constructors -------------------------------------------------
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array value.
     pub fn arr(items: Vec<Json>) -> Json {
         Json::Arr(items)
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build a numeric value.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
 
     // ---- accessors -----------------------------------------------------
 
+    /// The numeric value, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -63,6 +76,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer (rejects fractional numbers).
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|f| {
             if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
@@ -73,10 +87,12 @@ impl Json {
         })
     }
 
+    /// [`Self::as_u64`] narrowed to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
     }
 
+    /// The string contents, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -84,6 +100,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a [`Json::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -91,6 +108,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is a [`Json::Arr`].
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -98,6 +116,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is a [`Json::Obj`].
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -112,6 +131,7 @@ impl Json {
 
     // ---- parsing -------------------------------------------------------
 
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();

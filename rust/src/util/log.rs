@@ -5,10 +5,15 @@ use std::sync::atomic::{AtomicU8, Ordering};
 /// Log levels, ordered by verbosity.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable problems only.
     Error = 0,
+    /// Degraded-but-continuing conditions.
     Warn = 1,
+    /// High-level progress (the default).
     Info = 2,
+    /// Per-operator-call detail.
     Debug = 3,
+    /// Per-chunk detail.
     Trace = 4,
 }
 
@@ -49,26 +54,31 @@ pub fn emit(l: Level, args: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Log at [`util::log::Level::Info`](crate::util::log::Level::Info) with `format!` syntax.
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($arg)*)) };
 }
 
+/// Log at [`util::log::Level::Warn`](crate::util::log::Level::Warn) with `format!` syntax.
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($arg)*)) };
 }
 
+/// Log at [`util::log::Level::Error`](crate::util::log::Level::Error) with `format!` syntax.
 #[macro_export]
 macro_rules! log_error {
     ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Error, format_args!($($arg)*)) };
 }
 
+/// Log at [`util::log::Level::Debug`](crate::util::log::Level::Debug) with `format!` syntax.
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($arg)*)) };
 }
 
+/// Log at [`util::log::Level::Trace`](crate::util::log::Level::Trace) with `format!` syntax.
 #[macro_export]
 macro_rules! log_trace {
     ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Trace, format_args!($($arg)*)) };

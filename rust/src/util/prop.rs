@@ -68,6 +68,7 @@ impl Gen {
         lo + (hi - lo) * self.rng.next_f32()
     }
 
+    /// Fair coin flip. Not shrunk.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u32() & 1 == 1
     }

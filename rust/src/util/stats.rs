@@ -17,26 +17,32 @@ pub struct Samples {
 }
 
 impl Samples {
+    /// Empty sample set.
     pub fn new() -> Self {
         Self { values: Vec::new() }
     }
 
+    /// Wrap an existing vector of observations.
     pub fn from(values: Vec<f64>) -> Self {
         Self { values }
     }
 
+    /// Record one observation.
     pub fn push(&mut self, v: f64) {
         self.values.push(v);
     }
 
+    /// Number of observations recorded so far.
     pub fn len(&self) -> usize {
         self.values.len()
     }
 
+    /// True when no observations have been recorded.
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.values.is_empty() {
             return f64::NAN;
@@ -44,6 +50,7 @@ impl Samples {
         self.values.iter().sum::<f64>() / self.values.len() as f64
     }
 
+    /// Sample standard deviation (Bessel-corrected; 0 for fewer than 2 samples).
     pub fn stddev(&self) -> f64 {
         let n = self.values.len();
         if n < 2 {
@@ -53,10 +60,12 @@ impl Samples {
         (self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
 
+    /// Smallest observation (+∞ when empty).
     pub fn min(&self) -> f64 {
         self.values.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest observation (−∞ when empty).
     pub fn max(&self) -> f64 {
         self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
@@ -78,6 +87,7 @@ impl Samples {
         }
     }
 
+    /// Median (50th percentile).
     pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }
@@ -86,7 +96,9 @@ impl Samples {
 /// Result of a [`bench`] run.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Bench name as passed to [`bench`].
     pub name: String,
+    /// Per-iteration wall-clock durations in seconds.
     pub samples: Samples,
 }
 
@@ -153,15 +165,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// New table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row; panics if the cell count differs from the header count.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Render the table as right-aligned markdown-style text.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {

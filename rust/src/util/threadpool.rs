@@ -98,6 +98,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn a pool with `workers` threads (at least one).
     pub fn new(workers: usize) -> Self {
         let workers = workers.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -272,6 +273,7 @@ pub struct ScopedHandle<'scope, T> {
 }
 
 impl<T> ScopedHandle<'_, T> {
+    /// Block until the job finishes; `Err(payload)` if it panicked.
     pub fn join(self) -> thread::Result<T> {
         let (lock, cvar) = &*self.state;
         let mut slot = lock.lock().unwrap_or_else(|e| e.into_inner());

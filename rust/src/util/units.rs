@@ -1,8 +1,10 @@
 //! Byte-size units and formatting helpers.
 
-/// Bytes per KiB/MiB/GiB.
+/// Bytes per KiB.
 pub const KIB: u64 = 1024;
+/// Bytes per MiB.
 pub const MIB: u64 = 1024 * KIB;
+/// Bytes per GiB.
 pub const GIB: u64 = 1024 * MIB;
 
 /// Size of one f32 element.

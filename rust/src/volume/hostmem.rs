@@ -21,8 +21,10 @@ pub enum MemState {
 /// A pin or unpin event, for cost accounting.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PinEvent {
+    /// Size of the allocation whose state changed.
     pub bytes: u64,
-    pub pin: bool, // true = pin, false = unpin
+    /// True for a pin, false for an unpin.
+    pub pin: bool,
 }
 
 /// Typed misuse errors for the pin/unpin state machine. Double-pinning
@@ -60,6 +62,7 @@ pub struct HostMemRegistry {
 }
 
 impl HostMemRegistry {
+    /// Empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -70,14 +73,17 @@ impl HostMemRegistry {
         self.allocs.insert(name.to_string(), (bytes, MemState::Pageable));
     }
 
+    /// Drop an allocation (unknown names are a no-op).
     pub fn free(&mut self, name: &str) {
         self.allocs.remove(name);
     }
 
+    /// Current pin state of the named allocation, if registered.
     pub fn state(&self, name: &str) -> Option<MemState> {
         self.allocs.get(name).map(|(_, s)| *s)
     }
 
+    /// Size of the named allocation, if registered.
     pub fn bytes(&self, name: &str) -> Option<u64> {
         self.allocs.get(name).map(|(b, _)| *b)
     }

@@ -29,21 +29,28 @@ fn next_tracked_id() -> u64 {
 /// A 3-D image volume of f32 attenuation values.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Volume {
+    /// Voxels along x (fastest-varying index).
     pub nx: usize,
+    /// Voxels along y.
     pub ny: usize,
+    /// Voxels along z (slowest-varying index).
     pub nz: usize,
+    /// Voxel values, layout `data[(z*ny + y)*nx + x]`.
     pub data: Vec<f32>,
 }
 
 impl Volume {
+    /// All-zero volume of the given shape.
     pub fn zeros(nx: usize, ny: usize, nz: usize) -> Self {
         Self { nx, ny, nz, data: vec![0.0; nx * ny * nz] }
     }
 
+    /// All-zero volume shaped to a geometry's voxel grid.
     pub fn zeros_like(g: &Geometry) -> Self {
         Self::zeros(g.n_vox[0], g.n_vox[1], g.n_vox[2])
     }
 
+    /// Volume filled by evaluating `f(x, y, z)` at every voxel.
     pub fn from_fn(nx: usize, ny: usize, nz: usize, f: impl Fn(usize, usize, usize) -> f32) -> Self {
         let mut v = Self::zeros(nx, ny, nz);
         for z in 0..nz {
@@ -56,30 +63,36 @@ impl Volume {
         v
     }
 
+    /// Linear index of voxel `(x, y, z)`.
     #[inline(always)]
     pub fn idx(&self, x: usize, y: usize, z: usize) -> usize {
         (z * self.ny + y) * self.nx + x
     }
 
+    /// Value at voxel `(x, y, z)`.
     #[inline(always)]
     pub fn at(&self, x: usize, y: usize, z: usize) -> f32 {
         self.data[self.idx(x, y, z)]
     }
 
+    /// Mutable reference to voxel `(x, y, z)`.
     #[inline(always)]
     pub fn at_mut(&mut self, x: usize, y: usize, z: usize) -> &mut f32 {
         let i = self.idx(x, y, z);
         &mut self.data[i]
     }
 
+    /// Total voxel count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True for a zero-voxel volume.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Storage size in bytes (f32 voxels).
     pub fn bytes(&self) -> u64 {
         self.data.len() as u64 * 4
     }
@@ -123,12 +136,14 @@ impl Volume {
 
     // -- elementwise math used by the algorithms -------------------------
 
+    /// Multiply every voxel by `s`.
     pub fn scale(&mut self, s: f32) {
         for v in &mut self.data {
             *v *= s;
         }
     }
 
+    /// `self += s * other` (AXPY), elementwise.
     pub fn add_scaled(&mut self, other: &Volume, s: f32) {
         assert_eq!(self.data.len(), other.data.len());
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -136,6 +151,7 @@ impl Volume {
         }
     }
 
+    /// Clamp every voxel to at least `lo` (nonnegativity projection).
     pub fn clamp_min(&mut self, lo: f32) {
         for v in &mut self.data {
             if *v < lo {
@@ -144,11 +160,13 @@ impl Volume {
         }
     }
 
+    /// Inner product in f64 accumulation.
     pub fn dot(&self, other: &Volume) -> f64 {
         assert_eq!(self.data.len(), other.data.len());
         self.data.iter().zip(&other.data).map(|(a, b)| *a as f64 * *b as f64).sum()
     }
 
+    /// Euclidean norm in f64 accumulation.
     pub fn norm2(&self) -> f64 {
         self.data.iter().map(|v| *v as f64 * *v as f64).sum::<f64>().sqrt()
     }
@@ -167,17 +185,23 @@ impl Volume {
 /// no kernel code changes between owned and borrowed inputs.
 #[derive(Clone, Copy, Debug)]
 pub struct VolumeSlabView<'a> {
+    /// Voxels along x.
     pub nx: usize,
+    /// Voxels along y.
     pub ny: usize,
+    /// Slices in the slab (not the parent volume's full z).
     pub nz: usize,
+    /// Borrowed contiguous slab storage.
     pub data: &'a [f32],
 }
 
 impl VolumeSlabView<'_> {
+    /// Voxel count of the slab.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the slab covers no voxels.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -193,17 +217,23 @@ impl VolumeSlabView<'_> {
 /// for backprojection inputs (angle-slowest layout ⇒ one contiguous range).
 #[derive(Clone, Copy, Debug)]
 pub struct ProjChunkView<'a> {
+    /// Detector columns.
     pub nu: usize,
+    /// Detector rows.
     pub nv: usize,
+    /// Angles in the chunk (not the parent set's full count).
     pub n_angles: usize,
+    /// Borrowed contiguous chunk storage.
     pub data: &'a [f32],
 }
 
 impl ProjChunkView<'_> {
+    /// Element count of the chunk.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the chunk covers no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -226,11 +256,14 @@ impl ProjChunkView<'_> {
 /// executor's loader lanes). `Copy`-cheap: both arms borrow.
 #[derive(Clone, Copy, Debug)]
 pub enum VolumeInput<'a> {
+    /// Host-resident volume, staged through zero-copy slab views.
     Ram(&'a Volume),
+    /// Out-of-core volume, slabs streamed from disk.
     Ooc(&'a OocVolume),
 }
 
 impl VolumeInput<'_> {
+    /// `(nx, ny, nz)` of the backing volume.
     pub fn dims(&self) -> (usize, usize, usize) {
         match self {
             VolumeInput::Ram(v) => (v.nx, v.ny, v.nz),
@@ -238,6 +271,7 @@ impl VolumeInput<'_> {
         }
     }
 
+    /// Logical size in bytes of the backing volume.
     pub fn bytes(&self) -> u64 {
         match self {
             VolumeInput::Ram(v) => v.bytes(),
@@ -245,6 +279,7 @@ impl VolumeInput<'_> {
         }
     }
 
+    /// True for the out-of-core arm.
     pub fn is_ooc(&self) -> bool {
         matches!(self, VolumeInput::Ooc(_))
     }
@@ -255,11 +290,14 @@ impl VolumeInput<'_> {
 /// disk). See [`VolumeInput`].
 #[derive(Clone, Copy, Debug)]
 pub enum ProjInput<'a> {
+    /// Host-resident projection set, staged through zero-copy chunk views.
     Ram(&'a ProjectionSet),
+    /// Out-of-core projection set, angle chunks streamed from disk.
     Ooc(&'a OocProjections),
 }
 
 impl ProjInput<'_> {
+    /// `(nu, nv, n_angles)` of the backing set.
     pub fn dims(&self) -> (usize, usize, usize) {
         match self {
             ProjInput::Ram(p) => (p.nu, p.nv, p.n_angles),
@@ -267,6 +305,7 @@ impl ProjInput<'_> {
         }
     }
 
+    /// Logical size in bytes of the backing set.
     pub fn bytes(&self) -> u64 {
         match self {
             ProjInput::Ram(p) => p.bytes(),
@@ -274,6 +313,7 @@ impl ProjInput<'_> {
         }
     }
 
+    /// True for the out-of-core arm.
     pub fn is_ooc(&self) -> bool {
         matches!(self, ProjInput::Ooc(_))
     }
@@ -317,6 +357,7 @@ pub struct TrackedVolume {
 }
 
 impl TrackedVolume {
+    /// Track a host-resident volume (fresh identity, epoch 0).
     pub fn new(vol: Volume) -> Self {
         Self { backing: VolumeBacking::Ram(vol), id: next_tracked_id(), epoch: 0 }
     }
@@ -326,6 +367,7 @@ impl TrackedVolume {
         Self { backing: VolumeBacking::Ooc(Box::new(vol)), id: next_tracked_id(), epoch: 0 }
     }
 
+    /// True when the backing is an out-of-core store.
     pub fn is_ooc(&self) -> bool {
         matches!(self.backing, VolumeBacking::Ooc(_))
     }
@@ -412,10 +454,12 @@ impl TrackedVolume {
         }
     }
 
+    /// Process-unique buffer identity (never reused).
     pub fn id(&self) -> u64 {
         self.id
     }
 
+    /// Write counter; bumped by every mutable-access path.
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
@@ -434,6 +478,7 @@ pub struct TrackedProjections {
 }
 
 impl TrackedProjections {
+    /// Track a host-resident projection set (fresh identity, epoch 0).
     pub fn new(proj: ProjectionSet) -> Self {
         Self { backing: ProjBacking::Ram(proj), id: next_tracked_id(), epoch: 0 }
     }
@@ -443,6 +488,7 @@ impl TrackedProjections {
         Self { backing: ProjBacking::Ooc(Box::new(proj)), id: next_tracked_id(), epoch: 0 }
     }
 
+    /// True when the backing is an out-of-core store.
     pub fn is_ooc(&self) -> bool {
         matches!(self.backing, ProjBacking::Ooc(_))
     }
@@ -523,10 +569,12 @@ impl TrackedProjections {
         }
     }
 
+    /// Process-unique buffer identity (never reused).
     pub fn id(&self) -> u64 {
         self.id
     }
 
+    /// Write counter; bumped by every mutable-access path.
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
@@ -535,37 +583,47 @@ impl TrackedProjections {
 /// A stack of 2-D projections (detector readings), one per angle.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ProjectionSet {
+    /// Detector columns (fastest-varying index).
     pub nu: usize,
+    /// Detector rows.
     pub nv: usize,
+    /// Number of angles (slowest-varying index).
     pub n_angles: usize,
+    /// Detector readings, layout `data[(a*nv + v)*nu + u]`.
     pub data: Vec<f32>,
 }
 
 impl ProjectionSet {
+    /// All-zero projection set of the given shape.
     pub fn zeros(nu: usize, nv: usize, n_angles: usize) -> Self {
         Self { nu, nv, n_angles, data: vec![0.0; nu * nv * n_angles] }
     }
 
+    /// All-zero set shaped to a geometry's detector and angle list.
     pub fn zeros_like(g: &Geometry) -> Self {
         Self::zeros(g.n_det[0], g.n_det[1], g.n_angles())
     }
 
+    /// Linear index of detector pixel `(iu, iv)` at angle `a`.
     #[inline(always)]
     pub fn idx(&self, iu: usize, iv: usize, a: usize) -> usize {
         (a * self.nv + iv) * self.nu + iu
     }
 
+    /// Value at detector pixel `(iu, iv)`, angle `a`.
     #[inline(always)]
     pub fn at(&self, iu: usize, iv: usize, a: usize) -> f32 {
         self.data[self.idx(iu, iv, a)]
     }
 
+    /// Mutable reference to detector pixel `(iu, iv)`, angle `a`.
     #[inline(always)]
     pub fn at_mut(&mut self, iu: usize, iv: usize, a: usize) -> &mut f32 {
         let i = self.idx(iu, iv, a);
         &mut self.data[i]
     }
 
+    /// Storage size in bytes (f32 elements).
     pub fn bytes(&self) -> u64 {
         self.data.len() as u64 * 4
     }
@@ -631,6 +689,7 @@ impl ProjectionSet {
         }
     }
 
+    /// `self += s * other` (AXPY), elementwise.
     pub fn add_scaled(&mut self, other: &ProjectionSet, s: f32) {
         assert_eq!(self.data.len(), other.data.len());
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -638,11 +697,13 @@ impl ProjectionSet {
         }
     }
 
+    /// Inner product in f64 accumulation.
     pub fn dot(&self, other: &ProjectionSet) -> f64 {
         assert_eq!(self.data.len(), other.data.len());
         self.data.iter().zip(&other.data).map(|(a, b)| *a as f64 * *b as f64).sum()
     }
 
+    /// Euclidean norm in f64 accumulation.
     pub fn norm2(&self) -> f64 {
         self.data.iter().map(|v| *v as f64 * *v as f64).sum::<f64>().sqrt()
     }

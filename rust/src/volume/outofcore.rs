@@ -62,9 +62,13 @@ const DISK_RETRY_BACKOFF_US: u64 = 50;
 /// shape/usage errors; `op` is `"read"` or `"write"`.
 #[derive(Debug)]
 pub struct OocIoError {
+    /// Backing file the operation targeted.
     pub path: PathBuf,
+    /// `"read"` or `"write"`.
     pub op: &'static str,
+    /// How many attempts were made before giving up.
     pub attempts: usize,
+    /// The final I/O error.
     pub source: std::io::Error,
 }
 
@@ -225,6 +229,7 @@ impl SlabStore {
         })
     }
 
+    /// Path of the backing file.
     pub fn path(&self) -> &Path {
         &self.path
     }
@@ -664,8 +669,11 @@ fn read_sidecar(path: &Path) -> anyhow::Result<(usize, usize, usize)> {
 #[derive(Debug)]
 pub struct OocVolume {
     store: SlabStore,
+    /// Voxels along x.
     pub nx: usize,
+    /// Voxels along y.
     pub ny: usize,
+    /// Voxels along z.
     pub nz: usize,
 }
 
@@ -731,26 +739,32 @@ impl OocVolume {
         crate::io::load_volume(self.store.path())
     }
 
+    /// `(nx, ny, nz)`.
     pub fn dims(&self) -> (usize, usize, usize) {
         (self.nx, self.ny, self.nz)
     }
 
+    /// Logical size in bytes (the file size).
     pub fn bytes(&self) -> u64 {
         self.store.total_bytes()
     }
 
+    /// Host-RAM cache budget of the backing store.
     pub fn budget_bytes(&self) -> u64 {
         self.store.budget_bytes()
     }
 
+    /// Cumulative traffic statistics of the backing store.
     pub fn stats(&self) -> StoreStats {
         self.store.stats()
     }
 
+    /// Path of the backing file.
     pub fn path(&self) -> &Path {
         self.store.path()
     }
 
+    /// Write every dirty cached slab back to disk.
     pub fn flush(&self) -> anyhow::Result<()> {
         self.store.flush()
     }
@@ -805,8 +819,11 @@ impl OocVolume {
 #[derive(Debug)]
 pub struct OocProjections {
     store: SlabStore,
+    /// Detector columns.
     pub nu: usize,
+    /// Detector rows.
     pub nv: usize,
+    /// Number of angles.
     pub n_angles: usize,
 }
 
@@ -856,22 +873,27 @@ impl OocProjections {
         Ok(ProjectionSet { nu: v.nx, nv: v.ny, n_angles: v.nz, data: v.data })
     }
 
+    /// Logical size in bytes (the file size).
     pub fn bytes(&self) -> u64 {
         self.store.total_bytes()
     }
 
+    /// Host-RAM cache budget of the backing store.
     pub fn budget_bytes(&self) -> u64 {
         self.store.budget_bytes()
     }
 
+    /// Cumulative traffic statistics of the backing store.
     pub fn stats(&self) -> StoreStats {
         self.store.stats()
     }
 
+    /// Path of the backing file.
     pub fn path(&self) -> &Path {
         self.store.path()
     }
 
+    /// Write every dirty cached slab back to disk.
     pub fn flush(&self) -> anyhow::Result<()> {
         self.store.flush()
     }

@@ -1,0 +1,250 @@
+//! Golden-parity suite for the sparse CSR projector backend (ISSUE 10).
+//!
+//! The tentpole claims pinned here, all at coordinator level (through
+//! splitting, staging, merge schedules and the residency machinery):
+//!
+//! * sparse forward projection is **bit-identical** to the ray-driven
+//!   Siddon kernel for every device count × split × merge strategy —
+//!   the SpMV replays the traversal's f32 ops in the same order, and
+//!   the merge fold order is a function of the plan, not the backend;
+//! * sparse backprojection is the **matched adjoint** (⟨Ax, y⟩ = ⟨x,
+//!   Aᵀy⟩ through the whole multi-device path) and deterministic;
+//! * CSR shards are built once and **reused from the cache** on every
+//!   later iteration of a reconstruction session (zero rebuilds);
+//! * the simulated timeline charges the one-time build only on the
+//!   first (cold) operator call per plan — warm calls are cheaper.
+
+use tigre::algorithms::{self, ReconOpts};
+use tigre::coordinator::{ExecMode, MergeStrategy, MultiGpu, ProjectorChoice, ReconSession};
+use tigre::geometry::Geometry;
+use tigre::kernels::scratch;
+use tigre::metrics;
+use tigre::phantom;
+use tigre::volume::{TrackedProjections, TrackedVolume, Volume};
+
+/// Device memory small enough that the volume must image-split.
+fn tiny_mem(n: usize, n_angles: usize) -> u64 {
+    let g = Geometry::cone_beam(n, n_angles);
+    let plane = (n * n * 4) as u64;
+    8 * plane + 3 * 32.min(n_angles) as u64 * g.single_proj_bytes()
+}
+
+#[test]
+fn sparse_fp_bitwise_matches_siddon_across_gpus_splits_and_merges() {
+    let n = 18;
+    let n_angles = 12;
+    let g = Geometry::cone_beam(n, n_angles);
+    let v = phantom::shepp_logan(n);
+    let mem = tiny_mem(n, n_angles);
+    for gpus in [1usize, 2, 3] {
+        for image_split in [false, true] {
+            for tree in [false, true] {
+                let mut base = MultiGpu::gtx1080ti(gpus);
+                if image_split {
+                    base = base.with_device_mem(mem);
+                }
+                if tree {
+                    base = base.with_merge_strategy(MergeStrategy::Tree);
+                }
+                let ray = base
+                    .forward(&g, Some(&v), ExecMode::Full)
+                    .unwrap()
+                    .0
+                    .unwrap();
+                let sparse = base
+                    .clone()
+                    .with_sparse_backend()
+                    .forward(&g, Some(&v), ExecMode::Full)
+                    .unwrap()
+                    .0
+                    .unwrap();
+                assert_eq!(
+                    sparse.data, ray.data,
+                    "sparse FP must be bit-identical to Siddon \
+                     (gpus={gpus} image_split={image_split} tree={tree})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_fp_close_to_joseph() {
+    // Joseph interpolates instead of intersecting, so parity with it is
+    // numerical, not bitwise: both discretize the same line integrals.
+    let n = 16;
+    let g = Geometry::cone_beam(n, 10);
+    let v = phantom::shepp_logan(n);
+    let sparse = MultiGpu::gtx1080ti(2)
+        .with_sparse_backend()
+        .forward(&g, Some(&v), ExecMode::Full)
+        .unwrap()
+        .0
+        .unwrap();
+    let joseph = MultiGpu::gtx1080ti(2)
+        .with_projector(ProjectorChoice::Joseph)
+        .forward(&g, Some(&v), ExecMode::Full)
+        .unwrap()
+        .0
+        .unwrap();
+    let num: f64 = sparse
+        .data
+        .iter()
+        .zip(&joseph.data)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum();
+    let den: f64 = joseph.data.iter().map(|x| (*x as f64).powi(2)).sum();
+    let rel = (num / den.max(1e-30)).sqrt();
+    assert!(rel < 0.5, "sparse vs joseph relative L2 {rel}");
+}
+
+#[test]
+fn sparse_bp_deterministic_and_consistent_across_device_counts() {
+    let n = 16;
+    let n_angles = 12;
+    let g = Geometry::cone_beam(n, n_angles);
+    let truth = phantom::shepp_logan(n);
+    let p = MultiGpu::gtx1080ti(1)
+        .forward(&g, Some(&truth), ExecMode::Full)
+        .unwrap()
+        .0
+        .unwrap();
+    let run = |gpus: usize| -> Volume {
+        MultiGpu::gtx1080ti(gpus)
+            .with_device_mem(tiny_mem(n, n_angles))
+            .with_sparse_backend()
+            .backward(&g, Some(&p), ExecMode::Full)
+            .unwrap()
+            .0
+            .unwrap()
+    };
+    // same configuration twice: bitwise deterministic
+    assert_eq!(run(2).data, run(2).data);
+    // across device counts the chunk fold grouping may differ, so the
+    // comparison is numerical — same tolerance as the ray-driven suite
+    let r1 = run(1);
+    let r3 = run(3);
+    let rel = metrics::rel_l2(&r1, &r3);
+    assert!(rel < 2e-3, "sparse BP deviates across device counts: {rel}");
+}
+
+#[test]
+fn sparse_bp_is_matched_adjoint_through_the_coordinator() {
+    // ⟨Ax, y⟩ == ⟨x, Aᵀy⟩ (up to f32 rounding) through the full
+    // multi-device split/merge path — the property CGLS-class solvers
+    // need, exact for SpMV/SpMVᵀ where the ray-driven pair is only
+    // pseudo-matched.
+    let n = 16;
+    let n_angles = 10;
+    let g = Geometry::cone_beam(n, n_angles);
+    let x = phantom::shepp_logan(n);
+    let ctx = MultiGpu::gtx1080ti(2)
+        .with_device_mem(tiny_mem(n, n_angles))
+        .with_sparse_backend();
+    let ax = ctx.forward(&g, Some(&x), ExecMode::Full).unwrap().0.unwrap();
+    let mut y = ax.clone();
+    for (i, v) in y.data.iter_mut().enumerate() {
+        *v = ((i % 23) as f32 - 11.0) / 23.0;
+    }
+    let aty = ctx.backward(&g, Some(&y), ExecMode::Full).unwrap().0.unwrap();
+    let lhs: f64 = ax.data.iter().zip(&y.data).map(|(a, b)| *a as f64 * *b as f64).sum();
+    let rhs: f64 = aty.data.iter().zip(&x.data).map(|(a, b)| *a as f64 * *b as f64).sum();
+    let denom = lhs.abs().max(rhs.abs()).max(1e-12);
+    assert!(
+        ((lhs - rhs) / denom).abs() < 1e-4,
+        "adjoint identity violated through the coordinator: {lhs} vs {rhs}"
+    );
+}
+
+#[test]
+fn sparse_shards_built_once_and_reused_across_iterations() {
+    // The residency acceptance gate: on iteration 2+ of a session loop
+    // the shard cache serves every unit from memory — `builds` must not
+    // move, and hits must accumulate.
+    let n = 16;
+    let n_angles = 12;
+    let g = Geometry::cone_beam(n, n_angles);
+    let truth = phantom::cube(n, 0.5, 1.0);
+    let ctx = MultiGpu::gtx1080ti(2)
+        .with_device_mem(tiny_mem(n, n_angles))
+        .with_sparse_backend();
+    let proj = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap().0.unwrap();
+
+    let mut sess = ReconSession::new(&ctx, &g).unwrap();
+    let b = TrackedProjections::new(proj);
+    let mut x = TrackedVolume::new(Volume::zeros_like(&g));
+    let mut builds_after_first = 0u64;
+    let mut hits_after_first = 0u64;
+    for it in 0..3 {
+        let ax = sess.forward(&x).unwrap();
+        let (upd, _) = sess.backward_residual(&b, &ax).unwrap();
+        sess.recycle_projections(ax);
+        x.write().add_scaled(&upd, 1e-3);
+        scratch::recycle_volume(upd);
+        let stats = ctx.sparse_shard_stats().expect("sparse backend has shard stats");
+        if it == 0 {
+            assert!(stats.builds > 0, "first iteration must build shards");
+            builds_after_first = stats.builds;
+            hits_after_first = stats.hits;
+        } else {
+            assert_eq!(
+                stats.builds, builds_after_first,
+                "iteration {it} rebuilt a shard the cache should have served"
+            );
+            assert!(
+                stats.hits > hits_after_first,
+                "iteration {it} did not hit the shard cache"
+            );
+            hits_after_first = stats.hits;
+        }
+    }
+    sess.recycle_projections(b);
+}
+
+#[test]
+fn sparse_simonly_warm_call_cheaper_than_cold() {
+    // The simulated timeline charges `sparse_setup_s` only on the first
+    // (cold) call per (operator, plan); later calls replay the warm SpMV
+    // and must cost strictly less — the basis of the SimOnly crossover
+    // report (`tigre project --sim-only --projector sparse`).
+    let g = Geometry::cone_beam(32, 16);
+    let ctx = MultiGpu::gtx1080ti(2).with_sparse_backend();
+    let cold_fp = ctx.forward(&g, None, ExecMode::SimOnly).unwrap().1.makespan_s;
+    let warm_fp = ctx.forward(&g, None, ExecMode::SimOnly).unwrap().1.makespan_s;
+    assert!(warm_fp < cold_fp, "warm FP {warm_fp} must beat cold {cold_fp}");
+    let cold_bp = ctx.backward(&g, None, ExecMode::SimOnly).unwrap().1.makespan_s;
+    let warm_bp = ctx.backward(&g, None, ExecMode::SimOnly).unwrap().1.makespan_s;
+    assert!(warm_bp < cold_bp, "warm BP {warm_bp} must beat cold {cold_bp}");
+    // a warm sparse sweep never loses to the ray-driven kernel: the SpMV
+    // replays stored entries at a strictly higher modeled throughput
+    let ray_fp = MultiGpu::gtx1080ti(2)
+        .forward(&g, None, ExecMode::SimOnly)
+        .unwrap()
+        .1
+        .makespan_s;
+    assert!(warm_fp <= ray_fp, "warm sparse FP {warm_fp} vs ray {ray_fp}");
+}
+
+#[test]
+fn cgls_with_sparse_projector_opt_converges() {
+    // The `ReconOpts::projector` plumb-through: CGLS (which requires a
+    // matched pair, sparse's home turf) selected via options rather than
+    // a pre-configured context.
+    let n = 16;
+    let g = Geometry::cone_beam(n, 20);
+    let truth = phantom::shepp_logan(n);
+    let ctx = MultiGpu::gtx1080ti(2);
+    let p = ctx.forward(&g, Some(&truth), ExecMode::Full).unwrap().0.unwrap();
+    let opts = ReconOpts {
+        iterations: 8,
+        nonneg: false,
+        projector: Some(ProjectorChoice::Sparse),
+        ..Default::default()
+    };
+    let r = algorithms::cgls(&ctx, &g, &p, &opts).unwrap();
+    let corr = metrics::correlation(&truth, &r.volume);
+    assert!(corr > 0.8, "sparse CGLS correlation {corr}");
+    let first = r.residuals[0];
+    let last = *r.residuals.last().unwrap();
+    assert!(last < first * 0.5, "sparse CGLS residuals {first} → {last}");
+}

@@ -28,6 +28,11 @@ Checks
     makespan), and surviving one exhausted allocation via the pressure
     ladder (evict -> refine -> spill) must cost something yet never
     double the run (the tracked graceful-degradation acceptance gate);
+  * coordinator runs only: every `sparse ...` ablation entry must report
+    speedup > 1 — for these entries `speedup` compares K ray-driven
+    sweeps against one cold (matrix build) + K-1 warm SpMV sweeps, and
+    the one-time CSR build amortizing within the sweep is the tracked
+    acceptance property of the sparse projector backend;
   * when --require-prefixes is given, each comma-separated prefix matches
     at least one entry name of the last run.
 
@@ -67,6 +72,8 @@ def check_entry(schema: str, entry: dict) -> None:
         check_fault_entry(name, entry)
     if schema.startswith("tigre-bench-coordinator/") and name.startswith("degrade"):
         check_degrade_entry(name, entry)
+    if schema.startswith("tigre-bench-coordinator/") and name.startswith("sparse"):
+        check_sparse_entry(name, entry)
 
 
 def parse_gpus(name: str) -> int:
@@ -110,6 +117,23 @@ def check_degrade_entry(name: str, entry: dict) -> None:
         fail(
             f"entry '{name}': degradation overhead must lie in (1, 2), "
             f"got {overhead!r}"
+        )
+
+
+def check_sparse_entry(name: str, entry: dict) -> None:
+    """Sparse-ablation acceptance: the CSR build must amortize (> 1).
+
+    For `sparse ...` entries `speedup` = (K ray-driven sweeps) / (one
+    cold build-and-SpMV sweep + K-1 warm SpMV sweeps). Past the cost
+    model's ~7-8 iteration crossover the precomputed matrix must win at
+    every device count; speedup <= 1 means the build never paid off.
+    """
+    parse_gpus(name)  # names must stay machine-parsable per device count
+    speedup = entry.get("speedup", 0)
+    if speedup <= 1.0:
+        fail(
+            f"entry '{name}': the CSR build must amortize over the sweep "
+            f"(speedup > 1), got {speedup!r}"
         )
 
 
